@@ -1,0 +1,77 @@
+//! Fig-17 reproduction: sky images from HEGrid vs the Cygrid baseline, plus
+//! their difference map.
+//!
+//! The paper grids two frequency channels of a real FAST survey with both
+//! frameworks and shows the difference is "almost negligible" (caused by the
+//! different hardware arithmetic). Here: an observed-preset dataset, HEGrid
+//! (f32 device path) vs Cygrid stand-in (f64 CPU), three PGM panels per
+//! channel — hegrid / cygrid / |difference| — and the quantitative stats.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example accuracy_compare
+//! ```
+
+use hegrid::baselines::CygridBaseline;
+use hegrid::prelude::*;
+use hegrid::sim::SimConfig;
+use hegrid::sky::SkyMap;
+
+fn main() -> Result<()> {
+    let out_dir = std::env::temp_dir().join("hegrid_accuracy");
+    std::fs::create_dir_all(&out_dir).map_err(HegridError::io(out_dir.display().to_string()))?;
+
+    // Two channels, as in Fig 17.
+    let dataset = SimConfig::observed(10).generate().take_channels(2);
+    let config = HegridConfig::default();
+    let job = GriddingJob::for_dataset(&dataset, &config)?;
+
+    let engine = HegridEngine::new(config)?;
+    let (he, report) = engine.grid(&dataset, &job)?;
+    let (cy, _) = CygridBaseline::new(hegrid::util::threads::default_parallelism())
+        .run(&dataset, &job)?;
+    println!(
+        "gridded {} cells × {} channels (HEGrid {:.3}s, variant {})",
+        job.spec.n_cells(),
+        dataset.n_channels(),
+        report.wall.as_secs_f64(),
+        report.variant
+    );
+
+    for c in 0..dataset.n_channels() {
+        let d = he[c].diff_stats(&cy[c])?;
+        println!(
+            "channel {c}: compared={} max|Δ|={:.3e} rms={:.3e} onlyHE={} onlyCy={}",
+            d.compared, d.max_abs, d.rms, d.only_a, d.only_b
+        );
+
+        // Three panels, as in the paper's figure.
+        he[c].write_pgm(&out_dir.join(format!("ch{c}_hegrid.pgm")))?;
+        cy[c].write_pgm(&out_dir.join(format!("ch{c}_cygrid.pgm")))?;
+        let diff_vals: Vec<f64> = he[c]
+            .values()
+            .iter()
+            .zip(cy[c].values())
+            .map(|(&a, &b)| if a.is_nan() || b.is_nan() { 0.0 } else { (a - b).abs() })
+            .collect();
+        let diff_w: Vec<f64> = he[c]
+            .weights()
+            .iter()
+            .zip(cy[c].weights())
+            .map(|(&a, &b)| if a > 0.0 && b > 0.0 { 1.0 } else { 0.0 })
+            .collect();
+        let diff = SkyMap::from_parts(job.spec.clone(), diff_vals, diff_w)?;
+        diff.write_pgm(&out_dir.join(format!("ch{c}_diff.pgm")))?;
+
+        // The paper's conclusion: the difference is negligible relative to
+        // the signal. Enforce it.
+        let signal = he[c].mean().abs().max(0.1);
+        assert!(
+            d.rms < 1e-2 * signal,
+            "channel {c}: difference not negligible (rms {} vs signal {signal})",
+            d.rms
+        );
+    }
+    println!("wrote 3 panels per channel to {}", out_dir.display());
+    println!("accuracy_compare OK — HEGrid retains Cygrid-level accuracy (Fig 17)");
+    Ok(())
+}

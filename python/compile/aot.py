@@ -1,0 +1,185 @@
+"""AOT driver: lower every configured gridding variant to HLO text.
+
+Build-time only (``make artifacts``); Python never runs on the request path.
+Emits, into ``--out-dir``:
+
+  {variant}.hlo.txt      HLO text, loadable by xla::HloModuleProto::from_text_file
+  manifest.json          machine-readable index the Rust runtime consumes:
+                         variant shapes, parameter order, file names, and the
+                         static L1 VMEM/roofline estimates (DESIGN.md §Perf)
+
+HLO *text* is the interchange format (NOT ``lowered.compile().serialize()``):
+jax >= 0.5 writes HloModuleProto with 64-bit instruction ids which the
+xla_extension 0.5.1 bundled with the Rust ``xla`` crate rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+from .kernels.gridding import GriddingVariant, vmem_estimate_bytes
+from .model import hlo_op_counts, lower_variant
+
+# Parameter order of every artifact; the Rust runtime asserts against this.
+PARAM_ORDER = ["cell_lon", "cell_lat", "nbr", "slon", "slat", "sval", "kparam"]
+MANIFEST_VERSION = 2
+
+
+def variant_name(v: GriddingVariant) -> str:
+    return f"{v.kernel_type}_m{v.m}_b{v.bm}_k{v.k}_c{v.c}_g{v.gamma}_n{v.n}"
+
+
+def load_configs(path: str):
+    with open(path) as f:
+        raw = json.load(f)
+    variants = []
+    for entry in raw["variants"]:
+        tags = entry.get("tags", [])
+        v = GriddingVariant(
+            name="",  # filled below
+            kernel_type=entry["kernel_type"],
+            m=entry["m"],
+            bm=entry["bm"],
+            k=entry["k"],
+            c=entry["c"],
+            n=entry["n"],
+            gamma=entry["gamma"],
+        )
+        v = GriddingVariant(
+            name=variant_name(v),
+            kernel_type=v.kernel_type,
+            m=v.m,
+            bm=v.bm,
+            k=v.k,
+            c=v.c,
+            n=v.n,
+            gamma=v.gamma,
+        )
+        variants.append((v, tags))
+    names = [v.name for v, _ in variants]
+    if len(set(names)) != len(names):
+        raise ValueError("duplicate variant names in configs.json")
+    return variants
+
+
+def source_fingerprint() -> str:
+    """Hash of the compile-path sources; lets `make artifacts` skip rebuilds."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for rel in sorted(
+        os.path.join(dp, f)
+        for dp, _, fs in os.walk(here)
+        for f in fs
+        if f.endswith((".py", ".json")) and "__pycache__" not in dp
+    ):
+        with open(rel, "rb") as f:
+            h.update(rel.encode())
+            h.update(f.read())
+    return h.hexdigest()
+
+
+def variant_manifest_entry(v: GriddingVariant, tags, hlo_path: str, hlo_text: str) -> dict:
+    shapes = {
+        "cell_lon": {"dims": [v.m], "dtype": "f32"},
+        "cell_lat": {"dims": [v.m], "dtype": "f32"},
+        "nbr": {"dims": [v.groups, v.k], "dtype": "s32"},
+        "slon": {"dims": [v.n], "dtype": "f32"},
+        "slat": {"dims": [v.n], "dtype": "f32"},
+        "sval": {"dims": [v.c, v.n], "dtype": "f32"},
+        "kparam": {"dims": [4], "dtype": "f32"},
+    }
+    ops = hlo_op_counts(hlo_text)
+    return {
+        "name": v.name,
+        "file": os.path.basename(hlo_path),
+        "kernel_type": v.kernel_type,
+        "m": v.m,
+        "bm": v.bm,
+        "k": v.k,
+        "c": v.c,
+        "n": v.n,
+        "gamma": v.gamma,
+        "groups": v.groups,
+        "tags": tags,
+        "param_order": PARAM_ORDER,
+        "shapes": shapes,
+        "outputs": {
+            "acc": {"dims": [v.c, v.m], "dtype": "f32"},
+            "wsum": {"dims": [v.m], "dtype": "f32"},
+        },
+        "perf_estimate": vmem_estimate_bytes(v),
+        "hlo_ops": {k: ops.get(k, 0) for k in ("exponential", "dot", "while", "gather")},
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    here = os.path.dirname(os.path.abspath(__file__))
+    ap.add_argument("--out-dir", default=os.path.join(here, "..", "..", "artifacts"))
+    ap.add_argument("--configs", default=os.path.join(here, "configs.json"))
+    ap.add_argument("--only", nargs="*", help="lower only variants whose name contains any of these substrings")
+    ap.add_argument("--force", action="store_true", help="re-lower even if fingerprint matches")
+    args = ap.parse_args(argv)
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    fingerprint = source_fingerprint()
+
+    if not args.force and not args.only and os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as f:
+                old = json.load(f)
+            if old.get("fingerprint") == fingerprint and all(
+                os.path.exists(os.path.join(out_dir, e["file"])) for e in old["variants"]
+            ):
+                print(f"artifacts up to date ({len(old['variants'])} variants); skipping")
+                return 0
+        except (json.JSONDecodeError, KeyError):
+            pass  # rebuild
+
+    variants = load_configs(args.configs)
+    if args.only:
+        variants = [(v, t) for v, t in variants if any(s in v.name for s in args.only)]
+        if not variants:
+            print("no variants match --only", file=sys.stderr)
+            return 1
+
+    entries = []
+    t_all = time.time()
+    for i, (v, tags) in enumerate(variants):
+        t0 = time.time()
+        hlo = lower_variant(v)
+        path = os.path.join(out_dir, f"{v.name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(hlo)
+        entries.append(variant_manifest_entry(v, tags, path, hlo))
+        print(
+            f"[{i + 1}/{len(variants)}] {v.name}: {len(hlo) / 1024:.0f} KiB HLO "
+            f"in {time.time() - t0:.1f}s"
+        )
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "fingerprint": fingerprint,
+        "interchange": "hlo-text",
+        "param_order": PARAM_ORDER,
+        "variants": entries,
+    }
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(
+        f"wrote {len(entries)} variants + manifest to {out_dir} "
+        f"in {time.time() - t_all:.1f}s"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,264 @@
+"""L1 — Pallas cell-update kernel for convolution-based gridding.
+
+This is the device hot-spot of HEGrid (Algorithm 1 in the paper), re-expressed
+for a TPU-style memory hierarchy:
+
+* The CUDA thread block becomes a Pallas ``BlockSpec`` tile of ``bm`` target
+  cells; the kernel grid walks ``m // bm`` tiles (the Fig-13 "thread block
+  size" sweep is a ``bm`` sweep here).
+* The paper's per-cell dynamic ``while`` loop over LUT rings becomes a masked
+  fixed-``K`` gather: L3 pre-processing materializes at most ``K`` candidate
+  neighbour indices per cell (padded with ``-1``), so the device computation
+  is fully static-shaped and SIMD-clean — the paper's own motivation for
+  moving cell update onto SIMT hardware.
+* The sorted sample arrays (the LUT payload) are mapped whole into every tile
+  (``pl.BlockSpec`` with a constant index map), standing in for the L1/L2
+  cache residency the paper engineers via warp placement.
+* Convolution weights depend only on coordinates, never on the channel, so a
+  single ``[bm, K]`` weight matrix is contracted against all ``C`` channels
+  of a dispatch (``einsum('mk,cmk->cm')``): the kernel-level twin of the
+  paper's component share-based redundancy elimination.
+* Thread-level data reuse (reuse factor γ, Fig 16) shares one neighbour list
+  among γ adjacent cells: ``nbr`` has shape ``[m // γ, K]`` and is expanded
+  on device, so host-side neighbour search and the H2D transfer shrink by γ×.
+
+The kernel MUST run with ``interpret=True``: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute. Numerical correctness is
+pinned against the pure-jnp oracle in ``ref.py`` by ``python/tests``.
+
+Inputs (one dispatch = one tile of ``m`` cells × ``c`` channels):
+  cell_lon f32[m], cell_lat f32[m]   flattened target-cell world coordinates (rad)
+  nbr      i32[m//γ, K]              candidate sample indices, -1 padded
+  slon     f32[n], slat f32[n]       sorted sample coordinates (rad)
+  sval     f32[c, n]                 sorted per-channel sample values
+  kparam   f32[4]                    kernel parameters (see KernelType)
+Outputs:
+  acc  f32[c, m]                     Σ w·v  (unnormalised)
+  wsum f32[m]                        Σ w    (normalisation accumulates at L3)
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Kernel (weighting-function) types. Must stay in sync with
+# rust/src/grid/kernels.rs::ConvKernelType.
+GAUSS1D = "gauss1d"
+GAUSS2D = "gauss2d"
+TAPERED_SINC = "tapered_sinc"
+KERNEL_TYPES = (GAUSS1D, GAUSS2D, TAPERED_SINC)
+
+
+@dataclass(frozen=True)
+class GriddingVariant:
+    """Static shape configuration of one compiled artifact."""
+
+    name: str
+    kernel_type: str
+    m: int  # cells per dispatch tile
+    bm: int  # cells per Pallas block ("thread block size")
+    k: int  # max candidate neighbours per cell group
+    c: int  # channels per dispatch
+    n: int  # sample-shard capacity
+    gamma: int  # reuse factor: cells sharing one neighbour list
+
+    def __post_init__(self):
+        if self.kernel_type not in KERNEL_TYPES:
+            raise ValueError(f"unknown kernel type {self.kernel_type!r}")
+        if self.m % self.bm != 0:
+            raise ValueError(f"bm={self.bm} must divide m={self.m}")
+        if self.bm % self.gamma != 0:
+            raise ValueError(f"gamma={self.gamma} must divide bm={self.bm}")
+        for field in ("m", "bm", "k", "c", "n", "gamma"):
+            if getattr(self, field) <= 0:
+                raise ValueError(f"{field} must be positive")
+
+    @property
+    def groups(self) -> int:
+        """Number of neighbour-list groups per dispatch."""
+        return self.m // self.gamma
+
+    def arg_shapes(self):
+        """ShapeDtypeStructs in artifact parameter order."""
+        f32, i32 = jnp.float32, jnp.int32
+        return (
+            jax.ShapeDtypeStruct((self.m,), f32),  # cell_lon
+            jax.ShapeDtypeStruct((self.m,), f32),  # cell_lat
+            jax.ShapeDtypeStruct((self.groups, self.k), i32),  # nbr
+            jax.ShapeDtypeStruct((self.n,), f32),  # slon
+            jax.ShapeDtypeStruct((self.n,), f32),  # slat
+            jax.ShapeDtypeStruct((self.c, self.n), f32),  # sval
+            jax.ShapeDtypeStruct((4,), f32),  # kparam
+        )
+
+
+def angular_dist2(lon_a, lat_a, lon_b, lat_b):
+    """Squared angular separation (rad²) via the haversine form.
+
+    Haversine is numerically stable at the small separations gridding cares
+    about (arcminutes), unlike the spherical law of cosines.
+    """
+    sdlat = jnp.sin((lat_b - lat_a) * 0.5)
+    sdlon = jnp.sin((lon_b - lon_a) * 0.5)
+    h = sdlat * sdlat + jnp.cos(lat_a) * jnp.cos(lat_b) * sdlon * sdlon
+    h = jnp.clip(h, 0.0, 1.0)
+    d = 2.0 * jnp.arcsin(jnp.sqrt(h))
+    return d * d
+
+
+def eval_weight(kernel_type, d2, dlon_cos, dlat, kparam):
+    """Evaluate the convolution weight for squared distance ``d2``.
+
+    kparam layout per kernel type (matches rust/src/grid/kernels.rs):
+      gauss1d:      [0]=1/(2σ²),      [1]=R²(support), - , -
+      gauss2d:      [0]=1/(2σx²),     [1]=1/(2σy²),    [2]=R², -
+      tapered_sinc: [0]=1/σ (sinc),   [1]=1/b (taper), [2]=R², -
+    """
+    if kernel_type == GAUSS1D:
+        w = jnp.exp(-d2 * kparam[0])
+        r2 = kparam[1]
+    elif kernel_type == GAUSS2D:
+        w = jnp.exp(-(dlon_cos * dlon_cos) * kparam[0] - (dlat * dlat) * kparam[1])
+        r2 = kparam[2]
+    elif kernel_type == TAPERED_SINC:
+        d = jnp.sqrt(d2)
+        x = d * kparam[0]
+        # sinc with a gaussian taper; sinc(0)=1 handled by jnp.sinc (normalised
+        # sinc: sin(πx)/(πx)), matching cygrid's tapered-sinc family.
+        w = jnp.sinc(x / jnp.pi) * jnp.exp(-(d * kparam[1]) ** 2)
+        r2 = kparam[2]
+    else:  # pragma: no cover - guarded by GriddingVariant
+        raise ValueError(kernel_type)
+    return jnp.where(d2 <= r2, w, 0.0)
+
+
+def _cell_update_kernel(
+    variant: GriddingVariant,
+    cell_lon_ref,
+    cell_lat_ref,
+    nbr_ref,
+    slon_ref,
+    slat_ref,
+    sval_ref,
+    kparam_ref,
+    acc_ref,
+    wsum_ref,
+):
+    """One Pallas block: update ``bm`` cells against the resident shard."""
+    v = variant
+    bg = v.bm // v.gamma  # neighbour groups in this block
+
+    idx = nbr_ref[...]  # [bg, K]
+    valid = idx >= 0
+    safe = jnp.where(valid, idx, 0)
+
+    slon = slon_ref[...]
+    slat = slat_ref[...]
+    glon = slon[safe]  # [bg, K] gathered once per γ-cell group
+    glat = slat[safe]
+
+    cell_lon = cell_lon_ref[...]  # [bm]
+    cell_lat = cell_lat_ref[...]
+
+    # Expand group-level gathers to cell level: cell i uses group i // γ.
+    if v.gamma > 1:
+        glon = jnp.repeat(glon, v.gamma, axis=0)  # [bm, K]
+        glat = jnp.repeat(glat, v.gamma, axis=0)
+        valid_c = jnp.repeat(valid, v.gamma, axis=0)
+    else:
+        valid_c = valid
+
+    kparam = kparam_ref[...]
+    clon = cell_lon[:, None]
+    clat = cell_lat[:, None]
+    d2 = angular_dist2(clon, clat, glon, glat)
+    dlon_cos = (glon - clon) * jnp.cos(clat)
+    dlat = glat - clat
+    w = eval_weight(v.kernel_type, d2, dlon_cos, dlat, kparam)
+    w = jnp.where(valid_c, w, 0.0)  # [bm, K]
+
+    # One weight matrix serves all C channels (redundancy elimination).
+    sval = sval_ref[...]  # [C, n]
+    gval = sval[:, safe]  # [C, bg, K]
+    if v.gamma > 1:
+        gval = jnp.repeat(gval, v.gamma, axis=1)  # [C, bm, K]
+    acc_ref[...] = jnp.einsum(
+        "mk,cmk->cm", w, gval, preferred_element_type=jnp.float32
+    )
+    wsum_ref[...] = jnp.sum(w, axis=1)
+
+
+def make_gridding_fn(variant: GriddingVariant):
+    """Build the jit-able dispatch function for ``variant``.
+
+    Returns ``fn(cell_lon, cell_lat, nbr, slon, slat, sval, kparam) ->
+    (acc[c, m], wsum[m])``.
+    """
+    v = variant
+    grid = (v.m // v.bm,)
+    bg = v.bm // v.gamma
+
+    kernel = functools.partial(_cell_update_kernel, v)
+
+    def fn(cell_lon, cell_lat, nbr, slon, slat, sval, kparam):
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((v.bm,), lambda i: (i,)),  # cell_lon tile
+                pl.BlockSpec((v.bm,), lambda i: (i,)),  # cell_lat tile
+                pl.BlockSpec((bg, v.k), lambda i: (i, 0)),  # nbr tile
+                pl.BlockSpec((v.n,), lambda i: (0,)),  # slon resident
+                pl.BlockSpec((v.n,), lambda i: (0,)),  # slat resident
+                pl.BlockSpec((v.c, v.n), lambda i: (0, 0)),  # sval resident
+                pl.BlockSpec((4,), lambda i: (0,)),  # kparam
+            ],
+            out_specs=(
+                pl.BlockSpec((v.c, v.bm), lambda i: (0, i)),
+                pl.BlockSpec((v.bm,), lambda i: (i,)),
+            ),
+            out_shape=(
+                jax.ShapeDtypeStruct((v.c, v.m), jnp.float32),
+                jax.ShapeDtypeStruct((v.m,), jnp.float32),
+            ),
+            interpret=True,  # CPU-PJRT execution path; see module docstring
+        )(cell_lon, cell_lat, nbr, slon, slat, sval, kparam)
+
+    return fn
+
+
+def vmem_estimate_bytes(variant: GriddingVariant) -> dict:
+    """Static VMEM footprint estimate for one Pallas block (DESIGN.md §Perf).
+
+    On a real TPU the resident shard (slon/slat/sval) plus one cell tile must
+    fit VMEM (~16 MiB/core). interpret=True wallclock is NOT a TPU proxy, so
+    this estimate is the L1 'profile'.
+    """
+    v = variant
+    bg = v.bm // v.gamma
+    tile = 4 * (2 * v.bm + bg * v.k)  # cell coords + nbr block
+    resident = 4 * (2 * v.n + v.c * v.n)  # sample shard
+    out = 4 * (v.c * v.bm + v.bm)
+    work = 4 * (3 * v.bm * v.k + v.c * v.bm * v.k)  # gathered coords/weights/vals
+    total = tile + resident + out + work
+    # MXU/VPU arithmetic intensity: ~8 flops per (cell, nbr) for the distance
+    # + weight, then 2·C flops for the contraction, over 4·(3 + C) gathered
+    # bytes per (group, nbr).
+    flops = v.m * v.k * (8 + 2 * v.c)
+    bytes_moved = 4 * bg * v.k * (3 + v.c) + 4 * v.m * (2 + v.c + 1)
+    return {
+        "tile_bytes": tile,
+        "resident_bytes": resident,
+        "scratch_bytes": work,
+        "out_bytes": out,
+        "total_bytes": total,
+        "flops_per_dispatch": flops,
+        "bytes_per_dispatch": bytes_moved,
+        "arithmetic_intensity": flops / max(bytes_moved, 1),
+        "fits_16mib_vmem": total <= 16 * 1024 * 1024,
+    }

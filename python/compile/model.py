@@ -1,0 +1,72 @@
+"""L2 — the JAX compute graph around the L1 Pallas kernel.
+
+One "model" = one gridding dispatch: the cell-update kernel over a tile of
+``m`` cells × ``c`` channels against a resident sample shard, exactly the unit
+of work the Rust coordinator schedules onto a PJRT stream slot.
+
+The L2 graph is deliberately thin — the paper's host-side logic (LUT build,
+sorting, pipeline scheduling) lives in Rust — but it is where cross-channel
+fusion happens: weights are computed once and contracted against all channels
+(see kernels/gridding.py), and XLA fuses mask/weight/normalisation-free
+epilogue into a single module per variant.
+
+``lower_variant`` produces HLO TEXT (not a serialized proto): jax ≥ 0.5 emits
+64-bit instruction ids that xla_extension 0.5.1 rejects; the HLO text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from jax._src.lib import xla_client as xc
+
+from .kernels.gridding import GriddingVariant, make_gridding_fn
+
+
+def make_dispatch_fn(variant: GriddingVariant):
+    """The end-to-end dispatch graph for one artifact.
+
+    Signature: ``(cell_lon, cell_lat, nbr, slon, slat, sval, kparam) ->
+    (acc[c, m], wsum[m])`` — unnormalised partial sums so L3 can accumulate
+    across sample shards before normalising.
+    """
+    kernel_fn = make_gridding_fn(variant)
+
+    def dispatch(cell_lon, cell_lat, nbr, slon, slat, sval, kparam):
+        acc, wsum = kernel_fn(cell_lon, cell_lat, nbr, slon, slat, sval, kparam)
+        return (acc, wsum)
+
+    return dispatch
+
+
+def lower_variant(variant: GriddingVariant) -> str:
+    """Lower one variant to HLO text for the Rust PJRT loader."""
+    fn = make_dispatch_fn(variant)
+    lowered = jax.jit(fn).lower(*variant.arg_shapes())
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def hlo_op_counts(hlo_text: str) -> dict:
+    """Tiny HLO "profile" used by L2 perf checks (DESIGN.md §Perf).
+
+    Counts the ops that matter for the redundancy argument: the weight
+    pipeline (exp) must appear once per module regardless of C, and the
+    channel contraction must be a single dot/fused loop.
+    """
+    counts: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if "=" not in line:
+            continue
+        rhs = line.split("=", 2)[-1].lstrip()
+        if rhs.startswith(("f32", "s32", "pred", "u32", "bf16", "(")):
+            rhs = rhs.split(" ", 1)[-1].lstrip()
+        op = rhs.split("(", 1)[0].strip()
+        if op and op.isidentifier():
+            counts[op] = counts.get(op, 0) + 1
+    return counts

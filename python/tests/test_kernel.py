@@ -1,0 +1,211 @@
+"""L1 correctness: Pallas gridding kernel vs the pure-numpy oracle.
+
+Hypothesis sweeps shapes, reuse factors, kernel types and value regimes; every
+case asserts allclose against ``ref.gridding_ref_vec`` (and the scalar-loop
+oracle cross-checks the vectorised one on small cases).
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.gridding import (
+    GAUSS1D,
+    GAUSS2D,
+    KERNEL_TYPES,
+    TAPERED_SINC,
+    GriddingVariant,
+    angular_dist2,
+    eval_weight,
+    make_gridding_fn,
+    vmem_estimate_bytes,
+)
+from compile.kernels import ref
+
+RTOL, ATOL = 3e-4, 3e-5
+
+
+def make_inputs(v: GriddingVariant, seed: int, lon_span=(0.3, 0.7), lat_span=(0.5, 0.9)):
+    rng = np.random.default_rng(seed)
+    cl = rng.uniform(*lon_span, v.m).astype(np.float32)
+    ct = rng.uniform(*lat_span, v.m).astype(np.float32)
+    nbr = rng.integers(-1, v.n, (v.groups, v.k)).astype(np.int32)
+    sl = rng.uniform(*lon_span, v.n).astype(np.float32)
+    st_ = rng.uniform(*lat_span, v.n).astype(np.float32)
+    sv = rng.normal(size=(v.c, v.n)).astype(np.float32)
+    # σ and support chosen so a meaningful fraction of neighbours fall inside R
+    kp = np.array([800.0, 0.004, 0.004, 0.0], dtype=np.float32)
+    if v.kernel_type == TAPERED_SINC:
+        kp = np.array([40.0, 25.0, 0.004, 0.0], dtype=np.float32)
+    return cl, ct, nbr, sl, st_, sv, kp
+
+
+def run_both(v: GriddingVariant, seed: int):
+    args = make_inputs(v, seed)
+    got = jax.jit(make_gridding_fn(v))(*args)
+    want = ref.gridding_ref_vec(*args, v.kernel_type, v.gamma)
+    return np.asarray(got[0]), np.asarray(got[1]), want[0], want[1]
+
+
+@pytest.mark.parametrize("ktype", KERNEL_TYPES)
+def test_kernel_types_match_ref(ktype):
+    v = GriddingVariant("t", ktype, m=128, bm=32, k=16, c=3, n=256, gamma=1)
+    acc, wsum, racc, rwsum = run_both(v, seed=7)
+    np.testing.assert_allclose(acc, racc, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(wsum, rwsum, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("gamma,bm", [(1, 48), (2, 48), (3, 48), (4, 48)])
+def test_gamma_reuse_matches_ref(gamma, bm):
+    v = GriddingVariant("t", GAUSS1D, m=96, bm=bm, k=8, c=2, n=128, gamma=gamma)
+    acc, wsum, racc, rwsum = run_both(v, seed=gamma)
+    np.testing.assert_allclose(acc, racc, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(wsum, rwsum, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bm_blocks=st.integers(1, 4),
+    bm=st.sampled_from([16, 32, 64]),
+    k=st.sampled_from([1, 4, 16, 33]),
+    c=st.integers(1, 6),
+    n=st.sampled_from([1, 64, 300]),
+    ktype=st.sampled_from(KERNEL_TYPES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_shape_sweep(bm_blocks, bm, k, c, n, ktype, seed):
+    v = GriddingVariant("t", ktype, m=bm * bm_blocks, bm=bm, k=k, c=c, n=n, gamma=1)
+    acc, wsum, racc, rwsum = run_both(v, seed)
+    np.testing.assert_allclose(acc, racc, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(wsum, rwsum, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    gamma=st.sampled_from([2, 3, 4, 6]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_gamma_sweep(gamma, seed):
+    v = GriddingVariant("t", GAUSS1D, m=48 * 2, bm=48, k=8, c=3, n=96, gamma=gamma)
+    acc, wsum, racc, rwsum = run_both(v, seed)
+    np.testing.assert_allclose(acc, racc, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(wsum, rwsum, rtol=RTOL, atol=ATOL)
+
+
+def test_all_padding_neighbours_gives_zero():
+    v = GriddingVariant("t", GAUSS1D, m=64, bm=32, k=8, c=2, n=32, gamma=1)
+    cl, ct, _, sl, st_, sv, kp = make_inputs(v, 3)
+    nbr = np.full((v.groups, v.k), -1, dtype=np.int32)
+    acc, wsum = jax.jit(make_gridding_fn(v))(cl, ct, nbr, sl, st_, sv, kp)
+    assert np.all(np.asarray(acc) == 0.0)
+    assert np.all(np.asarray(wsum) == 0.0)
+
+
+def test_support_radius_excludes_far_samples():
+    """Samples beyond R² contribute exactly zero weight."""
+    v = GriddingVariant("t", GAUSS1D, m=32, bm=32, k=4, c=1, n=8, gamma=1)
+    cl = np.full(v.m, 0.5, np.float32)
+    ct = np.full(v.m, 0.5, np.float32)
+    sl = np.full(v.n, 0.9, np.float32)  # ~0.35 rad away
+    st_ = np.full(v.n, 0.9, np.float32)
+    sv = np.ones((1, v.n), np.float32)
+    nbr = np.zeros((v.m, v.k), np.int32)
+    kp = np.array([800.0, 0.004, 0.0, 0.0], np.float32)  # R² = 0.004 rad²
+    acc, wsum = jax.jit(make_gridding_fn(v))(cl, ct, nbr, sl, st_, sv, kp)
+    assert np.all(np.asarray(wsum) == 0.0)
+    assert np.all(np.asarray(acc) == 0.0)
+
+
+def test_scalar_oracle_cross_checks_vectorised():
+    v = GriddingVariant("t", GAUSS2D, m=24, bm=12, k=5, c=2, n=40, gamma=2)
+    args = make_inputs(v, 11)
+    a1, w1 = ref.gridding_ref(*args, v.kernel_type, v.gamma)
+    a2, w2 = ref.gridding_ref_vec(*args, v.kernel_type, v.gamma)
+    np.testing.assert_allclose(a1, a2, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(w1, w2, rtol=1e-6, atol=1e-7)
+
+
+def test_weights_channel_invariant():
+    """The same wsum must come back regardless of channel count C."""
+    base = dict(kernel_type=GAUSS1D, m=64, bm=32, k=8, n=128, gamma=1)
+    v1 = GriddingVariant("t", c=1, **base)
+    v4 = GriddingVariant("t", c=4, **base)
+    cl, ct, nbr, sl, st_, sv4, kp = make_inputs(v4, 5)
+    _, w4 = jax.jit(make_gridding_fn(v4))(cl, ct, nbr, sl, st_, sv4, kp)
+    _, w1 = jax.jit(make_gridding_fn(v1))(cl, ct, nbr, sl, st_, sv4[:1], kp)
+    np.testing.assert_allclose(np.asarray(w4), np.asarray(w1), rtol=1e-6, atol=0)
+
+
+def test_duplicate_neighbour_indices_accumulate():
+    """The kernel is a plain sum: listing a sample twice doubles its weight."""
+    v = GriddingVariant("t", GAUSS1D, m=32, bm=32, k=4, c=1, n=4, gamma=1)
+    cl = np.full(v.m, 0.5, np.float32)
+    ct = np.full(v.m, 0.5, np.float32)
+    sl = np.full(v.n, 0.5, np.float32)
+    st_ = np.full(v.n, 0.5, np.float32)
+    sv = np.ones((1, v.n), np.float32)
+    kp = np.array([800.0, 0.01, 0.0, 0.0], np.float32)
+    one = np.array([[0, -1, -1, -1]] * v.m, np.int32)
+    two = np.array([[0, 0, -1, -1]] * v.m, np.int32)
+    f = jax.jit(make_gridding_fn(v))
+    _, w_one = f(cl, ct, one, sl, st_, sv, kp)
+    _, w_two = f(cl, ct, two, sl, st_, sv, kp)
+    np.testing.assert_allclose(2 * np.asarray(w_one), np.asarray(w_two), rtol=1e-6)
+
+
+@given(
+    lat=st.floats(-1.4, 1.4),
+    lon=st.floats(0.0, 6.28),
+    dlat=st.floats(-1e-3, 1e-3),
+    dlon=st.floats(-1e-3, 1e-3),
+)
+@settings(max_examples=50, deadline=None)
+def test_angular_dist2_small_angle_matches_planar(lat, lon, dlat, dlon):
+    """At arcminute separations haversine ≈ cos-corrected planar distance."""
+    d2 = float(
+        angular_dist2(
+            jnp.float32(lon), jnp.float32(lat), jnp.float32(lon + dlon), jnp.float32(lat + dlat)
+        )
+    )
+    planar = (dlon * np.cos(lat + dlat / 2)) ** 2 + dlat**2
+    assert d2 == pytest.approx(planar, rel=2e-2, abs=1e-9)
+
+
+def test_angular_dist2_symmetry_and_zero():
+    a = (jnp.float32(1.0), jnp.float32(0.3))
+    b = (jnp.float32(1.2), jnp.float32(0.5))
+    dab = float(angular_dist2(a[0], a[1], b[0], b[1]))
+    dba = float(angular_dist2(b[0], b[1], a[0], a[1]))
+    assert dab == pytest.approx(dba, rel=1e-6)
+    assert float(angular_dist2(a[0], a[1], a[0], a[1])) == pytest.approx(0.0, abs=1e-12)
+
+
+def test_eval_weight_peak_is_one_at_zero_distance():
+    kp = jnp.array([800.0, 0.004, 0.004, 0.0], jnp.float32)
+    for ktype in (GAUSS1D, GAUSS2D):
+        w = float(eval_weight(ktype, jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0), kp))
+        assert w == pytest.approx(1.0, rel=1e-6)
+    kp_s = jnp.array([40.0, 25.0, 0.004, 0.0], jnp.float32)
+    w = float(eval_weight(TAPERED_SINC, jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0), kp_s))
+    assert w == pytest.approx(1.0, rel=1e-6)
+
+
+def test_variant_validation():
+    with pytest.raises(ValueError):
+        GriddingVariant("t", "nope", m=32, bm=32, k=4, c=1, n=4, gamma=1)
+    with pytest.raises(ValueError):
+        GriddingVariant("t", GAUSS1D, m=33, bm=32, k=4, c=1, n=4, gamma=1)
+    with pytest.raises(ValueError):
+        GriddingVariant("t", GAUSS1D, m=64, bm=32, k=4, c=1, n=4, gamma=3)
+    with pytest.raises(ValueError):
+        GriddingVariant("t", GAUSS1D, m=64, bm=32, k=0, c=1, n=4, gamma=1)
+
+
+def test_vmem_estimate_monotone_in_n():
+    base = dict(kernel_type=GAUSS1D, m=256, bm=64, k=32, c=4, gamma=1)
+    small = vmem_estimate_bytes(GriddingVariant("a", n=4096, **base))
+    big = vmem_estimate_bytes(GriddingVariant("b", n=262144, **base))
+    assert big["resident_bytes"] > small["resident_bytes"]
+    assert small["fits_16mib_vmem"]

@@ -1,0 +1,75 @@
+//! Fig 8 — the experimental timeline of the HEGrid pipeline.
+//!
+//! Measures per-stage durations (T1 pre-processing/permute, T2 H2D, T3
+//! kernel, T4 D2H+reduce) on the observed preset, prints the stage bars, and
+//! checks the paper's ordering T1 > T3 > T2 > T4. Then replays the
+//! calibrated costs through the timeline simulator to render the Fig-9
+//! multi-pipeline schedule.
+
+use hegrid::benchkit::support::*;
+use hegrid::benchkit::Series;
+use hegrid::coordinator::{simulate, GriddingJob, SimParams};
+use hegrid::sim::SimConfig;
+
+fn main() {
+    print_scale_note();
+    // Fig 8 profiles the pipeline BEFORE co-optimization (it is what
+    // motivates §4.2/§4.3), so calibrate from the non-shared configuration:
+    // every channel group pays the full CPU pre-processing as its T1.
+    let mut cfg = bench_config();
+    cfg.share_preprocessing = false;
+    let he = engine(cfg.clone());
+    let dataset = SimConfig::observed(50).generate();
+    let job = GriddingJob::for_dataset(&dataset, &cfg).expect("job");
+
+    let (_, report) = warm_and_measure(&he, &dataset, &job, bench_iters());
+    let cost = report.stage_cost_per_group();
+    // Per-group pre-processing: every group rebuilt the component here.
+    let prep = report.stage_s("prep+nbr") / report.n_groups.max(1) as f64;
+
+    println!("per-channel-group stage costs (measured, {} groups):", report.n_groups);
+    let mut s = Series::new("Fig 8: pipeline stage durations (s per channel group)");
+    s.push("T1 pre-process", cost.t1_cpu + prep);
+    s.push("T2 HtoD", cost.t2_h2d);
+    s.push("T3 kernel", cost.t3_kernel);
+    s.push("T4 DtoH", cost.t4_d2h);
+    s.print();
+
+    let t1_full = cost.t1_cpu + prep;
+    println!(
+        "ordering: T1={:.4}s T3={:.4}s T2={:.4}s T4={:.4}s  (paper: T1 > T3 > T2 > T4)",
+        t1_full, cost.t3_kernel, cost.t2_h2d, cost.t4_d2h
+    );
+    println!(
+        "prerequisite check: T1 + T2 = {:.4}s vs T3 = {:.4}s → {}",
+        t1_full + cost.t2_h2d,
+        cost.t3_kernel,
+        if t1_full + cost.t2_h2d > cost.t3_kernel {
+            "T1+T2 > T3: plain GPU streams degenerate to serial (the paper's §4.2.1 finding) — multi-pipeline concurrency is required"
+        } else {
+            "T1+T2 < T3: plain streams would already overlap"
+        }
+    );
+
+    // Replay through the simulator: serial vs multi-pipeline schedule,
+    // per-group pre-processing folded into T1 (share = false), as in Fig 9.
+    for (label, pipelines, streams) in
+        [("serial (1 pipeline, 1 stream)", 1usize, 1usize), ("multi-pipeline (4×4)", 4, 4)]
+    {
+        let params = SimParams {
+            n_groups: report.n_groups,
+            pipelines,
+            streams,
+            cost,
+            prep,
+            share: false,
+            kernel_slots: 1,
+        };
+        let r = simulate(&params);
+        println!(
+            "simulated {label}: makespan {:.4}s, device utilisation {:.0}%",
+            r.makespan,
+            r.device_utilisation() * 100.0
+        );
+    }
+}

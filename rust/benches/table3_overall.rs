@@ -1,0 +1,114 @@
+//! Table 3 — overall performance: HEGrid vs Cygrid vs HCGrid.
+//!
+//! Left half: simulated datasets, data size per channel swept (paper
+//! 1.5–1.9e7; here 1/100). Right half: observed-preset data, channel count
+//! swept 10..50. Prints running-time rows and the speedup row exactly like
+//! the paper's table. HCGrid rows run a single iteration (they are the slow
+//! baseline; their variance is far below the effect size).
+
+use hegrid::baselines::{CygridBaseline, HcgridBaseline};
+use hegrid::benchkit::support::*;
+use hegrid::benchkit::Table;
+use hegrid::coordinator::GriddingJob;
+use hegrid::sim::SimConfig;
+use hegrid::util::threads::default_parallelism;
+
+fn main() {
+    print_scale_note();
+    let iters = bench_iters();
+    let fast = std::env::var("HEGRID_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+
+    // ---- simulated sweep ---------------------------------------------------
+    let sizes: Vec<usize> =
+        if fast { vec![30_000] } else { vec![150_000, 170_000, 190_000] };
+    let mut cy_row = Vec::new();
+    let mut hc_row = Vec::new();
+    let mut he_row = Vec::new();
+    let mut speedup_row = Vec::new();
+
+    let cfg = bench_config();
+    let he = engine(cfg.clone());
+    let hc = HcgridBaseline::new(&cfg).expect("hcgrid engine");
+    let cygrid = CygridBaseline::new(default_parallelism());
+
+    for &size in &sizes {
+        let mut sim = SimConfig::simulated(size);
+        if fast {
+            sim.channels = 10;
+        }
+        let dataset = sim.generate();
+        let job = GriddingJob::for_dataset(&dataset, &cfg).expect("job");
+
+        let (he_times, _) = warm_and_measure(&he, &dataset, &job, iters);
+        let he_t = median(he_times);
+
+        let mut cy_times = Vec::new();
+        for _ in 0..iters {
+            let (_, d) = cygrid.run(&dataset, &job).expect("cygrid");
+            cy_times.push(d.as_secs_f64());
+        }
+        let cy_t = median(cy_times);
+
+        let (_, hc_rep) = hc.run(&dataset, &job).expect("hcgrid");
+        let hc_t = hc_rep.wall.as_secs_f64();
+
+        eprintln!("[simulated {size}] hegrid={he_t:.3}s cygrid={cy_t:.3}s hcgrid={hc_t:.3}s");
+        he_row.push(he_t);
+        cy_row.push(cy_t);
+        hc_row.push(hc_t);
+        speedup_row.push(cy_t.min(hc_t) / he_t);
+    }
+
+    let mut t = Table::new(
+        "Table 3 (left): simulated datasets — running time (s)",
+        sizes.iter().map(|s| format!("{:.1e}", *s as f64)).collect(),
+    );
+    t.row_f64("Cygrid", &cy_row);
+    t.row_f64("HCGrid", &hc_row);
+    t.row_f64("HEGrid", &he_row);
+    t.row_f64("Speedup (vs best baseline)", &speedup_row);
+    t.print();
+
+    // ---- observed sweep ------------------------------------------------------
+    let channel_counts: Vec<usize> = if fast { vec![10] } else { vec![10, 20, 30, 40, 50] };
+    let mut cy_row = Vec::new();
+    let mut hc_row = Vec::new();
+    let mut he_row = Vec::new();
+    let mut speedup_row = Vec::new();
+    let mut hc_speedup_row = Vec::new();
+
+    for &ch in &channel_counts {
+        let dataset = SimConfig::observed(ch).generate();
+        let job = GriddingJob::for_dataset(&dataset, &cfg).expect("job");
+        let (he_times, _) = warm_and_measure(&he, &dataset, &job, iters);
+        let he_t = median(he_times);
+        let (_, cy_d) = cygrid.run(&dataset, &job).expect("cygrid");
+        let cy_t = cy_d.as_secs_f64();
+        let (_, hc_rep) = hc.run(&dataset, &job).expect("hcgrid");
+        let hc_t = hc_rep.wall.as_secs_f64();
+        eprintln!("[observed {ch}ch] hegrid={he_t:.3}s cygrid={cy_t:.3}s hcgrid={hc_t:.3}s");
+        he_row.push(he_t);
+        cy_row.push(cy_t);
+        hc_row.push(hc_t);
+        speedup_row.push(cy_t.min(hc_t) / he_t);
+        hc_speedup_row.push(hc_t / he_t);
+    }
+
+    let mut t = Table::new(
+        "Table 3 (right): observed data — running time (s) vs channel count",
+        channel_counts.iter().map(|c| c.to_string()).collect(),
+    );
+    t.row_f64("Cygrid", &cy_row);
+    t.row_f64("HCGrid", &hc_row);
+    t.row_f64("HEGrid", &he_row);
+    t.row_f64("Speedup (vs best baseline)", &speedup_row);
+    t.row_f64("Speedup (vs HCGrid)", &hc_speedup_row);
+    t.print();
+
+    println!(
+        "paper shape: HEGrid beats HCGrid at every point (paper: up to 4.3x on observed\n\
+         data; measured above). HEGrid-vs-Cygrid on this testbed lacks the paper's\n\
+         CPU→GPU hardware gap — the \"device\" here IS the host CPU via XLA — so that\n\
+         column reports the honest single-core ratio; see EXPERIMENTS.md."
+    );
+}

@@ -1,0 +1,94 @@
+//! Table 4 — performance portability: HEGrid under the Server_M (MI50)
+//! profile vs Cygrid-16/Cygrid-32, on simulated sizes and observed channel
+//! counts.
+//!
+//! The device profile caps stream slots (2 vs 8) and the preferred Pallas
+//! block (128 vs 256), modelling the paper's reduced MI50 concurrency. On
+//! this single-core host the wall-clock gap between profiles is small, so
+//! the bench also reports the occupancy model's device-side throughput ratio
+//! (the paper's §5.4 explanation) next to each measured row.
+
+use hegrid::baselines::CygridBaseline;
+use hegrid::benchkit::support::*;
+use hegrid::benchkit::Table;
+use hegrid::config::DeviceProfile;
+use hegrid::coordinator::GriddingJob;
+use hegrid::grid::occupancy::OccupancyModel;
+use hegrid::sim::SimConfig;
+
+fn main() {
+    print_scale_note();
+    let iters = bench_iters();
+    let fast = std::env::var("HEGRID_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+
+    // Occupancy-model context (paper's explanation of the V→M gap).
+    let v = OccupancyModel::v100();
+    let m = OccupancyModel::mi50();
+    let vb = v.optimal_block(1024, 100_000);
+    let mb = m.optimal_block(512, 100_000);
+    println!(
+        "occupancy model: V100 block {vb} → {} threads/SM; MI50 block {mb} → {} threads/SM\n\
+         (device-side parallelism ratio {:.1}x — the paper's §5.4 concurrency argument)\n",
+        v.parallel_threads(vb),
+        m.parallel_threads(mb),
+        v.parallel_threads(vb) as f64 / m.parallel_threads(mb) as f64,
+    );
+
+    let mut cfg_m = bench_config();
+    cfg_m.profile = DeviceProfile::ServerM;
+    let he_m = engine(cfg_m.clone());
+
+    let datasets: Vec<(String, hegrid::data::Dataset)> = if fast {
+        vec![("obs 10ch".into(), SimConfig::observed(10).generate())]
+    } else {
+        let mut v: Vec<(String, hegrid::data::Dataset)> = vec![
+            ("sim 1.5e5".into(), SimConfig::simulated(150_000).generate()),
+            ("sim 1.9e5".into(), SimConfig::simulated(190_000).generate()),
+        ];
+        for ch in [10, 30, 50] {
+            v.push((format!("obs {ch}ch"), SimConfig::observed(ch).generate()));
+        }
+        v
+    };
+
+    let mut cols = Vec::new();
+    let mut cy16_row = Vec::new();
+    let mut cy32_row = Vec::new();
+    let mut he_row = Vec::new();
+    let mut speedup_row = Vec::new();
+
+    for (label, dataset) in &datasets {
+        let job = GriddingJob::for_dataset(dataset, &cfg_m).expect("job");
+        let (he_times, rep) = warm_and_measure(&he_m, dataset, &job, iters);
+        let he_t = median(he_times);
+        // Cygrid-16 / Cygrid-32: thread settings from the paper's Table 4.
+        // (On a single-core host both collapse to the same wall time — the
+        // row labels keep the paper's format.)
+        let (_, d16) = CygridBaseline::new(16).run(dataset, &job).expect("cygrid16");
+        let (_, d32) = CygridBaseline::new(32).run(dataset, &job).expect("cygrid32");
+        eprintln!(
+            "[{label}] hegrid_m={he_t:.3}s (variant {}) cygrid16={:.3}s cygrid32={:.3}s",
+            rep.variant,
+            d16.as_secs_f64(),
+            d32.as_secs_f64()
+        );
+        cols.push(label.clone());
+        cy16_row.push(d16.as_secs_f64());
+        cy32_row.push(d32.as_secs_f64());
+        he_row.push(he_t);
+        speedup_row.push(d16.as_secs_f64().min(d32.as_secs_f64()) / he_t);
+    }
+
+    let mut t = Table::new("Table 4: Server_M profile — running time (s)", cols);
+    t.row_f64("Cygrid-16", &cy16_row);
+    t.row_f64("Cygrid-32", &cy32_row);
+    t.row_f64("HEGrid (Server_M)", &he_row);
+    t.row_f64("Speedup (HEGrid)", &speedup_row);
+    t.print();
+
+    println!(
+        "paper shape: HEGrid-on-M stays ahead of Cygrid at low channel counts and the\n\
+         advantage shrinks as channels grow (paper: 3.85x at 10ch falling to 0.71x at\n\
+         50ch) — with only 2 stream slots the M profile saturates early."
+    );
+}

@@ -1,0 +1,292 @@
+//! Bench harness substrate (no `criterion` in the offline crate set).
+//!
+//! Each `rust/benches/*.rs` file is a `harness = false` binary that uses
+//! [`Bencher`] for warmup + repeated timing with robust statistics, and the
+//! table/series printers to emit rows shaped like the paper's tables and
+//! figures. Results can also be dumped as JSON for EXPERIMENTS.md.
+
+pub mod support;
+
+use std::time::{Duration, Instant};
+
+use crate::json::Json;
+use crate::util::stats::Summary;
+
+/// Timing configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+    /// Hard cap on total measurement time; stops early once exceeded
+    /// (at least one measured iteration always runs).
+    pub max_total: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup_iters: 1, measure_iters: 5, max_total: Duration::from_secs(120) }
+    }
+}
+
+impl BenchConfig {
+    /// Honour `HEGRID_BENCH_FAST=1` (CI smoke mode: 0 warmup, 2 iters).
+    pub fn from_env() -> Self {
+        if std::env::var("HEGRID_BENCH_FAST").map(|v| v == "1").unwrap_or(false) {
+            BenchConfig { warmup_iters: 0, measure_iters: 2, max_total: Duration::from_secs(30) }
+        } else {
+            BenchConfig::default()
+        }
+    }
+}
+
+/// One benchmark measurement: name + per-iteration seconds.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub seconds: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.seconds).expect("measurement has at least one iteration")
+    }
+
+    pub fn median(&self) -> f64 {
+        self.summary().median
+    }
+
+    pub fn to_json(&self) -> Json {
+        let s = self.summary();
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("iters", Json::num(s.n as f64)),
+            ("median_s", Json::num(s.median)),
+            ("mean_s", Json::num(s.mean)),
+            ("mad_s", Json::num(s.mad)),
+            ("min_s", Json::num(s.min)),
+            ("max_s", Json::num(s.max)),
+        ])
+    }
+}
+
+/// Runs closures with warmup and repetition.
+pub struct Bencher {
+    config: BenchConfig,
+    results: Vec<Measurement>,
+}
+
+impl Bencher {
+    pub fn new(config: BenchConfig) -> Self {
+        Bencher { config, results: Vec::new() }
+    }
+
+    pub fn from_env() -> Self {
+        Self::new(BenchConfig::from_env())
+    }
+
+    /// Time `f` (which must do one full unit of work per call).
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> &Measurement {
+        for _ in 0..self.config.warmup_iters {
+            f();
+        }
+        let mut seconds = Vec::with_capacity(self.config.measure_iters);
+        let started = Instant::now();
+        for i in 0..self.config.measure_iters {
+            let t0 = Instant::now();
+            f();
+            seconds.push(t0.elapsed().as_secs_f64());
+            if started.elapsed() > self.config.max_total && i + 1 >= 1 {
+                break;
+            }
+        }
+        self.results.push(Measurement { name: name.to_string(), seconds });
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// Dump all measurements as a JSON array (for EXPERIMENTS.md tooling).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.results.iter().map(|m| m.to_json()).collect())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Table / series printing
+// ---------------------------------------------------------------------------
+
+/// Fixed-width table printer shaped like the paper's tables: a header column
+/// of row labels, one column per sweep point.
+pub struct Table {
+    title: String,
+    col_labels: Vec<String>,
+    rows: Vec<(String, Vec<String>)>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, col_labels: Vec<String>) -> Self {
+        Table { title: title.into(), col_labels, rows: Vec::new() }
+    }
+
+    pub fn row_f64(&mut self, label: impl Into<String>, values: &[f64]) {
+        self.rows.push((
+            label.into(),
+            values.iter().map(|v| format!("{v:.2}")).collect(),
+        ));
+    }
+
+    pub fn row_str(&mut self, label: impl Into<String>, values: Vec<String>) {
+        self.rows.push((label.into(), values));
+    }
+
+    pub fn render(&self) -> String {
+        let label_w = self
+            .rows
+            .iter()
+            .map(|(l, _)| l.len())
+            .chain(std::iter::once(8))
+            .max()
+            .unwrap();
+        let col_w = self
+            .col_labels
+            .iter()
+            .map(|c| c.len())
+            .chain(self.rows.iter().flat_map(|(_, vs)| vs.iter().map(|v| v.len())))
+            .max()
+            .unwrap_or(8)
+            .max(8);
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        out.push_str(&format!("{:label_w$}", ""));
+        for c in &self.col_labels {
+            out.push_str(&format!(" | {c:>col_w$}"));
+        }
+        out.push('\n');
+        out.push_str(&"-".repeat(label_w + self.col_labels.len() * (col_w + 3)));
+        out.push('\n');
+        for (label, values) in &self.rows {
+            out.push_str(&format!("{label:label_w$}"));
+            for v in values {
+                out.push_str(&format!(" | {v:>col_w$}"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Print a figure-like series: `label: x=… y=…` lines plus an ASCII bar per
+/// point, so "who wins / where's the crossover" is visible in a terminal.
+pub struct Series {
+    title: String,
+    points: Vec<(String, f64)>,
+}
+
+impl Series {
+    pub fn new(title: impl Into<String>) -> Self {
+        Series { title: title.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: impl Into<String>, y: f64) {
+        self.points.push((x.into(), y));
+    }
+
+    pub fn render(&self) -> String {
+        let max = self.points.iter().map(|p| p.1).fold(f64::MIN, f64::max).max(1e-12);
+        let label_w = self.points.iter().map(|p| p.0.len()).max().unwrap_or(4);
+        let mut out = format!("-- {} --\n", self.title);
+        for (x, y) in &self.points {
+            let bar = "#".repeat(((y / max) * 40.0).round().max(0.0) as usize);
+            out.push_str(&format!("{x:>label_w$}  {y:>10.4}  {bar}\n"));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// `speedup = baseline / candidate` guarded against division by ~zero.
+pub fn speedup(baseline_s: f64, candidate_s: f64) -> f64 {
+    if candidate_s <= 1e-12 {
+        f64::INFINITY
+    } else {
+        baseline_s / candidate_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_runs_expected_iterations() {
+        let mut count = 0usize;
+        let mut b = Bencher::new(BenchConfig {
+            warmup_iters: 2,
+            measure_iters: 3,
+            max_total: Duration::from_secs(60),
+        });
+        let m = b.run("t", || {
+            count += 1;
+        });
+        assert_eq!(m.seconds.len(), 3);
+        assert_eq!(count, 5); // 2 warmup + 3 measured
+    }
+
+    #[test]
+    fn bencher_respects_time_cap() {
+        let mut b = Bencher::new(BenchConfig {
+            warmup_iters: 0,
+            measure_iters: 1000,
+            max_total: Duration::from_millis(30),
+        });
+        let m = b.run("slow", || std::thread::sleep(Duration::from_millis(20)));
+        assert!(m.seconds.len() < 1000);
+        assert!(!m.seconds.is_empty());
+    }
+
+    #[test]
+    fn measurement_json_has_fields() {
+        let m = Measurement { name: "x".into(), seconds: vec![1.0, 2.0, 3.0] };
+        let j = m.to_json();
+        assert_eq!(j.req_f64("median_s").unwrap(), 2.0);
+        assert_eq!(j.req_str("name").unwrap(), "x");
+    }
+
+    #[test]
+    fn table_renders_all_cells() {
+        let mut t = Table::new("Table 3", vec!["1.5e5".into(), "1.9e5".into()]);
+        t.row_f64("Cygrid", &[165.87, 194.6]);
+        t.row_f64("HEGrid", &[30.21, 40.94]);
+        let r = t.render();
+        assert!(r.contains("Table 3"));
+        assert!(r.contains("165.87"));
+        assert!(r.contains("HEGrid"));
+        assert_eq!(r.lines().count(), 5);
+    }
+
+    #[test]
+    fn series_bars_scale() {
+        let mut s = Series::new("fig");
+        s.push("a", 1.0);
+        s.push("b", 2.0);
+        let r = s.render();
+        let bars: Vec<usize> =
+            r.lines().skip(1).map(|l| l.matches('#').count()).collect();
+        assert_eq!(bars, vec![20, 40]);
+    }
+
+    #[test]
+    fn speedup_guards() {
+        assert_eq!(speedup(10.0, 2.0), 5.0);
+        assert!(speedup(1.0, 0.0).is_infinite());
+    }
+}

@@ -1,0 +1,82 @@
+//! Shared plumbing for the `rust/benches/*` harnesses.
+//!
+//! Every bench regenerates one of the paper's tables/figures. Two common
+//! needs live here: building engines against the repo's `artifacts/`
+//! directory (wherever the bench is run from), and the warm-then-measure
+//! protocol (compilation happens on first use per stream; the paper reports
+//! steady-state times).
+
+use std::time::Instant;
+
+use crate::config::HegridConfig;
+use crate::coordinator::{GriddingJob, HegridEngine, PipelineReport};
+use crate::data::Dataset;
+
+/// Locate the repo `artifacts/` directory from a bench binary.
+pub fn artifacts_dir() -> String {
+    for cand in [
+        "artifacts",
+        concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"),
+    ] {
+        if std::path::Path::new(cand).join("manifest.json").exists() {
+            return cand.to_string();
+        }
+    }
+    panic!("artifacts/manifest.json not found — run `make artifacts` first");
+}
+
+/// Default bench engine config (artifacts wired up).
+pub fn bench_config() -> HegridConfig {
+    HegridConfig { artifacts_dir: artifacts_dir(), ..HegridConfig::default() }
+}
+
+/// Build an engine, failing loudly (benches have no skip path).
+pub fn engine(cfg: HegridConfig) -> HegridEngine {
+    HegridEngine::new(cfg).expect("engine construction")
+}
+
+/// One warm run (compile + caches) then `iters` measured runs; returns the
+/// per-run wall seconds and the last report (for stage calibration).
+pub fn warm_and_measure(
+    engine: &HegridEngine,
+    dataset: &Dataset,
+    job: &GriddingJob,
+    iters: usize,
+) -> (Vec<f64>, PipelineReport) {
+    let _ = engine.grid(dataset, job).expect("warm run");
+    let mut seconds = Vec::with_capacity(iters);
+    let mut last = None;
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        let (_, report) = engine.grid(dataset, job).expect("measured run");
+        seconds.push(t0.elapsed().as_secs_f64());
+        last = Some(report);
+    }
+    (seconds, last.expect("at least one iteration"))
+}
+
+/// Median of a (small) sample.
+pub fn median(mut xs: Vec<f64>) -> f64 {
+    assert!(!xs.is_empty());
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+/// Iteration count for benches: 2 by default, 1 under HEGRID_BENCH_FAST=1.
+pub fn bench_iters() -> usize {
+    if std::env::var("HEGRID_BENCH_FAST").map(|v| v == "1").unwrap_or(false) {
+        1
+    } else {
+        2
+    }
+}
+
+/// Paper-scale disclaimer printed by every bench.
+pub fn print_scale_note() {
+    println!(
+        "note: workloads run at 1/100 of the paper's sample counts with the field\n\
+         scaled 1/10 linearly (density-preserving; see DESIGN.md). The \"device\" is\n\
+         the XLA CPU PJRT client on a single-core host, so absolute times differ\n\
+         from the paper's V100/MI50 testbed; shapes and who-wins are the target.\n"
+    );
+}

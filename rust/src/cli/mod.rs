@@ -1,0 +1,171 @@
+//! CLI argument-parsing substrate (no `clap` in the offline crate set).
+//!
+//! Grammar: `hegrid <subcommand> [--key value | --flag] [positional...]`.
+//! Typed accessors with defaults + an unknown-option check keep the binary's
+//! UX honest without a dependency.
+
+use std::collections::BTreeMap;
+
+use crate::util::error::{HegridError, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// First non-flag token (subcommand), if any.
+    pub command: Option<String>,
+    /// `--key value` options.
+    options: BTreeMap<String, String>,
+    /// `--flag` booleans (no value).
+    flags: Vec<String>,
+    /// Remaining positionals after the subcommand.
+    pub positionals: Vec<String>,
+    /// Keys the program has looked up (for unknown-option detection).
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+/// Option names that take a value; everything else starting with `--` is a flag.
+pub fn parse(argv: &[String], value_options: &[&str]) -> Result<Args> {
+    let mut args = Args::default();
+    let mut i = 0;
+    while i < argv.len() {
+        let tok = &argv[i];
+        if let Some(name) = tok.strip_prefix("--") {
+            if let Some((k, v)) = name.split_once('=') {
+                args.options.insert(k.to_string(), v.to_string());
+            } else if value_options.contains(&name) {
+                i += 1;
+                let v = argv.get(i).ok_or_else(|| {
+                    HegridError::Config(format!("option --{name} requires a value"))
+                })?;
+                args.options.insert(name.to_string(), v.clone());
+            } else {
+                args.flags.push(name.to_string());
+            }
+        } else if args.command.is_none() {
+            args.command = Some(tok.clone());
+        } else {
+            args.positionals.push(tok.clone());
+        }
+        i += 1;
+    }
+    Ok(args)
+}
+
+impl Args {
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.mark(name);
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.mark(name);
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                HegridError::Config(format!("option --{name} expects an integer, got '{v}'"))
+            }),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                HegridError::Config(format!("option --{name} expects a number, got '{v}'"))
+            }),
+        }
+    }
+
+    /// Comma-separated list of integers, e.g. `--sizes 1,2,4`.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim().parse().map_err(|_| {
+                        HegridError::Config(format!("option --{name}: bad integer '{s}'"))
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    /// Error if any `--option` was supplied that the program never consulted.
+    pub fn check_unknown(&self) -> Result<()> {
+        let consumed = self.consumed.borrow();
+        for key in self.options.keys().chain(self.flags.iter()) {
+            if !consumed.iter().any(|c| c == key) {
+                return Err(HegridError::Config(format!("unknown option --{key}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags_positionals() {
+        let a = parse(&argv("grid --input x.hgd --streams 4 --verbose out.pgm"), &["input", "streams"])
+            .unwrap();
+        assert_eq!(a.command.as_deref(), Some("grid"));
+        assert_eq!(a.get("input"), Some("x.hgd"));
+        assert_eq!(a.get_usize("streams", 1).unwrap(), 4);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positionals, vec!["out.pgm"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse(&argv("bench --sizes=1,2,3"), &[]).unwrap();
+        assert_eq!(a.get_usize_list("sizes", &[]).unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(parse(&argv("grid --input"), &["input"]).is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse(&argv("grid --streams abc"), &["streams"]).unwrap();
+        assert!(a.get_usize("streams", 1).is_err());
+        assert!(a.get_f64("streams", 1.0).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&argv("grid"), &[]).unwrap();
+        assert_eq!(a.get_usize("streams", 7).unwrap(), 7);
+        assert_eq!(a.get_or("kernel", "gauss1d"), "gauss1d");
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_option_detection() {
+        let a = parse(&argv("grid --bogus 1 --known 2"), &["bogus", "known"]).unwrap();
+        let _ = a.get("known");
+        assert!(a.check_unknown().is_err());
+        let _ = a.get("bogus");
+        assert!(a.check_unknown().is_ok());
+    }
+}

@@ -1,0 +1,328 @@
+//! Run configuration for the HEGrid engine, with JSON (de)serialisation.
+//!
+//! Every knob the paper sweeps is a field here: stream count (Fig 15), the
+//! shared pre-processing component (Fig 11/12), the Pallas block size
+//! (Fig 13/14), the thread-level reuse factor γ (Fig 16), channels per
+//! dispatch, and the device profile (Table 4 portability).
+
+use crate::json::Json;
+use crate::util::error::{HegridError, Result};
+
+/// Hardware profile — the Table-4 portability axis. Profiles cap the
+/// concurrency resources the engine may use, modelling the V100-class
+/// (Server_V) vs MI50-class (Server_M) gap the paper measures: the MI50
+/// schedules at most 128 parallel threads per CU for HEGrid's kernel, so
+/// Server_M runs with fewer stream slots and smaller dispatch tiles.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeviceProfile {
+    /// Xeon Gold 6151 + V100-class budget.
+    ServerV,
+    /// Xeon E5-2620 + MI50-class budget (reduced concurrency).
+    ServerM,
+}
+
+impl DeviceProfile {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeviceProfile::ServerV => "server_v",
+            DeviceProfile::ServerM => "server_m",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Self> {
+        match s {
+            "server_v" | "v" | "V" => Ok(DeviceProfile::ServerV),
+            "server_m" | "m" | "M" => Ok(DeviceProfile::ServerM),
+            _ => Err(HegridError::Config(format!("unknown device profile '{s}'"))),
+        }
+    }
+
+    /// Maximum concurrent PJRT stream slots.
+    pub fn max_streams(&self) -> usize {
+        match self {
+            DeviceProfile::ServerV => 8,
+            DeviceProfile::ServerM => 2,
+        }
+    }
+
+    /// Preferred Pallas block size (the Fig-13 optimum for the profile).
+    pub fn preferred_block(&self) -> usize {
+        match self {
+            DeviceProfile::ServerV => 256,
+            DeviceProfile::ServerM => 128,
+        }
+    }
+
+    /// Register budget per SM/CU used by the occupancy model (Fig 13).
+    pub fn registers_per_sm(&self) -> usize {
+        match self {
+            DeviceProfile::ServerV => 65_536,
+            DeviceProfile::ServerM => 65_536,
+        }
+    }
+
+    /// Max parallel threads the profile can co-schedule per SM/CU
+    /// ("thread blocks can only schedule up to 128 parallel threads ... on
+    /// the MI50" — §5.4).
+    pub fn max_parallel_threads(&self) -> usize {
+        match self {
+            DeviceProfile::ServerV => 2 * 352,
+            DeviceProfile::ServerM => 128,
+        }
+    }
+}
+
+/// Engine configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HegridConfig {
+    /// Directory holding `manifest.json` + `*.hlo.txt`.
+    pub artifacts_dir: String,
+    /// Concurrent PJRT stream slots (paper: GPU streams). 0 = profile default.
+    pub streams: usize,
+    /// CPU pipeline worker threads (paper: CPU processes). 0 = auto.
+    pub pipelines: usize,
+    /// Channels per device dispatch (C of the artifact variant).
+    pub channels_per_dispatch: usize,
+    /// Share the pre-processing component across pipelines (Fig 11/12 knob).
+    pub share_preprocessing: bool,
+    /// Thread-level reuse factor γ (Fig 16). 1 = off.
+    pub gamma: usize,
+    /// Pallas block size bm (Fig 13). 0 = profile default.
+    pub block_size: usize,
+    /// Convolution kernel type: gauss1d | gauss2d | tapered_sinc.
+    pub kernel_type: String,
+    /// Exact artifact variant name to use, bypassing selection (benches,
+    /// debugging). Empty = automatic selection.
+    pub variant_override: String,
+    /// Kernel σ as a multiple of the beam σ (cygrid convention: 0.5–1).
+    pub kernel_sigma_beam: f64,
+    /// Kernel support radius as a multiple of kernel σ.
+    pub support_sigma: f64,
+    /// Target map oversampling (cells per beam FWHM).
+    pub oversample: f64,
+    /// Device profile (Table 4).
+    pub profile: DeviceProfile,
+}
+
+impl Default for HegridConfig {
+    fn default() -> Self {
+        HegridConfig {
+            artifacts_dir: "artifacts".into(),
+            streams: 0,
+            pipelines: 0,
+            channels_per_dispatch: 10,
+            share_preprocessing: true,
+            gamma: 1,
+            block_size: 0,
+            kernel_type: "gauss1d".into(),
+            variant_override: String::new(),
+            kernel_sigma_beam: 0.5,
+            support_sigma: 3.0,
+            oversample: 2.0,
+            profile: DeviceProfile::ServerV,
+        }
+    }
+}
+
+impl HegridConfig {
+    /// Effective stream count after applying the profile cap. When unset,
+    /// defaults to min(profile budget, host parallelism): each stream slot
+    /// owns a PJRT client + compiled executables, so slots beyond the
+    /// physical parallelism only add compile time and contention (§Perf).
+    pub fn effective_streams(&self) -> usize {
+        let want = if self.streams == 0 {
+            self.profile.max_streams().min(crate::util::threads::default_parallelism())
+        } else {
+            self.streams
+        };
+        want.clamp(1, self.profile.max_streams().max(1))
+    }
+
+    /// Effective pipeline worker count.
+    pub fn effective_pipelines(&self) -> usize {
+        if self.pipelines == 0 {
+            crate::util::threads::default_parallelism().min(8)
+        } else {
+            self.pipelines
+        }
+    }
+
+    /// Effective Pallas block size.
+    pub fn effective_block(&self) -> usize {
+        if self.block_size == 0 {
+            self.profile.preferred_block()
+        } else {
+            self.block_size
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !["gauss1d", "gauss2d", "tapered_sinc"].contains(&self.kernel_type.as_str()) {
+            return Err(HegridError::Config(format!(
+                "unknown kernel type '{}'",
+                self.kernel_type
+            )));
+        }
+        if self.gamma == 0 || self.gamma > 8 {
+            return Err(HegridError::Config(format!("gamma {} out of range 1..=8", self.gamma)));
+        }
+        if self.channels_per_dispatch == 0 {
+            return Err(HegridError::Config("channels_per_dispatch must be >= 1".into()));
+        }
+        if !(self.kernel_sigma_beam > 0.0) || !(self.support_sigma > 0.0) || !(self.oversample > 0.0)
+        {
+            return Err(HegridError::Config("kernel/oversample parameters must be positive".into()));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("artifacts_dir", Json::str(self.artifacts_dir.clone())),
+            ("streams", Json::num(self.streams as f64)),
+            ("pipelines", Json::num(self.pipelines as f64)),
+            ("channels_per_dispatch", Json::num(self.channels_per_dispatch as f64)),
+            ("share_preprocessing", Json::Bool(self.share_preprocessing)),
+            ("gamma", Json::num(self.gamma as f64)),
+            ("block_size", Json::num(self.block_size as f64)),
+            ("kernel_type", Json::str(self.kernel_type.clone())),
+            ("variant_override", Json::str(self.variant_override.clone())),
+            ("kernel_sigma_beam", Json::num(self.kernel_sigma_beam)),
+            ("support_sigma", Json::num(self.support_sigma)),
+            ("oversample", Json::num(self.oversample)),
+            ("profile", Json::str(self.profile.name())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let d = HegridConfig::default();
+        let get_usize = |k: &str, dv: usize| -> Result<usize> {
+            match v.get(k) {
+                Some(x) => x.as_usize().ok_or_else(|| {
+                    HegridError::Config(format!("config field '{k}' must be a non-negative integer"))
+                }),
+                None => Ok(dv),
+            }
+        };
+        let get_f64 = |k: &str, dv: f64| -> Result<f64> {
+            match v.get(k) {
+                Some(x) => x
+                    .as_f64()
+                    .ok_or_else(|| HegridError::Config(format!("config field '{k}' must be a number"))),
+                None => Ok(dv),
+            }
+        };
+        let cfg = HegridConfig {
+            artifacts_dir: v
+                .get("artifacts_dir")
+                .and_then(|x| x.as_str())
+                .unwrap_or(&d.artifacts_dir)
+                .to_string(),
+            streams: get_usize("streams", d.streams)?,
+            pipelines: get_usize("pipelines", d.pipelines)?,
+            channels_per_dispatch: get_usize("channels_per_dispatch", d.channels_per_dispatch)?,
+            share_preprocessing: v
+                .get("share_preprocessing")
+                .and_then(|x| x.as_bool())
+                .unwrap_or(d.share_preprocessing),
+            gamma: get_usize("gamma", d.gamma)?,
+            block_size: get_usize("block_size", d.block_size)?,
+            kernel_type: v
+                .get("kernel_type")
+                .and_then(|x| x.as_str())
+                .unwrap_or(&d.kernel_type)
+                .to_string(),
+            variant_override: v
+                .get("variant_override")
+                .and_then(|x| x.as_str())
+                .unwrap_or("")
+                .to_string(),
+            kernel_sigma_beam: get_f64("kernel_sigma_beam", d.kernel_sigma_beam)?,
+            support_sigma: get_f64("support_sigma", d.support_sigma)?,
+            oversample: get_f64("oversample", d.oversample)?,
+            profile: match v.get("profile").and_then(|x| x.as_str()) {
+                Some(s) => DeviceProfile::from_name(s)?,
+                None => d.profile,
+            },
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).map_err(HegridError::io(path.display().to_string()))?;
+        Self::from_json(&crate::json::parse(&text)?)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_pretty())
+            .map_err(HegridError::io(path.display().to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        HegridConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let mut c = HegridConfig::default();
+        c.streams = 4;
+        c.gamma = 2;
+        c.profile = DeviceProfile::ServerM;
+        c.kernel_type = "gauss2d".into();
+        let j = c.to_json().to_pretty();
+        let back = HegridConfig::from_json(&crate::json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let v = crate::json::parse(r#"{"streams": 3}"#).unwrap();
+        let c = HegridConfig::from_json(&v).unwrap();
+        assert_eq!(c.streams, 3);
+        assert_eq!(c.channels_per_dispatch, 10);
+    }
+
+    #[test]
+    fn invalid_rejected() {
+        let v = crate::json::parse(r#"{"kernel_type": "boxcar"}"#).unwrap();
+        assert!(HegridConfig::from_json(&v).is_err());
+        let v = crate::json::parse(r#"{"gamma": 0}"#).unwrap();
+        assert!(HegridConfig::from_json(&v).is_err());
+        let v = crate::json::parse(r#"{"profile": "tpu"}"#).unwrap();
+        assert!(HegridConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn profile_caps_streams() {
+        let mut c = HegridConfig::default();
+        c.profile = DeviceProfile::ServerM;
+        c.streams = 16;
+        assert_eq!(c.effective_streams(), 2);
+        c.streams = 0;
+        // Unset: host-parallelism-aware default, still within the cap.
+        let auto = c.effective_streams();
+        assert!(auto >= 1 && auto <= 2, "{auto}");
+        c.profile = DeviceProfile::ServerV;
+        c.streams = 16;
+        assert_eq!(c.effective_streams(), 8);
+        c.streams = 0;
+        assert!(c.effective_streams() <= 8);
+    }
+
+    #[test]
+    fn effective_block_follows_profile() {
+        let mut c = HegridConfig::default();
+        assert_eq!(c.effective_block(), 256);
+        c.profile = DeviceProfile::ServerM;
+        assert_eq!(c.effective_block(), 128);
+        c.block_size = 64;
+        assert_eq!(c.effective_block(), 64);
+    }
+}

@@ -1,0 +1,295 @@
+//! Dispatch planning: channel grouping, sample sharding, and device-shaped
+//! tile data.
+//!
+//! A [`DispatchPlan`] is the channel-independent half of a gridding run —
+//! exactly what the shared component covers: sorted/padded sample
+//! coordinates, per-shard neighbour tables, and per-tile cell arrays, all
+//! `Arc`-wrapped so every pipeline dispatches from the same memory and the
+//! stream threads can keep the uploads device-resident.
+
+use std::sync::Arc;
+
+use crate::data::Dataset;
+use crate::grid::nbr::NeighborTable;
+use crate::grid::prep::SharedComponent;
+use crate::runtime::VariantInfo;
+use crate::util::error::{HegridError, Result};
+
+use super::GriddingJob;
+
+/// Epoch-id stride reserved per plan (shards consume consecutive epochs).
+pub const EPOCHS_PER_PLAN: u64 = 1 << 20;
+
+/// Channels grouped into dispatch batches of the variant's `c`.
+#[derive(Clone, Debug)]
+pub struct ChannelGroups {
+    groups: Vec<Vec<usize>>,
+}
+
+impl ChannelGroups {
+    pub fn new(n_channels: usize, per_group: usize) -> ChannelGroups {
+        assert!(per_group > 0);
+        let groups = (0..n_channels)
+            .collect::<Vec<_>>()
+            .chunks(per_group)
+            .map(|c| c.to_vec())
+            .collect();
+        ChannelGroups { groups }
+    }
+
+    pub fn len(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.groups.is_empty()
+    }
+
+    pub fn members(&self, g: usize) -> &[usize] {
+        &self.groups[g]
+    }
+}
+
+/// Device-shaped inputs for one tile (shared across channel groups).
+#[derive(Clone, Debug)]
+pub struct TileData {
+    pub cell_lon: Arc<Vec<f32>>,
+    pub cell_lat: Arc<Vec<f32>>,
+    /// `[groups_per_tile, k]` flattened, shard-local indices.
+    pub nbr: Arc<Vec<i32>>,
+}
+
+/// One sample shard: padded coordinates + per-tile neighbour tables.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    /// Sorted, padded sample coordinates (length = variant `n`).
+    pub slon: Arc<Vec<f32>>,
+    pub slat: Arc<Vec<f32>>,
+    /// Original-sample index of each shard-local sorted sample.
+    perm: Vec<u32>,
+    tiles: Vec<TileData>,
+    pub overflow_groups: usize,
+    pub adjacent_reuse: f64,
+}
+
+impl ShardPlan {
+    pub fn tile(&self, t: usize) -> &TileData {
+        &self.tiles[t]
+    }
+
+    /// Append one channel's shard values in sorted order, zero-padded to
+    /// `n`, onto `out` (building the `[c, n]` staging buffer).
+    pub fn permute_into(&self, values: &[f32], n: usize, out: &mut Vec<f32>) -> Result<()> {
+        if self.perm.iter().any(|&i| i as usize >= values.len()) {
+            return Err(HegridError::Internal(
+                "permute_into: channel shorter than dataset".into(),
+            ));
+        }
+        out.reserve(n);
+        for &i in &self.perm {
+            out.push(values[i as usize]);
+        }
+        for _ in self.perm.len()..n {
+            out.push(0.0);
+        }
+        Ok(())
+    }
+}
+
+/// The full channel-independent dispatch plan.
+#[derive(Clone, Debug)]
+pub struct DispatchPlan {
+    pub shards: Vec<ShardPlan>,
+    base_epoch: u64,
+    tiles_per_shard: usize,
+}
+
+impl DispatchPlan {
+    /// Build the plan: shared pre-processing, sharding, neighbour tables,
+    /// tile arrays.
+    pub fn build(
+        dataset: &Dataset,
+        job: &GriddingJob,
+        variant: &VariantInfo,
+        base_epoch: u64,
+        workers: usize,
+    ) -> Result<DispatchPlan> {
+        let shared = SharedComponent::build(
+            &dataset.lons,
+            &dataset.lats,
+            job.kernel.support.max(1e-9),
+            workers.max(1),
+        )?;
+        let n = shared.n_samples();
+        let n_shards = n.div_ceil(variant.n).max(1);
+        let n_tiles = job.spec.n_cells().div_ceil(variant.m).max(1);
+
+        let mut shards = Vec::with_capacity(n_shards);
+        // Cell coordinate tiles depend only on the map — compute once and
+        // share the Arcs across shards (only `nbr` differs).
+        let mut cell_tiles: Option<Vec<(Arc<Vec<f32>>, Arc<Vec<f32>>)>> = None;
+
+        for s in 0..n_shards {
+            let lo = s * variant.n;
+            let hi = ((s + 1) * variant.n).min(n);
+            let view = shared.slice(lo, hi);
+            let table = NeighborTable::build(
+                &view,
+                &job.spec,
+                &job.kernel,
+                variant.m,
+                variant.k,
+                variant.gamma,
+                workers.max(1),
+            );
+            debug_assert_eq!(table.n_tiles, n_tiles);
+
+            let cells = cell_tiles.get_or_insert_with(|| {
+                (0..n_tiles)
+                    .map(|t| {
+                        let (lon, lat) = table.tile_cells(t);
+                        (Arc::new(lon.to_vec()), Arc::new(lat.to_vec()))
+                    })
+                    .collect()
+            });
+
+            let tiles: Vec<TileData> = (0..n_tiles)
+                .map(|t| TileData {
+                    cell_lon: Arc::clone(&cells[t].0),
+                    cell_lat: Arc::clone(&cells[t].1),
+                    nbr: Arc::new(table.tile_nbr(t).to_vec()),
+                })
+                .collect();
+
+            // Pad shard coordinates to the variant's n. Pad values are never
+            // referenced (nbr only holds indices < shard size) but must be
+            // finite for the kernel's vectorised math.
+            let mut slon = view.slon.clone();
+            let mut slat = view.slat.clone();
+            slon.resize(variant.n, 0.0);
+            slat.resize(variant.n, 0.0);
+
+            shards.push(ShardPlan {
+                slon: Arc::new(slon),
+                slat: Arc::new(slat),
+                perm: view.perm.clone(),
+                tiles,
+                overflow_groups: table.stats.overflow_groups,
+                adjacent_reuse: table.stats.adjacent_reuse,
+            });
+        }
+
+        Ok(DispatchPlan { shards, base_epoch, tiles_per_shard: n_tiles })
+    }
+
+    pub fn n_tiles(&self) -> usize {
+        self.tiles_per_shard * self.shards.len()
+    }
+
+    pub fn tiles_per_shard(&self) -> usize {
+        self.tiles_per_shard
+    }
+
+    /// Device-cache epoch for shard `s` (distinct per shard so coordinate
+    /// buffers never alias).
+    pub fn epoch_for_shard(&self, s: usize) -> u64 {
+        self.base_epoch + s as u64
+    }
+
+    pub fn overflow_groups(&self) -> usize {
+        self.shards.iter().map(|s| s.overflow_groups).sum()
+    }
+
+    pub fn adjacent_reuse(&self) -> f64 {
+        if self.shards.is_empty() {
+            return 0.0;
+        }
+        self.shards.iter().map(|s| s.adjacent_reuse).sum::<f64>() / self.shards.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HegridConfig;
+    use crate::runtime::VariantInfo;
+
+    fn fake_variant(m: usize, k: usize, c: usize, n: usize, gamma: usize) -> VariantInfo {
+        VariantInfo {
+            name: format!("fake_m{m}_k{k}_c{c}_n{n}_g{gamma}"),
+            path: std::path::PathBuf::from("/dev/null"),
+            kernel_type: "gauss1d".into(),
+            m,
+            bm: m.min(64),
+            k,
+            c,
+            n,
+            gamma,
+            groups: m / gamma,
+            tags: vec![],
+        }
+    }
+
+    #[test]
+    fn channel_groups_cover_all_channels_once() {
+        let g = ChannelGroups::new(23, 10);
+        assert_eq!(g.len(), 3);
+        let all: Vec<usize> = (0..g.len()).flat_map(|i| g.members(i).to_vec()).collect();
+        assert_eq!(all, (0..23).collect::<Vec<_>>());
+        assert_eq!(g.members(2).len(), 3);
+        assert!(ChannelGroups::new(0, 4).is_empty());
+    }
+
+    #[test]
+    fn plan_shards_and_tiles() {
+        let d = crate::sim::SimConfig::quick_preset().generate();
+        let cfg = HegridConfig::default();
+        let job = super::super::GriddingJob::for_dataset(&d, &cfg).unwrap();
+        // Force sharding: n smaller than the sample count (4000).
+        let v = fake_variant(256, 32, 4, 1536, 1);
+        let plan = DispatchPlan::build(&d, &job, &v, 100, 4).unwrap();
+        assert_eq!(plan.shards.len(), 3); // ceil(4000 / 1536)
+        assert_eq!(plan.tiles_per_shard(), job.spec.n_cells().div_ceil(256));
+        assert_eq!(plan.epoch_for_shard(2), 102);
+        for shard in &plan.shards {
+            assert_eq!(shard.slon.len(), 1536);
+            for t in 0..plan.tiles_per_shard() {
+                let tile = shard.tile(t);
+                assert_eq!(tile.cell_lon.len(), 256);
+                assert_eq!(tile.nbr.len(), 256 * 32);
+                // Shard-local indices stay within the shard.
+                assert!(tile.nbr.iter().all(|&i| i < shard.perm.len() as i32));
+            }
+        }
+        // Cell arrays are shared across shards (same Arc).
+        if plan.shards.len() > 1 {
+            assert!(Arc::ptr_eq(
+                &plan.shards[0].tile(0).cell_lon,
+                &plan.shards[1].tile(0).cell_lon
+            ));
+        }
+    }
+
+    #[test]
+    fn sharded_permute_covers_every_sample_once() {
+        let d = crate::sim::SimConfig::quick_preset().generate();
+        let cfg = HegridConfig::default();
+        let job = super::super::GriddingJob::for_dataset(&d, &cfg).unwrap();
+        let v = fake_variant(256, 32, 4, 1536, 1);
+        let plan = DispatchPlan::build(&d, &job, &v, 0, 4).unwrap();
+        let values: Vec<f32> = (0..d.n_samples()).map(|i| i as f32).collect();
+        let mut seen = vec![false; d.n_samples()];
+        for shard in &plan.shards {
+            let mut out = Vec::new();
+            shard.permute_into(&values, v.n, &mut out).unwrap();
+            assert_eq!(out.len(), v.n);
+            for &x in &out[..shard.perm.len()] {
+                let i = x as usize;
+                assert!(!seen[i], "sample {i} in two shards");
+                seen[i] = true;
+            }
+            assert!(out[shard.perm.len()..].iter().all(|&x| x == 0.0));
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

@@ -1,0 +1,381 @@
+//! HGD container: the HDF5 stand-in (see `data` module docs).
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! offset 0:  magic  b"HGD1"
+//!            version u32 (=1)
+//!            n_samples u64
+//!            n_channels u32
+//!            meta_len u32, meta JSON (UTF-8)
+//! coords:    lons f64[n], lats f64[n], crc32 u32   (crc over both arrays)
+//! channel c: values f32[n], crc32 u32              (independently seekable)
+//! ```
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use super::DatasetMeta;
+use crate::util::crc32::Crc32;
+use crate::util::error::{HegridError, Result};
+
+const MAGIC: &[u8; 4] = b"HGD1";
+const VERSION: u32 = 1;
+
+/// Streaming writer. Channels must be written in order after the coords.
+pub struct HgdWriter {
+    out: BufWriter<File>,
+    path: String,
+    n_samples: usize,
+    n_channels: usize,
+    coords_written: bool,
+    channels_written: usize,
+}
+
+impl HgdWriter {
+    pub fn create(
+        path: &Path,
+        meta: &DatasetMeta,
+        n_samples: usize,
+        n_channels: usize,
+    ) -> Result<HgdWriter> {
+        let file = File::create(path).map_err(HegridError::io(path.display().to_string()))?;
+        let mut out = BufWriter::new(file);
+        let meta_json = meta.to_json().to_string().into_bytes();
+        let ctx = path.display().to_string();
+        (|| -> std::io::Result<()> {
+            out.write_all(MAGIC)?;
+            out.write_all(&VERSION.to_le_bytes())?;
+            out.write_all(&(n_samples as u64).to_le_bytes())?;
+            out.write_all(&(n_channels as u32).to_le_bytes())?;
+            out.write_all(&(meta_json.len() as u32).to_le_bytes())?;
+            out.write_all(&meta_json)
+        })()
+        .map_err(HegridError::io(ctx.clone()))?;
+        Ok(HgdWriter {
+            out,
+            path: ctx,
+            n_samples,
+            n_channels,
+            coords_written: false,
+            channels_written: 0,
+        })
+    }
+
+    pub fn write_coords(&mut self, lons: &[f64], lats: &[f64]) -> Result<()> {
+        if self.coords_written {
+            return Err(HegridError::Internal("coords written twice".into()));
+        }
+        if lons.len() != self.n_samples || lats.len() != self.n_samples {
+            return Err(HegridError::Format(format!(
+                "coords length {} != declared n_samples {}",
+                lons.len(),
+                self.n_samples
+            )));
+        }
+        let mut crc = Crc32::new();
+        for arr in [lons, lats] {
+            let bytes = f64s_to_le_bytes(arr);
+            crc.update(&bytes);
+            self.out.write_all(&bytes).map_err(HegridError::io(self.path.clone()))?;
+        }
+        self.out
+            .write_all(&crc.finalize().to_le_bytes())
+            .map_err(HegridError::io(self.path.clone()))?;
+        self.coords_written = true;
+        Ok(())
+    }
+
+    pub fn write_channel(&mut self, values: &[f32]) -> Result<()> {
+        if !self.coords_written {
+            return Err(HegridError::Internal("write coords before channels".into()));
+        }
+        if self.channels_written >= self.n_channels {
+            return Err(HegridError::Internal("too many channels written".into()));
+        }
+        if values.len() != self.n_samples {
+            return Err(HegridError::Format(format!(
+                "channel length {} != n_samples {}",
+                values.len(),
+                self.n_samples
+            )));
+        }
+        let bytes = f32s_to_le_bytes(values);
+        let mut crc = Crc32::new();
+        crc.update(&bytes);
+        self.out.write_all(&bytes).map_err(HegridError::io(self.path.clone()))?;
+        self.out
+            .write_all(&crc.finalize().to_le_bytes())
+            .map_err(HegridError::io(self.path.clone()))?;
+        self.channels_written += 1;
+        Ok(())
+    }
+
+    /// Flush and validate that the declared channel count was written.
+    pub fn finish(mut self) -> Result<()> {
+        if self.channels_written != self.n_channels {
+            return Err(HegridError::Format(format!(
+                "wrote {} of {} declared channels",
+                self.channels_written, self.n_channels
+            )));
+        }
+        self.out.flush().map_err(HegridError::io(self.path.clone()))
+    }
+}
+
+/// Random-access reader; channel blocks can be read in any order — the
+/// coordinator's pipelines stream channels independently.
+pub struct HgdReader {
+    file: BufReader<File>,
+    path: String,
+    meta: DatasetMeta,
+    n_samples: usize,
+    n_channels: usize,
+    coords_offset: u64,
+}
+
+impl HgdReader {
+    pub fn open(path: &Path) -> Result<HgdReader> {
+        let ctx = path.display().to_string();
+        let file = File::open(path).map_err(HegridError::io(ctx.clone()))?;
+        let mut file = BufReader::new(file);
+
+        let mut magic = [0u8; 4];
+        file.read_exact(&mut magic).map_err(HegridError::io(ctx.clone()))?;
+        if &magic != MAGIC {
+            return Err(HegridError::Format(format!("{ctx}: not an HGD file (bad magic)")));
+        }
+        let version = read_u32(&mut file, &ctx)?;
+        if version != VERSION {
+            return Err(HegridError::Format(format!("{ctx}: unsupported HGD version {version}")));
+        }
+        let n_samples = read_u64(&mut file, &ctx)? as usize;
+        let n_channels = read_u32(&mut file, &ctx)? as usize;
+        let meta_len = read_u32(&mut file, &ctx)? as usize;
+        if meta_len > 1 << 20 {
+            return Err(HegridError::Format(format!("{ctx}: implausible meta length {meta_len}")));
+        }
+        let mut meta_buf = vec![0u8; meta_len];
+        file.read_exact(&mut meta_buf).map_err(HegridError::io(ctx.clone()))?;
+        let meta_text = String::from_utf8(meta_buf)
+            .map_err(|_| HegridError::Format(format!("{ctx}: meta is not UTF-8")))?;
+        let meta = DatasetMeta::from_json(&crate::json::parse(&meta_text)?)?;
+        let coords_offset = 4 + 4 + 8 + 4 + 4 + meta_len as u64;
+        Ok(HgdReader { file, path: ctx, meta, n_samples, n_channels, coords_offset })
+    }
+
+    pub fn meta(&self) -> &DatasetMeta {
+        &self.meta
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.n_samples
+    }
+
+    pub fn n_channels(&self) -> usize {
+        self.n_channels
+    }
+
+    fn coords_block_len(&self) -> u64 {
+        (self.n_samples * 16 + 4) as u64
+    }
+
+    fn channel_block_len(&self) -> u64 {
+        (self.n_samples * 4 + 4) as u64
+    }
+
+    /// Read the shared coordinate table (radians), verifying its CRC.
+    pub fn read_coords(&mut self) -> Result<(Vec<f64>, Vec<f64>)> {
+        self.file
+            .seek(SeekFrom::Start(self.coords_offset))
+            .map_err(HegridError::io(self.path.clone()))?;
+        let mut buf = vec![0u8; self.n_samples * 16];
+        self.file.read_exact(&mut buf).map_err(HegridError::io(self.path.clone()))?;
+        let stored = read_u32(&mut self.file, &self.path)?;
+        let mut crc = Crc32::new();
+        crc.update(&buf);
+        if crc.finalize() != stored {
+            return Err(HegridError::Format(format!("{}: coords CRC mismatch", self.path)));
+        }
+        let lons = le_bytes_to_f64s(&buf[..self.n_samples * 8]);
+        let lats = le_bytes_to_f64s(&buf[self.n_samples * 8..]);
+        Ok((lons, lats))
+    }
+
+    /// Read channel `c`'s value block, verifying its CRC.
+    pub fn read_channel(&mut self, c: usize) -> Result<Vec<f32>> {
+        if c >= self.n_channels {
+            return Err(HegridError::Format(format!(
+                "channel {c} out of range ({} channels)",
+                self.n_channels
+            )));
+        }
+        let offset =
+            self.coords_offset + self.coords_block_len() + c as u64 * self.channel_block_len();
+        self.file.seek(SeekFrom::Start(offset)).map_err(HegridError::io(self.path.clone()))?;
+        let mut buf = vec![0u8; self.n_samples * 4];
+        self.file.read_exact(&mut buf).map_err(HegridError::io(self.path.clone()))?;
+        let stored = read_u32(&mut self.file, &self.path)?;
+        let mut crc = Crc32::new();
+        crc.update(&buf);
+        if crc.finalize() != stored {
+            return Err(HegridError::Format(format!(
+                "{}: channel {c} CRC mismatch",
+                self.path
+            )));
+        }
+        Ok(le_bytes_to_f32s(&buf))
+    }
+}
+
+// ---- byte helpers ---------------------------------------------------------
+
+fn f64s_to_le_bytes(v: &[f64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 8);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn f32s_to_le_bytes(v: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 4);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn le_bytes_to_f64s(b: &[u8]) -> Vec<f64> {
+    b.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+fn le_bytes_to_f32s(b: &[u8]) -> Vec<f32> {
+    b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+fn read_u32<R: Read>(r: &mut R, ctx: &str) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b).map_err(HegridError::io(ctx.to_string()))?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R, ctx: &str) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b).map_err(HegridError::io(ctx.to_string()))?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Dataset, DatasetMeta};
+    use super::*;
+    use crate::util::SplitMix64;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("hegrid_hgd_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn sample_dataset(n: usize, c: usize) -> Dataset {
+        let mut rng = SplitMix64::new(5);
+        let lons: Vec<f64> = (0..n).map(|_| rng.uniform(0.5, 0.6)).collect();
+        let lats: Vec<f64> = (0..n).map(|_| rng.uniform(0.7, 0.8)).collect();
+        let channels: Vec<Vec<f32>> =
+            (0..c).map(|_| (0..n).map(|_| rng.normal() as f32).collect()).collect();
+        let meta = DatasetMeta {
+            name: "roundtrip".into(),
+            beam_arcsec: 300.0,
+            center_deg: (30.0, 41.0),
+            extent_deg: (10.0, 10.0),
+        };
+        Dataset::new(meta, lons, lats, channels).unwrap()
+    }
+
+    #[test]
+    fn round_trip_full_file() {
+        let d = sample_dataset(1000, 5);
+        let path = tmp("rt.hgd");
+        d.save(&path).unwrap();
+        let back = Dataset::load(&path).unwrap();
+        assert_eq!(back.meta, d.meta);
+        assert_eq!(back.lons, d.lons);
+        assert_eq!(back.lats, d.lats);
+        assert_eq!(back.channels, d.channels);
+    }
+
+    #[test]
+    fn random_access_channels_out_of_order() {
+        let d = sample_dataset(257, 4);
+        let path = tmp("ooo.hgd");
+        d.save(&path).unwrap();
+        let mut r = HgdReader::open(&path).unwrap();
+        assert_eq!(r.n_samples(), 257);
+        assert_eq!(r.n_channels(), 4);
+        // Read channels in reverse order without touching coords first.
+        for c in (0..4).rev() {
+            assert_eq!(r.read_channel(c).unwrap(), d.channels[c]);
+        }
+        let (lons, _) = r.read_coords().unwrap();
+        assert_eq!(lons, d.lons);
+    }
+
+    #[test]
+    fn corrupted_channel_detected() {
+        let d = sample_dataset(64, 2);
+        let path = tmp("corrupt.hgd");
+        d.save(&path).unwrap();
+        // Flip one byte inside channel 1's value block.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let idx = bytes.len() - 10; // inside the last channel block
+        bytes[idx] ^= 0xFF;
+        std::fs::write(&path, bytes).unwrap();
+        let mut r = HgdReader::open(&path).unwrap();
+        assert_eq!(r.read_channel(0).unwrap(), d.channels[0]);
+        assert!(matches!(r.read_channel(1), Err(HegridError::Format(_))));
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let path = tmp("bad.hgd");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(matches!(HgdReader::open(&path), Err(HegridError::Format(_))));
+    }
+
+    #[test]
+    fn channel_out_of_range_rejected() {
+        let d = sample_dataset(16, 1);
+        let path = tmp("range.hgd");
+        d.save(&path).unwrap();
+        let mut r = HgdReader::open(&path).unwrap();
+        assert!(r.read_channel(1).is_err());
+    }
+
+    #[test]
+    fn writer_enforces_declared_counts() {
+        let meta = sample_dataset(4, 1).meta;
+        let path = tmp("counts.hgd");
+        let mut w = HgdWriter::create(&path, &meta, 4, 2).unwrap();
+        // channel before coords
+        assert!(w.write_channel(&[0.0; 4]).is_err());
+        w.write_coords(&vec![0.0; 4], &vec![0.0; 4]).unwrap();
+        // wrong lengths
+        assert!(w.write_channel(&[0.0; 3]).is_err());
+        w.write_channel(&[0.0; 4]).unwrap();
+        // finish with a missing channel
+        assert!(w.finish().is_err());
+    }
+
+    #[test]
+    fn zero_samples_and_channels() {
+        let meta = sample_dataset(1, 1).meta;
+        let d = Dataset::new(meta, vec![], vec![], vec![]).unwrap();
+        let path = tmp("empty.hgd");
+        d.save(&path).unwrap();
+        let back = Dataset::load(&path).unwrap();
+        assert_eq!(back.n_samples(), 0);
+        assert_eq!(back.n_channels(), 0);
+    }
+}

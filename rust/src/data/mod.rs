@@ -1,0 +1,172 @@
+//! Dataset model + the HGD on-disk container.
+//!
+//! The paper stores multi-channel FAST data in HDF5: one shared coordinate
+//! table (the receiver pointing is identical for every frequency channel) and
+//! one value column per channel. No HDF5 implementation is vendored offline,
+//! so HEGrid ships **HGD** — a little-endian binary container with the same
+//! access pattern: header → shared coordinates → per-channel value blocks,
+//! each CRC-32 protected, channel blocks independently seekable so pipelines
+//! can stream one channel at a time (the T1 "load" stage of Fig 8).
+
+pub mod hgd;
+
+pub use hgd::{HgdReader, HgdWriter};
+
+use crate::util::error::{HegridError, Result};
+
+/// Dataset metadata carried in the HGD header (JSON-encoded on disk).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DatasetMeta {
+    pub name: String,
+    /// Beam FWHM in arcsec (Table 2: 180" / 300").
+    pub beam_arcsec: f64,
+    /// Map center in degrees.
+    pub center_deg: (f64, f64),
+    /// Field extent (width, height) in degrees.
+    pub extent_deg: (f64, f64),
+}
+
+impl DatasetMeta {
+    pub fn to_json(&self) -> crate::json::Json {
+        use crate::json::Json;
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("beam_arcsec", Json::num(self.beam_arcsec)),
+            ("center_lon_deg", Json::num(self.center_deg.0)),
+            ("center_lat_deg", Json::num(self.center_deg.1)),
+            ("extent_lon_deg", Json::num(self.extent_deg.0)),
+            ("extent_lat_deg", Json::num(self.extent_deg.1)),
+        ])
+    }
+
+    pub fn from_json(v: &crate::json::Json) -> Result<Self> {
+        Ok(DatasetMeta {
+            name: v.req_str("name")?.to_string(),
+            beam_arcsec: v.req_f64("beam_arcsec")?,
+            center_deg: (v.req_f64("center_lon_deg")?, v.req_f64("center_lat_deg")?),
+            extent_deg: (v.req_f64("extent_lon_deg")?, v.req_f64("extent_lat_deg")?),
+        })
+    }
+}
+
+/// An in-memory multi-channel dataset: shared sample coordinates (radians)
+/// plus one value vector per frequency channel.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub meta: DatasetMeta,
+    /// Sample longitudes (right ascension), radians.
+    pub lons: Vec<f64>,
+    /// Sample latitudes (declination), radians.
+    pub lats: Vec<f64>,
+    /// `channels[c][i]` = sampled value of channel `c` at sample `i`.
+    pub channels: Vec<Vec<f32>>,
+}
+
+impl Dataset {
+    pub fn new(
+        meta: DatasetMeta,
+        lons: Vec<f64>,
+        lats: Vec<f64>,
+        channels: Vec<Vec<f32>>,
+    ) -> Result<Self> {
+        if lons.len() != lats.len() {
+            return Err(HegridError::Format("lons/lats length mismatch".into()));
+        }
+        for (c, ch) in channels.iter().enumerate() {
+            if ch.len() != lons.len() {
+                return Err(HegridError::Format(format!(
+                    "channel {c} has {} values for {} samples",
+                    ch.len(),
+                    lons.len()
+                )));
+            }
+        }
+        Ok(Dataset { meta, lons, lats, channels })
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.lons.len()
+    }
+
+    pub fn n_channels(&self) -> usize {
+        self.channels.len()
+    }
+
+    /// Restrict to the first `n` channels.
+    pub fn take_channels(&self, n: usize) -> Dataset {
+        Dataset {
+            meta: self.meta.clone(),
+            lons: self.lons.clone(),
+            lats: self.lats.clone(),
+            channels: self.channels[..n.min(self.channels.len())].to_vec(),
+        }
+    }
+
+    /// Approximate in-memory size in bytes (coords + values).
+    pub fn nbytes(&self) -> usize {
+        self.lons.len() * 16 + self.channels.len() * self.lons.len() * 4
+    }
+
+    /// Write to an HGD file.
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        let mut w = HgdWriter::create(path, &self.meta, self.n_samples(), self.n_channels())?;
+        w.write_coords(&self.lons, &self.lats)?;
+        for ch in &self.channels {
+            w.write_channel(ch)?;
+        }
+        w.finish()
+    }
+
+    /// Read a full HGD file into memory.
+    pub fn load(path: &std::path::Path) -> Result<Dataset> {
+        let mut r = HgdReader::open(path)?;
+        let (lons, lats) = r.read_coords()?;
+        let mut channels = Vec::with_capacity(r.n_channels());
+        for c in 0..r.n_channels() {
+            channels.push(r.read_channel(c)?);
+        }
+        Dataset::new(r.meta().clone(), lons, lats, channels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn tiny_meta() -> DatasetMeta {
+        DatasetMeta {
+            name: "tiny".into(),
+            beam_arcsec: 180.0,
+            center_deg: (30.0, 41.0),
+            extent_deg: (5.0, 5.0),
+        }
+    }
+
+    #[test]
+    fn meta_json_round_trip() {
+        let m = tiny_meta();
+        let j = m.to_json();
+        let parsed = crate::json::parse(&j.to_string()).unwrap();
+        assert_eq!(DatasetMeta::from_json(&parsed).unwrap(), m);
+    }
+
+    #[test]
+    fn dataset_validation() {
+        let m = tiny_meta();
+        assert!(Dataset::new(m.clone(), vec![0.0; 3], vec![0.0; 2], vec![]).is_err());
+        assert!(Dataset::new(m.clone(), vec![0.0; 3], vec![0.0; 3], vec![vec![0.0; 2]]).is_err());
+        let d = Dataset::new(m, vec![0.0; 3], vec![0.0; 3], vec![vec![0.0; 3]; 2]).unwrap();
+        assert_eq!(d.n_samples(), 3);
+        assert_eq!(d.n_channels(), 2);
+        assert_eq!(d.nbytes(), 3 * 16 + 2 * 3 * 4);
+    }
+
+    #[test]
+    fn take_channels_subsets() {
+        let m = tiny_meta();
+        let d = Dataset::new(m, vec![0.0; 2], vec![0.0; 2], vec![vec![1.0; 2], vec![2.0; 2]])
+            .unwrap();
+        assert_eq!(d.take_channels(1).n_channels(), 1);
+        assert_eq!(d.take_channels(5).n_channels(), 2);
+    }
+}

@@ -1,0 +1,224 @@
+//! CPU reference gridder.
+//!
+//! Implements Eq. (1) directly over the shared LUT in f64 — the correctness
+//! oracle for the device path (integration tests pin PJRT output against it)
+//! and the computational core of the Cygrid baseline (`baselines::cygrid`).
+
+use std::f64::consts::FRAC_PI_2;
+
+use crate::data::Dataset;
+use crate::grid::kernels::ConvKernel;
+use crate::grid::prep::SharedComponent;
+use crate::healpix::{ang_dist, PixRange};
+use crate::sky::{GridSpec, SkyMap};
+use crate::util::threads::parallel_items;
+
+/// Multi-channel CPU gridder (gather method, Fig 2 right).
+#[derive(Clone, Debug)]
+pub struct CpuGridder {
+    pub spec: GridSpec,
+    pub kernel: ConvKernel,
+    pub workers: usize,
+}
+
+impl CpuGridder {
+    pub fn new(spec: GridSpec, kernel: ConvKernel) -> Self {
+        CpuGridder { spec, kernel, workers: crate::util::threads::default_parallelism() }
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    /// Grid every channel of `dataset` (builds its own shared component).
+    pub fn grid_dataset(&self, dataset: &Dataset) -> Vec<SkyMap> {
+        let shared = SharedComponent::for_kernel(&dataset.lons, &dataset.lats, &self.kernel)
+            .expect("consistent dataset");
+        self.grid_with_shared(&shared, &dataset.channels)
+    }
+
+    /// Grid `channels` (original sample order) against a prebuilt component.
+    /// All channels are accumulated in a single sweep over the cells, so the
+    /// neighbour search cost is paid once — how Cygrid treats multi-channel
+    /// data on the CPU.
+    pub fn grid_with_shared(&self, shared: &SharedComponent, channels: &[Vec<f32>]) -> Vec<SkyMap> {
+        let n_cells = self.spec.n_cells();
+        let n_ch = channels.len();
+        // acc[ch][cell], wsum[cell]; written by disjoint cells in parallel.
+        let mut acc = vec![0.0f64; n_ch * n_cells];
+        let mut wsum = vec![0.0f64; n_cells];
+        {
+            let acc_ptr = CellPtr(acc.as_mut_ptr());
+            let wsum_ptr = CellPtr(wsum.as_mut_ptr());
+            parallel_items(n_cells, self.workers, |cell| {
+                let (clon, clat) = self.spec.cell_center_flat(cell);
+                let ctheta = FRAC_PI_2 - clat;
+                let mut ranges: Vec<PixRange> = Vec::new();
+                shared
+                    .healpix
+                    .query_disc_rings_into(ctheta, clon, self.kernel.support, &mut ranges);
+                let clat_cos = clat.cos();
+                let mut w_tot = 0.0f64;
+                // Local per-channel accumulators to minimise shared writes.
+                let mut local = vec![0.0f64; n_ch];
+                for r in &ranges {
+                    let (a, b) = shared.samples_in_pix_range(r.lo, r.hi);
+                    for j in a..b {
+                        let (slon, slat) = (shared.slon64[j], shared.slat64[j]);
+                        let d = ang_dist(ctheta, clon, FRAC_PI_2 - slat, slon);
+                        let d2 = d * d;
+                        let w = self.kernel.weight(d2, (slon - clon) * clat_cos, slat - clat);
+                        if w != 0.0 {
+                            w_tot += w;
+                            let orig = shared.perm[j] as usize;
+                            for (c, ch) in channels.iter().enumerate() {
+                                local[c] += w * ch[orig] as f64;
+                            }
+                        }
+                    }
+                }
+                unsafe {
+                    wsum_ptr.write(cell, w_tot);
+                    for c in 0..n_ch {
+                        acc_ptr.write(c * n_cells + cell, local[c]);
+                    }
+                }
+            });
+        }
+        (0..n_ch)
+            .map(|c| {
+                SkyMap::from_accumulators(
+                    self.spec.clone(),
+                    &acc[c * n_cells..(c + 1) * n_cells],
+                    &wsum,
+                )
+                .expect("accumulator sizes consistent")
+            })
+            .collect()
+    }
+}
+
+/// Disjoint-cell writer handle.
+struct CellPtr(*mut f64);
+unsafe impl Sync for CellPtr {}
+impl CellPtr {
+    unsafe fn write(&self, i: usize, v: f64) {
+        unsafe { self.0.add(i).write(v) };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimConfig;
+    use crate::util::SplitMix64;
+
+    fn small_setup() -> (GridSpec, ConvKernel) {
+        (GridSpec::centered(30.0, 41.0, 12, 6, 0.25), ConvKernel::gauss1d_for_beam(0.5))
+    }
+
+    /// Brute-force Eq. (1) without any LUT.
+    fn brute_force(
+        spec: &GridSpec,
+        kernel: &ConvKernel,
+        lons: &[f64],
+        lats: &[f64],
+        values: &[f32],
+    ) -> Vec<f64> {
+        let mut out = vec![f64::NAN; spec.n_cells()];
+        for cell in 0..spec.n_cells() {
+            let (clon, clat) = spec.cell_center_flat(cell);
+            let mut acc = 0.0;
+            let mut w_tot = 0.0;
+            for j in 0..lons.len() {
+                let d = ang_dist(
+                    FRAC_PI_2 - clat,
+                    clon,
+                    FRAC_PI_2 - lats[j],
+                    lons[j],
+                );
+                let w =
+                    kernel.weight(d * d, (lons[j] - clon) * clat.cos(), lats[j] - clat);
+                if w != 0.0 {
+                    acc += w * values[j] as f64;
+                    w_tot += w;
+                }
+            }
+            if w_tot > 0.0 {
+                out[cell] = acc / w_tot;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_brute_force_exactly() {
+        let (spec, kernel) = small_setup();
+        let mut rng = SplitMix64::new(10);
+        let (lon_lo, lon_hi, lat_lo, lat_hi) = spec.bounds();
+        let n = 600;
+        let lons: Vec<f64> = (0..n).map(|_| rng.uniform(lon_lo, lon_hi)).collect();
+        let lats: Vec<f64> = (0..n).map(|_| rng.uniform(lat_lo, lat_hi)).collect();
+        let values: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+
+        let gridder = CpuGridder::new(spec.clone(), kernel.clone());
+        let shared = SharedComponent::for_kernel(&lons, &lats, &kernel).unwrap();
+        let maps = gridder.grid_with_shared(&shared, &[values.clone()]);
+        let expect = brute_force(&spec, &kernel, &lons, &lats, &values);
+        for cell in 0..spec.n_cells() {
+            let got = maps[0].values()[cell];
+            let want = expect[cell];
+            if want.is_nan() {
+                assert!(got.is_nan(), "cell {cell}");
+            } else {
+                assert!(
+                    (got - want).abs() <= 1e-12 * want.abs().max(1.0),
+                    "cell {cell}: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn worker_count_does_not_change_results() {
+        let (spec, kernel) = small_setup();
+        let d = SimConfig::quick_preset().generate();
+        let shared = SharedComponent::for_kernel(&d.lons, &d.lats, &kernel).unwrap();
+        let a = CpuGridder::new(spec.clone(), kernel.clone())
+            .with_workers(1)
+            .grid_with_shared(&shared, &d.channels);
+        let b = CpuGridder::new(spec, kernel).with_workers(8).grid_with_shared(&shared, &d.channels);
+        for (ma, mb) in a.iter().zip(&b) {
+            for (va, vb) in ma.values().iter().zip(mb.values()) {
+                assert!((va.is_nan() && vb.is_nan()) || va == vb);
+            }
+        }
+    }
+
+    #[test]
+    fn grid_dataset_covers_field() {
+        let d = SimConfig::quick_preset().generate();
+        let spec = GridSpec::for_field(
+            d.meta.center_deg.0,
+            d.meta.center_deg.1,
+            d.meta.extent_deg.0,
+            d.meta.extent_deg.1,
+            d.meta.beam_arcsec / 3600.0,
+            1.0,
+        );
+        let kernel = ConvKernel::gauss1d_for_beam(d.meta.beam_arcsec / 3600.0);
+        let maps = CpuGridder::new(spec, kernel).grid_dataset(&d);
+        assert_eq!(maps.len(), d.n_channels());
+        // The drift scan covers the field densely: most cells have data.
+        assert!(maps[0].coverage() > 0.9, "coverage {}", maps[0].coverage());
+        // Reconstructed values stay within the simulated brightness range.
+        for m in &maps {
+            for (&v, &w) in m.values().iter().zip(m.weights()) {
+                if w > 0.0 {
+                    assert!(v.is_finite() && v.abs() < 20.0);
+                }
+            }
+        }
+    }
+}

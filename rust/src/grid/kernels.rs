@@ -1,0 +1,228 @@
+//! Convolution (weighting) kernels — the `w(...)` of Eq. (1).
+//!
+//! Three families, matching `python/compile/kernels/gridding.py` bit-for-bit
+//! in semantics (the Python oracle `ref.py` and this module are cross-checked
+//! by integration tests): `gauss1d` (radially symmetric Gaussian — the
+//! cygrid default), `gauss2d` (elliptical Gaussian), and `tapered_sinc`
+//! (Gaussian-tapered sinc).
+
+use crate::util::error::{HegridError, Result};
+
+/// Kernel family. String names match the artifact variants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConvKernelType {
+    Gauss1d,
+    Gauss2d,
+    TaperedSinc,
+}
+
+impl ConvKernelType {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ConvKernelType::Gauss1d => "gauss1d",
+            ConvKernelType::Gauss2d => "gauss2d",
+            ConvKernelType::TaperedSinc => "tapered_sinc",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Self> {
+        match s {
+            "gauss1d" => Ok(ConvKernelType::Gauss1d),
+            "gauss2d" => Ok(ConvKernelType::Gauss2d),
+            "tapered_sinc" => Ok(ConvKernelType::TaperedSinc),
+            _ => Err(HegridError::Config(format!("unknown kernel type '{s}'"))),
+        }
+    }
+}
+
+/// A fully-parameterised convolution kernel.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConvKernel {
+    pub ktype: ConvKernelType,
+    /// Primary width σ (rad). For `TaperedSinc` this is the sinc scale.
+    pub sigma: f64,
+    /// Secondary width (rad): σ_y for `Gauss2d`, taper scale for `TaperedSinc`.
+    pub sigma2: f64,
+    /// Support (cut-off) radius R (rad); weights are zero beyond it.
+    pub support: f64,
+}
+
+impl ConvKernel {
+    /// Radially symmetric Gaussian with σ = `kernel_sigma_beam`·σ_beam and
+    /// support `support_sigma`·σ (cygrid's recommended σ_kernel = 0.5·σ_beam).
+    pub fn gauss1d_for_beam_cfg(beam_fwhm_rad: f64, sigma_beam: f64, support_sigma: f64) -> Self {
+        let sb = beam_fwhm_rad / (2.0 * (2.0f64.ln() * 2.0).sqrt());
+        let sigma = sigma_beam * sb;
+        ConvKernel {
+            ktype: ConvKernelType::Gauss1d,
+            sigma,
+            sigma2: sigma,
+            support: support_sigma * sigma,
+        }
+    }
+
+    /// Radially symmetric Gaussian with the default σ = 0.5·σ_beam, R = 3σ.
+    /// `beam_deg` is the beam FWHM in degrees.
+    pub fn gauss1d_for_beam(beam_deg: f64) -> Self {
+        Self::gauss1d_for_beam_cfg(crate::util::deg2rad(beam_deg), 0.5, 3.0)
+    }
+
+    /// Elliptical Gaussian.
+    pub fn gauss2d(sigma_x: f64, sigma_y: f64, support: f64) -> Self {
+        ConvKernel { ktype: ConvKernelType::Gauss2d, sigma: sigma_x, sigma2: sigma_y, support }
+    }
+
+    /// Gaussian-tapered sinc (cygrid's high-fidelity option).
+    pub fn tapered_sinc(sigma: f64, taper: f64, support: f64) -> Self {
+        ConvKernel { ktype: ConvKernelType::TaperedSinc, sigma, sigma2: taper, support }
+    }
+
+    /// Build from an engine config + dataset beam.
+    pub fn from_config(beam_arcsec: f64, cfg: &crate::config::HegridConfig) -> Result<Self> {
+        let ktype = ConvKernelType::from_name(&cfg.kernel_type)?;
+        let beam = crate::util::arcsec2rad(beam_arcsec);
+        let base = Self::gauss1d_for_beam_cfg(beam, cfg.kernel_sigma_beam, cfg.support_sigma);
+        Ok(match ktype {
+            ConvKernelType::Gauss1d => base,
+            ConvKernelType::Gauss2d => Self::gauss2d(base.sigma, base.sigma, base.support),
+            ConvKernelType::TaperedSinc => {
+                // cygrid-like defaults: sinc scale ≈ σ/1.5, taper ≈ 2.52·σ.
+                Self::tapered_sinc(base.sigma / 1.5, base.sigma * 2.52, base.support)
+            }
+        })
+    }
+
+    /// The `kparam` array shipped to the device kernel; layout documented in
+    /// `python/compile/kernels/gridding.py::eval_weight`.
+    pub fn kparam(&self) -> [f32; 4] {
+        let r2 = (self.support * self.support) as f32;
+        match self.ktype {
+            ConvKernelType::Gauss1d => {
+                [(1.0 / (2.0 * self.sigma * self.sigma)) as f32, r2, 0.0, 0.0]
+            }
+            ConvKernelType::Gauss2d => [
+                (1.0 / (2.0 * self.sigma * self.sigma)) as f32,
+                (1.0 / (2.0 * self.sigma2 * self.sigma2)) as f32,
+                r2,
+                0.0,
+            ],
+            ConvKernelType::TaperedSinc => {
+                [(1.0 / self.sigma) as f32, (1.0 / self.sigma2) as f32, r2, 0.0]
+            }
+        }
+    }
+
+    /// CPU evaluation, identical semantics to the device kernel:
+    /// `d2` is the squared angular separation, `dlon_cos` the cos(lat)-scaled
+    /// longitude offset, `dlat` the latitude offset (all rad).
+    #[inline]
+    pub fn weight(&self, d2: f64, dlon_cos: f64, dlat: f64) -> f64 {
+        if d2 > self.support * self.support {
+            return 0.0;
+        }
+        match self.ktype {
+            ConvKernelType::Gauss1d => (-d2 / (2.0 * self.sigma * self.sigma)).exp(),
+            ConvKernelType::Gauss2d => (-(dlon_cos * dlon_cos) / (2.0 * self.sigma * self.sigma)
+                - (dlat * dlat) / (2.0 * self.sigma2 * self.sigma2))
+                .exp(),
+            ConvKernelType::TaperedSinc => {
+                let d = d2.sqrt();
+                let x = d / self.sigma;
+                let sinc = if x.abs() < 1e-12 { 1.0 } else { x.sin() / x };
+                let t = d / self.sigma2;
+                sinc * (-t * t).exp()
+            }
+        }
+    }
+
+    /// Variant-name fragment used to select artifacts (e.g. `gauss1d`).
+    pub fn type_name(&self) -> &'static str {
+        self.ktype.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn type_names_round_trip() {
+        for t in [ConvKernelType::Gauss1d, ConvKernelType::Gauss2d, ConvKernelType::TaperedSinc] {
+            assert_eq!(ConvKernelType::from_name(t.name()).unwrap(), t);
+        }
+        assert!(ConvKernelType::from_name("boxcar").is_err());
+    }
+
+    #[test]
+    fn gauss1d_peak_and_halfwidth() {
+        let k = ConvKernel::gauss1d_for_beam(0.05);
+        assert!((k.weight(0.0, 0.0, 0.0) - 1.0).abs() < 1e-12);
+        // w(σ) = exp(-1/2)
+        let w = k.weight(k.sigma * k.sigma, k.sigma, 0.0);
+        assert!((w - (-0.5f64).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn support_cutoff_exact() {
+        let k = ConvKernel::gauss1d_for_beam(0.05);
+        let r2 = k.support * k.support;
+        assert!(k.weight(r2 * 1.0001, 0.0, 0.0) == 0.0);
+        assert!(k.weight(r2 * 0.9999, 0.0, 0.0) > 0.0);
+    }
+
+    #[test]
+    fn gauss2d_anisotropy() {
+        let k = ConvKernel::gauss2d(0.01, 0.02, 0.1);
+        let w_lon = k.weight(1e-4, 0.01, 0.0);
+        let w_lat = k.weight(1e-4, 0.0, 0.01);
+        assert!(w_lat > w_lon, "wider axis decays slower");
+    }
+
+    #[test]
+    fn tapered_sinc_matches_numpy_sinc_convention() {
+        // np.sinc(x/π) = sin(x)/x — the device kernel uses jnp.sinc(x/π).
+        let k = ConvKernel::tapered_sinc(0.01, 0.025, 0.1);
+        let d: f64 = 0.015;
+        let x = d / 0.01;
+        let expect = (x.sin() / x) * (-(d / 0.025) * (d / 0.025)).exp();
+        assert!((k.weight(d * d, d, 0.0) - expect).abs() < 1e-12);
+        assert!((k.weight(0.0, 0.0, 0.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kparam_layouts() {
+        let g1 = ConvKernel::gauss1d_for_beam(0.05);
+        let p = g1.kparam();
+        assert!((p[0] as f64 - 1.0 / (2.0 * g1.sigma * g1.sigma)).abs() / (p[0] as f64) < 1e-6);
+        assert!((p[1] as f64 - g1.support * g1.support).abs() / (p[1] as f64) < 1e-6);
+
+        let g2 = ConvKernel::gauss2d(0.01, 0.02, 0.05);
+        let p = g2.kparam();
+        assert!(p[0] > p[1], "σx < σy ⇒ coefficient x > y");
+        assert!((p[2] as f64 - 0.0025).abs() < 1e-9);
+
+        let ts = ConvKernel::tapered_sinc(0.01, 0.02, 0.05);
+        let p = ts.kparam();
+        assert!((p[0] - 100.0).abs() < 1e-3);
+        assert!((p[1] - 50.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn from_config_respects_type() {
+        let mut cfg = crate::config::HegridConfig::default();
+        for t in ["gauss1d", "gauss2d", "tapered_sinc"] {
+            cfg.kernel_type = t.into();
+            let k = ConvKernel::from_config(180.0, &cfg).unwrap();
+            assert_eq!(k.type_name(), t);
+            assert!(k.support > 0.0);
+        }
+    }
+
+    #[test]
+    fn beam_scaling_linear() {
+        let a = ConvKernel::gauss1d_for_beam(0.05);
+        let b = ConvKernel::gauss1d_for_beam(0.10);
+        assert!((b.sigma / a.sigma - 2.0).abs() < 1e-12);
+        assert!((b.support / a.support - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,15 @@
+//! The gridding domain core: convolution kernels, pre-processing (LUT),
+//! neighbour materialisation, the CPU reference gridder, and the occupancy
+//! model. See each submodule's docs for the mapping to the paper's sections.
+
+pub mod cpu;
+pub mod kernels;
+pub mod nbr;
+pub mod occupancy;
+pub mod prep;
+pub mod sort;
+
+pub use cpu::CpuGridder;
+pub use kernels::{ConvKernel, ConvKernelType};
+pub use nbr::{NbrStats, NeighborTable};
+pub use prep::{PrepStats, SharedComponent};

@@ -1,0 +1,398 @@
+//! Neighbour materialisation: turning the LUT into the device kernel's
+//! static-shape `nbr` index lists.
+//!
+//! The paper's GPU kernel walks LUT rings per cell at runtime (Algorithm 1).
+//! An XLA AOT artifact needs static shapes, so L3 walks the rings here — once
+//! per map geometry — and materialises, for every γ-cell group, up to `K`
+//! candidate sample indices (−1 padded). The kernel then applies the exact
+//! distance test and weights. γ > 1 is the paper's thread-level data reuse
+//! (§4.3.3): one ring walk + one gather list serves γ adjacent cells, cutting
+//! host-side search and H2D volume by ~γ×.
+
+use crate::grid::kernels::ConvKernel;
+use crate::grid::prep::SharedComponent;
+use crate::healpix::{ang_dist, PixRange};
+use crate::sky::GridSpec;
+use crate::util::threads::parallel_items;
+use std::f64::consts::FRAC_PI_2;
+
+/// Build statistics (Fig 13/14/16 instrumentation).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct NbrStats {
+    /// Groups whose candidate count exceeded K (truncated).
+    pub overflow_groups: usize,
+    /// Total candidates accepted across all groups.
+    pub total_candidates: usize,
+    /// Largest candidate count seen for a single group (pre-truncation).
+    pub max_candidates: usize,
+    /// Mean fraction of a group's candidates shared with the previous group
+    /// on the same tile — the measured adjacent-cell data-reuse that backs
+    /// the paper's L1-hit-rate argument (Fig 14).
+    pub adjacent_reuse: f64,
+}
+
+/// Per-tile, device-shaped neighbour table.
+#[derive(Clone, Debug)]
+pub struct NeighborTable {
+    /// Cells per dispatch tile (artifact `m`).
+    pub m: usize,
+    /// Max candidates per group (artifact `k`).
+    pub k: usize,
+    /// Reuse factor (artifact `gamma`).
+    pub gamma: usize,
+    pub n_tiles: usize,
+    pub groups_per_tile: usize,
+    /// Number of real (non-padding) cells = `spec.n_cells()`.
+    pub valid_cells: usize,
+    /// `n_tiles · m` cell longitudes (f32, padded with the map center).
+    pub cell_lon: Vec<f32>,
+    pub cell_lat: Vec<f32>,
+    /// `n_tiles · groups_per_tile · k` candidate indices, −1 padded.
+    pub nbr: Vec<i32>,
+    pub stats: NbrStats,
+}
+
+impl NeighborTable {
+    /// Materialise neighbour lists for every cell of `spec` against the
+    /// sorted samples of `shared`, tiled for an `(m, k, gamma)` artifact.
+    pub fn build(
+        shared: &SharedComponent,
+        spec: &GridSpec,
+        kernel: &ConvKernel,
+        m: usize,
+        k: usize,
+        gamma: usize,
+        workers: usize,
+    ) -> NeighborTable {
+        assert!(m > 0 && k > 0 && gamma > 0);
+        assert!(m % gamma == 0, "gamma must divide the tile size");
+        let n_cells = spec.n_cells();
+        let n_tiles = n_cells.div_ceil(m).max(1);
+        let groups_per_tile = m / gamma;
+        let total_groups = n_tiles * groups_per_tile;
+
+        // Padded cell coordinate arrays (f32 device layout).
+        let mut cell_lon = vec![spec.lon_c as f32; n_tiles * m];
+        let mut cell_lat = vec![spec.lat_c as f32; n_tiles * m];
+        let (lons, lats) = spec.cell_centers();
+        for i in 0..n_cells {
+            cell_lon[i] = lons[i] as f32;
+            cell_lat[i] = lats[i] as f32;
+        }
+
+        let mut nbr = vec![-1i32; total_groups * k];
+        let overflow = std::sync::atomic::AtomicUsize::new(0);
+        let total_cand = std::sync::atomic::AtomicUsize::new(0);
+        let max_cand = std::sync::atomic::AtomicUsize::new(0);
+
+        {
+            let nbr_ptr = NbrPtr(nbr.as_mut_ptr());
+            let lons = &lons;
+            let lats = &lats;
+            parallel_items(total_groups, workers.max(1), |g| {
+                // Member cells of this group (global flattened cell ids).
+                let first_cell = g * gamma;
+                if first_cell >= n_cells {
+                    return; // pure padding group
+                }
+                let members: Vec<usize> =
+                    (first_cell..(first_cell + gamma).min(n_cells)).collect();
+                // Group center + search margin.
+                let clon = members.iter().map(|&i| lons[i]).sum::<f64>() / members.len() as f64;
+                let clat = members.iter().map(|&i| lats[i]).sum::<f64>() / members.len() as f64;
+                let margin = members
+                    .iter()
+                    .map(|&i| ang_dist(FRAC_PI_2 - clat, clon, FRAC_PI_2 - lats[i], lons[i]))
+                    .fold(0.0f64, f64::max);
+                let radius = kernel.support + margin;
+
+                // Ring walk (Algorithm 1's contribution region) → candidates.
+                let mut ranges: Vec<PixRange> = Vec::new();
+                shared.healpix.query_disc_rings_into(
+                    FRAC_PI_2 - clat,
+                    clon,
+                    radius,
+                    &mut ranges,
+                );
+                let out = unsafe { nbr_ptr.slice(g * k, k) };
+                let mut found: Vec<(f64, i32)> = Vec::with_capacity(k);
+                for r in &ranges {
+                    let (a, b) = shared.samples_in_pix_range(r.lo, r.hi);
+                    for j in a..b {
+                        // Exact prefilter against the group center: any sample
+                        // within R of a member is within R + margin of the
+                        // center, so this never drops a true neighbour.
+                        let d = ang_dist(
+                            FRAC_PI_2 - clat,
+                            clon,
+                            FRAC_PI_2 - shared.slat64[j],
+                            shared.slon64[j],
+                        );
+                        if d <= radius {
+                            found.push((d, j as i32));
+                        }
+                    }
+                }
+                let candidates = found.len();
+                if candidates > k {
+                    // Keep the K *nearest* candidates: far samples carry
+                    // exponentially small weights, so this truncation is the
+                    // graceful one (first-K-in-ring-order would drop whole
+                    // rings and bias the result spatially).
+                    overflow.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    found.select_nth_unstable_by(k - 1, |a, b| {
+                        a.0.partial_cmp(&b.0).expect("distances are finite")
+                    });
+                    found.truncate(k);
+                    // Restore ascending sample order (reuse measurement and
+                    // gather locality both rely on it).
+                    found.sort_unstable_by_key(|e| e.1);
+                }
+                for (slot, (_, j)) in out.iter_mut().zip(&found) {
+                    *slot = *j;
+                }
+                total_cand.fetch_add(found.len(), std::sync::atomic::Ordering::Relaxed);
+                max_cand.fetch_max(candidates, std::sync::atomic::Ordering::Relaxed);
+            });
+        }
+
+        let mut table = NeighborTable {
+            m,
+            k,
+            gamma,
+            n_tiles,
+            groups_per_tile,
+            valid_cells: n_cells,
+            cell_lon,
+            cell_lat,
+            nbr,
+            stats: NbrStats {
+                overflow_groups: overflow.into_inner(),
+                total_candidates: total_cand.into_inner(),
+                max_candidates: max_cand.into_inner(),
+                adjacent_reuse: 0.0,
+            },
+        };
+        table.stats.adjacent_reuse = table.measure_adjacent_reuse();
+        table
+    }
+
+    /// Cell-coordinate slice of tile `t` (length `m`).
+    pub fn tile_cells(&self, t: usize) -> (&[f32], &[f32]) {
+        let s = t * self.m;
+        (&self.cell_lon[s..s + self.m], &self.cell_lat[s..s + self.m])
+    }
+
+    /// Neighbour-index slice of tile `t` (length `groups_per_tile · k`).
+    pub fn tile_nbr(&self, t: usize) -> &[i32] {
+        let s = t * self.groups_per_tile * self.k;
+        &self.nbr[s..s + self.groups_per_tile * self.k]
+    }
+
+    /// Number of real cells in tile `t` (the rest is padding).
+    pub fn tile_valid_cells(&self, t: usize) -> usize {
+        self.valid_cells.saturating_sub(t * self.m).min(self.m)
+    }
+
+    /// Mean overlap fraction between consecutive groups' candidate lists —
+    /// the measured analogue of adjacent-thread cache reuse (Fig 14).
+    fn measure_adjacent_reuse(&self) -> f64 {
+        let gk = self.k;
+        let mut fractions = Vec::new();
+        for t in 0..self.n_tiles {
+            let tile = self.tile_nbr(t);
+            for g in 1..self.groups_per_tile {
+                let prev = &tile[(g - 1) * gk..g * gk];
+                let cur = &tile[g * gk..(g + 1) * gk];
+                let cur_len = cur.iter().filter(|&&x| x >= 0).count();
+                if cur_len == 0 {
+                    continue;
+                }
+                // Both lists are ascending (ring-walk order): two-pointer
+                // intersection.
+                let mut shared_count = 0usize;
+                let (mut i, mut j) = (0usize, 0usize);
+                while i < gk && j < gk && prev[i] >= 0 && cur[j] >= 0 {
+                    match prev[i].cmp(&cur[j]) {
+                        std::cmp::Ordering::Less => i += 1,
+                        std::cmp::Ordering::Greater => j += 1,
+                        std::cmp::Ordering::Equal => {
+                            shared_count += 1;
+                            i += 1;
+                            j += 1;
+                        }
+                    }
+                }
+                fractions.push(shared_count as f64 / cur_len as f64);
+            }
+        }
+        if fractions.is_empty() {
+            0.0
+        } else {
+            fractions.iter().sum::<f64>() / fractions.len() as f64
+        }
+    }
+
+    /// Measured within-block gather reuse for a hypothetical Pallas block of
+    /// `bm` cells: 1 − unique/total candidate references inside the block.
+    /// This is the L1-hit-rate proxy swept in Fig 14.
+    pub fn block_reuse(&self, bm: usize) -> f64 {
+        assert!(bm > 0 && bm % self.gamma == 0);
+        let groups_per_block = bm / self.gamma;
+        let mut total = 0usize;
+        let mut unique = 0usize;
+        let mut seen: std::collections::BTreeSet<i32> = std::collections::BTreeSet::new();
+        for t in 0..self.n_tiles {
+            let tile = self.tile_nbr(t);
+            for block_start in (0..self.groups_per_tile).step_by(groups_per_block) {
+                seen.clear();
+                let block_end = (block_start + groups_per_block).min(self.groups_per_tile);
+                for g in block_start..block_end {
+                    // γ cells share one list: each list is referenced γ times.
+                    for &idx in &tile[g * self.k..(g + 1) * self.k] {
+                        if idx >= 0 {
+                            total += self.gamma;
+                            if seen.insert(idx) {
+                                unique += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if total == 0 {
+            0.0
+        } else {
+            1.0 - unique as f64 / total as f64
+        }
+    }
+}
+
+/// Disjoint-slice writer handle (each group owns `nbr[g·k .. (g+1)·k]`).
+struct NbrPtr(*mut i32);
+unsafe impl Sync for NbrPtr {}
+impl NbrPtr {
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn slice(&self, start: usize, len: usize) -> &mut [i32] {
+        unsafe { std::slice::from_raw_parts_mut(self.0.add(start), len) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    fn setup(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>, GridSpec, ConvKernel) {
+        let mut rng = SplitMix64::new(seed);
+        let spec = GridSpec::centered(30.0, 41.0, 16, 8, 0.2);
+        let (lon_lo, lon_hi, lat_lo, lat_hi) = spec.bounds();
+        let lons: Vec<f64> = (0..n).map(|_| rng.uniform(lon_lo, lon_hi)).collect();
+        let lats: Vec<f64> = (0..n).map(|_| rng.uniform(lat_lo, lat_hi)).collect();
+        let kernel = ConvKernel::gauss1d_for_beam(0.4);
+        (lons, lats, spec, kernel)
+    }
+
+    /// Every sample within the kernel support of a cell must appear in that
+    /// cell's group list (completeness — the invariant gridding accuracy
+    /// rests on).
+    #[test]
+    fn neighbour_lists_complete_vs_brute_force() {
+        let (lons, lats, spec, kernel) = setup(500, 1);
+        let shared = SharedComponent::for_kernel(&lons, &lats, &kernel).unwrap();
+        for gamma in [1usize, 2, 4] {
+            let t = NeighborTable::build(&shared, &spec, &kernel, 64, 320, gamma, 4);
+            assert_eq!(t.stats.overflow_groups, 0, "K too small for test");
+            for cell in 0..spec.n_cells() {
+                let (clon, clat) = spec.cell_center_flat(cell);
+                let tile = cell / t.m;
+                let pos = cell % t.m;
+                let g = pos / gamma;
+                let list =
+                    &t.tile_nbr(tile)[g * t.k..(g + 1) * t.k];
+                for j in 0..shared.n_samples() {
+                    let d = ang_dist(
+                        FRAC_PI_2 - clat,
+                        clon,
+                        FRAC_PI_2 - shared.slat64[j],
+                        shared.slon64[j],
+                    );
+                    if d <= kernel.support {
+                        assert!(
+                            list.contains(&(j as i32)),
+                            "cell {cell} (γ={gamma}) missing sample {j} at d={d}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tables_are_tiled_and_padded() {
+        let (lons, lats, spec, kernel) = setup(300, 2);
+        let shared = SharedComponent::for_kernel(&lons, &lats, &kernel).unwrap();
+        let m = 48; // 128 cells -> 3 tiles, last one padded
+        let t = NeighborTable::build(&shared, &spec, &kernel, m, 32, 1, 4);
+        assert_eq!(t.n_tiles, 3);
+        assert_eq!(t.cell_lon.len(), 3 * m);
+        assert_eq!(t.nbr.len(), 3 * m * 32);
+        assert_eq!(t.tile_valid_cells(0), 48);
+        assert_eq!(t.tile_valid_cells(2), 128 - 2 * 48);
+        // Padding groups have no neighbours.
+        let last = t.tile_nbr(2);
+        for g in t.tile_valid_cells(2)..m {
+            assert!(last[g * 32..(g + 1) * 32].iter().all(|&x| x == -1), "group {g}");
+        }
+    }
+
+    #[test]
+    fn overflow_detected_when_k_too_small() {
+        let (lons, lats, spec, kernel) = setup(3000, 3);
+        let shared = SharedComponent::for_kernel(&lons, &lats, &kernel).unwrap();
+        let t = NeighborTable::build(&shared, &spec, &kernel, 64, 2, 1, 4);
+        assert!(t.stats.overflow_groups > 0);
+        assert!(t.stats.max_candidates > 2);
+    }
+
+    #[test]
+    fn gamma_shrinks_table_but_covers_same_cells() {
+        let (lons, lats, spec, kernel) = setup(500, 4);
+        let shared = SharedComponent::for_kernel(&lons, &lats, &kernel).unwrap();
+        let t1 = NeighborTable::build(&shared, &spec, &kernel, 64, 64, 1, 4);
+        let t2 = NeighborTable::build(&shared, &spec, &kernel, 64, 64, 2, 4);
+        assert_eq!(t2.nbr.len() * 2, t1.nbr.len());
+        assert_eq!(t1.valid_cells, t2.valid_cells);
+    }
+
+    #[test]
+    fn adjacent_reuse_increases_with_density() {
+        // Dense sampling ⇒ adjacent cells share many contributors.
+        let (lons, lats, spec, kernel) = setup(4000, 5);
+        let shared = SharedComponent::for_kernel(&lons, &lats, &kernel).unwrap();
+        let dense = NeighborTable::build(&shared, &spec, &kernel, 64, 256, 1, 4);
+        let (lons_s, lats_s, _, _) = setup(100, 6);
+        let shared_s = SharedComponent::for_kernel(&lons_s, &lats_s, &kernel).unwrap();
+        let sparse = NeighborTable::build(&shared_s, &spec, &kernel, 64, 256, 1, 4);
+        assert!(dense.stats.adjacent_reuse > 0.3, "dense reuse {}", dense.stats.adjacent_reuse);
+        assert!(
+            dense.stats.adjacent_reuse >= sparse.stats.adjacent_reuse,
+            "{} < {}",
+            dense.stats.adjacent_reuse,
+            sparse.stats.adjacent_reuse
+        );
+    }
+
+    #[test]
+    fn block_reuse_monotone_in_block_size() {
+        let (lons, lats, spec, kernel) = setup(2000, 7);
+        let shared = SharedComponent::for_kernel(&lons, &lats, &kernel).unwrap();
+        let t = NeighborTable::build(&shared, &spec, &kernel, 128, 128, 1, 4);
+        let r8 = t.block_reuse(8);
+        let r32 = t.block_reuse(32);
+        let r128 = t.block_reuse(128);
+        assert!(r8 <= r32 + 1e-9, "{r8} > {r32}");
+        assert!(r32 <= r128 + 1e-9, "{r32} > {r128}");
+        assert!(r128 > 0.0);
+    }
+}

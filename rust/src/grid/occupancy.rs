@@ -1,0 +1,179 @@
+//! Analytical occupancy model — the mechanism behind Fig 13.
+//!
+//! The paper explains the optimal thread-block size on the V100 through the
+//! register file: HEGrid's kernel uses 88 registers/thread, the SM has 65,536
+//! registers, so at most ⌊65536 / (88·B)⌋ blocks of B threads co-reside; at
+//! B = 352 two blocks fit (704 parallel threads) while one more warp (B = 384)
+//! drops co-residency to a single block. nsight-compute is unavailable here,
+//! so this model reproduces the *shape* of Fig 13 from the published
+//! constants plus two standard effects:
+//!
+//! * a per-block static cost (launch/scheduling + cold cache), which is why
+//!   the measured runtime keeps improving up to the register ceiling rather
+//!   than being flat wherever occupancy is equal;
+//! * a latency-hiding penalty when only one block is resident (a lone block
+//!   cannot overlap its memory stalls with another block's compute).
+//!
+//! The measured counterpart (CPU-PJRT tile-size sweep) runs in
+//! `benches/fig13_14_blocksize.rs`.
+
+/// Occupancy model constants (defaults = the paper's V100 numbers).
+#[derive(Clone, Copy, Debug)]
+pub struct OccupancyModel {
+    /// Registers used per thread (paper: 88, via nsight-compute).
+    pub regs_per_thread: usize,
+    /// Register file size per SM (V100: 65,536).
+    pub regs_per_sm: usize,
+    /// Hardware ceiling on resident threads per SM.
+    pub max_threads_per_sm: usize,
+    /// Warp (wavefront) size: 32 NVIDIA / 64 AMD.
+    pub warp: usize,
+    /// Per-block static cost, in thread-equivalents: efficiency factor is
+    /// `B / (B + block_overhead_threads)`.
+    pub block_overhead_threads: f64,
+    /// Throughput factor applied when a single block is resident.
+    pub single_block_efficiency: f64,
+}
+
+impl OccupancyModel {
+    /// The paper's Server_V (V100) configuration.
+    pub fn v100() -> Self {
+        OccupancyModel {
+            regs_per_thread: 88,
+            regs_per_sm: 65_536,
+            max_threads_per_sm: 2_048,
+            warp: 32,
+            block_overhead_threads: 96.0,
+            single_block_efficiency: 0.6,
+        }
+    }
+
+    /// Server_M (MI50-class): wavefront 64, and the 128-parallel-thread cap
+    /// the paper reports for HEGrid's kernel on the MI50 (§5.4).
+    pub fn mi50() -> Self {
+        OccupancyModel {
+            regs_per_thread: 88,
+            regs_per_sm: 65_536,
+            max_threads_per_sm: 128,
+            warp: 64,
+            block_overhead_threads: 96.0,
+            single_block_efficiency: 0.6,
+        }
+    }
+
+    /// Blocks of `block` threads co-resident on one SM.
+    pub fn blocks_per_sm(&self, block: usize) -> usize {
+        assert!(block > 0);
+        let by_regs = self.regs_per_sm / (self.regs_per_thread * block);
+        let by_threads = self.max_threads_per_sm / block;
+        by_regs.min(by_threads)
+    }
+
+    /// Parallel threads executing per SM for a given block size — the
+    /// quantity the paper's Fig-13 argument revolves around.
+    pub fn parallel_threads(&self, block: usize) -> usize {
+        self.blocks_per_sm(block) * block
+    }
+
+    /// Effective cell-update throughput (cells per unit time, arbitrary
+    /// units) for a given block size.
+    pub fn throughput(&self, block: usize) -> f64 {
+        let blocks = self.blocks_per_sm(block);
+        if blocks == 0 {
+            return 0.0;
+        }
+        let raw = (blocks * block) as f64;
+        let eff = block as f64 / (block as f64 + self.block_overhead_threads);
+        let hide = if blocks == 1 { self.single_block_efficiency } else { 1.0 };
+        raw * eff * hide
+    }
+
+    /// Predicted relative runtime for gridding `total_cells` cells with
+    /// blocks of `block` threads (one cell per thread). Arbitrary units —
+    /// only the shape (minimum location, rise on both sides) is meaningful.
+    pub fn predicted_time(&self, block: usize, total_cells: usize) -> f64 {
+        let tp = self.throughput(block);
+        if tp <= 0.0 {
+            return f64::INFINITY;
+        }
+        total_cells as f64 / tp
+    }
+
+    /// Best block size (multiples of the warp, up to `max_block`).
+    pub fn optimal_block(&self, max_block: usize, total_cells: usize) -> usize {
+        let mut best = self.warp;
+        let mut best_t = f64::INFINITY;
+        let mut b = self.warp;
+        while b <= max_block {
+            let t = self.predicted_time(b, total_cells);
+            if t < best_t {
+                best_t = t;
+                best = b;
+            }
+            b += self.warp;
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v100_reproduces_papers_352_argument() {
+        let m = OccupancyModel::v100();
+        // 2 × 352 × 88 = 61,952 ≤ 65,536 ⇒ two blocks resident.
+        assert_eq!(m.blocks_per_sm(352), 2);
+        assert_eq!(m.parallel_threads(352), 704);
+        // One more warp (384): 2 × 384 × 88 > 65,536 ⇒ only one block.
+        assert_eq!(m.blocks_per_sm(384), 1);
+        assert_eq!(m.parallel_threads(384), 384);
+        // The model's optimum lands at 352 for a large map.
+        assert_eq!(m.optimal_block(1024, 1_000_000), 352);
+    }
+
+    #[test]
+    fn time_curve_dips_then_rises() {
+        let m = OccupancyModel::v100();
+        let cells = 500_000;
+        let t64 = m.predicted_time(64, cells);
+        let t128 = m.predicted_time(128, cells);
+        let t352 = m.predicted_time(352, cells);
+        let t384 = m.predicted_time(384, cells);
+        // Monotone improvement towards the optimum, collapse right after —
+        // Fig 13's shape.
+        assert!(t128 < t64, "{t128} !< {t64}");
+        assert!(t352 < t128, "{t352} !< {t128}");
+        assert!(t384 > t352, "{t384} !> {t352}");
+    }
+
+    #[test]
+    fn mi50_caps_at_128_threads() {
+        let m = OccupancyModel::mi50();
+        for b in [64, 128] {
+            assert!(m.parallel_threads(b) <= 128, "block {b}");
+        }
+        // Blocks larger than the thread cap cannot be scheduled at all.
+        assert_eq!(m.blocks_per_sm(256), 0);
+        assert!(m.predicted_time(256, 1000).is_infinite());
+        let opt = m.optimal_block(512, 100_000);
+        assert!(opt == 64 || opt == 128, "opt={opt}");
+    }
+
+    #[test]
+    fn overhead_penalises_tiny_blocks() {
+        let m = OccupancyModel::v100();
+        let t32 = m.predicted_time(32, 10_000);
+        let t256 = m.predicted_time(256, 10_000);
+        assert!(t256 < t32, "{t256} !< {t32}");
+    }
+
+    #[test]
+    fn throughput_zero_for_unschedulable() {
+        let m = OccupancyModel::v100();
+        // 1024 threads × 88 regs > 65,536 ⇒ no block fits.
+        assert_eq!(m.blocks_per_sm(1024), 0);
+        assert_eq!(m.throughput(1024), 0.0);
+    }
+}

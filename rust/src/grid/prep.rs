@@ -1,0 +1,293 @@
+//! Pre-processing: the paper's CPU stage and its **shared component**.
+//!
+//! Steps ①–④ of Fig 3: compute each sample's HEALPix `pixel_idx` (①), sort
+//! samples by it (② — parallel radix sort), adjust the coordinate arrays to
+//! the sorted order (③), and build the ring-indexed look-up table (④). The
+//! result is channel-independent: data points in every frequency channel
+//! share coordinates, so one [`SharedComponent`] serves all pipelines —
+//! the component share-based redundancy elimination of §4.3.1. With sharing
+//! disabled (Fig 11/12 baseline) the coordinator simply rebuilds this per
+//! pipeline.
+//!
+//! Only the per-channel *values* are pipeline-local: [`SharedComponent::
+//! permute_channel`] reorders a channel's value column into the sorted
+//! layout (the per-pipeline half of step ③).
+
+use std::time::Duration;
+
+use crate::grid::kernels::ConvKernel;
+use crate::grid::sort::{radix_sort_by_key, KeyIdx};
+use crate::healpix::Healpix;
+use crate::logging::timed;
+use crate::util::error::{HegridError, Result};
+use crate::util::threads::{default_parallelism, parallel_chunks};
+
+/// Build-time metrics of a shared component (Fig 8's T-stage accounting).
+#[derive(Clone, Debug, Default)]
+pub struct PrepStats {
+    pub n_samples: usize,
+    pub nside: u64,
+    pub t_pixel_idx: Duration,
+    pub t_sort: Duration,
+    pub t_adjust: Duration,
+    pub t_lut: Duration,
+}
+
+impl PrepStats {
+    pub fn total(&self) -> Duration {
+        self.t_pixel_idx + self.t_sort + self.t_adjust + self.t_lut
+    }
+}
+
+/// The shared pre-processing component: sorted samples + ring LUT.
+#[derive(Clone, Debug)]
+pub struct SharedComponent {
+    pub healpix: Healpix,
+    /// Sorted sample pixel ids (ascending).
+    pub sorted_pix: Vec<u64>,
+    /// `perm[j]` = original index of the sample at sorted position `j`.
+    pub perm: Vec<u32>,
+    /// Sorted coordinates in device precision (f32, radians).
+    pub slon: Vec<f32>,
+    pub slat: Vec<f32>,
+    /// Sorted coordinates in full precision for the CPU gridder.
+    pub slon64: Vec<f64>,
+    pub slat64: Vec<f64>,
+    pub stats: PrepStats,
+}
+
+impl SharedComponent {
+    /// Build from raw sample coordinates (radians). `resolution` sets the
+    /// HEALPix pixel spacing; use the kernel support radius so a contribution
+    /// disc spans only a few rings ([`SharedComponent::for_kernel`] does
+    /// this).
+    pub fn build(lons: &[f64], lats: &[f64], resolution: f64, workers: usize) -> Result<Self> {
+        if lons.len() != lats.len() {
+            return Err(HegridError::Internal("lons/lats length mismatch".into()));
+        }
+        let n = lons.len();
+        let healpix = Healpix::for_resolution(resolution);
+        let workers = workers.max(1);
+        let mut stats = PrepStats { n_samples: n, nside: healpix.nside(), ..Default::default() };
+
+        // ① pixel_idx, in parallel.
+        let mut items: Vec<KeyIdx> = vec![KeyIdx { key: 0, idx: 0 }; n];
+        let (_, t) = timed(|| {
+            let hp = &healpix;
+            let items_ptr = SendPtr(items.as_mut_ptr());
+            parallel_chunks(n, workers, |_, s, e| {
+                for i in s..e {
+                    let key = hp.ang2pix_radec(lons[i], lats[i]);
+                    unsafe { items_ptr.write(i, KeyIdx { key, idx: i as u32 }) };
+                }
+            });
+        });
+        stats.t_pixel_idx = t;
+
+        // ② sort by pixel_idx (stable ⇒ deterministic layout).
+        let (_, t) = timed(|| radix_sort_by_key(&mut items, workers));
+        stats.t_sort = t;
+
+        // ③ adjust coordinate memory to the sorted order.
+        let mut sorted_pix = Vec::with_capacity(n);
+        let mut perm = Vec::with_capacity(n);
+        let mut slon = Vec::with_capacity(n);
+        let mut slat = Vec::with_capacity(n);
+        let mut slon64 = Vec::with_capacity(n);
+        let mut slat64 = Vec::with_capacity(n);
+        let (_, t) = timed(|| {
+            for e in &items {
+                sorted_pix.push(e.key);
+                perm.push(e.idx);
+                let i = e.idx as usize;
+                slon.push(lons[i] as f32);
+                slat.push(lats[i] as f32);
+                slon64.push(lons[i]);
+                slat64.push(lats[i]);
+            }
+        });
+        stats.t_adjust = t;
+
+        // ④ the LUT itself is the sorted pixel array + HEALPix ring algebra;
+        // nothing further to materialise (span lookups are binary searches).
+        // Keep the stage for faithful Fig-8 accounting — it also validates
+        // monotonicity in debug builds.
+        let (_, t) = timed(|| {
+            debug_assert!(sorted_pix.windows(2).all(|w| w[0] <= w[1]));
+        });
+        stats.t_lut = t;
+
+        Ok(SharedComponent { healpix, sorted_pix, perm, slon, slat, slon64, slat64, stats })
+    }
+
+    /// Build with the HEALPix resolution matched to a kernel's support.
+    pub fn for_kernel(lons: &[f64], lats: &[f64], kernel: &ConvKernel) -> Result<Self> {
+        Self::build(lons, lats, kernel.support.max(1e-6), default_parallelism())
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.sorted_pix.len()
+    }
+
+    /// Sample span `[lo, hi)` (sorted positions) whose pixel ids fall in the
+    /// inclusive global-pixel range `[pix_lo, pix_hi]` — one LUT probe.
+    pub fn samples_in_pix_range(&self, pix_lo: u64, pix_hi: u64) -> (usize, usize) {
+        (
+            self.sorted_pix.partition_point(|&p| p < pix_lo),
+            self.sorted_pix.partition_point(|&p| p <= pix_hi),
+        )
+    }
+
+    /// A contiguous sub-range `[lo, hi)` of the sorted samples as its own
+    /// component (same HEALPix tessellation). Used for sample sharding when
+    /// a dataset exceeds an artifact's shard capacity `n`: sorted order is
+    /// pixel order, so a slice is a compact sky band and the LUT algebra
+    /// keeps working. `perm` entries remain *original* dataset indices.
+    pub fn slice(&self, lo: usize, hi: usize) -> SharedComponent {
+        assert!(lo <= hi && hi <= self.n_samples());
+        SharedComponent {
+            healpix: self.healpix.clone(),
+            sorted_pix: self.sorted_pix[lo..hi].to_vec(),
+            perm: self.perm[lo..hi].to_vec(),
+            slon: self.slon[lo..hi].to_vec(),
+            slat: self.slat[lo..hi].to_vec(),
+            slon64: self.slon64[lo..hi].to_vec(),
+            slat64: self.slat64[lo..hi].to_vec(),
+            stats: self.stats.clone(),
+        }
+    }
+
+    /// Reorder one channel's value column into the sorted layout, appending
+    /// into `out` (cleared first). The per-pipeline half of step ③.
+    pub fn permute_channel(&self, values: &[f32], out: &mut Vec<f32>) -> Result<()> {
+        if values.len() != self.perm.len() {
+            return Err(HegridError::Internal(format!(
+                "permute_channel: {} values for {} samples",
+                values.len(),
+                self.perm.len()
+            )));
+        }
+        out.clear();
+        out.reserve(values.len());
+        for &i in &self.perm {
+            out.push(values[i as usize]);
+        }
+        Ok(())
+    }
+}
+
+/// Disjoint-index writer handle for parallel initialisation.
+struct SendPtr(*mut KeyIdx);
+unsafe impl Sync for SendPtr {}
+impl SendPtr {
+    unsafe fn write(&self, i: usize, v: KeyIdx) {
+        unsafe { self.0.add(i).write(v) };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    fn random_coords(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = SplitMix64::new(seed);
+        let lons: Vec<f64> = (0..n).map(|_| rng.uniform(0.4, 0.6)).collect();
+        let lats: Vec<f64> = (0..n).map(|_| rng.uniform(0.6, 0.8)).collect();
+        (lons, lats)
+    }
+
+    #[test]
+    fn build_sorts_by_pixel_and_permutes_consistently() {
+        let (lons, lats) = random_coords(5000, 1);
+        let sc = SharedComponent::build(&lons, &lats, 0.01, 4).unwrap();
+        assert_eq!(sc.n_samples(), 5000);
+        assert!(sc.sorted_pix.windows(2).all(|w| w[0] <= w[1]));
+        // Each sorted entry's pixel matches its permuted coordinates.
+        for j in (0..5000).step_by(97) {
+            let i = sc.perm[j] as usize;
+            assert_eq!(sc.slon64[j], lons[i]);
+            assert_eq!(sc.slat64[j], lats[i]);
+            assert_eq!(sc.sorted_pix[j], sc.healpix.ang2pix_radec(lons[i], lats[i]));
+        }
+        // perm is a permutation.
+        let mut seen = vec![false; 5000];
+        for &i in &sc.perm {
+            assert!(!seen[i as usize]);
+            seen[i as usize] = true;
+        }
+    }
+
+    #[test]
+    fn sample_span_lookup_matches_linear_scan() {
+        let (lons, lats) = random_coords(3000, 2);
+        let sc = SharedComponent::build(&lons, &lats, 0.02, 4).unwrap();
+        let probes = [
+            (0u64, 0u64),
+            (sc.sorted_pix[0], sc.sorted_pix[0]),
+            (sc.sorted_pix[100], sc.sorted_pix[2000]),
+            (sc.sorted_pix[2999], u64::MAX),
+        ];
+        for (lo, hi) in probes {
+            let (a, b) = sc.samples_in_pix_range(lo, hi);
+            let expect_a = sc.sorted_pix.iter().filter(|&&p| p < lo).count();
+            let expect_b = sc.sorted_pix.iter().filter(|&&p| p <= hi).count();
+            assert_eq!((a, b), (expect_a, expect_b));
+            assert!(a <= b);
+        }
+    }
+
+    #[test]
+    fn permute_channel_round_trips() {
+        let (lons, lats) = random_coords(1000, 3);
+        let sc = SharedComponent::build(&lons, &lats, 0.02, 2).unwrap();
+        let values: Vec<f32> = (0..1000).map(|i| i as f32).collect();
+        let mut sorted = Vec::new();
+        sc.permute_channel(&values, &mut sorted).unwrap();
+        for j in 0..1000 {
+            assert_eq!(sorted[j], sc.perm[j] as f32);
+        }
+        assert!(sc.permute_channel(&values[..10], &mut sorted).is_err());
+    }
+
+    #[test]
+    fn resolution_controls_nside() {
+        let (lons, lats) = random_coords(100, 4);
+        let coarse = SharedComponent::build(&lons, &lats, 0.1, 2).unwrap();
+        let fine = SharedComponent::build(&lons, &lats, 0.001, 2).unwrap();
+        assert!(fine.healpix.nside() > coarse.healpix.nside());
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        let sc = SharedComponent::build(&[], &[], 0.01, 4).unwrap();
+        assert_eq!(sc.n_samples(), 0);
+        assert_eq!(sc.samples_in_pix_range(0, u64::MAX), (0, 0));
+    }
+
+    #[test]
+    fn slice_preserves_invariants() {
+        let (lons, lats) = random_coords(2000, 9);
+        let sc = SharedComponent::build(&lons, &lats, 0.02, 4).unwrap();
+        let sub = sc.slice(500, 1500);
+        assert_eq!(sub.n_samples(), 1000);
+        assert!(sub.sorted_pix.windows(2).all(|w| w[0] <= w[1]));
+        for j in (0..1000).step_by(73) {
+            let i = sub.perm[j] as usize;
+            assert_eq!(sub.slon64[j], lons[i]);
+            assert_eq!(sub.sorted_pix[j], sc.sorted_pix[500 + j]);
+        }
+        // Span lookup agrees with the parent's, shifted.
+        let (a, b) = sub.samples_in_pix_range(sub.sorted_pix[0], sub.sorted_pix[999]);
+        assert_eq!((a, b), (0, 1000));
+    }
+
+    #[test]
+    fn stats_are_populated() {
+        let (lons, lats) = random_coords(10_000, 5);
+        let sc = SharedComponent::build(&lons, &lats, 0.01, 4).unwrap();
+        assert_eq!(sc.stats.n_samples, 10_000);
+        assert_eq!(sc.stats.nside, sc.healpix.nside());
+        assert!(sc.stats.total() > Duration::ZERO);
+    }
+}

@@ -1,0 +1,204 @@
+//! Parallel LSD radix sort on `(pixel_idx, sample_idx)` pairs.
+//!
+//! The paper uses Boost's Block Indirect sort (O(N log N) average) for the
+//! `pixel_idx` ordering in pre-processing. We implement a parallel
+//! least-significant-digit radix sort instead — O(N) with 8-bit digits — and
+//! skip passes whose digit is constant across the whole key range (sample
+//! pixel ids span only the map footprint, so high bytes are usually uniform).
+
+use crate::util::threads::parallel_chunks;
+
+/// A sortable (key, payload) pair: pixel id + original sample index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KeyIdx {
+    pub key: u64,
+    pub idx: u32,
+}
+
+const RADIX_BITS: usize = 8;
+const BUCKETS: usize = 1 << RADIX_BITS;
+
+/// Sort `items` ascending by `key` (stable), using up to `workers` threads.
+pub fn radix_sort_by_key(items: &mut Vec<KeyIdx>, workers: usize) {
+    let n = items.len();
+    if n <= 1 {
+        return;
+    }
+    if n < 4096 || workers <= 1 {
+        items.sort_by_key(|e| e.key); // std sort is stable
+        return;
+    }
+
+    // Determine which digit positions actually vary.
+    let (mut min_key, mut max_key) = (u64::MAX, 0u64);
+    for e in items.iter() {
+        min_key = min_key.min(e.key);
+        max_key = max_key.max(e.key);
+    }
+    let varying = min_key ^ max_key;
+    let passes: Vec<usize> = (0..8).filter(|p| (varying >> (p * RADIX_BITS)) & 0xFF != 0).collect();
+    if passes.is_empty() {
+        return; // all keys equal
+    }
+
+    let workers = workers.min(n / 2048).max(1);
+    let mut src: Vec<KeyIdx> = std::mem::take(items);
+    let mut dst: Vec<KeyIdx> = vec![KeyIdx { key: 0, idx: 0 }; n];
+
+    for &pass in &passes {
+        let shift = pass * RADIX_BITS;
+        // 1. Per-worker histograms.
+        let mut hist = vec![0usize; workers * BUCKETS];
+        {
+            let hist_ptr = HistPtr(hist.as_mut_ptr());
+            let src_ref = &src;
+            parallel_chunks(n, workers, |w, s, e| {
+                let h = unsafe { std::slice::from_raw_parts_mut(hist_ptr.at(w * BUCKETS), BUCKETS) };
+                for item in &src_ref[s..e] {
+                    h[((item.key >> shift) & 0xFF) as usize] += 1;
+                }
+            });
+        }
+        // 2. Exclusive prefix over (bucket-major, worker-minor) so the output
+        //    of worker w for bucket b starts at offsets[w][b] — stability.
+        let mut offsets = vec![0usize; workers * BUCKETS];
+        let mut running = 0usize;
+        for b in 0..BUCKETS {
+            for w in 0..workers {
+                offsets[w * BUCKETS + b] = running;
+                running += hist[w * BUCKETS + b];
+            }
+        }
+        debug_assert_eq!(running, n);
+        // 3. Scatter.
+        {
+            let off_ptr = HistPtr(offsets.as_mut_ptr());
+            let dst_ptr = ItemPtr(dst.as_mut_ptr());
+            let src_ref = &src;
+            parallel_chunks(n, workers, |w, s, e| {
+                let my_off =
+                    unsafe { std::slice::from_raw_parts_mut(off_ptr.at(w * BUCKETS), BUCKETS) };
+                for item in &src_ref[s..e] {
+                    let b = ((item.key >> shift) & 0xFF) as usize;
+                    unsafe { dst_ptr.write(my_off[b], *item) };
+                    my_off[b] += 1;
+                }
+            });
+        }
+        std::mem::swap(&mut src, &mut dst);
+    }
+    *items = src;
+}
+
+/// Shareable raw pointer into the histogram arena; each worker only touches
+/// its own `BUCKETS`-sized window, so accesses are disjoint.
+struct HistPtr(*mut usize);
+unsafe impl Sync for HistPtr {}
+impl HistPtr {
+    fn at(&self, offset: usize) -> *mut usize {
+        unsafe { self.0.add(offset) }
+    }
+}
+
+/// Shareable raw pointer into the scatter destination; the offset tables give
+/// every worker disjoint write positions.
+struct ItemPtr(*mut KeyIdx);
+unsafe impl Sync for ItemPtr {}
+impl ItemPtr {
+    unsafe fn write(&self, i: usize, v: KeyIdx) {
+        unsafe { self.0.add(i).write(v) };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+    use crate::util::SplitMix64;
+
+    fn is_sorted_stable(items: &[KeyIdx], original: &[KeyIdx]) -> bool {
+        // ascending by key
+        if !items.windows(2).all(|w| w[0].key <= w[1].key) {
+            return false;
+        }
+        // same multiset
+        let mut a: Vec<_> = items.iter().map(|e| (e.key, e.idx)).collect();
+        let mut b: Vec<_> = original.iter().map(|e| (e.key, e.idx)).collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        if a != b {
+            return false;
+        }
+        // stability: equal keys preserve original relative order of idx
+        // (original was built with idx = position, so within equal keys the
+        // idx sequence must be increasing).
+        items
+            .windows(2)
+            .all(|w| w[0].key != w[1].key || w[0].idx < w[1].idx)
+    }
+
+    fn random_items(n: usize, key_range: u64, seed: u64) -> Vec<KeyIdx> {
+        let mut rng = SplitMix64::new(seed);
+        (0..n).map(|i| KeyIdx { key: rng.below(key_range.max(1)), idx: i as u32 }).collect()
+    }
+
+    #[test]
+    fn sorts_small_and_large() {
+        for (n, range) in [(0usize, 10u64), (1, 10), (100, 5), (5000, 1 << 20), (100_000, 1 << 40)]
+        {
+            let original = random_items(n, range, n as u64 + 1);
+            let mut items = original.clone();
+            radix_sort_by_key(&mut items, 8);
+            assert!(is_sorted_stable(&items, &original), "n={n} range={range}");
+        }
+    }
+
+    #[test]
+    fn all_equal_keys_is_noop_order() {
+        let original: Vec<KeyIdx> = (0..10_000).map(|i| KeyIdx { key: 42, idx: i }).collect();
+        let mut items = original.clone();
+        radix_sort_by_key(&mut items, 8);
+        assert_eq!(items, original);
+    }
+
+    #[test]
+    fn matches_std_sort_property() {
+        testkit::check(
+            0xBADC0DE,
+            30,
+            |g| {
+                let n = g.usize(0, 20_000);
+                let range = 1u64 << g.usize(1, 50);
+                let seed = g.u64(0, u64::MAX - 1);
+                random_items(n, range, seed)
+                    .iter()
+                    .map(|e| e.key)
+                    .collect::<Vec<u64>>()
+            },
+            |keys| {
+                let original: Vec<KeyIdx> = keys
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &k)| KeyIdx { key: k, idx: i as u32 })
+                    .collect();
+                let mut ours = original.clone();
+                radix_sort_by_key(&mut ours, 6);
+                let mut std_sorted = original.clone();
+                std_sorted.sort_by_key(|e| e.key);
+                if ours.iter().map(|e| e.key).eq(std_sorted.iter().map(|e| e.key)) {
+                    Ok(())
+                } else {
+                    Err("key order differs from std sort".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn single_worker_falls_back() {
+        let original = random_items(10_000, 1 << 30, 3);
+        let mut items = original.clone();
+        radix_sort_by_key(&mut items, 1);
+        assert!(is_sorted_stable(&items, &original));
+    }
+}

@@ -1,0 +1,643 @@
+//! HEALPix RING-scheme pixelation substrate.
+//!
+//! HEGrid's look-up table is built on HEALPix (Górski et al. 2005): raw
+//! samples are binned by `pixel_idx`, sorted, and the contribution region of a
+//! target cell is expressed as *per-ring pixel ranges* (Algorithm 1's
+//! `ring_min..ring_max` × `pixel_min..pixel_max`). The reference C++/healpy
+//! implementation is not available offline, so this module implements the
+//! RING scheme from the published formulas, with exhaustive round-trip and
+//! property tests (`ang2pix ∘ pix2ang = id` for every pixel at small nside,
+//! ring geometry invariants, disc-query completeness against brute force).
+//!
+//! Conventions: colatitude `θ ∈ [0, π]` measured from the north pole,
+//! longitude `φ ∈ [0, 2π)`. Astronomical (ra, dec) maps via `θ = π/2 − dec`.
+
+use crate::util::wrap_2pi;
+use std::f64::consts::{FRAC_PI_2, PI, TAU};
+
+/// A HEALPix tessellation of the sphere at a fixed `nside` (RING scheme).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Healpix {
+    nside: u64,
+    npix: u64,
+    ncap: u64,
+}
+
+/// Geometry of one iso-latitude ring.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RingInfo {
+    /// 1-based ring index from the north pole, `1 ..= 4·nside − 1`.
+    pub ring: u64,
+    /// Global pixel id of the first pixel in the ring.
+    pub start: u64,
+    /// Number of pixels in the ring.
+    pub count: u64,
+    /// z = cos(θ) of the ring's pixel centers.
+    pub z: f64,
+    /// Longitude of pixel 0's center in the ring.
+    pub phi0: f64,
+}
+
+/// A contiguous range of global pixel ids (half-open is avoided: inclusive
+/// `lo..=hi` keeps the wrap logic simple).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PixRange {
+    pub lo: u64,
+    pub hi: u64,
+}
+
+impl Healpix {
+    /// Create a tessellation. `nside` must be ≥ 1 (powers of two recommended;
+    /// required by the standard for NESTED but RING works for any nside —
+    /// we still enforce powers of two to match the ecosystem).
+    pub fn new(nside: u64) -> Healpix {
+        assert!(nside >= 1, "nside must be >= 1");
+        assert!(nside.is_power_of_two(), "nside must be a power of two");
+        Healpix { nside, npix: 12 * nside * nside, ncap: 2 * nside * (nside - 1) }
+    }
+
+    /// Choose the smallest power-of-two nside whose mean pixel spacing is at
+    /// most `max_spacing_rad`. Used by pre-processing to size the LUT so that
+    /// a kernel-support disc spans only a handful of pixels per ring.
+    pub fn for_resolution(max_spacing_rad: f64) -> Healpix {
+        assert!(max_spacing_rad > 0.0);
+        // mean spacing ≈ sqrt(4π / npix) = sqrt(π/3) / nside
+        let target = (PI / 3.0f64).sqrt() / max_spacing_rad;
+        let nside = (target.ceil() as u64).next_power_of_two().clamp(1, 1 << 20);
+        Healpix::new(nside)
+    }
+
+    pub fn nside(&self) -> u64 {
+        self.nside
+    }
+
+    pub fn npix(&self) -> u64 {
+        self.npix
+    }
+
+    /// Number of iso-latitude rings, `4·nside − 1`.
+    pub fn n_rings(&self) -> u64 {
+        4 * self.nside - 1
+    }
+
+    /// Mean pixel spacing in radians (`sqrt(4π/npix)`).
+    pub fn mean_spacing(&self) -> f64 {
+        (4.0 * PI / self.npix as f64).sqrt()
+    }
+
+    /// Conservative upper bound on the distance from any pixel center to any
+    /// point inside that pixel. Empirically max_pixrad·nside ≲ 1.0 over all
+    /// nside; we use 1.5/nside and validate by sampling in tests. Disc
+    /// queries must be padded by this much to be complete.
+    pub fn max_pixrad_bound(&self) -> f64 {
+        (1.5 / self.nside as f64).min(PI)
+    }
+
+    // ------------------------------------------------------------------
+    // ang2pix
+    // ------------------------------------------------------------------
+
+    /// Pixel containing the direction `(θ, φ)`.
+    pub fn ang2pix(&self, theta: f64, phi: f64) -> u64 {
+        assert!((0.0..=PI).contains(&theta), "theta out of range: {theta}");
+        let nside = self.nside as i64;
+        let z = theta.cos();
+        let za = z.abs();
+        let tt = wrap_2pi(phi) / FRAC_PI_2; // in [0, 4)
+
+        if za <= 2.0 / 3.0 {
+            // Equatorial region.
+            let temp1 = nside as f64 * (0.5 + tt);
+            let temp2 = nside as f64 * (z * 0.75);
+            let jp = (temp1 - temp2) as i64; // ascending edge line
+            let jm = (temp1 + temp2) as i64; // descending edge line
+            let ir = nside + 1 + jp - jm; // ring counted from z = 2/3, in 1..=2n+1
+            let kshift = 1 - (ir & 1);
+            let nl4 = 4 * nside;
+            let mut ip = (jp + jm - nside + kshift + 1) / 2;
+            ip = ip.rem_euclid(nl4);
+            (self.ncap as i64 + (ir - 1) * nl4 + ip) as u64
+        } else {
+            // Polar caps.
+            let tp = tt - tt.floor();
+            let tmp = nside as f64 * (3.0 * (1.0 - za)).sqrt();
+            let jp = (tp * tmp) as i64;
+            let jm = ((1.0 - tp) * tmp) as i64;
+            let ir = jp + jm + 1; // ring counted from the closest pole
+            let ip = ((tt * ir as f64) as i64).rem_euclid(4 * ir);
+            if z > 0.0 {
+                (2 * ir * (ir - 1) + ip) as u64
+            } else {
+                (self.npix as i64 - 2 * ir * (ir + 1) + ip) as u64
+            }
+        }
+    }
+
+    /// Pixel containing the sky position `(lon, lat)` in radians
+    /// (lat ∈ [−π/2, π/2] — e.g. right ascension / declination).
+    pub fn ang2pix_radec(&self, lon: f64, lat: f64) -> u64 {
+        self.ang2pix(FRAC_PI_2 - lat, lon)
+    }
+
+    // ------------------------------------------------------------------
+    // pix2ang
+    // ------------------------------------------------------------------
+
+    /// Center direction `(θ, φ)` of a pixel.
+    pub fn pix2ang(&self, pix: u64) -> (f64, f64) {
+        assert!(pix < self.npix, "pixel {pix} out of range (npix={})", self.npix);
+        let nside = self.nside;
+        if pix < self.ncap {
+            // North polar cap: solve 2·i·(i−1) ≤ pix < 2·i·(i+1) for ring i.
+            let iring = cap_ring_north(pix);
+            let iphi = pix - 2 * iring * (iring - 1);
+            let z = 1.0 - (iring * iring) as f64 / (3.0 * (nside * nside) as f64);
+            let phi = (iphi as f64 + 0.5) * FRAC_PI_2 / iring as f64;
+            (z.acos(), phi)
+        } else if pix < self.npix - self.ncap {
+            // Equatorial belt.
+            let ip = pix - self.ncap;
+            let nl4 = 4 * nside;
+            let iring = ip / nl4 + nside; // 1-based ring from north pole
+            let iphi = ip % nl4;
+            // fodd = 0.5 when (ring+nside) even, 1.0 when odd — encodes the
+            // half-pixel phase shift of alternating equatorial rings.
+            let fodd = if (iring + nside) & 1 == 1 { 1.0 } else { 0.5 };
+            let z = (2 * nside as i64 - iring as i64) as f64 * 2.0 / (3.0 * nside as f64);
+            let phi = (iphi as f64 + 1.0 - fodd) * PI / (2.0 * nside as f64);
+            (z.acos(), phi)
+        } else {
+            // South polar cap (mirror of the north).
+            let ip = self.npix - pix;
+            let iring = cap_ring_south(ip);
+            let iphi = 4 * iring + 1 - (ip - 2 * iring * (iring - 1));
+            let z = -1.0 + (iring * iring) as f64 / (3.0 * (nside * nside) as f64);
+            let phi = (iphi as f64 - 0.5) * FRAC_PI_2 / iring as f64;
+            (z.acos(), phi)
+        }
+    }
+
+    /// Center of a pixel as `(lon, lat)`.
+    pub fn pix2radec(&self, pix: u64) -> (f64, f64) {
+        let (theta, phi) = self.pix2ang(pix);
+        (phi, FRAC_PI_2 - theta)
+    }
+
+    // ------------------------------------------------------------------
+    // Ring geometry
+    // ------------------------------------------------------------------
+
+    /// 1-based ring index of a pixel.
+    pub fn ring_of(&self, pix: u64) -> u64 {
+        assert!(pix < self.npix);
+        if pix < self.ncap {
+            cap_ring_north(pix)
+        } else if pix < self.npix - self.ncap {
+            (pix - self.ncap) / (4 * self.nside) + self.nside
+        } else {
+            4 * self.nside - cap_ring_south(self.npix - pix)
+        }
+    }
+
+    /// Geometry of ring `ring` (1-based from the north pole).
+    pub fn ring_info(&self, ring: u64) -> RingInfo {
+        assert!((1..=self.n_rings()).contains(&ring), "ring {ring} out of range");
+        let nside = self.nside;
+        if ring < nside {
+            // North cap.
+            let count = 4 * ring;
+            let start = 2 * ring * (ring - 1);
+            let z = 1.0 - (ring * ring) as f64 / (3.0 * (nside * nside) as f64);
+            RingInfo { ring, start, count, z, phi0: 0.5 * FRAC_PI_2 / ring as f64 }
+        } else if ring <= 3 * nside {
+            // Equatorial belt.
+            let count = 4 * nside;
+            let start = self.ncap + (ring - nside) * count;
+            let z = (2 * nside as i64 - ring as i64) as f64 * 2.0 / (3.0 * nside as f64);
+            let fodd = if (ring + nside) & 1 == 1 { 1.0 } else { 0.5 };
+            let phi0 = (1.0 - fodd) * PI / (2.0 * nside as f64);
+            RingInfo { ring, start, count, z, phi0 }
+        } else {
+            // South cap.
+            let sring = 4 * nside - ring; // mirrored cap index
+            let count = 4 * sring;
+            let start = self.npix - 2 * sring * (sring + 1);
+            let z = -1.0 + (sring * sring) as f64 / (3.0 * (nside * nside) as f64);
+            RingInfo { ring, start, count, z, phi0: 0.5 * FRAC_PI_2 / sring as f64 }
+        }
+    }
+
+    /// φ step between adjacent pixel centers in a ring.
+    pub fn ring_phi_step(&self, info: &RingInfo) -> f64 {
+        TAU / info.count as f64
+    }
+
+    // ------------------------------------------------------------------
+    // Disc queries
+    // ------------------------------------------------------------------
+
+    /// All pixels whose *pixels* (not just centers) may intersect the disc of
+    /// `radius` around `(θ0, φ0)`, as per-ring inclusive global-id ranges.
+    /// Conservative: pads by [`Self::max_pixrad_bound`], so every sample lying
+    /// within `radius` of the center is inside the returned ranges (samples
+    /// live inside pixels; their pixel's center is at most the bound away).
+    /// Ranges are emitted in ascending ring order; a range wrapping φ=0
+    /// splits in two. This is Algorithm 1's contribution-region computation.
+    pub fn query_disc_rings(&self, theta0: f64, phi0: f64, radius: f64) -> Vec<PixRange> {
+        let mut out = Vec::new();
+        self.query_disc_rings_into(theta0, phi0, radius, &mut out);
+        out
+    }
+
+    /// Allocation-free variant of [`Self::query_disc_rings`] for hot loops.
+    pub fn query_disc_rings_into(
+        &self,
+        theta0: f64,
+        phi0: f64,
+        radius: f64,
+        out: &mut Vec<PixRange>,
+    ) {
+        out.clear();
+        let r = radius + self.max_pixrad_bound();
+        if r >= PI {
+            out.push(PixRange { lo: 0, hi: self.npix - 1 });
+            return;
+        }
+        let phi0 = wrap_2pi(phi0);
+        let (ct0, st0) = (theta0.cos(), theta0.sin());
+        let cosr = r.cos();
+
+        // Candidate ring band from the z extent of the padded disc:
+        // z decreases with ring index, so the disc top (θ_lo, largest z)
+        // bounds the first ring and the disc bottom bounds the last.
+        let theta_lo = (theta0 - r).max(0.0);
+        let theta_hi = (theta0 + r).min(PI);
+        let ring_lo = self.ring_above(theta_lo.cos()).max(1);
+        let ring_hi = self.ring_below(theta_hi.cos()).min(self.n_rings());
+
+        for ring in ring_lo..=ring_hi {
+            let info = self.ring_info(ring);
+            let z = info.z;
+            let st = (1.0 - z * z).max(0.0).sqrt();
+            // cos Δφ_max on this ring.
+            let denom = st0 * st;
+            let dphi = if denom.abs() < 1e-12 {
+                // Ring at a pole or disc centered at a pole: include the
+                // whole ring iff the colatitude band overlaps.
+                if (theta0 - z.acos()).abs() <= r {
+                    PI
+                } else {
+                    continue;
+                }
+            } else {
+                let x = (cosr - ct0 * z) / denom;
+                if x > 1.0 {
+                    continue; // ring entirely outside
+                } else if x < -1.0 {
+                    PI // ring entirely inside
+                } else {
+                    x.acos()
+                }
+            };
+
+            self.push_ring_phi_range(&info, phi0, dphi, out);
+        }
+    }
+
+    /// Append the global-id range(s) of pixels on `ring` whose centers lie in
+    /// `φ0 ± Δφ` (padded by one pixel on each side).
+    fn push_ring_phi_range(&self, info: &RingInfo, phi0: f64, dphi: f64, out: &mut Vec<PixRange>) {
+        let n = info.count as i64;
+        if dphi >= PI {
+            out.push(PixRange { lo: info.start, hi: info.start + info.count - 1 });
+            return;
+        }
+        let step = TAU / info.count as f64;
+        // Pixel j center at φ = phi0_ring + j·step. Solve for j range, pad ±1.
+        let j_lo = (((phi0 - dphi) - info.phi0) / step).floor() as i64 - 1;
+        let j_hi = (((phi0 + dphi) - info.phi0) / step).ceil() as i64 + 1;
+        if j_hi - j_lo + 1 >= n {
+            out.push(PixRange { lo: info.start, hi: info.start + info.count - 1 });
+            return;
+        }
+        let a = j_lo.rem_euclid(n) as u64;
+        let b = j_hi.rem_euclid(n) as u64;
+        if a <= b {
+            out.push(PixRange { lo: info.start + a, hi: info.start + b });
+        } else {
+            // Wraps φ = 0: split into two ranges.
+            out.push(PixRange { lo: info.start, hi: info.start + b });
+            out.push(PixRange { lo: info.start + a, hi: info.start + info.count - 1 });
+        }
+    }
+
+    /// Highest ring (smallest index) whose z is ≤ `z` (i.e. first ring at or
+    /// below latitude z). Returns 1 if z is above every ring.
+    fn ring_above(&self, z: f64) -> u64 {
+        // Binary search over rings; z decreases monotonically with ring index.
+        let (mut lo, mut hi) = (1u64, self.n_rings());
+        if self.ring_info(1).z <= z {
+            return 1;
+        }
+        while lo + 1 < hi {
+            let mid = (lo + hi) / 2;
+            if self.ring_info(mid).z <= z {
+                hi = mid;
+            } else {
+                lo = mid;
+            }
+        }
+        hi
+    }
+
+    /// Lowest ring (largest index) whose z is ≥ `z`.
+    fn ring_below(&self, z: f64) -> u64 {
+        let n = self.n_rings();
+        if self.ring_info(n).z >= z {
+            return n;
+        }
+        let (mut lo, mut hi) = (1u64, n);
+        while lo + 1 < hi {
+            let mid = (lo + hi) / 2;
+            if self.ring_info(mid).z >= z {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+}
+
+/// Integer square root (floor). Uses u128 internally so `u64::MAX` is safe.
+fn isqrt(v: u64) -> u64 {
+    if v == 0 {
+        return 0;
+    }
+    let v128 = v as u128;
+    let mut x = (v as f64).sqrt() as u128;
+    // Correct potential off-by-one from float rounding.
+    while x * x > v128 {
+        x -= 1;
+    }
+    while (x + 1) * (x + 1) <= v128 {
+        x += 1;
+    }
+    x as u64
+}
+
+/// North-cap ring of a cap pixel: smallest i ≥ 1 with pix < 2·i·(i+1).
+fn cap_ring_north(pix: u64) -> u64 {
+    // pix ∈ [2i(i−1), 2i(i+1)) for ring i ⇒ i = floor((1+sqrt(1+2·pix))/2)
+    let i = (1 + isqrt(1 + 2 * pix)) / 2;
+    // Guard float/integer edge cases exactly.
+    let i = i.max(1);
+    if pix < 2 * i * (i - 1) {
+        i - 1
+    } else if pix >= 2 * i * (i + 1) {
+        i + 1
+    } else {
+        i
+    }
+}
+
+/// South-cap ring index (counted from the south pole) for `ip = npix − pix`,
+/// `ip ∈ [2i(i−1)+1, 2i(i+1)]`.
+fn cap_ring_south(ip: u64) -> u64 {
+    let i = (1 + isqrt(2 * ip - 1)) / 2;
+    let i = i.max(1);
+    if ip <= 2 * i * (i - 1) {
+        i - 1
+    } else if ip > 2 * i * (i + 1) {
+        i + 1
+    } else {
+        i
+    }
+}
+
+/// Great-circle distance between two directions given as (θ, φ), radians.
+pub fn ang_dist(theta1: f64, phi1: f64, theta2: f64, phi2: f64) -> f64 {
+    // Haversine on colatitudes.
+    let sdt = ((theta2 - theta1) * 0.5).sin();
+    let sdp = ((phi2 - phi1) * 0.5).sin();
+    let h = sdt * sdt + theta1.sin() * theta2.sin() * sdp * sdp;
+    2.0 * h.sqrt().clamp(0.0, 1.0).asin()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn npix_and_rings() {
+        for nside in [1u64, 2, 4, 8, 16] {
+            let hp = Healpix::new(nside);
+            assert_eq!(hp.npix(), 12 * nside * nside);
+            assert_eq!(hp.n_rings(), 4 * nside - 1);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_power_of_two() {
+        Healpix::new(3);
+    }
+
+    #[test]
+    fn ring_pixel_counts_partition_sphere() {
+        for nside in [1u64, 2, 4, 8, 32] {
+            let hp = Healpix::new(nside);
+            let mut total = 0;
+            let mut expected_start = 0;
+            for ring in 1..=hp.n_rings() {
+                let info = hp.ring_info(ring);
+                assert_eq!(info.start, expected_start, "ring {ring} nside {nside}");
+                expected_start += info.count;
+                total += info.count;
+            }
+            assert_eq!(total, hp.npix());
+        }
+    }
+
+    #[test]
+    fn ring_z_strictly_decreasing() {
+        let hp = Healpix::new(16);
+        let mut prev = f64::INFINITY;
+        for ring in 1..=hp.n_rings() {
+            let z = hp.ring_info(ring).z;
+            assert!(z < prev, "ring {ring}: z {z} !< {prev}");
+            prev = z;
+        }
+    }
+
+    #[test]
+    fn pix2ang_round_trips_every_pixel_small_nside() {
+        for nside in [1u64, 2, 4, 8, 16] {
+            let hp = Healpix::new(nside);
+            for pix in 0..hp.npix() {
+                let (theta, phi) = hp.pix2ang(pix);
+                assert!((0.0..=PI).contains(&theta));
+                assert!((0.0..TAU).contains(&phi), "pix {pix} phi {phi}");
+                let back = hp.ang2pix(theta, phi);
+                assert_eq!(back, pix, "nside={nside} pix={pix} θ={theta} φ={phi}");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_of_matches_pix2ang_z() {
+        for nside in [1u64, 4, 16] {
+            let hp = Healpix::new(nside);
+            for pix in 0..hp.npix() {
+                let ring = hp.ring_of(pix);
+                let info = hp.ring_info(ring);
+                assert!(pix >= info.start && pix < info.start + info.count);
+                let (theta, _) = hp.pix2ang(pix);
+                assert!((theta.cos() - info.z).abs() < 1e-12, "pix {pix}");
+            }
+        }
+    }
+
+    #[test]
+    fn ang2pix_random_directions_in_range() {
+        let hp = Healpix::new(64);
+        let mut rng = SplitMix64::new(2024);
+        for _ in 0..20_000 {
+            let z = rng.uniform(-1.0, 1.0);
+            let phi = rng.uniform(0.0, TAU);
+            let pix = hp.ang2pix(z.acos(), phi);
+            assert!(pix < hp.npix());
+        }
+    }
+
+    #[test]
+    fn center_distance_within_pixrad_bound() {
+        for nside in [1u64, 4, 64, 1024] {
+            let hp = Healpix::new(nside);
+            let bound = hp.max_pixrad_bound();
+            let mut rng = SplitMix64::new(7 + nside);
+            for _ in 0..5000 {
+                let z: f64 = rng.uniform(-1.0, 1.0);
+                let phi = rng.uniform(0.0, TAU);
+                let theta = z.acos();
+                let pix = hp.ang2pix(theta, phi);
+                let (tc, pc) = hp.pix2ang(pix);
+                let d = ang_dist(theta, phi, tc, pc);
+                assert!(d <= bound, "nside={nside} d={d} bound={bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn poles_map_to_cap_rings() {
+        let hp = Healpix::new(8);
+        let north = hp.ang2pix(0.0, 0.3);
+        let south = hp.ang2pix(PI, 0.3);
+        assert!(north < 4, "north pole pixel {north}");
+        assert!(south >= hp.npix() - 4, "south pole pixel {south}");
+    }
+
+    #[test]
+    fn radec_helpers_consistent() {
+        let hp = Healpix::new(32);
+        let (lon, lat) = (1.234, 0.345);
+        let pix = hp.ang2pix_radec(lon, lat);
+        assert_eq!(pix, hp.ang2pix(FRAC_PI_2 - lat, lon));
+        let (plon, plat) = hp.pix2radec(pix);
+        assert!(ang_dist(FRAC_PI_2 - lat, lon, FRAC_PI_2 - plat, plon) < hp.max_pixrad_bound());
+    }
+
+    /// Brute-force completeness: every pixel whose center is within `r` of the
+    /// disc center must be covered by the returned ranges.
+    #[test]
+    fn query_disc_complete_vs_brute_force() {
+        for nside in [4u64, 16, 64] {
+            let hp = Healpix::new(nside);
+            let mut rng = SplitMix64::new(nside * 31 + 1);
+            for _ in 0..40 {
+                let z = rng.uniform(-0.999, 0.999);
+                let theta0 = z.acos();
+                let phi0 = rng.uniform(0.0, TAU);
+                let radius = rng.uniform(0.01, 0.8);
+                let ranges = hp.query_disc_rings(theta0, phi0, radius);
+                // ranges sane
+                for r in &ranges {
+                    assert!(r.lo <= r.hi && r.hi < hp.npix());
+                }
+                let inside = |pix: u64| {
+                    ranges.iter().any(|r| (r.lo..=r.hi).contains(&pix))
+                };
+                for pix in 0..hp.npix() {
+                    let (t, p) = hp.pix2ang(pix);
+                    if ang_dist(theta0, phi0, t, p) <= radius {
+                        assert!(
+                            inside(pix),
+                            "nside={nside} missing pix {pix} at d={} r={radius}",
+                            ang_dist(theta0, phi0, t, p)
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Conservativeness sanity: the query should not return the whole sphere
+    /// for a small disc at a moderate nside.
+    #[test]
+    fn query_disc_not_absurdly_loose() {
+        let hp = Healpix::new(256);
+        let ranges = hp.query_disc_rings(1.0, 1.0, 0.01);
+        let total: u64 = ranges.iter().map(|r| r.hi - r.lo + 1).sum();
+        // disc area fraction ≈ (r+pad)²/4 ⇒ a few hundred pixels at nside 256
+        assert!(total > 0);
+        assert!(total < hp.npix() / 100, "query too loose: {total} pixels");
+    }
+
+    #[test]
+    fn query_disc_wraps_phi_zero() {
+        let hp = Healpix::new(32);
+        // Disc straddling φ=0 on the equator.
+        let ranges = hp.query_disc_rings(FRAC_PI_2, 0.02, 0.05);
+        assert!(!ranges.is_empty());
+        // Every equatorial ring covered must include pixel ranges on both
+        // sides of φ=0 (i.e. at least one ring contributes two ranges).
+        let mut per_ring = std::collections::BTreeMap::new();
+        for r in &ranges {
+            *per_ring.entry(hp.ring_of(r.lo)).or_insert(0) += 1;
+        }
+        assert!(per_ring.values().any(|&c| c == 2), "expected a wrapped ring: {per_ring:?}");
+    }
+
+    #[test]
+    fn whole_sphere_query() {
+        let hp = Healpix::new(8);
+        let ranges = hp.query_disc_rings(1.0, 2.0, PI);
+        assert_eq!(ranges, vec![PixRange { lo: 0, hi: hp.npix() - 1 }]);
+    }
+
+    #[test]
+    fn isqrt_exact() {
+        for v in 0..5000u64 {
+            let r = isqrt(v);
+            assert!(r * r <= v && (r + 1) * (r + 1) > v, "isqrt({v}) = {r}");
+        }
+        assert_eq!(isqrt(u64::MAX), u32::MAX as u64);
+    }
+
+    #[test]
+    fn for_resolution_scales() {
+        let coarse = Healpix::for_resolution(0.1);
+        let fine = Healpix::for_resolution(0.001);
+        assert!(fine.nside() > coarse.nside());
+        assert!(coarse.mean_spacing() <= 0.1 + 1e-9);
+        assert!(fine.mean_spacing() <= 0.001 + 1e-9);
+    }
+
+    #[test]
+    fn ang_dist_basics() {
+        assert!(ang_dist(1.0, 2.0, 1.0, 2.0) < 1e-12);
+        let d = ang_dist(FRAC_PI_2, 0.0, FRAC_PI_2, PI);
+        assert!((d - PI).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,64 @@
+//! # HEGrid-RS
+//!
+//! A high-efficiency multi-channel radio-astronomical data gridding framework,
+//! reproducing Wang et al., *"HEGrid: A High Efficient Multi-Channel Radio
+//! Astronomical Data Gridding Framework in Heterogeneous Computing
+//! Environments"* (2022) on a Rust + JAX + Pallas stack (AOT via XLA/PJRT).
+//!
+//! Layering (Python never runs on the request path):
+//!
+//! * **L3** — this crate: the paper's coordination contribution. Multi-pipeline
+//!   concurrency over frequency channels ([`coordinator`]), CPU pre-processing
+//!   with a HEALPix-backed look-up table ([`grid`]), FIFO scheduling, the
+//!   shared pre-processing component, and a reusable device-buffer pool.
+//! * **L2** — `python/compile/model.py`: the JAX dispatch graph, lowered
+//!   ahead-of-time to HLO text, one artifact per shape variant.
+//! * **L1** — `python/compile/kernels/gridding.py`: the Pallas cell-update
+//!   kernel (Algorithm 1 of the paper, re-tiled for a VMEM/MXU machine).
+//!
+//! The [`runtime`] module loads the AOT artifacts through the PJRT C API and
+//! executes them on a pool of stream slots — the stand-in for the paper's
+//! CUDA/HIP streams (see DESIGN.md for the substitution table).
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use hegrid::prelude::*;
+//!
+//! let dataset = hegrid::sim::SimConfig::quick_preset().generate();
+//! let spec = GridSpec::centered(30.0, 41.0, 64, 64, 300.0 / 3600.0);
+//! let kernel = ConvKernel::gauss1d_for_beam(300.0 / 3600.0);
+//! let cpu = hegrid::grid::cpu::CpuGridder::new(spec.clone(), kernel.clone());
+//! let maps = cpu.grid_dataset(&dataset);
+//! assert_eq!(maps.len(), dataset.n_channels());
+//! ```
+
+pub mod baselines;
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod grid;
+pub mod healpix;
+pub mod json;
+pub mod logging;
+pub mod runtime;
+pub mod sim;
+pub mod sky;
+pub mod testkit;
+pub mod util;
+
+/// Commonly used types, re-exported for examples and downstream users.
+pub mod prelude {
+    pub use crate::config::{DeviceProfile, HegridConfig};
+    pub use crate::coordinator::{GriddingJob, HegridEngine, PipelineReport};
+    pub use crate::data::Dataset;
+    pub use crate::grid::kernels::ConvKernel;
+    pub use crate::grid::prep::SharedComponent;
+    pub use crate::sky::{GridSpec, SkyMap};
+    pub use crate::util::error::{HegridError, Result};
+}
+
+/// Crate version string (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

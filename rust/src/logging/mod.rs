@@ -1,0 +1,211 @@
+//! Leveled logger + stage-scoped timers.
+//!
+//! The coordinator instruments every pipeline stage (the paper's T1..T4 in
+//! Fig 8) through [`StageTimer`]; the logger itself is a tiny stderr writer
+//! with an env-controlled level (`HEGRID_LOG=debug|info|warn|error|off`).
+
+use std::fmt;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+    Off = 4,
+}
+
+impl Level {
+    fn from_str(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "debug" => Some(Level::Debug),
+            "info" => Some(Level::Info),
+            "warn" | "warning" => Some(Level::Warn),
+            "error" => Some(Level::Error),
+            "off" | "none" => Some(Level::Off),
+            _ => None,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Debug => "DEBUG",
+            Level::Info => "INFO ",
+            Level::Warn => "WARN ",
+            Level::Error => "ERROR",
+            Level::Off => "OFF  ",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialised
+
+fn current_level() -> Level {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    if raw == u8::MAX {
+        let level = std::env::var("HEGRID_LOG")
+            .ok()
+            .and_then(|s| Level::from_str(&s))
+            .unwrap_or(Level::Warn);
+        LEVEL.store(level as u8, Ordering::Relaxed);
+        return level;
+    }
+    match raw {
+        0 => Level::Debug,
+        1 => Level::Info,
+        2 => Level::Warn,
+        3 => Level::Error,
+        _ => Level::Off,
+    }
+}
+
+/// Programmatically override the log level (tests, CLI `--verbose`).
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(level: Level) -> bool {
+    level >= current_level() && current_level() != Level::Off
+}
+
+#[doc(hidden)]
+pub fn log_at(level: Level, args: fmt::Arguments<'_>) {
+    if enabled(level) {
+        eprintln!("[hegrid {}] {}", level.tag().trim_end(), args);
+    }
+}
+
+#[macro_export]
+macro_rules! log_debug { ($($t:tt)*) => { $crate::logging::log_at($crate::logging::Level::Debug, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_info { ($($t:tt)*) => { $crate::logging::log_at($crate::logging::Level::Info, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_warn { ($($t:tt)*) => { $crate::logging::log_at($crate::logging::Level::Warn, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_error { ($($t:tt)*) => { $crate::logging::log_at($crate::logging::Level::Error, format_args!($($t)*)) } }
+
+/// Accumulates wall-clock duration per named stage; cheap enough to keep on
+/// in production. Backs the Fig-8 timeline bench and `PipelineReport`.
+#[derive(Clone, Debug, Default)]
+pub struct StageTimes {
+    entries: Vec<(String, Duration, u64)>, // (stage, total, count)
+}
+
+impl StageTimes {
+    pub fn add(&mut self, stage: &str, d: Duration) {
+        if let Some(e) = self.entries.iter_mut().find(|e| e.0 == stage) {
+            e.1 += d;
+            e.2 += 1;
+        } else {
+            self.entries.push((stage.to_string(), d, 1));
+        }
+    }
+
+    pub fn merge(&mut self, other: &StageTimes) {
+        for (stage, d, c) in &other.entries {
+            if let Some(e) = self.entries.iter_mut().find(|e| &e.0 == stage) {
+                e.1 += *d;
+                e.2 += *c;
+            } else {
+                self.entries.push((stage.clone(), *d, *c));
+            }
+        }
+    }
+
+    pub fn total(&self, stage: &str) -> Duration {
+        self.entries
+            .iter()
+            .find(|e| e.0 == stage)
+            .map(|e| e.1)
+            .unwrap_or_default()
+    }
+
+    pub fn count(&self, stage: &str) -> u64 {
+        self.entries.iter().find(|e| e.0 == stage).map(|e| e.2).unwrap_or(0)
+    }
+
+    pub fn stages(&self) -> impl Iterator<Item = (&str, Duration, u64)> {
+        self.entries.iter().map(|(s, d, c)| (s.as_str(), *d, *c))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// RAII timer: records elapsed time into a [`StageTimes`] on drop.
+pub struct StageTimer<'a> {
+    times: &'a mut StageTimes,
+    stage: &'a str,
+    start: Instant,
+}
+
+impl<'a> StageTimer<'a> {
+    pub fn start(times: &'a mut StageTimes, stage: &'a str) -> Self {
+        Self { times, stage, start: Instant::now() }
+    }
+}
+
+impl Drop for StageTimer<'_> {
+    fn drop(&mut self) {
+        self.times.add(self.stage, self.start.elapsed());
+    }
+}
+
+/// Time a closure, returning `(result, elapsed)`.
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let start = Instant::now();
+    let out = f();
+    (out, start.elapsed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(Level::from_str("DEBUG"), Some(Level::Debug));
+        assert_eq!(Level::from_str("warning"), Some(Level::Warn));
+        assert_eq!(Level::from_str("off"), Some(Level::Off));
+        assert_eq!(Level::from_str("bogus"), None);
+    }
+
+    #[test]
+    fn stage_times_accumulate_and_merge() {
+        let mut a = StageTimes::default();
+        a.add("prep", Duration::from_millis(5));
+        a.add("prep", Duration::from_millis(7));
+        a.add("h2d", Duration::from_millis(1));
+        assert_eq!(a.total("prep"), Duration::from_millis(12));
+        assert_eq!(a.count("prep"), 2);
+
+        let mut b = StageTimes::default();
+        b.add("prep", Duration::from_millis(3));
+        b.add("kernel", Duration::from_millis(9));
+        a.merge(&b);
+        assert_eq!(a.total("prep"), Duration::from_millis(15));
+        assert_eq!(a.total("kernel"), Duration::from_millis(9));
+        assert_eq!(a.count("prep"), 3);
+    }
+
+    #[test]
+    fn stage_timer_records_on_drop() {
+        let mut t = StageTimes::default();
+        {
+            let _g = StageTimer::start(&mut t, "work");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(t.total("work") >= Duration::from_millis(1));
+        assert_eq!(t.count("work"), 1);
+    }
+
+    #[test]
+    fn timed_returns_result() {
+        let (x, d) = timed(|| 41 + 1);
+        assert_eq!(x, 42);
+        assert!(d < Duration::from_secs(1));
+    }
+}

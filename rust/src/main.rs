@@ -1,0 +1,264 @@
+//! `hegrid` — the leader binary.
+//!
+//! ```text
+//! hegrid simulate  --preset quick|simulated|observed|extended [...] --out data.hgd
+//! hegrid grid      --input data.hgd [--out-prefix out/map] [engine knobs]
+//! hegrid inspect   --input data.hgd
+//! hegrid accuracy  --input data.hgd [--out-prefix out/acc]   (Fig-17 check)
+//! hegrid info      [--artifacts artifacts]                   (list variants)
+//! ```
+//!
+//! Engine knobs (grid/accuracy): `--streams N --pipelines N --channels-per-dispatch C
+//! --gamma G --block B --kernel gauss1d|gauss2d|tapered_sinc --profile v|m
+//! --oversample F --no-share --artifacts DIR`.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use hegrid::baselines::CygridBaseline;
+use hegrid::cli;
+use hegrid::config::{DeviceProfile, HegridConfig};
+use hegrid::coordinator::{GriddingJob, HegridEngine};
+use hegrid::data::{Dataset, HgdReader};
+use hegrid::runtime::Manifest;
+use hegrid::sim::SimConfig;
+use hegrid::util::error::{HegridError, Result};
+
+const VALUE_OPTS: &[&str] = &[
+    "preset", "points", "channels", "field", "beam", "seed", "out", "input", "out-prefix",
+    "streams", "pipelines", "channels-per-dispatch", "gamma", "block", "kernel", "profile",
+    "oversample", "artifacts", "threads", "variant",
+];
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(&argv) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("hegrid: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = cli::parse(argv, VALUE_OPTS)?;
+    if args.flag("verbose") {
+        hegrid::logging::set_level(hegrid::logging::Level::Debug);
+    }
+    let command = args.command.clone();
+    match command.as_deref() {
+        Some("simulate") => cmd_simulate(&args)?,
+        Some("grid") => cmd_grid(&args)?,
+        Some("inspect") => cmd_inspect(&args)?,
+        Some("accuracy") => cmd_accuracy(&args)?,
+        Some("info") => cmd_info(&args)?,
+        Some("help") | None => {
+            print_help();
+            return Ok(());
+        }
+        Some(other) => {
+            return Err(HegridError::Config(format!(
+                "unknown subcommand '{other}' (try `hegrid help`)"
+            )))
+        }
+    }
+    args.check_unknown()
+}
+
+fn print_help() {
+    println!(
+        "hegrid {} — multi-channel radio astronomical data gridding\n\n\
+         subcommands:\n\
+         \x20 simulate  generate a synthetic FAST-like dataset (--preset quick|simulated|observed|extended)\n\
+         \x20 grid      grid a dataset through the heterogeneous engine\n\
+         \x20 inspect   print an HGD file's header\n\
+         \x20 accuracy  compare HEGrid output against the Cygrid baseline (Fig 17)\n\
+         \x20 info      list AOT artifact variants\n\n\
+         run `cargo doc --open` or see README.md for the full option list",
+        hegrid::VERSION
+    );
+}
+
+fn engine_config(args: &cli::Args) -> Result<HegridConfig> {
+    let mut cfg = HegridConfig {
+        artifacts_dir: args.get_or("artifacts", "artifacts").to_string(),
+        streams: args.get_usize("streams", 0)?,
+        pipelines: args.get_usize("pipelines", 0)?,
+        channels_per_dispatch: args.get_usize("channels-per-dispatch", 10)?,
+        share_preprocessing: !args.flag("no-share"),
+        gamma: args.get_usize("gamma", 1)?,
+        block_size: args.get_usize("block", 0)?,
+        kernel_type: args.get_or("kernel", "gauss1d").to_string(),
+        variant_override: args.get_or("variant", "").to_string(),
+        kernel_sigma_beam: 0.5,
+        support_sigma: 3.0,
+        oversample: args.get_f64("oversample", 2.0)?,
+        profile: DeviceProfile::from_name(args.get_or("profile", "server_v"))?,
+    };
+    if cfg.artifacts_dir == "artifacts" && !Path::new("artifacts/manifest.json").exists() {
+        // Allow running from anywhere inside the repo.
+        if let Ok(exe) = std::env::current_exe() {
+            for anc in exe.ancestors() {
+                let cand = anc.join("artifacts/manifest.json");
+                if cand.exists() {
+                    cfg.artifacts_dir = anc.join("artifacts").display().to_string();
+                    break;
+                }
+            }
+        }
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_simulate(args: &cli::Args) -> Result<()> {
+    let preset = args.get_or("preset", "quick");
+    let mut cfg = match preset {
+        "quick" => SimConfig::quick_preset(),
+        "simulated" => SimConfig::simulated(args.get_usize("points", 150_000)?),
+        "observed" => SimConfig::observed(args.get_usize("channels", 50)?),
+        "extended" => SimConfig::extended(
+            args.get_f64("field", 5.0)?,
+            args.get_f64("beam", 180.0)?,
+            args.get_usize("points", 15_000)?,
+        ),
+        other => return Err(HegridError::Config(format!("unknown preset '{other}'"))),
+    };
+    if let Some(ch) = args.get("channels") {
+        if preset != "observed" {
+            cfg.channels = ch.parse().map_err(|_| HegridError::Config("bad --channels".into()))?;
+        }
+    }
+    cfg.seed = args.get_usize("seed", cfg.seed as usize)? as u64;
+    let out = PathBuf::from(args.get("out").unwrap_or("dataset.hgd"));
+    let (dataset, dt) = hegrid::logging::timed(|| cfg.generate());
+    dataset.save(&out)?;
+    println!(
+        "wrote {}: {} samples × {} channels ({:.1} MB) in {:.2}s",
+        out.display(),
+        dataset.n_samples(),
+        dataset.n_channels(),
+        dataset.nbytes() as f64 / 1e6,
+        dt.as_secs_f64()
+    );
+    Ok(())
+}
+
+fn load_input(args: &cli::Args) -> Result<Dataset> {
+    let input = args
+        .get("input")
+        .ok_or_else(|| HegridError::Config("--input <file.hgd> is required".into()))?;
+    Dataset::load(Path::new(input))
+}
+
+fn cmd_grid(args: &cli::Args) -> Result<()> {
+    let dataset = load_input(args)?;
+    let cfg = engine_config(args)?;
+    let engine = HegridEngine::new(cfg)?;
+    let (maps, report) = engine.grid_dataset(&dataset)?;
+    println!(
+        "gridded {} channels × {} samples onto {} cells in {:.3}s",
+        dataset.n_channels(),
+        dataset.n_samples(),
+        maps[0].spec.n_cells(),
+        report.wall.as_secs_f64()
+    );
+    println!(
+        "  variant={} streams={} pipelines={} groups={} shards={} dispatches={}",
+        report.variant,
+        report.n_streams,
+        report.n_pipelines,
+        report.n_groups,
+        report.n_shards,
+        report.dispatches
+    );
+    for (stage, d, count) in report.stages.stages() {
+        println!("  {stage:<22} {:>9.3}s  ×{count}", d.as_secs_f64());
+    }
+    println!(
+        "  shared_builds={} overflow_groups={} adjacent_reuse={:.3} pool={}+{}",
+        report.shared_builds,
+        report.overflow_groups,
+        report.adjacent_reuse,
+        report.pool_alloc,
+        report.pool_reused
+    );
+    if let Some(prefix) = args.get("out-prefix") {
+        if let Some(parent) = Path::new(prefix).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).map_err(HegridError::io(prefix.to_string()))?;
+            }
+        }
+        for (c, map) in maps.iter().enumerate() {
+            map.write_pgm(Path::new(&format!("{prefix}_ch{c:03}.pgm")))?;
+        }
+        println!("wrote {} PGM maps to {prefix}_chNNN.pgm", maps.len());
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &cli::Args) -> Result<()> {
+    let input = args
+        .get("input")
+        .ok_or_else(|| HegridError::Config("--input <file.hgd> is required".into()))?;
+    let r = HgdReader::open(Path::new(input))?;
+    let m = r.meta();
+    println!("{input}:");
+    println!("  name         {}", m.name);
+    println!("  samples      {}", r.n_samples());
+    println!("  channels     {}", r.n_channels());
+    println!("  beam         {}\"", m.beam_arcsec);
+    println!("  center       ({}°, {}°)", m.center_deg.0, m.center_deg.1);
+    println!("  extent       {}° × {}°", m.extent_deg.0, m.extent_deg.1);
+    Ok(())
+}
+
+fn cmd_accuracy(args: &cli::Args) -> Result<()> {
+    let dataset = load_input(args)?;
+    let cfg = engine_config(args)?;
+    let job = GriddingJob::for_dataset(&dataset, &cfg)?;
+    let engine = HegridEngine::new(cfg)?;
+    let (he_maps, report) = engine.grid(&dataset, &job)?;
+    let (cy_maps, cy_time) = CygridBaseline::new(hegrid::util::threads::default_parallelism())
+        .run(&dataset, &job)?;
+    println!(
+        "HEGrid {:.3}s vs Cygrid {:.3}s (speedup {:.2}x)",
+        report.wall.as_secs_f64(),
+        cy_time.as_secs_f64(),
+        cy_time.as_secs_f64() / report.wall.as_secs_f64()
+    );
+    let mut worst_rms = 0.0f64;
+    let mut worst_max = 0.0f64;
+    for (c, (a, b)) in he_maps.iter().zip(&cy_maps).enumerate() {
+        let d = a.diff_stats(b)?;
+        worst_rms = worst_rms.max(d.rms);
+        worst_max = worst_max.max(d.max_abs);
+        if c < 3 {
+            println!(
+                "  ch{c}: compared={} max|Δ|={:.3e} rms={:.3e} onlyHE={} onlyCy={}",
+                d.compared, d.max_abs, d.rms, d.only_a, d.only_b
+            );
+        }
+    }
+    println!("worst over {} channels: max|Δ|={worst_max:.3e} rms={worst_rms:.3e}", he_maps.len());
+    if let Some(prefix) = args.get("out-prefix") {
+        he_maps[0].write_pgm(Path::new(&format!("{prefix}_hegrid.pgm")))?;
+        cy_maps[0].write_pgm(Path::new(&format!("{prefix}_cygrid.pgm")))?;
+        println!("wrote {prefix}_hegrid.pgm / {prefix}_cygrid.pgm");
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &cli::Args) -> Result<()> {
+    let dir = engine_config(args)?.artifacts_dir;
+    let manifest = Manifest::load(Path::new(&dir))?;
+    println!("{} variants in {dir}:", manifest.variants.len());
+    for v in &manifest.variants {
+        println!(
+            "  {:<45} m={:<5} bm={:<5} k={:<4} c={:<3} n={:<7} γ={} tags={:?}",
+            v.name, v.m, v.bm, v.k, v.c, v.n, v.gamma, v.tags
+        );
+    }
+    Ok(())
+}

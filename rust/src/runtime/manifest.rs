@@ -1,0 +1,268 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (build
+//! time) and the Rust runtime (request time).
+
+use std::path::{Path, PathBuf};
+
+use crate::json::{parse, Json};
+use crate::util::error::{HegridError, Result};
+
+/// One AOT-compiled gridding variant (shapes + provenance).
+#[derive(Clone, Debug, PartialEq)]
+pub struct VariantInfo {
+    pub name: String,
+    /// Absolute path of the HLO text file.
+    pub path: PathBuf,
+    pub kernel_type: String,
+    /// Cells per dispatch tile.
+    pub m: usize,
+    /// Pallas block size.
+    pub bm: usize,
+    /// Max candidates per neighbour group.
+    pub k: usize,
+    /// Channels per dispatch.
+    pub c: usize,
+    /// Sample-shard capacity.
+    pub n: usize,
+    /// Reuse factor γ.
+    pub gamma: usize,
+    /// Neighbour groups per tile (= m / γ).
+    pub groups: usize,
+    pub tags: Vec<String>,
+}
+
+impl VariantInfo {
+    fn from_json(dir: &Path, v: &Json) -> Result<Self> {
+        let info = VariantInfo {
+            name: v.req_str("name")?.to_string(),
+            path: dir.join(v.req_str("file")?),
+            kernel_type: v.req_str("kernel_type")?.to_string(),
+            m: v.req_usize("m")?,
+            bm: v.req_usize("bm")?,
+            k: v.req_usize("k")?,
+            c: v.req_usize("c")?,
+            n: v.req_usize("n")?,
+            gamma: v.req_usize("gamma")?,
+            groups: v.req_usize("groups")?,
+            tags: v
+                .req_arr("tags")?
+                .iter()
+                .filter_map(|t| t.as_str().map(String::from))
+                .collect(),
+        };
+        if info.groups * info.gamma != info.m {
+            return Err(HegridError::Format(format!(
+                "variant {}: groups·gamma != m",
+                info.name
+            )));
+        }
+        Ok(info)
+    }
+
+    /// Number of dispatch tiles needed for a map with `n_cells` cells.
+    pub fn tiles_for(&self, n_cells: usize) -> usize {
+        n_cells.div_ceil(self.m).max(1)
+    }
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: Vec<VariantInfo>,
+}
+
+/// Variant-selection request (see [`Manifest::select`]).
+#[derive(Clone, Debug)]
+pub struct VariantQuery {
+    pub kernel_type: String,
+    pub gamma: usize,
+    /// Desired channels per dispatch (exact match preferred, then largest ≤).
+    pub channels: usize,
+    /// Samples that must fit a shard (smallest n ≥ this preferred; the
+    /// largest available n is returned otherwise — the caller shards).
+    pub n_samples: usize,
+    /// Preferred Pallas block size (0 = no preference).
+    pub block: usize,
+    /// Expected candidate-list length (0 = no preference): the smallest
+    /// variant `k` ≥ this is preferred, shrinking the fixed-shape gather
+    /// (K-padding) the device kernel pays regardless of true density.
+    pub k_hint: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(HegridError::io(format!(
+            "{} (run `make artifacts` first)",
+            path.display()
+        )))?;
+        let v = parse(&text)?;
+        let variants = v
+            .req_arr("variants")?
+            .iter()
+            .map(|e| VariantInfo::from_json(dir, e))
+            .collect::<Result<Vec<_>>>()?;
+        if variants.is_empty() {
+            return Err(HegridError::Format("manifest has no variants".into()));
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), variants })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&VariantInfo> {
+        self.variants
+            .iter()
+            .find(|v| v.name == name)
+            .ok_or_else(|| HegridError::Config(format!("no artifact variant named '{name}'")))
+    }
+
+    /// Pick the best variant for a query. Hard constraints: kernel type and
+    /// γ. Soft preferences, in order: channels (exact, then largest ≤, then
+    /// smallest ≥), shard capacity (smallest n ≥ n_samples, else largest n),
+    /// block size (exact match if requested).
+    pub fn select(&self, q: &VariantQuery) -> Result<&VariantInfo> {
+        let candidates: Vec<&VariantInfo> = self
+            .variants
+            .iter()
+            .filter(|v| v.kernel_type == q.kernel_type && v.gamma == q.gamma)
+            .collect();
+        if candidates.is_empty() {
+            return Err(HegridError::Config(format!(
+                "no artifact variant for kernel '{}' γ={} — extend python/compile/configs.json",
+                q.kernel_type, q.gamma
+            )));
+        }
+        let best = candidates
+            .into_iter()
+            .min_by_key(|v| {
+                // Channel preference.
+                let ch = if v.c == q.channels {
+                    0usize
+                } else if v.c < q.channels {
+                    // fewer channels per dispatch ⇒ more dispatch groups
+                    1000 + (q.channels - v.c)
+                } else {
+                    2000 + (v.c - q.channels)
+                };
+                // Candidate-capacity preference: smallest k that still fits.
+                let kfit = if q.k_hint == 0 {
+                    0
+                } else if v.k >= q.k_hint {
+                    (v.k - q.k_hint) / 16
+                } else {
+                    1000 + (q.k_hint - v.k) / 16 // undersized ⇒ truncation risk
+                };
+                // Shard-capacity preference.
+                let nfit = if v.n >= q.n_samples {
+                    (v.n - q.n_samples) / 4096 // prefer snug fit
+                } else {
+                    500_000 + (q.n_samples - v.n) / 4096 // sharding needed
+                };
+                // Block preference.
+                let blk = if q.block == 0 || v.bm == q.block { 0 } else { 1 };
+                ch * 100_000_000 + kfit * 50_000 + nfit * 10 + blk
+            })
+            .expect("candidates non-empty");
+        Ok(best)
+    }
+
+    /// All variants carrying a tag (e.g. `fig13`).
+    pub fn with_tag(&self, tag: &str) -> Vec<&VariantInfo> {
+        self.variants.iter().filter(|v| v.tags.iter().any(|t| t == tag)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_manifest() -> Option<Manifest> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn loads_repo_manifest() {
+        let Some(m) = repo_manifest() else { return };
+        assert!(m.variants.len() >= 15);
+        for v in &m.variants {
+            assert!(v.path.exists(), "{} missing", v.path.display());
+            assert_eq!(v.groups * v.gamma, v.m);
+            assert!(v.m % v.bm == 0);
+        }
+    }
+
+    #[test]
+    fn select_prefers_exact_channels_and_snug_n() {
+        let Some(m) = repo_manifest() else { return };
+        let v = m
+            .select(&VariantQuery {
+                kernel_type: "gauss1d".into(),
+                gamma: 1,
+                channels: 10,
+                n_samples: 30_000,
+                block: 256,
+                k_hint: 0,
+            })
+            .unwrap();
+        assert_eq!(v.c, 10);
+        assert_eq!(v.n, 32_768, "smallest shard ≥ 30k");
+        assert_eq!(v.bm, 256);
+    }
+
+    #[test]
+    fn select_single_channel_variant() {
+        let Some(m) = repo_manifest() else { return };
+        let v = m
+            .select(&VariantQuery {
+                kernel_type: "gauss1d".into(),
+                gamma: 1,
+                channels: 1,
+                n_samples: 1000,
+                block: 0,
+                k_hint: 0,
+            })
+            .unwrap();
+        assert_eq!(v.c, 1);
+    }
+
+    #[test]
+    fn select_gamma_and_ktype_are_hard() {
+        let Some(m) = repo_manifest() else { return };
+        assert!(m
+            .select(&VariantQuery {
+                kernel_type: "gauss1d".into(),
+                gamma: 7,
+                channels: 10,
+                n_samples: 10,
+                block: 0,
+                k_hint: 0,
+            })
+            .is_err());
+        let v = m
+            .select(&VariantQuery {
+                kernel_type: "tapered_sinc".into(),
+                gamma: 1,
+                channels: 10,
+                n_samples: 10,
+                block: 0,
+                k_hint: 0,
+            })
+            .unwrap();
+        assert_eq!(v.kernel_type, "tapered_sinc");
+    }
+
+    #[test]
+    fn with_tag_finds_sweeps() {
+        let Some(m) = repo_manifest() else { return };
+        let fig13 = m.with_tag("fig13");
+        assert!(fig13.len() >= 5);
+        assert!(m.with_tag("fig16").len() >= 3);
+        assert!(m.with_tag("nope").is_empty());
+    }
+
+    #[test]
+    fn missing_dir_is_good_error() {
+        let err = Manifest::load(Path::new("/nonexistent/artifacts")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

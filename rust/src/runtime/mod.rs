@@ -1,0 +1,15 @@
+//! PJRT runtime: artifact manifest, the stream pool (per-thread PJRT clients
+//! executing AOT HLO), and the reusable host staging-buffer pool.
+//!
+//! This is the layer that makes the Rust coordinator self-contained after
+//! `make artifacts`: HLO text is loaded via `HloModuleProto::from_text_file`,
+//! compiled once per (stream, variant), and executed with device-resident
+//! shared inputs. Python never runs here.
+
+pub mod manifest;
+pub mod pool;
+pub mod stream;
+
+pub use manifest::{Manifest, VariantInfo, VariantQuery};
+pub use pool::{MemoryPool, PooledBuf};
+pub use stream::{ExecuteRequest, ExecuteResponse, StreamPool};

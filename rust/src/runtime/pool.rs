@@ -1,0 +1,170 @@
+//! Reusable host staging-buffer pool (§4.3.2's memory pool).
+//!
+//! Pipelines stage sorted/padded channel values into large `Vec<f32>`
+//! buffers before upload. Allocating multi-megabyte vectors per dispatch
+//! group shows up hard in profiles, so buffers are recycled through a
+//! size-classed free list. `PooledBuf` returns its storage on drop.
+
+use std::sync::{Arc, Mutex};
+
+/// Size-classed pool of `Vec<f32>` staging buffers.
+#[derive(Clone, Default)]
+pub struct MemoryPool {
+    inner: Arc<Mutex<PoolInner>>,
+}
+
+#[derive(Default)]
+struct PoolInner {
+    /// Free buffers, any capacity; small list, linear scan is fine.
+    free: Vec<Vec<f32>>,
+    allocated: usize,
+    reused: usize,
+}
+
+impl MemoryPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Take a zero-length buffer with at least `capacity` reserved.
+    pub fn take(&self, capacity: usize) -> PooledBuf {
+        let mut inner = self.inner.lock().unwrap();
+        // Best-fit: the smallest free buffer with enough capacity.
+        let mut best: Option<(usize, usize)> = None;
+        for (i, b) in inner.free.iter().enumerate() {
+            if b.capacity() >= capacity {
+                let c = b.capacity();
+                if best.map(|(_, bc)| c < bc).unwrap_or(true) {
+                    best = Some((i, c));
+                }
+            }
+        }
+        let mut vec = match best {
+            Some((i, _)) => {
+                inner.reused += 1;
+                inner.free.swap_remove(i)
+            }
+            None => {
+                inner.allocated += 1;
+                Vec::with_capacity(capacity)
+            }
+        };
+        vec.clear();
+        PooledBuf { vec, pool: Arc::clone(&self.inner) }
+    }
+
+    /// (allocations, reuses) counters — §Perf evidence that pooling works.
+    pub fn stats(&self) -> (usize, usize) {
+        let inner = self.inner.lock().unwrap();
+        (inner.allocated, inner.reused)
+    }
+}
+
+/// A pooled `Vec<f32>`; dereferences to the vector, returns to the pool on
+/// drop.
+pub struct PooledBuf {
+    vec: Vec<f32>,
+    pool: Arc<Mutex<PoolInner>>,
+}
+
+impl PooledBuf {
+    /// Detach the vector from the pool (e.g. to wrap in an `Arc`).
+    pub fn into_inner(mut self) -> Vec<f32> {
+        std::mem::take(&mut self.vec)
+    }
+}
+
+impl std::ops::Deref for PooledBuf {
+    type Target = Vec<f32>;
+    fn deref(&self) -> &Vec<f32> {
+        &self.vec
+    }
+}
+
+impl std::ops::DerefMut for PooledBuf {
+    fn deref_mut(&mut self) -> &mut Vec<f32> {
+        &mut self.vec
+    }
+}
+
+impl Drop for PooledBuf {
+    fn drop(&mut self) {
+        if self.vec.capacity() > 0 {
+            let mut inner = self.pool.lock().unwrap();
+            // Bound the free list to avoid hoarding (16 buffers is plenty for
+            // pipelines × in-flight dispatches at our scales).
+            if inner.free.len() < 16 {
+                inner.free.push(std::mem::take(&mut self.vec));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reuses_buffers() {
+        let pool = MemoryPool::new();
+        let ptr;
+        {
+            let mut b = pool.take(1024);
+            b.extend_from_slice(&[1.0; 100]);
+            ptr = b.as_ptr() as usize;
+        } // returned
+        let b2 = pool.take(512);
+        assert_eq!(b2.as_ptr() as usize, ptr, "buffer not recycled");
+        assert_eq!(b2.len(), 0, "recycled buffer must be cleared");
+        assert_eq!(pool.stats(), (1, 1));
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_adequate() {
+        let pool = MemoryPool::new();
+        let small = pool.take(100).into_inner(); // detached, never returned
+        drop(small);
+        {
+            let _a = pool.take(100);
+            let _b = pool.take(10_000);
+        } // both returned: free = [100-cap, 10000-cap]
+        let c = pool.take(50);
+        assert!(c.capacity() < 10_000, "picked the big buffer unnecessarily");
+    }
+
+    #[test]
+    fn into_inner_detaches() {
+        let pool = MemoryPool::new();
+        {
+            let mut b = pool.take(64);
+            b.push(1.0);
+            let v = b.into_inner();
+            assert_eq!(v, vec![1.0]);
+        }
+        // Nothing returned to the pool.
+        let (alloc, reused) = pool.stats();
+        assert_eq!((alloc, reused), (1, 0));
+        let b2 = pool.take(64);
+        assert_eq!(pool.stats(), (2, 0));
+        drop(b2);
+    }
+
+    #[test]
+    fn concurrent_use_is_safe() {
+        let pool = MemoryPool::new();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let pool = pool.clone();
+                s.spawn(move || {
+                    for i in 0..200 {
+                        let mut b = pool.take(256 + i);
+                        b.push(i as f32);
+                    }
+                });
+            }
+        });
+        let (alloc, reused) = pool.stats();
+        assert_eq!(alloc + reused, 8 * 200);
+        assert!(reused > 0);
+    }
+}

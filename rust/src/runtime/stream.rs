@@ -1,0 +1,320 @@
+//! The PJRT stream pool — this reproduction's stand-in for CUDA/HIP streams.
+//!
+//! Each stream slot is a dedicated OS thread owning its **own** `PjRtClient`
+//! and executable cache. Rationale: the `xla` crate's `PjRtClient` is
+//! `Rc`-based (not `Send`), and giving every stream its own client both
+//! satisfies the type system and mirrors how the paper provisions per-stream
+//! GPU resources. Work arrives over a per-stream FIFO channel; replies go
+//! back through one-shot channels, so a pipeline can keep multiple dispatches
+//! in flight (the asynchronous transfer/compute overlap of §4.3.2).
+//!
+//! Device residency: stream threads cache input buffers by `(epoch, role)` —
+//! sorted coordinates are uploaded once per shared-component epoch and
+//! per-channel-group values once per group, then reused across all tile
+//! dispatches (the "loaded only once from the host to the device" part of
+//! the shared component, §4.3.1).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::runtime::manifest::Manifest;
+use crate::util::error::{HegridError, Result};
+
+/// Identifies a cached device-resident input.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum BufferKey {
+    /// Sorted sample coordinates: one per shared-component epoch.
+    SampleCoords { epoch: u64, axis: u8, n: usize },
+    /// Per-channel-group sorted values: `[c, n]`.
+    GroupValues { epoch: u64, group: u64, c: usize, n: usize },
+}
+
+/// Host-side input arrays for one dispatch (one tile × one channel group).
+pub struct ExecuteRequest {
+    pub variant: String,
+    /// Shared-component epoch (bump when samples change).
+    pub epoch: u64,
+    /// Channel-group id within the epoch.
+    pub group: u64,
+    pub cell_lon: Arc<Vec<f32>>,
+    pub cell_lat: Arc<Vec<f32>>,
+    /// `[groups, k]` flattened.
+    pub nbr: Arc<Vec<i32>>,
+    /// Sorted sample coordinates, padded to the variant's `n`.
+    pub slon: Arc<Vec<f32>>,
+    pub slat: Arc<Vec<f32>>,
+    /// Sorted, padded channel values `[c, n]` flattened.
+    pub sval: Arc<Vec<f32>>,
+    pub kparam: [f32; 4],
+}
+
+/// Result of one dispatch.
+pub struct ExecuteResponse {
+    /// `[c, m]` flattened accumulated weighted sums.
+    pub acc: Vec<f32>,
+    /// `[m]` weight sums.
+    pub wsum: Vec<f32>,
+    /// Host→device staging time (cache misses only).
+    pub t_h2d: Duration,
+    /// Kernel execution time.
+    pub t_exec: Duration,
+    /// Device→host readback time.
+    pub t_d2h: Duration,
+}
+
+enum Msg {
+    Execute(ExecuteRequest, Sender<Result<ExecuteResponse>>),
+    /// Pre-compile a variant (warm the executable cache).
+    Warm(String, Sender<Result<()>>),
+}
+
+/// A pool of `streams` PJRT execution slots.
+pub struct StreamPool {
+    senders: Vec<Sender<Msg>>,
+    handles: Vec<JoinHandle<()>>,
+    /// Round-robin cursor for `any_stream`.
+    cursor: AtomicU64,
+    in_flight: Arc<Mutex<usize>>,
+}
+
+impl StreamPool {
+    /// Spawn `streams` worker threads against `manifest`.
+    pub fn new(manifest: Arc<Manifest>, streams: usize) -> Result<StreamPool> {
+        // Quieten XLA's per-client INFO chatter unless the user asked for it.
+        if std::env::var_os("TF_CPP_MIN_LOG_LEVEL").is_none() {
+            std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
+        }
+        let streams = streams.max(1);
+        let mut senders = Vec::with_capacity(streams);
+        let mut handles = Vec::with_capacity(streams);
+        let in_flight = Arc::new(Mutex::new(0usize));
+        for s in 0..streams {
+            let (tx, rx) = channel::<Msg>();
+            let manifest = Arc::clone(&manifest);
+            let handle = std::thread::Builder::new()
+                .name(format!("pjrt-stream-{s}"))
+                .spawn(move || stream_main(manifest, rx))
+                .map_err(|e| HegridError::Runtime(format!("spawn stream: {e}")))?;
+            senders.push(tx);
+            handles.push(handle);
+        }
+        Ok(StreamPool { senders, handles, cursor: AtomicU64::new(0), in_flight })
+    }
+
+    pub fn n_streams(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Submit to a specific stream (pipelines pin their dispatches to one
+    /// stream so group-value buffers stay resident). Returns the reply port.
+    pub fn submit(&self, stream: usize, req: ExecuteRequest) -> Receiver<Result<ExecuteResponse>> {
+        let (tx, rx) = channel();
+        *self.in_flight.lock().unwrap() += 1;
+        let msg = Msg::Execute(req, tx);
+        if self.senders[stream % self.senders.len()].send(msg).is_err() {
+            // Stream thread died; the reply port will error on recv.
+        }
+        rx
+    }
+
+    /// Submit to the next stream round-robin.
+    pub fn submit_any(&self, req: ExecuteRequest) -> (usize, Receiver<Result<ExecuteResponse>>) {
+        let s = (self.cursor.fetch_add(1, Ordering::Relaxed) as usize) % self.senders.len();
+        (s, self.submit(s, req))
+    }
+
+    /// Block until `rx` yields, decrementing the in-flight counter.
+    pub fn wait(&self, rx: Receiver<Result<ExecuteResponse>>) -> Result<ExecuteResponse> {
+        let out = rx
+            .recv()
+            .map_err(|_| HegridError::Runtime("stream thread terminated".into()))?;
+        *self.in_flight.lock().unwrap() -= 1;
+        out
+    }
+
+    /// Compile `variant` on every stream up front (excluded from timings).
+    pub fn warm(&self, variant: &str) -> Result<()> {
+        let mut ports = Vec::new();
+        for tx in &self.senders {
+            let (rtx, rrx) = channel();
+            tx.send(Msg::Warm(variant.to_string(), rtx))
+                .map_err(|_| HegridError::Runtime("stream thread terminated".into()))?;
+            ports.push(rrx);
+        }
+        for p in ports {
+            p.recv().map_err(|_| HegridError::Runtime("stream thread terminated".into()))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for StreamPool {
+    fn drop(&mut self) {
+        self.senders.clear(); // close channels; threads drain and exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Per-stream worker: own client, executable cache, device-buffer cache.
+fn stream_main(manifest: Arc<Manifest>, rx: Receiver<Msg>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            crate::log_error!("stream: PJRT client creation failed: {e}");
+            // Drain requests with errors so callers unblock.
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    Msg::Execute(_, reply) => {
+                        let _ = reply.send(Err(HegridError::Runtime("no PJRT client".into())));
+                    }
+                    Msg::Warm(_, reply) => {
+                        let _ = reply.send(Err(HegridError::Runtime("no PJRT client".into())));
+                    }
+                }
+            }
+            return;
+        }
+    };
+    let mut executables: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    let mut buffers: HashMap<BufferKey, xla::PjRtBuffer> = HashMap::new();
+    // Evict stale epochs/groups: keep at most this many group-value buffers.
+    const MAX_GROUP_BUFFERS: usize = 4;
+    let mut group_lru: Vec<BufferKey> = Vec::new();
+
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Warm(name, reply) => {
+                let _ = reply.send(compile_variant(&client, &manifest, &mut executables, &name)
+                    .map(|_| ()));
+            }
+            Msg::Execute(req, reply) => {
+                let out = run_one(
+                    &client,
+                    &manifest,
+                    &mut executables,
+                    &mut buffers,
+                    &mut group_lru,
+                    MAX_GROUP_BUFFERS,
+                    &req,
+                );
+                let _ = reply.send(out);
+            }
+        }
+    }
+}
+
+fn compile_variant<'a>(
+    client: &xla::PjRtClient,
+    manifest: &Manifest,
+    cache: &'a mut HashMap<String, xla::PjRtLoadedExecutable>,
+    name: &str,
+) -> Result<&'a xla::PjRtLoadedExecutable> {
+    if !cache.contains_key(name) {
+        let info = manifest.get(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&info.path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        cache.insert(name.to_string(), exe);
+        crate::log_debug!("stream compiled variant {name}");
+    }
+    Ok(cache.get(name).expect("just inserted"))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_one(
+    client: &xla::PjRtClient,
+    manifest: &Manifest,
+    executables: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    buffers: &mut HashMap<BufferKey, xla::PjRtBuffer>,
+    group_lru: &mut Vec<BufferKey>,
+    max_groups: usize,
+    req: &ExecuteRequest,
+) -> Result<ExecuteResponse> {
+    let info = manifest.get(&req.variant)?.clone();
+    // Shape validation up front — shape bugs become errors, not UB.
+    if req.cell_lon.len() != info.m
+        || req.cell_lat.len() != info.m
+        || req.nbr.len() != info.groups * info.k
+        || req.slon.len() != info.n
+        || req.slat.len() != info.n
+        || req.sval.len() != info.c * info.n
+    {
+        return Err(HegridError::Internal(format!(
+            "dispatch shapes do not match variant {}: cells {}/{}, nbr {}/{}, samples {}/{}, sval {}/{}",
+            info.name,
+            req.cell_lon.len(),
+            info.m,
+            req.nbr.len(),
+            info.groups * info.k,
+            req.slon.len(),
+            info.n,
+            req.sval.len(),
+            info.c * info.n
+        )));
+    }
+    compile_variant(client, manifest, executables, &req.variant)?;
+
+    // ---- H2D: per-tile inputs always, shared inputs on cache miss --------
+    let t0 = Instant::now();
+    let cell_lon = client.buffer_from_host_buffer::<f32>(&req.cell_lon, &[info.m], None)?;
+    let cell_lat = client.buffer_from_host_buffer::<f32>(&req.cell_lat, &[info.m], None)?;
+    let nbr = client.buffer_from_host_buffer::<i32>(&req.nbr, &[info.groups, info.k], None)?;
+    let kparam = client.buffer_from_host_buffer::<f32>(&req.kparam[..], &[4], None)?;
+
+    let coord_key = |axis: u8| BufferKey::SampleCoords { epoch: req.epoch, axis, n: info.n };
+    if !buffers.contains_key(&coord_key(0)) {
+        // New epoch: drop previous coordinate + group buffers.
+        buffers.retain(|k, _| matches!(k, BufferKey::SampleCoords { epoch, .. } | BufferKey::GroupValues { epoch, .. } if *epoch == req.epoch));
+        group_lru.retain(|k| matches!(k, BufferKey::GroupValues { epoch, .. } if *epoch == req.epoch));
+        let slon = client.buffer_from_host_buffer::<f32>(&req.slon, &[info.n], None)?;
+        let slat = client.buffer_from_host_buffer::<f32>(&req.slat, &[info.n], None)?;
+        buffers.insert(coord_key(0), slon);
+        buffers.insert(coord_key(1), slat);
+    }
+    let gkey = BufferKey::GroupValues { epoch: req.epoch, group: req.group, c: info.c, n: info.n };
+    if !buffers.contains_key(&gkey) {
+        let sval = client.buffer_from_host_buffer::<f32>(&req.sval, &[info.c, info.n], None)?;
+        buffers.insert(gkey.clone(), sval);
+        group_lru.push(gkey.clone());
+        while group_lru.len() > max_groups {
+            let evict = group_lru.remove(0);
+            buffers.remove(&evict);
+        }
+    }
+    let t_h2d = t0.elapsed();
+
+    // ---- execute ----------------------------------------------------------
+    let t1 = Instant::now();
+    let exe = executables.get(&req.variant).expect("compiled above");
+    let slon_buf = buffers.get(&coord_key(0)).expect("resident");
+    let slat_buf = buffers.get(&coord_key(1)).expect("resident");
+    let sval_buf = buffers.get(&gkey).expect("resident");
+    let args: [&xla::PjRtBuffer; 7] =
+        [&cell_lon, &cell_lat, &nbr, slon_buf, slat_buf, sval_buf, &kparam];
+    let outputs = exe.execute_b(&args)?;
+    let t_exec = t1.elapsed();
+
+    // ---- D2H ---------------------------------------------------------------
+    let t2 = Instant::now();
+    let result = outputs[0][0].to_literal_sync()?;
+    let (acc_lit, wsum_lit) = result.to_tuple2()?;
+    let acc = acc_lit.to_vec::<f32>()?;
+    let wsum = wsum_lit.to_vec::<f32>()?;
+    let t_d2h = t2.elapsed();
+
+    if acc.len() != info.c * info.m || wsum.len() != info.m {
+        return Err(HegridError::Runtime(format!(
+            "unexpected output shapes: acc {} wsum {} for variant {}",
+            acc.len(),
+            wsum.len(),
+            info.name
+        )));
+    }
+    Ok(ExecuteResponse { acc, wsum, t_h2d, t_exec, t_d2h })
+}

@@ -1,0 +1,186 @@
+//! Minimal FITS image writer for [`SkyMap`]s.
+//!
+//! Astronomy toolchains (DS9, astropy, CARTA) consume FITS, not PGM; the
+//! paper's outputs feed exactly such tools. This writes a standards-
+//! conforming single-HDU primary image: BITPIX = -32 (IEEE f32, big
+//! endian), two axes, and a CAR (plate carrée) WCS matching [`GridSpec`].
+//! Blank cells are written as NaN, which FITS viewers render as blank.
+//!
+//! Scope: writer only (HEGrid emits maps, it does not read them back);
+//! 2880-byte logical records, mandatory keywords, END padding — enough for
+//! `astropy.io.fits.open` to round-trip the pixels and WCS.
+
+use std::io::Write;
+use std::path::Path;
+
+use super::SkyMap;
+use crate::util::error::{HegridError, Result};
+use crate::util::rad2deg;
+
+const RECORD: usize = 2880;
+const CARD: usize = 80;
+
+/// Format one header card: `KEYWORD = value / comment`, padded to 80 bytes.
+fn card(keyword: &str, value: &str, comment: &str) -> [u8; CARD] {
+    let mut out = [b' '; CARD];
+    let text = if value.is_empty() {
+        keyword.to_string()
+    } else {
+        format!("{keyword:<8}= {value:>20} / {comment}")
+    };
+    let bytes = text.as_bytes();
+    let n = bytes.len().min(CARD);
+    out[..n].copy_from_slice(&bytes[..n]);
+    out
+}
+
+fn fcard(keyword: &str, value: f64, comment: &str) -> [u8; CARD] {
+    card(keyword, &format!("{value:.10E}"), comment)
+}
+
+fn icard(keyword: &str, value: i64, comment: &str) -> [u8; CARD] {
+    card(keyword, &value.to_string(), comment)
+}
+
+fn scard(keyword: &str, value: &str, comment: &str) -> [u8; CARD] {
+    card(keyword, &format!("'{value:<8}'"), comment)
+}
+
+impl SkyMap {
+    /// Write the map as a FITS primary image with a CAR WCS.
+    pub fn write_fits(&self, path: &Path) -> Result<()> {
+        let spec = &self.spec;
+        let (nlon, nlat) = (spec.nlon, spec.nlat);
+
+        // ---- header ---------------------------------------------------------
+        let mut header: Vec<u8> = Vec::with_capacity(RECORD);
+        let cards = [
+            card("SIMPLE", "T", "conforms to FITS standard"),
+            icard("BITPIX", -32, "IEEE single-precision float"),
+            icard("NAXIS", 2, "number of axes"),
+            icard("NAXIS1", nlon as i64, "longitude (RA) axis"),
+            icard("NAXIS2", nlat as i64, "latitude (Dec) axis"),
+            scard("CTYPE1", "RA---CAR", "plate carree projection"),
+            scard("CTYPE2", "DEC--CAR", "plate carree projection"),
+            // FITS pixel indices are 1-based; CRPIX at the map center.
+            fcard("CRPIX1", (nlon as f64 + 1.0) / 2.0, "reference pixel (lon)"),
+            fcard("CRPIX2", (nlat as f64 + 1.0) / 2.0, "reference pixel (lat)"),
+            fcard("CRVAL1", rad2deg(spec.lon_c), "deg at reference pixel"),
+            fcard("CRVAL2", rad2deg(spec.lat_c), "deg at reference pixel"),
+            fcard("CDELT1", rad2deg(spec.step), "deg per pixel"),
+            fcard("CDELT2", rad2deg(spec.step), "deg per pixel"),
+            scard("BUNIT", "K", "brightness (arbitrary K)"),
+            scard("ORIGIN", "HEGrid-RS", "github.com/HPCAstroAtTJU/HEGrid repro"),
+            card("END", "", ""),
+        ];
+        for c in &cards {
+            header.extend_from_slice(c);
+        }
+        header.resize(header.len().div_ceil(RECORD) * RECORD, b' ');
+
+        // ---- data: f32 big-endian, row-major from the first (southern) row —
+        // FITS NAXIS1 varies fastest, matching our row-major layout.
+        let values = self.values();
+        let weights = self.weights();
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for i in 0..values.len() {
+            let v = if weights[i] > 0.0 { values[i] as f32 } else { f32::NAN };
+            data.extend_from_slice(&v.to_be_bytes());
+        }
+        data.resize(data.len().div_ceil(RECORD) * RECORD, 0);
+
+        let mut file = std::fs::File::create(path)
+            .map_err(HegridError::io(path.display().to_string()))?;
+        file.write_all(&header).map_err(HegridError::io(path.display().to_string()))?;
+        file.write_all(&data).map_err(HegridError::io(path.display().to_string()))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::GridSpec;
+    use super::*;
+
+    fn sample_map() -> SkyMap {
+        let spec = GridSpec::centered(30.0, 41.0, 6, 4, 0.5);
+        let n = spec.n_cells();
+        let acc: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        let mut w = vec![1.0; n];
+        w[5] = 0.0; // one blank cell
+        SkyMap::from_accumulators(spec, &acc, &w).unwrap()
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("hegrid_fits");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn structure_is_record_aligned() {
+        let path = tmp("s.fits");
+        sample_map().write_fits(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(bytes.len() % RECORD, 0);
+        assert_eq!(bytes.len(), RECORD + RECORD); // 1 header + 1 data record
+        assert!(bytes.starts_with(b"SIMPLE  ="));
+    }
+
+    #[test]
+    fn header_has_mandatory_cards_in_order() {
+        let path = tmp("h.fits");
+        sample_map().write_fits(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let header = &bytes[..RECORD];
+        let kw = |i: usize| String::from_utf8_lossy(&header[i * CARD..i * CARD + 8]).to_string();
+        assert_eq!(kw(0).trim(), "SIMPLE");
+        assert_eq!(kw(1).trim(), "BITPIX");
+        assert_eq!(kw(2).trim(), "NAXIS");
+        assert_eq!(kw(3).trim(), "NAXIS1");
+        assert_eq!(kw(4).trim(), "NAXIS2");
+        let text = String::from_utf8_lossy(header);
+        assert!(text.contains("END"));
+        assert!(text.contains("RA---CAR"));
+        assert!(text.contains("NAXIS1  =                    6"));
+        assert!(text.contains("NAXIS2  =                    4"));
+    }
+
+    #[test]
+    fn data_round_trips_big_endian() {
+        let map = sample_map();
+        let path = tmp("d.fits");
+        map.write_fits(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let data = &bytes[RECORD..];
+        let px = |i: usize| f32::from_be_bytes(data[i * 4..i * 4 + 4].try_into().unwrap());
+        assert_eq!(px(0), 0.0);
+        assert_eq!(px(1), 1.0);
+        assert!(px(5).is_nan(), "blank cell must be NaN");
+        assert_eq!(px(23), 23.0);
+        // padding after the 24 pixels is zero
+        assert_eq!(px(24), 0.0);
+    }
+
+    #[test]
+    fn astropy_reads_it_if_available() {
+        // Best-effort cross-validation against astropy when present.
+        let map = sample_map();
+        let path = tmp("a.fits");
+        map.write_fits(&path).unwrap();
+        let script = format!(
+            "import sys\n\
+             try:\n    from astropy.io import fits\nexcept Exception:\n    sys.exit(0)\n\
+             h = fits.open('{}')[0]\n\
+             assert h.data.shape == (4, 6), h.data.shape\n\
+             assert abs(h.data[0][1] - 1.0) < 1e-6\n\
+             assert h.header['CTYPE1'].startswith('RA---CAR')\n\
+             print('astropy OK')\n",
+            path.display()
+        );
+        let out = std::process::Command::new("python3").arg("-c").arg(&script).output();
+        if let Ok(out) = out {
+            assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        }
+    }
+}

@@ -1,0 +1,445 @@
+//! Sky geometry: target-map specification (WCS-lite), sky maps, and beams.
+//!
+//! HEGrid grids onto a plate-carrée (CAR) target map — uniform steps in
+//! longitude (right ascension) and latitude (declination) — matching the
+//! paper's 60°×20° FAST map centred at (30°, 41°). Cells are addressed
+//! row-major, `idx = row·nlon + col`, rows running south→north.
+
+pub mod fits;
+
+use crate::util::error::{HegridError, Result};
+use crate::util::{deg2rad, rad2deg};
+
+/// Target grid map geometry. Angles are stored in radians internally;
+/// constructors take degrees (the unit used throughout the paper).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GridSpec {
+    /// Map center longitude (rad).
+    pub lon_c: f64,
+    /// Map center latitude (rad).
+    pub lat_c: f64,
+    /// Number of cells along longitude.
+    pub nlon: usize,
+    /// Number of cells along latitude.
+    pub nlat: usize,
+    /// Cell step (rad), identical in both axes.
+    pub step: f64,
+}
+
+impl GridSpec {
+    /// Map centred at `(lon_deg, lat_deg)` with `nlon × nlat` cells of
+    /// `cell_deg` degrees.
+    pub fn centered(lon_deg: f64, lat_deg: f64, nlon: usize, nlat: usize, cell_deg: f64) -> Self {
+        assert!(nlon > 0 && nlat > 0, "empty grid");
+        assert!(cell_deg > 0.0, "cell size must be positive");
+        GridSpec {
+            lon_c: deg2rad(lon_deg),
+            lat_c: deg2rad(lat_deg),
+            nlon,
+            nlat,
+            step: deg2rad(cell_deg),
+        }
+    }
+
+    /// Map covering `width_deg × height_deg` centred at `(lon_deg, lat_deg)`
+    /// with a cell size derived from the beam (beam/`oversample` per cell —
+    /// the paper's "output resolution" knob: smaller beams ⇒ more cells).
+    pub fn for_field(
+        lon_deg: f64,
+        lat_deg: f64,
+        width_deg: f64,
+        height_deg: f64,
+        beam_deg: f64,
+        oversample: f64,
+    ) -> Self {
+        assert!(oversample > 0.0);
+        let cell_deg = beam_deg / oversample;
+        let nlon = (width_deg / cell_deg).ceil().max(1.0) as usize;
+        let nlat = (height_deg / cell_deg).ceil().max(1.0) as usize;
+        Self::centered(lon_deg, lat_deg, nlon, nlat, cell_deg)
+    }
+
+    pub fn n_cells(&self) -> usize {
+        self.nlon * self.nlat
+    }
+
+    /// World coordinates (lon, lat) in radians of cell `(row, col)`.
+    pub fn cell_center(&self, row: usize, col: usize) -> (f64, f64) {
+        debug_assert!(row < self.nlat && col < self.nlon);
+        let lon = self.lon_c + (col as f64 - (self.nlon as f64 - 1.0) / 2.0) * self.step;
+        let lat = self.lat_c + (row as f64 - (self.nlat as f64 - 1.0) / 2.0) * self.step;
+        (lon, lat)
+    }
+
+    /// Center of the flattened cell `idx` (row-major).
+    pub fn cell_center_flat(&self, idx: usize) -> (f64, f64) {
+        self.cell_center(idx / self.nlon, idx % self.nlon)
+    }
+
+    /// All cell centers, flattened row-major, as `(lons, lats)` in radians.
+    pub fn cell_centers(&self) -> (Vec<f64>, Vec<f64>) {
+        let n = self.n_cells();
+        let mut lons = Vec::with_capacity(n);
+        let mut lats = Vec::with_capacity(n);
+        for row in 0..self.nlat {
+            for col in 0..self.nlon {
+                let (lon, lat) = self.cell_center(row, col);
+                lons.push(lon);
+                lats.push(lat);
+            }
+        }
+        (lons, lats)
+    }
+
+    /// Extent bounds `(lon_min, lon_max, lat_min, lat_max)` in radians,
+    /// including the half-cell margin.
+    pub fn bounds(&self) -> (f64, f64, f64, f64) {
+        let half_w = self.nlon as f64 / 2.0 * self.step;
+        let half_h = self.nlat as f64 / 2.0 * self.step;
+        (self.lon_c - half_w, self.lon_c + half_w, self.lat_c - half_h, self.lat_c + half_h)
+    }
+
+    /// Width × height in degrees.
+    pub fn extent_deg(&self) -> (f64, f64) {
+        (rad2deg(self.step) * self.nlon as f64, rad2deg(self.step) * self.nlat as f64)
+    }
+}
+
+/// A gridded sky image for one channel: values and accumulated weights.
+/// Cells with `weight == 0` have no data (NaN value on read-out).
+#[derive(Clone, Debug)]
+pub struct SkyMap {
+    pub spec: GridSpec,
+    /// Normalised cell values, row-major; NaN where weight == 0.
+    values: Vec<f64>,
+    weights: Vec<f64>,
+}
+
+impl SkyMap {
+    pub fn new(spec: GridSpec) -> Self {
+        let n = spec.n_cells();
+        SkyMap { spec, values: vec![f64::NAN; n], weights: vec![0.0; n] }
+    }
+
+    /// Build from already-normalised values + weights (e.g. kernel output).
+    pub fn from_parts(spec: GridSpec, values: Vec<f64>, weights: Vec<f64>) -> Result<Self> {
+        if values.len() != spec.n_cells() || weights.len() != spec.n_cells() {
+            return Err(HegridError::Internal(format!(
+                "map size mismatch: {} values, {} weights, {} cells",
+                values.len(),
+                weights.len(),
+                spec.n_cells()
+            )));
+        }
+        Ok(SkyMap { spec, values, weights })
+    }
+
+    /// Build by normalising accumulated sums: `value = acc / wsum`.
+    pub fn from_accumulators(spec: GridSpec, acc: &[f64], wsum: &[f64]) -> Result<Self> {
+        if acc.len() != spec.n_cells() || wsum.len() != spec.n_cells() {
+            return Err(HegridError::Internal("accumulator size mismatch".into()));
+        }
+        let values = acc
+            .iter()
+            .zip(wsum)
+            .map(|(&a, &w)| if w > 0.0 { a / w } else { f64::NAN })
+            .collect();
+        Ok(SkyMap { spec, values, weights: wsum.to_vec() })
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
+
+    pub fn get(&self, row: usize, col: usize) -> f64 {
+        self.values[row * self.spec.nlon + col]
+    }
+
+    /// Fraction of cells that received any data.
+    pub fn coverage(&self) -> f64 {
+        let hit = self.weights.iter().filter(|&&w| w > 0.0).count();
+        hit as f64 / self.weights.len().max(1) as f64
+    }
+
+    /// Mean over covered cells.
+    pub fn mean(&self) -> f64 {
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for (&v, &w) in self.values.iter().zip(&self.weights) {
+            if w > 0.0 {
+                sum += v;
+                n += 1;
+            }
+        }
+        if n == 0 {
+            f64::NAN
+        } else {
+            sum / n as f64
+        }
+    }
+
+    /// Comparison statistics against another map on the same spec
+    /// (Fig 17's HEGrid-vs-Cygrid difference panel).
+    pub fn diff_stats(&self, other: &SkyMap) -> Result<DiffStats> {
+        if self.spec != other.spec {
+            return Err(HegridError::Config("diff_stats: mismatched grid specs".into()));
+        }
+        let mut max_abs: f64 = 0.0;
+        let mut sum2 = 0.0;
+        let mut n = 0usize;
+        let mut only_a = 0usize;
+        let mut only_b = 0usize;
+        for i in 0..self.values.len() {
+            let (wa, wb) = (self.weights[i] > 0.0, other.weights[i] > 0.0);
+            match (wa, wb) {
+                (true, true) => {
+                    let d = self.values[i] - other.values[i];
+                    max_abs = max_abs.max(d.abs());
+                    sum2 += d * d;
+                    n += 1;
+                }
+                (true, false) => only_a += 1,
+                (false, true) => only_b += 1,
+                (false, false) => {}
+            }
+        }
+        Ok(DiffStats {
+            compared: n,
+            max_abs,
+            rms: if n > 0 { (sum2 / n as f64).sqrt() } else { 0.0 },
+            only_a,
+            only_b,
+        })
+    }
+
+    /// Write an 8-bit PGM image (for Fig-17-style visual comparison).
+    /// Values are linearly scaled between the covered min/max; empty cells
+    /// render black. Row 0 (southernmost) is the bottom of the image.
+    pub fn write_pgm(&self, path: &std::path::Path) -> Result<()> {
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for (&v, &w) in self.values.iter().zip(&self.weights) {
+            if w > 0.0 {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+        }
+        if !lo.is_finite() || hi <= lo {
+            lo = 0.0;
+            hi = 1.0;
+        }
+        let scale = 254.0 / (hi - lo);
+        let mut buf = format!("P5\n{} {}\n255\n", self.spec.nlon, self.spec.nlat).into_bytes();
+        for row in (0..self.spec.nlat).rev() {
+            for col in 0..self.spec.nlon {
+                let i = row * self.spec.nlon + col;
+                let px = if self.weights[i] > 0.0 {
+                    1 + ((self.values[i] - lo) * scale) as u8
+                } else {
+                    0u8
+                };
+                buf.push(px);
+            }
+        }
+        std::fs::write(path, buf).map_err(HegridError::io(path.display().to_string()))
+    }
+
+    /// Write `lon_deg,lat_deg,value,weight` CSV (empty cells included with
+    /// `NaN`). Intended for small maps / debugging.
+    pub fn write_csv(&self, path: &std::path::Path) -> Result<()> {
+        let mut out = String::from("lon_deg,lat_deg,value,weight\n");
+        for row in 0..self.spec.nlat {
+            for col in 0..self.spec.nlon {
+                let (lon, lat) = self.spec.cell_center(row, col);
+                let i = row * self.spec.nlon + col;
+                out.push_str(&format!(
+                    "{:.6},{:.6},{},{}\n",
+                    rad2deg(lon),
+                    rad2deg(lat),
+                    self.values[i],
+                    self.weights[i]
+                ));
+            }
+        }
+        std::fs::write(path, out).map_err(HegridError::io(path.display().to_string()))
+    }
+}
+
+/// Result of [`SkyMap::diff_stats`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DiffStats {
+    /// Cells covered in both maps.
+    pub compared: usize,
+    pub max_abs: f64,
+    pub rms: f64,
+    /// Cells covered only in `self` / only in `other`.
+    pub only_a: usize,
+    pub only_b: usize,
+}
+
+/// A Gaussian telescope beam, specified by FWHM.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GaussianBeam {
+    /// Full width at half maximum, radians.
+    pub fwhm: f64,
+}
+
+impl GaussianBeam {
+    pub fn from_fwhm_deg(fwhm_deg: f64) -> Self {
+        assert!(fwhm_deg > 0.0);
+        GaussianBeam { fwhm: deg2rad(fwhm_deg) }
+    }
+
+    pub fn from_fwhm_arcsec(fwhm_arcsec: f64) -> Self {
+        Self::from_fwhm_deg(fwhm_arcsec / 3600.0)
+    }
+
+    /// Gaussian σ = FWHM / (2·sqrt(2·ln 2)).
+    pub fn sigma(&self) -> f64 {
+        self.fwhm / (2.0 * (2.0f64.ln() * 2.0).sqrt())
+    }
+
+    /// Beam response at angular distance `d` (peak-normalised).
+    pub fn response(&self, d: f64) -> f64 {
+        let s = self.sigma();
+        (-0.5 * (d / s) * (d / s)).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec_small() -> GridSpec {
+        GridSpec::centered(30.0, 41.0, 8, 4, 0.5)
+    }
+
+    #[test]
+    fn grid_center_symmetry() {
+        let s = spec_small();
+        // Mean of all cell centers equals the map center.
+        let (lons, lats) = s.cell_centers();
+        let mlon = lons.iter().sum::<f64>() / lons.len() as f64;
+        let mlat = lats.iter().sum::<f64>() / lats.len() as f64;
+        assert!((mlon - s.lon_c).abs() < 1e-12);
+        assert!((mlat - s.lat_c).abs() < 1e-12);
+        assert_eq!(lons.len(), s.n_cells());
+    }
+
+    #[test]
+    fn cell_center_flat_matches_2d() {
+        let s = spec_small();
+        for idx in 0..s.n_cells() {
+            let a = s.cell_center_flat(idx);
+            let b = s.cell_center(idx / s.nlon, idx % s.nlon);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn adjacent_cells_are_one_step_apart() {
+        let s = spec_small();
+        let (a, _) = s.cell_center(0, 0);
+        let (b, _) = s.cell_center(0, 1);
+        assert!((b - a - s.step).abs() < 1e-15);
+        let (_, c) = s.cell_center(0, 0);
+        let (_, d) = s.cell_center(1, 0);
+        assert!((d - c - s.step).abs() < 1e-15);
+    }
+
+    #[test]
+    fn for_field_respects_beam_oversample() {
+        let s = GridSpec::for_field(30.0, 41.0, 60.0, 20.0, 300.0 / 3600.0, 2.0);
+        let (w, h) = s.extent_deg();
+        assert!(w >= 60.0 && w < 60.2);
+        assert!(h >= 20.0 && h < 20.2);
+        assert!((rad2deg(s.step) - 300.0 / 3600.0 / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bounds_contain_all_cells() {
+        let s = spec_small();
+        let (lo, hi, blo, bhi) = s.bounds();
+        let (lons, lats) = s.cell_centers();
+        for (&lon, &lat) in lons.iter().zip(&lats) {
+            assert!(lon > lo && lon < hi);
+            assert!(lat > blo && lat < bhi);
+        }
+    }
+
+    #[test]
+    fn skymap_from_accumulators_normalises() {
+        let s = GridSpec::centered(0.0, 0.0, 2, 2, 1.0);
+        let map =
+            SkyMap::from_accumulators(s, &[2.0, 0.0, 6.0, 1.0], &[1.0, 0.0, 2.0, 4.0]).unwrap();
+        assert_eq!(map.values()[0], 2.0);
+        assert!(map.values()[1].is_nan());
+        assert_eq!(map.values()[2], 3.0);
+        assert_eq!(map.values()[3], 0.25);
+        assert!((map.coverage() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn skymap_size_mismatch_rejected() {
+        let s = GridSpec::centered(0.0, 0.0, 2, 2, 1.0);
+        assert!(SkyMap::from_accumulators(s.clone(), &[1.0], &[1.0]).is_err());
+        assert!(SkyMap::from_parts(s, vec![0.0; 4], vec![0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn diff_stats_identical_and_perturbed() {
+        let s = GridSpec::centered(0.0, 0.0, 2, 2, 1.0);
+        let a = SkyMap::from_accumulators(s.clone(), &[1.0, 2.0, 3.0, 0.0], &[1.0, 1.0, 1.0, 0.0])
+            .unwrap();
+        let d = a.diff_stats(&a).unwrap();
+        assert_eq!(d.max_abs, 0.0);
+        assert_eq!(d.compared, 3);
+        let b =
+            SkyMap::from_accumulators(s, &[1.0, 2.5, 3.0, 1.0], &[1.0, 1.0, 1.0, 1.0]).unwrap();
+        let d = a.diff_stats(&b).unwrap();
+        assert!((d.max_abs - 0.5).abs() < 1e-12);
+        assert_eq!(d.only_b, 1);
+    }
+
+    #[test]
+    fn diff_stats_spec_mismatch_rejected() {
+        let a = SkyMap::new(GridSpec::centered(0.0, 0.0, 2, 2, 1.0));
+        let b = SkyMap::new(GridSpec::centered(0.0, 0.0, 3, 2, 1.0));
+        assert!(a.diff_stats(&b).is_err());
+    }
+
+    #[test]
+    fn pgm_and_csv_written() {
+        let dir = std::env::temp_dir().join("hegrid_sky_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let s = GridSpec::centered(0.0, 0.0, 4, 2, 1.0);
+        let map = SkyMap::from_accumulators(
+            s,
+            &[1.0, 2.0, 3.0, 4.0, 0.0, 5.0, 6.0, 7.0],
+            &[1.0; 8],
+        )
+        .unwrap();
+        let pgm = dir.join("m.pgm");
+        let csv = dir.join("m.csv");
+        map.write_pgm(&pgm).unwrap();
+        map.write_csv(&csv).unwrap();
+        let bytes = std::fs::read(&pgm).unwrap();
+        assert!(bytes.starts_with(b"P5\n4 2\n255\n"));
+        assert_eq!(bytes.len(), b"P5\n4 2\n255\n".len() + 8);
+        let text = std::fs::read_to_string(&csv).unwrap();
+        assert_eq!(text.lines().count(), 9);
+    }
+
+    #[test]
+    fn beam_fwhm_semantics() {
+        let beam = GaussianBeam::from_fwhm_arcsec(180.0);
+        // Response at half the FWHM from center is 0.5 by definition.
+        let r = beam.response(beam.fwhm / 2.0);
+        assert!((r - 0.5).abs() < 1e-9, "r={r}");
+        assert!(beam.response(0.0) == 1.0);
+        assert!(beam.response(3.0 * beam.sigma()) < 0.012);
+    }
+}

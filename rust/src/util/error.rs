@@ -1,0 +1,81 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// Unified error for every HEGrid subsystem.
+#[derive(Debug)]
+pub enum HegridError {
+    /// I/O failure, with the path or operation that caused it.
+    Io { context: String, source: std::io::Error },
+    /// A malformed dataset / artifact / config file.
+    Format(String),
+    /// JSON parse error with byte offset.
+    Json { offset: usize, message: String },
+    /// Invalid user-supplied configuration or CLI arguments.
+    Config(String),
+    /// PJRT runtime failure (compile/execute/transfer).
+    Runtime(String),
+    /// Internal invariant violation — a bug in HEGrid.
+    Internal(String),
+}
+
+impl fmt::Display for HegridError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            HegridError::Io { context, source } => write!(f, "I/O error ({context}): {source}"),
+            HegridError::Format(m) => write!(f, "format error: {m}"),
+            HegridError::Json { offset, message } => {
+                write!(f, "JSON error at byte {offset}: {message}")
+            }
+            HegridError::Config(m) => write!(f, "config error: {m}"),
+            HegridError::Runtime(m) => write!(f, "runtime error: {m}"),
+            HegridError::Internal(m) => write!(f, "internal error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for HegridError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            HegridError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+impl HegridError {
+    /// Wrap an `io::Error` with context (usually a path).
+    pub fn io(context: impl Into<String>) -> impl FnOnce(std::io::Error) -> HegridError {
+        let context = context.into();
+        move |source| HegridError::Io { context, source }
+    }
+}
+
+impl From<xla::Error> for HegridError {
+    fn from(e: xla::Error) -> Self {
+        HegridError::Runtime(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, HegridError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        let e = HegridError::Format("bad magic".into());
+        assert_eq!(e.to_string(), "format error: bad magic");
+        let e = HegridError::Json { offset: 12, message: "expected ':'".into() };
+        assert!(e.to_string().contains("byte 12"));
+    }
+
+    #[test]
+    fn io_wrapper_keeps_context() {
+        let err = std::fs::File::open("/definitely/not/here").unwrap_err();
+        let e = HegridError::io("/definitely/not/here")(err);
+        assert!(e.to_string().contains("/definitely/not/here"));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

@@ -1,0 +1,83 @@
+//! Small shared utilities: error type, PRNG, statistics, CRC32, thread helpers.
+//!
+//! These exist because the offline crate set vendors only the `xla` closure —
+//! no `rand`, no `thiserror`, no `rayon` — so HEGrid ships its own minimal,
+//! well-tested equivalents (see DESIGN.md "Substituted substrates").
+
+pub mod crc32;
+pub mod error;
+pub mod prng;
+pub mod stats;
+pub mod threads;
+
+pub use error::{HegridError, Result};
+pub use prng::SplitMix64;
+
+/// Degrees → radians.
+#[inline]
+pub fn deg2rad(d: f64) -> f64 {
+    d * std::f64::consts::PI / 180.0
+}
+
+/// Radians → degrees.
+#[inline]
+pub fn rad2deg(r: f64) -> f64 {
+    r * 180.0 / std::f64::consts::PI
+}
+
+/// Arcseconds → radians.
+#[inline]
+pub fn arcsec2rad(a: f64) -> f64 {
+    deg2rad(a / 3600.0)
+}
+
+/// Round `x` up to the next multiple of `m` (m > 0).
+#[inline]
+pub fn round_up(x: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    x.div_ceil(m) * m
+}
+
+/// Normalise an angle in radians to `[0, 2π)`.
+#[inline]
+pub fn wrap_2pi(mut phi: f64) -> f64 {
+    use std::f64::consts::TAU;
+    phi %= TAU;
+    if phi < 0.0 {
+        phi += TAU;
+    }
+    // `-1e-30 % TAU` can round back to TAU; fold it to 0.
+    if phi >= TAU {
+        phi = 0.0;
+    }
+    phi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions_round_trip() {
+        assert!((rad2deg(deg2rad(123.456)) - 123.456).abs() < 1e-12);
+        assert!((arcsec2rad(3600.0) - deg2rad(1.0)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+
+    #[test]
+    fn wrap_2pi_ranges() {
+        use std::f64::consts::{PI, TAU};
+        assert!((wrap_2pi(-PI) - PI).abs() < 1e-12);
+        assert!((wrap_2pi(TAU + 0.5) - 0.5).abs() < 1e-12);
+        assert_eq!(wrap_2pi(0.0), 0.0);
+        let w = wrap_2pi(-1e-30);
+        assert!((0.0..TAU).contains(&w));
+    }
+}

@@ -1,0 +1,208 @@
+//! Thread-pool substrate: a small fixed-size worker pool with scoped parallel
+//! iteration. Stands in for `rayon` (not vendored). Used by pre-processing
+//! (parallel pixel_idx computation / radix sort) and the CPU baselines.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+/// Number of worker threads to use by default (logical cores, capped).
+pub fn default_parallelism() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(32)
+}
+
+/// Run `f(chunk_index, start, end)` over `n` items split into ~`workers`
+/// contiguous chunks, in parallel, on scoped threads. Blocks until done.
+///
+/// `f` must be `Sync` — chunks are disjoint so data races are the caller's
+/// responsibility to avoid via disjoint output slices or atomics.
+pub fn parallel_chunks<F>(n: usize, workers: usize, f: F)
+where
+    F: Fn(usize, usize, usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let workers = workers.clamp(1, n);
+    if workers == 1 {
+        f(0, 0, n);
+        return;
+    }
+    let chunk = n.div_ceil(workers);
+    thread::scope(|s| {
+        for w in 0..workers {
+            let start = w * chunk;
+            let end = ((w + 1) * chunk).min(n);
+            if start >= end {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(w, start, end));
+        }
+    });
+}
+
+/// Dynamic work-stealing loop: workers repeatedly claim the next index until
+/// `n` items are consumed. For irregular per-item cost (e.g. per-cell
+/// neighbour search where sampling density varies across the map).
+pub fn parallel_items<F>(n: usize, workers: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let workers = workers.clamp(1, n);
+    if workers == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    thread::scope(|s| {
+        for _ in 0..workers {
+            let f = &f;
+            let next = &next;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// A persistent FIFO worker pool executing boxed jobs; the substrate under the
+/// coordinator's pipeline workers ("CPU processes" in the paper's terms).
+pub struct WorkerPool {
+    tx: Option<mpsc::Sender<Job>>,
+    handles: Vec<thread::JoinHandle<()>>,
+    queued: Arc<AtomicUsize>,
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+impl WorkerPool {
+    /// Spawn a pool with `workers` threads, each named `"{name}-{i}"`.
+    pub fn new(name: &str, workers: usize) -> Self {
+        let workers = workers.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let queued = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let rx = Arc::clone(&rx);
+            let queued = Arc::clone(&queued);
+            let handle = thread::Builder::new()
+                .name(format!("{name}-{i}"))
+                .spawn(move || loop {
+                    let job = {
+                        let guard = rx.lock().expect("worker queue poisoned");
+                        guard.recv()
+                    };
+                    match job {
+                        Ok(job) => {
+                            job();
+                            queued.fetch_sub(1, Ordering::Release);
+                        }
+                        Err(_) => break, // all senders dropped
+                    }
+                })
+                .expect("spawn worker");
+            handles.push(handle);
+        }
+        Self { tx: Some(tx), handles, queued }
+    }
+
+    /// Enqueue a job (FIFO).
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, job: F) {
+        self.queued.fetch_add(1, Ordering::Acquire);
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(job))
+            .expect("worker pool receiver dropped");
+    }
+
+    /// Jobs submitted but not yet finished.
+    pub fn pending(&self) -> usize {
+        self.queued.load(Ordering::Acquire)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the channel; workers drain and exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_chunks_covers_everything_once() {
+        let n = 10_001;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_chunks(n, 7, |_, s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_items_covers_everything_once() {
+        let n = 5000;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_items(n, 8, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_zero_items_is_noop() {
+        parallel_chunks(0, 4, |_, _, _| panic!("must not run"));
+        parallel_items(0, 4, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn worker_pool_runs_all_jobs_fifo_per_worker() {
+        let pool = WorkerPool::new("test", 4);
+        let sum = Arc::new(AtomicU64::new(0));
+        for i in 0..100u64 {
+            let sum = Arc::clone(&sum);
+            pool.submit(move || {
+                sum.fetch_add(i, Ordering::Relaxed);
+            });
+        }
+        drop(pool); // joins
+        assert_eq!(sum.load(Ordering::Relaxed), 99 * 100 / 2);
+    }
+
+    #[test]
+    fn worker_pool_single_thread_preserves_order() {
+        let pool = WorkerPool::new("fifo", 1);
+        let order = Arc::new(Mutex::new(Vec::new()));
+        for i in 0..16 {
+            let order = Arc::clone(&order);
+            pool.submit(move || order.lock().unwrap().push(i));
+        }
+        drop(pool);
+        let got = order.lock().unwrap().clone();
+        assert_eq!(got, (0..16).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,130 @@
+//! Integration: HGD round trip through the public API + property tests over
+//! the preprocessing/neighbour pipeline with random geometries.
+
+use hegrid::grid::kernels::ConvKernel;
+use hegrid::grid::nbr::NeighborTable;
+use hegrid::grid::prep::SharedComponent;
+use hegrid::healpix::ang_dist;
+use hegrid::sim::SimConfig;
+use hegrid::sky::GridSpec;
+use hegrid::testkit;
+use std::f64::consts::FRAC_PI_2;
+
+#[test]
+fn hgd_save_load_via_public_api() {
+    let d = SimConfig::quick_preset().generate();
+    let dir = std::env::temp_dir().join("hegrid_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("quick.hgd");
+    d.save(&path).unwrap();
+    let back = hegrid::data::Dataset::load(&path).unwrap();
+    assert_eq!(back.n_samples(), d.n_samples());
+    assert_eq!(back.channels, d.channels);
+    assert_eq!(back.meta, d.meta);
+}
+
+/// Property: for random small geometries, every sample within the kernel
+/// support of a cell appears in that cell's neighbour list.
+#[test]
+fn neighbour_completeness_property() {
+    testkit::check(
+        0xFEED,
+        12,
+        |g| {
+            (
+                g.usize(20, 400),   // samples
+                g.usize(2, 6) * 8,  // nlon
+                g.u64(0, u64::MAX - 1),
+            )
+        },
+        |&(n, nlon, seed)| {
+            let mut rng = hegrid::util::SplitMix64::new(seed);
+            let spec = GridSpec::centered(30.0, 41.0, nlon, 8, 0.25);
+            let kernel = ConvKernel::gauss1d_for_beam(0.5);
+            let (lon_lo, lon_hi, lat_lo, lat_hi) = spec.bounds();
+            let lons: Vec<f64> = (0..n).map(|_| rng.uniform(lon_lo, lon_hi)).collect();
+            let lats: Vec<f64> = (0..n).map(|_| rng.uniform(lat_lo, lat_hi)).collect();
+            let shared = SharedComponent::for_kernel(&lons, &lats, &kernel)
+                .map_err(|e| e.to_string())?;
+            let k = n + 8; // no truncation possible
+            let t = NeighborTable::build(&shared, &spec, &kernel, 64, k, 1, 4);
+            for cell in 0..spec.n_cells() {
+                let (clon, clat) = spec.cell_center_flat(cell);
+                let tile = cell / t.m;
+                let pos = cell % t.m;
+                let list = &t.tile_nbr(tile)[pos * t.k..(pos + 1) * t.k];
+                for j in 0..shared.n_samples() {
+                    let d = ang_dist(
+                        FRAC_PI_2 - clat,
+                        clon,
+                        FRAC_PI_2 - shared.slat64[j],
+                        shared.slon64[j],
+                    );
+                    if d <= kernel.support && !list.contains(&(j as i32)) {
+                        return Err(format!("cell {cell} missing sample {j} (d={d})"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Property: the CPU gridder is permutation-invariant — shuffling the input
+/// samples does not change the maps (the LUT sort makes order irrelevant).
+#[test]
+fn cpu_gridder_permutation_invariant() {
+    testkit::check(
+        0xABCD,
+        6,
+        |g| g.u64(0, u64::MAX - 1),
+        |&seed| {
+            let mut rng = hegrid::util::SplitMix64::new(seed);
+            let spec = GridSpec::centered(10.0, -20.0, 12, 8, 0.3);
+            let kernel = ConvKernel::gauss1d_for_beam(0.6);
+            let (lon_lo, lon_hi, lat_lo, lat_hi) = spec.bounds();
+            let n = 300;
+            let lons: Vec<f64> = (0..n).map(|_| rng.uniform(lon_lo, lon_hi)).collect();
+            let lats: Vec<f64> = (0..n).map(|_| rng.uniform(lat_lo, lat_hi)).collect();
+            let vals: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+
+            // A deterministic shuffle.
+            let mut idx: Vec<usize> = (0..n).collect();
+            for i in (1..n).rev() {
+                let j = rng.below((i + 1) as u64) as usize;
+                idx.swap(i, j);
+            }
+            let lons2: Vec<f64> = idx.iter().map(|&i| lons[i]).collect();
+            let lats2: Vec<f64> = idx.iter().map(|&i| lats[i]).collect();
+            let vals2: Vec<f32> = idx.iter().map(|&i| vals[i]).collect();
+
+            let g1 = hegrid::grid::cpu::CpuGridder::new(spec.clone(), kernel.clone());
+            let s1 = SharedComponent::for_kernel(&lons, &lats, &kernel).map_err(|e| e.to_string())?;
+            let s2 =
+                SharedComponent::for_kernel(&lons2, &lats2, &kernel).map_err(|e| e.to_string())?;
+            let m1 = g1.grid_with_shared(&s1, &[vals]);
+            let m2 = g1.grid_with_shared(&s2, &[vals2]);
+            let d = m1[0].diff_stats(&m2[0]).map_err(|e| e.to_string())?;
+            if d.max_abs > 1e-9 || d.only_a + d.only_b > 0 {
+                return Err(format!("permutation changed result: {d:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Failure injection: a truncated HGD file must error cleanly, not panic.
+#[test]
+fn truncated_hgd_fails_cleanly() {
+    let d = SimConfig::quick_preset().generate().take_channels(1);
+    let dir = std::env::temp_dir().join("hegrid_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trunc.hgd");
+    d.save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    for cut in [10usize, 100, bytes.len() / 2, bytes.len() - 3] {
+        let tr = dir.join(format!("trunc_{cut}.hgd"));
+        std::fs::write(&tr, &bytes[..cut]).unwrap();
+        assert!(hegrid::data::Dataset::load(&tr).is_err(), "cut at {cut} must fail");
+    }
+}
