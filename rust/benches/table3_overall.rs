@@ -24,6 +24,7 @@ fn main() {
     let mut cy_row = Vec::new();
     let mut hc_row = Vec::new();
     let mut he_row = Vec::new();
+    let mut hes_row = Vec::new();
     let mut speedup_row = Vec::new();
 
     let cfg = bench_config();
@@ -42,6 +43,13 @@ fn main() {
         let (he_times, _) = warm_and_measure(&he, &dataset, &job, iters);
         let he_t = median(he_times);
 
+        // Streaming ingest over the same data on disk (T0 prefetcher, the
+        // bounded-memory path): the gap to the in-memory row is the
+        // *unhidden* I/O cost.
+        let path = hgd_fixture(&dataset, &format!("table3_sim_{size}.hgd"));
+        let (hes_times, hes_rep) = warm_and_measure_streaming(&he, &path, &job, iters);
+        let hes_t = median(hes_times);
+
         let mut cy_times = Vec::new();
         for _ in 0..iters {
             let (_, d) = cygrid.run(&dataset, &job).expect("cygrid");
@@ -52,8 +60,13 @@ fn main() {
         let (_, hc_rep) = hc.run(&dataset, &job).expect("hcgrid");
         let hc_t = hc_rep.wall.as_secs_f64();
 
-        eprintln!("[simulated {size}] hegrid={he_t:.3}s cygrid={cy_t:.3}s hcgrid={hc_t:.3}s");
+        eprintln!(
+            "[simulated {size}] hegrid={he_t:.3}s streaming={hes_t:.3}s (overlap {:.3}s) \
+             cygrid={cy_t:.3}s hcgrid={hc_t:.3}s",
+            hes_rep.io_overlap_s
+        );
         he_row.push(he_t);
+        hes_row.push(hes_t);
         cy_row.push(cy_t);
         hc_row.push(hc_t);
         speedup_row.push(cy_t.min(hc_t) / he_t);
@@ -66,6 +79,7 @@ fn main() {
     t.row_f64("Cygrid", &cy_row);
     t.row_f64("HCGrid", &hc_row);
     t.row_f64("HEGrid", &he_row);
+    t.row_f64("HEGrid (streaming)", &hes_row);
     t.row_f64("Speedup (vs best baseline)", &speedup_row);
     t.print();
 
@@ -74,6 +88,7 @@ fn main() {
     let mut cy_row = Vec::new();
     let mut hc_row = Vec::new();
     let mut he_row = Vec::new();
+    let mut hes_row = Vec::new();
     let mut speedup_row = Vec::new();
     let mut hc_speedup_row = Vec::new();
 
@@ -82,12 +97,19 @@ fn main() {
         let job = GriddingJob::for_dataset(&dataset, &cfg).expect("job");
         let (he_times, _) = warm_and_measure(&he, &dataset, &job, iters);
         let he_t = median(he_times);
+        let path = hgd_fixture(&dataset, &format!("table3_obs_{ch}.hgd"));
+        let (hes_times, _) = warm_and_measure_streaming(&he, &path, &job, iters);
+        let hes_t = median(hes_times);
         let (_, cy_d) = cygrid.run(&dataset, &job).expect("cygrid");
         let cy_t = cy_d.as_secs_f64();
         let (_, hc_rep) = hc.run(&dataset, &job).expect("hcgrid");
         let hc_t = hc_rep.wall.as_secs_f64();
-        eprintln!("[observed {ch}ch] hegrid={he_t:.3}s cygrid={cy_t:.3}s hcgrid={hc_t:.3}s");
+        eprintln!(
+            "[observed {ch}ch] hegrid={he_t:.3}s streaming={hes_t:.3}s \
+             cygrid={cy_t:.3}s hcgrid={hc_t:.3}s"
+        );
         he_row.push(he_t);
+        hes_row.push(hes_t);
         cy_row.push(cy_t);
         hc_row.push(hc_t);
         speedup_row.push(cy_t.min(hc_t) / he_t);
@@ -101,6 +123,7 @@ fn main() {
     t.row_f64("Cygrid", &cy_row);
     t.row_f64("HCGrid", &hc_row);
     t.row_f64("HEGrid", &he_row);
+    t.row_f64("HEGrid (streaming)", &hes_row);
     t.row_f64("Speedup (vs best baseline)", &speedup_row);
     t.row_f64("Speedup (vs HCGrid)", &hc_speedup_row);
     t.print();

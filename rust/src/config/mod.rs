@@ -89,6 +89,13 @@ pub struct HegridConfig {
     pub gamma: usize,
     /// Pallas block size bm (Fig 13). 0 = profile default.
     pub block_size: usize,
+    /// Streaming ingest (T0): channel groups the I/O workers read ahead of
+    /// the pipelines. Also bounds how many groups are ever resident, so it
+    /// is the memory/overlap trade-off knob. 1 = no read-ahead.
+    pub prefetch_depth: usize,
+    /// I/O worker threads feeding the prefetcher. 0 = auto
+    /// (min(2, prefetch_depth)).
+    pub io_workers: usize,
     /// Convolution kernel type: gauss1d | gauss2d | tapered_sinc.
     pub kernel_type: String,
     /// Exact artifact variant name to use, bypassing selection (benches,
@@ -114,6 +121,8 @@ impl Default for HegridConfig {
             share_preprocessing: true,
             gamma: 1,
             block_size: 0,
+            prefetch_depth: 2,
+            io_workers: 0,
             kernel_type: "gauss1d".into(),
             variant_override: String::new(),
             kernel_sigma_beam: 0.5,
@@ -147,6 +156,13 @@ impl HegridConfig {
         }
     }
 
+    /// Effective I/O worker count: capped by the prefetch window (a worker
+    /// beyond the window can never claim a slot, it would only block).
+    pub fn effective_io_workers(&self) -> usize {
+        let want = if self.io_workers == 0 { 2 } else { self.io_workers };
+        want.clamp(1, self.prefetch_depth.max(1))
+    }
+
     /// Effective Pallas block size.
     pub fn effective_block(&self) -> usize {
         if self.block_size == 0 {
@@ -169,6 +185,12 @@ impl HegridConfig {
         if self.channels_per_dispatch == 0 {
             return Err(HegridError::Config("channels_per_dispatch must be >= 1".into()));
         }
+        if self.prefetch_depth == 0 || self.prefetch_depth > 1024 {
+            return Err(HegridError::Config(format!(
+                "prefetch_depth {} out of range 1..=1024",
+                self.prefetch_depth
+            )));
+        }
         if !(self.kernel_sigma_beam > 0.0) || !(self.support_sigma > 0.0) || !(self.oversample > 0.0)
         {
             return Err(HegridError::Config("kernel/oversample parameters must be positive".into()));
@@ -185,6 +207,8 @@ impl HegridConfig {
             ("share_preprocessing", Json::Bool(self.share_preprocessing)),
             ("gamma", Json::num(self.gamma as f64)),
             ("block_size", Json::num(self.block_size as f64)),
+            ("prefetch_depth", Json::num(self.prefetch_depth as f64)),
+            ("io_workers", Json::num(self.io_workers as f64)),
             ("kernel_type", Json::str(self.kernel_type.clone())),
             ("variant_override", Json::str(self.variant_override.clone())),
             ("kernel_sigma_beam", Json::num(self.kernel_sigma_beam)),
@@ -227,6 +251,8 @@ impl HegridConfig {
                 .unwrap_or(d.share_preprocessing),
             gamma: get_usize("gamma", d.gamma)?,
             block_size: get_usize("block_size", d.block_size)?,
+            prefetch_depth: get_usize("prefetch_depth", d.prefetch_depth)?,
+            io_workers: get_usize("io_workers", d.io_workers)?,
             kernel_type: v
                 .get("kernel_type")
                 .and_then(|x| x.as_str())
@@ -274,6 +300,8 @@ mod tests {
         let mut c = HegridConfig::default();
         c.streams = 4;
         c.gamma = 2;
+        c.prefetch_depth = 5;
+        c.io_workers = 3;
         c.profile = DeviceProfile::ServerM;
         c.kernel_type = "gauss2d".into();
         let j = c.to_json().to_pretty();
@@ -297,6 +325,21 @@ mod tests {
         assert!(HegridConfig::from_json(&v).is_err());
         let v = crate::json::parse(r#"{"profile": "tpu"}"#).unwrap();
         assert!(HegridConfig::from_json(&v).is_err());
+        let v = crate::json::parse(r#"{"prefetch_depth": 0}"#).unwrap();
+        assert!(HegridConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn io_workers_follow_prefetch_window() {
+        let mut c = HegridConfig::default();
+        assert_eq!(c.effective_io_workers(), 2); // auto = min(2, depth=2)
+        c.prefetch_depth = 1;
+        assert_eq!(c.effective_io_workers(), 1);
+        c.prefetch_depth = 8;
+        c.io_workers = 4;
+        assert_eq!(c.effective_io_workers(), 4);
+        c.io_workers = 32;
+        assert_eq!(c.effective_io_workers(), 8, "capped by the window");
     }
 
     #[test]

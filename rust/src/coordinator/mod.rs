@@ -1,23 +1,35 @@
 //! The HEGrid coordinator: multi-pipeline concurrency over frequency
 //! channels (§4.2) with pipeline-based co-optimization (§4.3).
 //!
-//! One **pipeline** processes one channel group end to end:
+//! One **pipeline** processes one channel group end to end; a **T0 ingest**
+//! stage feeds it:
 //!
 //! ```text
-//! T1  permute channel values into LUT order   (CPU, pipeline worker)
-//! T2  stage + upload to the device            (H2D, stream thread)
-//! T3  cell-update kernel                      (PJRT execution)
-//! T4  read back + accumulate into the maps    (D2H + CPU reduce)
+//! T0  read the group's channels from the source  (I/O workers, read-ahead)
+//! T1  permute channel values into LUT order      (CPU, pipeline worker)
+//! T2  stage + upload to the device               (H2D, stream thread)
+//! T3  cell-update kernel                         (PJRT execution)
+//! T4  read back + accumulate into the maps       (D2H + CPU reduce)
 //! ```
 //!
-//! Multiple pipelines run concurrently: a FIFO queue of channel groups feeds
-//! a pool of CPU workers (the paper's processes), each pinned to a PJRT
-//! stream slot (the paper's GPU streams) so its group-value buffers stay
-//! device-resident across tile dispatches. The **shared component** (sorted
-//! samples + LUT + neighbour tables + device-resident coordinates) is built
-//! once and reused by every pipeline; disabling it (Fig 11/12) rebuilds all
-//! of it per group, reproducing the redundant compute + transfer the paper
-//! eliminates.
+//! Channels come from a [`ChannelSource`] (in-memory, HGD streaming, or
+//! simulated), pulled through a bounded [`Prefetcher`] ring: `prefetch_depth`
+//! groups are read ahead by `io_workers` threads, so group `g+1`'s disk read
+//! (T0) overlaps group `g`'s T1–T4 — the paper's third co-optimization
+//! (Fig 8's I/O/compute overlap). Backpressure caps the ring at
+//! `prefetch_depth` groups; with the one batch each pipeline holds while
+//! staging, peak resident channel data is `prefetch_depth + n_pipelines`
+//! groups — bounded independently of channel count, which is what makes
+//! larger-than-RAM datasets streamable.
+//!
+//! Multiple pipelines run concurrently: the prefetcher's FIFO of channel
+//! groups feeds a pool of CPU workers (the paper's processes), each pinned
+//! to a PJRT stream slot (the paper's GPU streams) so its group-value
+//! buffers stay device-resident across tile dispatches. The **shared
+//! component** (sorted samples + LUT + neighbour tables + device-resident
+//! coordinates) is built once and reused by every pipeline; disabling it
+//! (Fig 11/12) rebuilds all of it per group, reproducing the redundant
+//! compute + transfer the paper eliminates.
 
 pub mod plan;
 pub mod simulator;
@@ -28,9 +40,10 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::config::HegridConfig;
-use crate::data::Dataset;
+use crate::data::{ChannelSource, Dataset, DatasetMeta, InMemorySource};
 use crate::grid::kernels::ConvKernel;
 use crate::logging::StageTimes;
+use crate::runtime::prefetch::{overlap_seconds, GroupBatch, Prefetcher};
 use crate::runtime::{
     ExecuteRequest, ExecuteResponse, Manifest, MemoryPool, StreamPool, VariantQuery,
 };
@@ -49,18 +62,28 @@ pub struct GriddingJob {
 
 impl GriddingJob {
     /// Derive map + kernel from dataset metadata and the engine config.
-    pub fn for_dataset(dataset: &Dataset, cfg: &HegridConfig) -> Result<GriddingJob> {
-        let beam_deg = dataset.meta.beam_arcsec / 3600.0;
+    pub fn for_meta(meta: &DatasetMeta, cfg: &HegridConfig) -> Result<GriddingJob> {
+        let beam_deg = meta.beam_arcsec / 3600.0;
         let spec = GridSpec::for_field(
-            dataset.meta.center_deg.0,
-            dataset.meta.center_deg.1,
-            dataset.meta.extent_deg.0,
-            dataset.meta.extent_deg.1,
+            meta.center_deg.0,
+            meta.center_deg.1,
+            meta.extent_deg.0,
+            meta.extent_deg.1,
             beam_deg,
             cfg.oversample,
         );
-        let kernel = ConvKernel::from_config(dataset.meta.beam_arcsec, cfg)?;
+        let kernel = ConvKernel::from_config(meta.beam_arcsec, cfg)?;
         Ok(GriddingJob { spec, kernel })
+    }
+
+    /// Derive map + kernel from dataset metadata and the engine config.
+    pub fn for_dataset(dataset: &Dataset, cfg: &HegridConfig) -> Result<GriddingJob> {
+        Self::for_meta(&dataset.meta, cfg)
+    }
+
+    /// Derive map + kernel from a channel source's metadata.
+    pub fn for_source(source: &dyn ChannelSource, cfg: &HegridConfig) -> Result<GriddingJob> {
+        Self::for_meta(source.meta(), cfg)
     }
 }
 
@@ -86,6 +109,15 @@ pub struct PipelineReport {
     /// Host staging pool counters (allocations, reuses).
     pub pool_alloc: usize,
     pub pool_reused: usize,
+    /// Streaming ingest (T0): configured read-ahead window and workers.
+    pub prefetch_depth: usize,
+    pub io_workers: usize,
+    /// Total time the I/O workers spent reading channel groups.
+    pub io_busy_s: f64,
+    /// Measured wall-clock window during which T0 reads overlapped T1–T4
+    /// compute — the paper's Fig-8 I/O/compute overlap. ~0 for in-memory
+    /// sources (reads are memcpys) and for `prefetch_depth = 1`.
+    pub io_overlap_s: f64,
 }
 
 impl PipelineReport {
@@ -124,7 +156,24 @@ pub struct HegridEngine {
 impl HegridEngine {
     pub fn new(config: HegridConfig) -> Result<HegridEngine> {
         config.validate()?;
-        let manifest = Arc::new(Manifest::load(std::path::Path::new(&config.artifacts_dir))?);
+        let dir = std::path::Path::new(&config.artifacts_dir);
+        // The native executor interprets dispatches from variant shapes
+        // alone, so a *missing* artifacts directory falls back to the
+        // built-in set. A manifest that exists but fails to load is a real
+        // error on every backend — masking it would silently substitute
+        // different variants than the user configured.
+        let manifest = if !dir.join("manifest.json").exists()
+            && crate::runtime::backend_name() == "native"
+        {
+            crate::log_info!(
+                "no manifest at {}; using the built-in native variant set",
+                dir.display()
+            );
+            Manifest::native_default(dir)
+        } else {
+            Manifest::load(dir)?
+        };
+        let manifest = Arc::new(manifest);
         let streams = StreamPool::new(Arc::clone(&manifest), config.effective_streams())?;
         Ok(HegridEngine {
             config,
@@ -146,19 +195,41 @@ impl HegridEngine {
         self.grid(dataset, &job)
     }
 
-    /// Grid `dataset` onto an explicit map/kernel.
+    /// Grid an in-memory `dataset` onto an explicit map/kernel.
+    ///
+    /// Goes through the same T0 ingest ring as streaming sources: each
+    /// group's values are copied once into pooled staging buffers by the
+    /// I/O workers. The copy overlaps pipeline compute and is linear in the
+    /// dataset (~1% of a gridding run at bench scales) — the price of one
+    /// unified ingest path instead of two.
     pub fn grid(
         &self,
         dataset: &Dataset,
         job: &GriddingJob,
     ) -> Result<(Vec<SkyMap>, PipelineReport)> {
+        self.grid_source(&InMemorySource::new(dataset), job)
+    }
+
+    /// Grid every channel of `source` — the streaming-capable core path.
+    /// `config.io_workers` T0 threads read `config.prefetch_depth` channel
+    /// groups ahead of the pipelines through a bounded ring, so only the
+    /// in-flight window is ever resident and disk reads overlap compute.
+    pub fn grid_source(
+        &self,
+        source: &dyn ChannelSource,
+        job: &GriddingJob,
+    ) -> Result<(Vec<SkyMap>, PipelineReport)> {
         let wall0 = Instant::now();
-        if dataset.n_channels() == 0 {
+        let n_ch = source.n_channels();
+        let n_samples = source.n_samples();
+        if n_ch == 0 {
             return Err(HegridError::Config("dataset has no channels".into()));
         }
         let mut report = PipelineReport {
             n_streams: self.streams.n_streams(),
             n_pipelines: self.config.effective_pipelines(),
+            prefetch_depth: self.config.prefetch_depth,
+            io_workers: self.config.effective_io_workers(),
             ..Default::default()
         };
 
@@ -172,7 +243,7 @@ impl HegridEngine {
                 job.spec.nlon as f64 * job.spec.step,
                 job.spec.nlat as f64 * job.spec.step,
             );
-            let density = dataset.n_samples() as f64 / (w * h).max(1e-12);
+            let density = n_samples as f64 / (w * h).max(1e-12);
             // Accepted candidates are within support + the γ-group span
             // (the exact-distance prefilter strips the HEALPix pad).
             let r = job.kernel.support
@@ -189,8 +260,8 @@ impl HegridEngine {
             .select(&VariantQuery {
                 kernel_type: job.kernel.type_name().to_string(),
                 gamma: self.config.gamma,
-                channels: self.config.channels_per_dispatch.min(dataset.n_channels()),
-                n_samples: dataset.n_samples(),
+                channels: self.config.channels_per_dispatch.min(n_ch),
+                n_samples,
                 block: self.config.effective_block(),
                 k_hint,
             })?
@@ -199,8 +270,12 @@ impl HegridEngine {
         report.variant = variant.name.clone();
         self.streams.warm(&variant.name)?;
 
-        let groups = ChannelGroups::new(dataset.n_channels(), variant.c);
+        let groups = ChannelGroups::new(n_ch, variant.c);
         report.n_groups = groups.len();
+
+        // The shared coordinate table is the only payload a streaming run
+        // keeps resident for its whole duration (borrowed — no copy).
+        let (lons, lats) = source.coords()?;
 
         // ---- shared component (built once here; per group below if sharing
         // is disabled) --------------------------------------------------------
@@ -208,7 +283,8 @@ impl HegridEngine {
         let shared_plan: Option<Arc<DispatchPlan>> = if self.config.share_preprocessing {
             let t0 = Instant::now();
             let plan = DispatchPlan::build(
-                dataset,
+                lons,
+                lats,
                 job,
                 &variant,
                 self.epoch_counter.fetch_add(plan::EPOCHS_PER_PLAN, Ordering::Relaxed),
@@ -223,47 +299,72 @@ impl HegridEngine {
 
         // ---- global accumulators -------------------------------------------
         let n_cells = job.spec.n_cells();
-        let n_ch = dataset.n_channels();
         let mut acc = vec![0.0f64; n_ch * n_cells];
         let mut wsum = vec![0.0f64; n_cells];
 
-        // FIFO queue of channel groups.
-        let queue: Mutex<std::collections::VecDeque<usize>> =
-            Mutex::new((0..groups.len()).collect());
+        // ---- T0 ingest ring + pipelines --------------------------------------
+        // The prefetcher replaces the old eager FIFO of group indices: I/O
+        // workers read channel groups ahead of the pipelines into pooled
+        // buffers, bounded at `prefetch_depth` groups (backpressure).
+        let prefetcher = Prefetcher::new(groups.len(), self.config.prefetch_depth);
+        // Buffers in circulation: the ring window plus one batch held by each
+        // pipeline while it stages — size the free list for all of them so a
+        // full steady state recycles instead of reallocating.
+        let io_pool = MemoryPool::with_limit(
+            (self.config.prefetch_depth + self.config.effective_pipelines()) * variant.c + 4,
+        );
+        let n_io = report.io_workers.min(groups.len().max(1));
+
         let shared_builds = AtomicU64::new(report.shared_builds as u64);
         let overflow = AtomicU64::new(0);
         let stage_sink: Mutex<StageTimes> = Mutex::new(stages);
         let dispatches = AtomicU64::new(0);
+        let compute_spans: Mutex<Vec<(f64, f64)>> = Mutex::new(Vec::new());
         let acc_ptr = SyncPtr(acc.as_mut_ptr());
         let wsum_ptr = SyncPtr(wsum.as_mut_ptr());
         let first_error: Mutex<Option<HegridError>> = Mutex::new(None);
 
         std::thread::scope(|scope| {
-            for _ in 0..self.config.effective_pipelines().min(groups.len().max(1)) {
-                let queue = &queue;
+            for _ in 0..n_io {
+                let prefetcher = &prefetcher;
                 let groups = &groups;
+                let io_pool = &io_pool;
+                scope.spawn(move || prefetcher.run_worker(source, groups, io_pool));
+            }
+            for _ in 0..self.config.effective_pipelines().min(groups.len().max(1)) {
+                let prefetcher = &prefetcher;
                 let variant = &variant;
                 let shared_plan = shared_plan.clone();
                 let stage_sink = &stage_sink;
                 let dispatches = &dispatches;
                 let shared_builds = &shared_builds;
                 let overflow = &overflow;
+                let compute_spans = &compute_spans;
                 let acc_ptr = &acc_ptr;
                 let wsum_ptr = &wsum_ptr;
                 let first_error = &first_error;
                 scope.spawn(move || {
                     let mut local_stages = StageTimes::default();
+                    let mut local_spans: Vec<(f64, f64)> = Vec::new();
                     loop {
-                        let g = match queue.lock().unwrap().pop_front() {
-                            Some(g) => g,
+                        let batch = match prefetcher.next() {
                             None => break,
+                            Some(Err(e)) => {
+                                let mut slot = first_error.lock().unwrap();
+                                if slot.is_none() {
+                                    *slot = Some(e);
+                                }
+                                break;
+                            }
+                            Some(Ok(b)) => b,
                         };
+                        let t_start = prefetcher.now_s();
                         let out = self.run_pipeline(
-                            dataset,
+                            lons,
+                            lats,
                             job,
                             variant,
-                            groups,
-                            g,
+                            &batch,
                             shared_plan.as_deref(),
                             &mut local_stages,
                             shared_builds,
@@ -273,13 +374,19 @@ impl HegridEngine {
                             acc_ptr,
                             wsum_ptr,
                         );
+                        local_spans.push((t_start, prefetcher.now_s()));
                         if let Err(e) = out {
-                            *first_error.lock().unwrap() = Some(e);
-                            queue.lock().unwrap().clear();
+                            let mut slot = first_error.lock().unwrap();
+                            if slot.is_none() {
+                                *slot = Some(e);
+                            }
+                            // Unblock the I/O workers, or the scope never joins.
+                            prefetcher.abort();
                             break;
                         }
                     }
                     stage_sink.lock().unwrap().merge(&local_stages);
+                    compute_spans.lock().unwrap().extend(local_spans);
                 });
             }
         });
@@ -287,7 +394,12 @@ impl HegridEngine {
             return Err(e);
         }
 
+        let io = prefetcher.stats();
+        let spans = compute_spans.into_inner().unwrap();
+        report.io_busy_s = io.io_busy_s;
+        report.io_overlap_s = overlap_seconds(&io.read_intervals, &spans);
         report.stages = stage_sink.into_inner().unwrap();
+        report.stages.add("T0 ingest(io)", Duration::from_secs_f64(io.io_busy_s));
         report.shared_builds = shared_builds.into_inner() as usize;
         report.dispatches = dispatches.into_inner() as usize;
         if let Some(plan) = &shared_plan {
@@ -318,15 +430,15 @@ impl HegridEngine {
         Ok((maps, report))
     }
 
-    /// One pipeline: process channel group `g` end to end.
+    /// One pipeline: process one prefetched channel group end to end.
     #[allow(clippy::too_many_arguments)]
     fn run_pipeline(
         &self,
-        dataset: &Dataset,
+        lons: &[f64],
+        lats: &[f64],
         job: &GriddingJob,
         variant: &crate::runtime::VariantInfo,
-        groups: &ChannelGroups,
-        g: usize,
+        batch: &GroupBatch,
         shared_plan: Option<&DispatchPlan>,
         stages: &mut StageTimes,
         shared_builds: &AtomicU64,
@@ -344,7 +456,8 @@ impl HegridEngine {
             None => {
                 let t0 = Instant::now();
                 local_plan = DispatchPlan::build(
-                    dataset,
+                    lons,
+                    lats,
                     job,
                     variant,
                     self.epoch_counter.fetch_add(plan::EPOCHS_PER_PLAN, Ordering::Relaxed),
@@ -357,7 +470,8 @@ impl HegridEngine {
             }
         };
 
-        let channels = groups.members(g);
+        let g = batch.group;
+        let channels = &batch.channels;
         let stream = g % self.streams.n_streams();
         let kparam = job.kernel.kparam();
 
@@ -365,8 +479,8 @@ impl HegridEngine {
             // T1: permute + pad this group's channel values into [c, n].
             let t1 = Instant::now();
             let mut staged = self.mem.take(variant.c * variant.n);
-            for &ch in channels {
-                shard.permute_into(&dataset.channels[ch], variant.n, &mut staged)?;
+            for values in &batch.values {
+                shard.permute_into(values, variant.n, &mut staged)?;
             }
             // Pad missing channels (last group) with zeros.
             staged.resize(variant.c * variant.n, 0.0);

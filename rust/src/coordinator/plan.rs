@@ -9,7 +9,6 @@
 
 use std::sync::Arc;
 
-use crate::data::Dataset;
 use crate::grid::nbr::NeighborTable;
 use crate::grid::prep::SharedComponent;
 use crate::runtime::VariantInfo;
@@ -106,20 +105,19 @@ pub struct DispatchPlan {
 
 impl DispatchPlan {
     /// Build the plan: shared pre-processing, sharding, neighbour tables,
-    /// tile arrays.
+    /// tile arrays. Takes the shared coordinate table directly — the plan is
+    /// channel-independent, so streaming sources can build it before (or
+    /// while) any channel values exist in memory.
     pub fn build(
-        dataset: &Dataset,
+        lons: &[f64],
+        lats: &[f64],
         job: &GriddingJob,
         variant: &VariantInfo,
         base_epoch: u64,
         workers: usize,
     ) -> Result<DispatchPlan> {
-        let shared = SharedComponent::build(
-            &dataset.lons,
-            &dataset.lats,
-            job.kernel.support.max(1e-9),
-            workers.max(1),
-        )?;
+        let shared =
+            SharedComponent::build(lons, lats, job.kernel.support.max(1e-9), workers.max(1))?;
         let n = shared.n_samples();
         let n_shards = n.div_ceil(variant.n).max(1);
         let n_tiles = job.spec.n_cells().div_ceil(variant.m).max(1);
@@ -247,7 +245,7 @@ mod tests {
         let job = super::super::GriddingJob::for_dataset(&d, &cfg).unwrap();
         // Force sharding: n smaller than the sample count (4000).
         let v = fake_variant(256, 32, 4, 1536, 1);
-        let plan = DispatchPlan::build(&d, &job, &v, 100, 4).unwrap();
+        let plan = DispatchPlan::build(&d.lons, &d.lats, &job, &v, 100, 4).unwrap();
         assert_eq!(plan.shards.len(), 3); // ceil(4000 / 1536)
         assert_eq!(plan.tiles_per_shard(), job.spec.n_cells().div_ceil(256));
         assert_eq!(plan.epoch_for_shard(2), 102);
@@ -276,7 +274,7 @@ mod tests {
         let cfg = HegridConfig::default();
         let job = super::super::GriddingJob::for_dataset(&d, &cfg).unwrap();
         let v = fake_variant(256, 32, 4, 1536, 1);
-        let plan = DispatchPlan::build(&d, &job, &v, 0, 4).unwrap();
+        let plan = DispatchPlan::build(&d.lons, &d.lats, &job, &v, 0, 4).unwrap();
         let values: Vec<f32> = (0..d.n_samples()).map(|i| i as f32).collect();
         let mut seen = vec![false; d.n_samples()];
         for shard in &plan.shards {

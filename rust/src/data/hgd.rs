@@ -125,7 +125,9 @@ impl HgdWriter {
 }
 
 /// Random-access reader; channel blocks can be read in any order — the
-/// coordinator's pipelines stream channels independently.
+/// coordinator's pipelines stream channels independently. Sequential
+/// channel reads skip the per-call seek (keeping the read-ahead buffer
+/// warm), which is the common pattern of the streaming ingest path.
 pub struct HgdReader {
     file: BufReader<File>,
     path: String,
@@ -133,6 +135,10 @@ pub struct HgdReader {
     n_samples: usize,
     n_channels: usize,
     coords_offset: u64,
+    /// Current stream position; all reads go through helpers that keep it
+    /// exact, so redundant seeks (which discard the BufReader buffer) can
+    /// be elided.
+    pos: u64,
 }
 
 impl HgdReader {
@@ -162,7 +168,56 @@ impl HgdReader {
             .map_err(|_| HegridError::Format(format!("{ctx}: meta is not UTF-8")))?;
         let meta = DatasetMeta::from_json(&crate::json::parse(&meta_text)?)?;
         let coords_offset = 4 + 4 + 8 + 4 + 4 + meta_len as u64;
-        Ok(HgdReader { file, path: ctx, meta, n_samples, n_channels, coords_offset })
+        // Cheap up-front integrity check: the header promises a fixed layout,
+        // so a short file can be diagnosed now instead of as a read error
+        // mid-stream. Widened arithmetic: n_samples/n_channels come straight
+        // from the (possibly hostile) header, so the product must not wrap.
+        let expected = coords_offset as u128
+            + (n_samples as u128 * 16 + 4)
+            + n_channels as u128 * (n_samples as u128 * 4 + 4);
+        let actual = file
+            .get_ref()
+            .metadata()
+            .map_err(HegridError::io(ctx.clone()))?
+            .len();
+        if (actual as u128) < expected {
+            return Err(HegridError::Corrupt(format!(
+                "{ctx}: truncated HGD file ({actual} bytes, header declares {expected})"
+            )));
+        }
+        Ok(HgdReader {
+            file,
+            path: ctx,
+            meta,
+            n_samples,
+            n_channels,
+            coords_offset,
+            pos: coords_offset,
+        })
+    }
+
+    /// Position the stream at `offset`, skipping the syscall (and keeping the
+    /// BufReader's read-ahead) when already there.
+    fn seek_to(&mut self, offset: u64) -> Result<()> {
+        if self.pos != offset {
+            self.file
+                .seek(SeekFrom::Start(offset))
+                .map_err(HegridError::io(self.path.clone()))?;
+            self.pos = offset;
+        }
+        Ok(())
+    }
+
+    fn read_exact_tracked(&mut self, buf: &mut [u8]) -> Result<()> {
+        if let Err(e) = self.file.read_exact(buf) {
+            // The OS cursor may have advanced an unknown amount: poison the
+            // tracked position so the next access re-seeks instead of
+            // trusting a stale elision (readers are pooled and reused).
+            self.pos = u64::MAX;
+            return Err(HegridError::io(self.path.clone())(e));
+        }
+        self.pos += buf.len() as u64;
+        Ok(())
     }
 
     pub fn meta(&self) -> &DatasetMeta {
@@ -187,16 +242,15 @@ impl HgdReader {
 
     /// Read the shared coordinate table (radians), verifying its CRC.
     pub fn read_coords(&mut self) -> Result<(Vec<f64>, Vec<f64>)> {
-        self.file
-            .seek(SeekFrom::Start(self.coords_offset))
-            .map_err(HegridError::io(self.path.clone()))?;
+        self.seek_to(self.coords_offset)?;
         let mut buf = vec![0u8; self.n_samples * 16];
-        self.file.read_exact(&mut buf).map_err(HegridError::io(self.path.clone()))?;
-        let stored = read_u32(&mut self.file, &self.path)?;
+        self.read_exact_tracked(&mut buf)?;
+        let mut stored = [0u8; 4];
+        self.read_exact_tracked(&mut stored)?;
         let mut crc = Crc32::new();
         crc.update(&buf);
-        if crc.finalize() != stored {
-            return Err(HegridError::Format(format!("{}: coords CRC mismatch", self.path)));
+        if crc.finalize() != u32::from_le_bytes(stored) {
+            return Err(HegridError::Corrupt(format!("{}: coords CRC mismatch", self.path)));
         }
         let lons = le_bytes_to_f64s(&buf[..self.n_samples * 8]);
         let lats = le_bytes_to_f64s(&buf[self.n_samples * 8..]);
@@ -205,6 +259,16 @@ impl HgdReader {
 
     /// Read channel `c`'s value block, verifying its CRC.
     pub fn read_channel(&mut self, c: usize) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.read_channel_into(c, &mut out)?;
+        Ok(out)
+    }
+
+    /// Read channel `c` into a caller-provided buffer (cleared first),
+    /// verifying its CRC. Reusing `out` across calls avoids the per-channel
+    /// allocation on the streaming ingest path, and consecutive channels are
+    /// read without an intervening seek.
+    pub fn read_channel_into(&mut self, c: usize, out: &mut Vec<f32>) -> Result<()> {
         if c >= self.n_channels {
             return Err(HegridError::Format(format!(
                 "channel {c} out of range ({} channels)",
@@ -213,19 +277,23 @@ impl HgdReader {
         }
         let offset =
             self.coords_offset + self.coords_block_len() + c as u64 * self.channel_block_len();
-        self.file.seek(SeekFrom::Start(offset)).map_err(HegridError::io(self.path.clone()))?;
+        self.seek_to(offset)?;
         let mut buf = vec![0u8; self.n_samples * 4];
-        self.file.read_exact(&mut buf).map_err(HegridError::io(self.path.clone()))?;
-        let stored = read_u32(&mut self.file, &self.path)?;
+        self.read_exact_tracked(&mut buf)?;
+        let mut stored = [0u8; 4];
+        self.read_exact_tracked(&mut stored)?;
         let mut crc = Crc32::new();
         crc.update(&buf);
-        if crc.finalize() != stored {
-            return Err(HegridError::Format(format!(
+        if crc.finalize() != u32::from_le_bytes(stored) {
+            return Err(HegridError::Corrupt(format!(
                 "{}: channel {c} CRC mismatch",
                 self.path
             )));
         }
-        Ok(le_bytes_to_f32s(&buf))
+        out.clear();
+        out.reserve(self.n_samples);
+        out.extend(buf.chunks_exact(4).map(|b| f32::from_le_bytes(b.try_into().unwrap())));
+        Ok(())
     }
 }
 
@@ -249,10 +317,6 @@ fn f32s_to_le_bytes(v: &[f32]) -> Vec<u8> {
 
 fn le_bytes_to_f64s(b: &[u8]) -> Vec<f64> {
     b.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect()
-}
-
-fn le_bytes_to_f32s(b: &[u8]) -> Vec<f32> {
-    b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
 }
 
 fn read_u32<R: Read>(r: &mut R, ctx: &str) -> Result<u32> {
@@ -334,7 +398,36 @@ mod tests {
         std::fs::write(&path, bytes).unwrap();
         let mut r = HgdReader::open(&path).unwrap();
         assert_eq!(r.read_channel(0).unwrap(), d.channels[0]);
-        assert!(matches!(r.read_channel(1), Err(HegridError::Format(_))));
+        assert!(matches!(r.read_channel(1), Err(HegridError::Corrupt(_))));
+    }
+
+    #[test]
+    fn truncated_file_detected_at_open() {
+        let d = sample_dataset(64, 2);
+        let path = tmp("short.hgd");
+        d.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // Drop the tail of the last channel block (header stays intact).
+        std::fs::write(&path, &bytes[..bytes.len() - 16]).unwrap();
+        assert!(matches!(HgdReader::open(&path), Err(HegridError::Corrupt(_))));
+    }
+
+    #[test]
+    fn read_channel_into_reuses_buffer_and_streams_sequentially() {
+        let d = sample_dataset(128, 3);
+        let path = tmp("seq.hgd");
+        d.save(&path).unwrap();
+        let mut r = HgdReader::open(&path).unwrap();
+        let mut buf = Vec::new();
+        for c in 0..3 {
+            r.read_channel_into(c, &mut buf).unwrap();
+            assert_eq!(buf, d.channels[c]);
+        }
+        let cap = buf.capacity();
+        // Re-reading into the same buffer must not reallocate.
+        r.read_channel_into(0, &mut buf).unwrap();
+        assert_eq!(buf.capacity(), cap);
+        assert_eq!(buf, d.channels[0]);
     }
 
     #[test]

@@ -9,8 +9,10 @@
 //! can stream one channel at a time (the T1 "load" stage of Fig 8).
 
 pub mod hgd;
+pub mod source;
 
 pub use hgd::{HgdReader, HgdWriter};
+pub use source::{ChannelSource, HgdStreamSource, InMemorySource};
 
 use crate::util::error::{HegridError, Result};
 

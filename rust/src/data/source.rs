@@ -1,0 +1,235 @@
+//! Channel ingest abstraction: where the coordinator's pipelines get their
+//! per-channel values from.
+//!
+//! The paper's third co-optimization (§4.3) hides host I/O behind device
+//! compute. That is only possible if the engine does **not** require the
+//! whole multi-channel dataset in memory up front, so the data→coordinator
+//! contract is this trait instead of a materialized [`Dataset`]:
+//!
+//! * [`InMemorySource`] — wraps an existing [`Dataset`]; reads are memcpys.
+//!   The eager path every caller used before streaming existed.
+//! * [`HgdStreamSource`] — reads channels lazily from an HGD file through a
+//!   small pool of [`HgdReader`]s; at no point are more than the prefetch
+//!   window's channels resident, so datasets larger than RAM grid fine.
+//! * `sim::SimSource` — deterministic on-demand synthesis for tests and
+//!   benches (lives in [`crate::sim`]).
+//!
+//! Sources are consumed by the I/O workers of
+//! [`crate::runtime::prefetch::Prefetcher`], which is why every method takes
+//! `&self` and implementations must be `Sync`.
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use super::{Dataset, DatasetMeta, HgdReader};
+use crate::util::error::Result;
+
+/// A multi-channel dataset whose channel values are produced on demand.
+pub trait ChannelSource: Sync {
+    /// Dataset metadata (map geometry is derived from this).
+    fn meta(&self) -> &DatasetMeta;
+
+    /// Samples per channel.
+    fn n_samples(&self) -> usize;
+
+    /// Total number of channels.
+    fn n_channels(&self) -> usize;
+
+    /// The shared sample coordinates (radians), borrowed from the source
+    /// (no copy — the gridding run only needs them for the duration of the
+    /// call that borrowed the source).
+    fn coords(&self) -> Result<(&[f64], &[f64])>;
+
+    /// Read channel `c`'s values into `out` (cleared first; exactly
+    /// `n_samples` values on success). Must be callable concurrently from
+    /// multiple I/O worker threads.
+    fn read_channel_into(&self, c: usize, out: &mut Vec<f32>) -> Result<()>;
+}
+
+/// Eager source over a borrowed [`Dataset`] — the pre-streaming behaviour.
+/// Fully zero-copy on coordinates; channel values are copied once into the
+/// prefetch ring's pooled buffers.
+pub struct InMemorySource<'a> {
+    dataset: &'a Dataset,
+}
+
+impl<'a> InMemorySource<'a> {
+    pub fn new(dataset: &'a Dataset) -> Self {
+        InMemorySource { dataset }
+    }
+}
+
+impl ChannelSource for InMemorySource<'_> {
+    fn meta(&self) -> &DatasetMeta {
+        &self.dataset.meta
+    }
+
+    fn n_samples(&self) -> usize {
+        self.dataset.n_samples()
+    }
+
+    fn n_channels(&self) -> usize {
+        self.dataset.n_channels()
+    }
+
+    fn coords(&self) -> Result<(&[f64], &[f64])> {
+        Ok((&self.dataset.lons, &self.dataset.lats))
+    }
+
+    fn read_channel_into(&self, c: usize, out: &mut Vec<f32>) -> Result<()> {
+        out.clear();
+        out.extend_from_slice(&self.dataset.channels[c]);
+        Ok(())
+    }
+}
+
+/// Streaming source over an HGD file: channels are read from disk on
+/// demand. Concurrent reads check a reader out of a bounded pool (each
+/// reader owns its own file handle + position), so `io_workers` readers can
+/// stream different channels of the same file in parallel.
+pub struct HgdStreamSource {
+    path: PathBuf,
+    meta: DatasetMeta,
+    n_samples: usize,
+    n_channels: usize,
+    lons: Vec<f64>,
+    lats: Vec<f64>,
+    readers: Mutex<Vec<HgdReader>>,
+    max_readers: usize,
+}
+
+impl HgdStreamSource {
+    /// Open the file, validate its header, and load the shared coordinate
+    /// table (the only part of the payload a streaming run keeps resident).
+    pub fn open(path: &Path) -> Result<HgdStreamSource> {
+        let mut reader = HgdReader::open(path)?;
+        let (lons, lats) = reader.read_coords()?;
+        Ok(HgdStreamSource {
+            path: path.to_path_buf(),
+            meta: reader.meta().clone(),
+            n_samples: reader.n_samples(),
+            n_channels: reader.n_channels(),
+            lons,
+            lats,
+            readers: Mutex::new(vec![reader]),
+            max_readers: 8,
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    fn checkout(&self) -> Result<HgdReader> {
+        if let Some(r) = self.readers.lock().unwrap().pop() {
+            return Ok(r);
+        }
+        HgdReader::open(&self.path)
+    }
+
+    fn checkin(&self, reader: HgdReader) {
+        let mut pool = self.readers.lock().unwrap();
+        if pool.len() < self.max_readers {
+            pool.push(reader);
+        }
+    }
+}
+
+impl ChannelSource for HgdStreamSource {
+    fn meta(&self) -> &DatasetMeta {
+        &self.meta
+    }
+
+    fn n_samples(&self) -> usize {
+        self.n_samples
+    }
+
+    fn n_channels(&self) -> usize {
+        self.n_channels
+    }
+
+    fn coords(&self) -> Result<(&[f64], &[f64])> {
+        Ok((&self.lons, &self.lats))
+    }
+
+    fn read_channel_into(&self, c: usize, out: &mut Vec<f32>) -> Result<()> {
+        let mut reader = self.checkout()?;
+        let res = reader.read_channel_into(c, out);
+        // Return the reader even after a failed read: the handle is fine,
+        // only this block's payload was bad.
+        self.checkin(reader);
+        res
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimConfig;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("hegrid_source_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn in_memory_source_mirrors_dataset() {
+        let d = SimConfig::quick_preset().generate();
+        let s = InMemorySource::new(&d);
+        assert_eq!(s.n_samples(), d.n_samples());
+        assert_eq!(s.n_channels(), d.n_channels());
+        let (lons, lats) = s.coords().unwrap();
+        assert_eq!(lons, d.lons.as_slice());
+        assert_eq!(lats, d.lats.as_slice());
+        let mut buf = Vec::new();
+        for c in 0..d.n_channels() {
+            s.read_channel_into(c, &mut buf).unwrap();
+            assert_eq!(buf, d.channels[c]);
+        }
+    }
+
+    #[test]
+    fn hgd_stream_source_reads_lazily_and_concurrently() {
+        let d = SimConfig::quick_preset().generate();
+        let path = tmp("stream.hgd");
+        d.save(&path).unwrap();
+        let s = HgdStreamSource::open(&path).unwrap();
+        assert_eq!(s.meta(), &d.meta);
+        assert_eq!(s.n_samples(), d.n_samples());
+        let (lons, _) = s.coords().unwrap();
+        assert_eq!(lons, d.lons.as_slice());
+        // Concurrent reads from several threads must all round-trip.
+        std::thread::scope(|scope| {
+            for t in 0..4 {
+                let (s, d) = (&s, &d);
+                scope.spawn(move || {
+                    let mut buf = Vec::new();
+                    for c in (0..d.n_channels()).rev() {
+                        s.read_channel_into((c + t) % d.n_channels(), &mut buf).unwrap();
+                        assert_eq!(buf, d.channels[(c + t) % d.n_channels()]);
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn hgd_stream_source_surfaces_corruption() {
+        let d = SimConfig::quick_preset().generate();
+        let path = tmp("corrupt_stream.hgd");
+        d.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let idx = bytes.len() - 10; // inside the last channel block
+        bytes[idx] ^= 0xFF;
+        std::fs::write(&path, bytes).unwrap();
+        let s = HgdStreamSource::open(&path).unwrap();
+        let mut buf = Vec::new();
+        s.read_channel_into(0, &mut buf).unwrap();
+        let last = d.n_channels() - 1;
+        assert!(matches!(
+            s.read_channel_into(last, &mut buf),
+            Err(crate::util::error::HegridError::Corrupt(_))
+        ));
+    }
+}

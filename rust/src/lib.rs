@@ -53,7 +53,7 @@ pub mod util;
 pub mod prelude {
     pub use crate::config::{DeviceProfile, HegridConfig};
     pub use crate::coordinator::{GriddingJob, HegridEngine, PipelineReport};
-    pub use crate::data::Dataset;
+    pub use crate::data::{ChannelSource, Dataset, HgdStreamSource, InMemorySource};
     pub use crate::grid::kernels::ConvKernel;
     pub use crate::grid::prep::SharedComponent;
     pub use crate::sky::{GridSpec, SkyMap};

@@ -10,7 +10,11 @@
 //!
 //! Engine knobs (grid/accuracy): `--streams N --pipelines N --channels-per-dispatch C
 //! --gamma G --block B --kernel gauss1d|gauss2d|tapered_sinc --profile v|m
-//! --oversample F --no-share --artifacts DIR`.
+//! --oversample F --no-share --artifacts DIR --prefetch-depth D --io-workers N`.
+//!
+//! `grid --streaming` reads channels lazily from the HGD file through the
+//! T0 prefetcher (bounded memory; I/O overlaps compute) instead of loading
+//! the dataset up front.
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
@@ -18,8 +22,8 @@ use std::process::ExitCode;
 use hegrid::baselines::CygridBaseline;
 use hegrid::cli;
 use hegrid::config::{DeviceProfile, HegridConfig};
-use hegrid::coordinator::{GriddingJob, HegridEngine};
-use hegrid::data::{Dataset, HgdReader};
+use hegrid::coordinator::{GriddingJob, HegridEngine, PipelineReport};
+use hegrid::data::{Dataset, HgdReader, HgdStreamSource};
 use hegrid::runtime::Manifest;
 use hegrid::sim::SimConfig;
 use hegrid::util::error::{HegridError, Result};
@@ -27,7 +31,7 @@ use hegrid::util::error::{HegridError, Result};
 const VALUE_OPTS: &[&str] = &[
     "preset", "points", "channels", "field", "beam", "seed", "out", "input", "out-prefix",
     "streams", "pipelines", "channels-per-dispatch", "gamma", "block", "kernel", "profile",
-    "oversample", "artifacts", "threads", "variant",
+    "oversample", "artifacts", "threads", "variant", "prefetch-depth", "io-workers",
 ];
 
 fn main() -> ExitCode {
@@ -71,7 +75,7 @@ fn print_help() {
         "hegrid {} — multi-channel radio astronomical data gridding\n\n\
          subcommands:\n\
          \x20 simulate  generate a synthetic FAST-like dataset (--preset quick|simulated|observed|extended)\n\
-         \x20 grid      grid a dataset through the heterogeneous engine\n\
+         \x20 grid      grid a dataset (--streaming: bounded-memory prefetched ingest)\n\
          \x20 inspect   print an HGD file's header\n\
          \x20 accuracy  compare HEGrid output against the Cygrid baseline (Fig 17)\n\
          \x20 info      list AOT artifact variants\n\n\
@@ -89,6 +93,8 @@ fn engine_config(args: &cli::Args) -> Result<HegridConfig> {
         share_preprocessing: !args.flag("no-share"),
         gamma: args.get_usize("gamma", 1)?,
         block_size: args.get_usize("block", 0)?,
+        prefetch_depth: args.get_usize("prefetch-depth", 2)?,
+        io_workers: args.get_usize("io-workers", 0)?,
         kernel_type: args.get_or("kernel", "gauss1d").to_string(),
         variant_override: args.get_or("variant", "").to_string(),
         kernel_sigma_beam: 0.5,
@@ -153,14 +159,28 @@ fn load_input(args: &cli::Args) -> Result<Dataset> {
 }
 
 fn cmd_grid(args: &cli::Args) -> Result<()> {
-    let dataset = load_input(args)?;
+    let streaming = args.flag("streaming");
     let cfg = engine_config(args)?;
     let engine = HegridEngine::new(cfg)?;
-    let (maps, report) = engine.grid_dataset(&dataset)?;
+    let (maps, report, n_samples): (_, PipelineReport, usize) = if streaming {
+        let input = args
+            .get("input")
+            .ok_or_else(|| HegridError::Config("--input <file.hgd> is required".into()))?;
+        let source = HgdStreamSource::open(Path::new(input))?;
+        let job = GriddingJob::for_source(&source, &engine.config)?;
+        let n = source.n_samples();
+        let (maps, report) = engine.grid_source(&source, &job)?;
+        (maps, report, n)
+    } else {
+        let dataset = load_input(args)?;
+        let n = dataset.n_samples();
+        let (maps, report) = engine.grid_dataset(&dataset)?;
+        (maps, report, n)
+    };
     println!(
         "gridded {} channels × {} samples onto {} cells in {:.3}s",
-        dataset.n_channels(),
-        dataset.n_samples(),
+        maps.len(),
+        n_samples,
         maps[0].spec.n_cells(),
         report.wall.as_secs_f64()
     );
@@ -183,6 +203,15 @@ fn cmd_grid(args: &cli::Args) -> Result<()> {
         report.adjacent_reuse,
         report.pool_alloc,
         report.pool_reused
+    );
+    println!(
+        "  ingest: mode={} prefetch_depth={} io_workers={} io_busy={:.3}s \
+         io/compute overlap={:.3}s",
+        if streaming { "streaming" } else { "in-memory" },
+        report.prefetch_depth,
+        report.io_workers,
+        report.io_busy_s,
+        report.io_overlap_s
     );
     if let Some(prefix) = args.get("out-prefix") {
         if let Some(parent) = Path::new(prefix).parent() {

@@ -169,6 +169,62 @@ impl Manifest {
     pub fn with_tag(&self, tag: &str) -> Vec<&VariantInfo> {
         self.variants.iter().filter(|v| v.tags.iter().any(|t| t == tag)).collect()
     }
+
+    /// Built-in variant set for the native executor. The native backend
+    /// interprets dispatches from `VariantInfo` shapes alone — no HLO files
+    /// are opened — so an engine can run without `make artifacts`. Names
+    /// follow `python/compile/aot.py::variant_name`
+    /// (`{ktype}_m{m}_b{bm}_k{k}_c{c}_g{gamma}_n{n}`) and the set mirrors
+    /// `configs.json`: a channel/k/n spread per kernel type, the Fig-13
+    /// block sweep, and the Fig-16 γ family the benches pin by name.
+    pub fn native_default(dir: &Path) -> Manifest {
+        fn v(
+            dir: &Path,
+            kernel_type: &str,
+            m: usize,
+            bm: usize,
+            k: usize,
+            c: usize,
+            gamma: usize,
+            n: usize,
+            tags: &[&str],
+        ) -> VariantInfo {
+            let name = format!("{kernel_type}_m{m}_b{bm}_k{k}_c{c}_g{gamma}_n{n}");
+            VariantInfo {
+                path: dir.join(format!("{name}.hlo.txt")),
+                name,
+                kernel_type: kernel_type.to_string(),
+                m,
+                bm,
+                k,
+                c,
+                n,
+                gamma,
+                groups: m / gamma,
+                tags: tags.iter().map(|t| t.to_string()).collect(),
+            }
+        }
+        let mut variants = Vec::new();
+        for ktype in ["gauss1d", "gauss2d", "tapered_sinc"] {
+            // Channel / candidate-capacity / shard spread (γ = 1).
+            variants.push(v(dir, ktype, 1024, 256, 64, 10, 1, 32_768, &[]));
+            variants.push(v(dir, ktype, 1024, 256, 256, 10, 1, 32_768, &[]));
+            variants.push(v(dir, ktype, 2048, 256, 256, 10, 1, 262_144, &[]));
+            variants.push(v(dir, ktype, 512, 128, 128, 4, 1, 4_096, &["tiny"]));
+            variants.push(v(dir, ktype, 1024, 256, 256, 1, 1, 32_768, &["hcgrid"]));
+            variants.push(v(dir, ktype, 1024, 256, 256, 5, 1, 262_144, &["fig15"]));
+        }
+        // Fig-13 block-size sweep (pinned by name in the bench).
+        for bm in [32, 64, 128, 256, 512, 1024, 2048] {
+            variants.push(v(dir, "gauss1d", 2048, bm, 64, 10, 1, 262_144, &["fig13"]));
+        }
+        // Fig-16 γ family (m = 1920 divides evenly by every γ; k grows with
+        // γ because one candidate list serves γ cells' combined support).
+        for (gamma, k) in [(1usize, 256usize), (2, 512), (3, 768)] {
+            variants.push(v(dir, "gauss1d", 1920, 240, k, 10, gamma, 262_144, &["fig16"]));
+        }
+        Manifest { dir: dir.to_path_buf(), variants }
+    }
 }
 
 #[cfg(test)]
@@ -264,5 +320,50 @@ mod tests {
     fn missing_dir_is_good_error() {
         let err = Manifest::load(Path::new("/nonexistent/artifacts")).unwrap_err();
         assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn native_default_is_well_formed() {
+        let m = Manifest::native_default(Path::new("artifacts"));
+        assert!(m.variants.len() >= 15);
+        for v in &m.variants {
+            assert_eq!(v.groups * v.gamma, v.m, "{}", v.name);
+            assert!(v.m % v.bm == 0, "{}", v.name);
+        }
+        // Names are unique (get() must be unambiguous).
+        let mut names: Vec<&str> = m.variants.iter().map(|v| v.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), m.variants.len());
+        // The sweeps the benches rely on exist.
+        assert!(m.with_tag("fig13").len() >= 5);
+        assert!(m.with_tag("fig16").len() >= 3);
+        // Selection covers every kernel type and the γ sweep.
+        for ktype in ["gauss1d", "gauss2d", "tapered_sinc"] {
+            let q = VariantQuery {
+                kernel_type: ktype.into(),
+                gamma: 1,
+                channels: 10,
+                n_samples: 28_300,
+                block: 0,
+                k_hint: 30,
+            };
+            let v = m.select(&q).unwrap();
+            assert_eq!(v.kernel_type, ktype);
+            assert_eq!(v.c, 10);
+            assert!(v.n >= 28_300);
+        }
+        let g2 = m
+            .select(&VariantQuery {
+                kernel_type: "gauss1d".into(),
+                gamma: 2,
+                channels: 10,
+                n_samples: 4000,
+                block: 0,
+                k_hint: 0,
+            })
+            .unwrap();
+        assert_eq!(g2.gamma, 2);
+        assert!(g2.name.contains("_g2_"));
     }
 }

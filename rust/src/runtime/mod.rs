@@ -8,8 +8,23 @@
 
 pub mod manifest;
 pub mod pool;
+pub mod prefetch;
 pub mod stream;
 
 pub use manifest::{Manifest, VariantInfo, VariantQuery};
 pub use pool::{MemoryPool, PooledBuf};
+pub use prefetch::{overlap_seconds, GroupBatch, PrefetchStats, Prefetcher};
 pub use stream::{ExecuteRequest, ExecuteResponse, StreamPool};
+
+/// Which executor backs the stream pool in this build: `"pjrt"` (AOT HLO
+/// through the PJRT C API; requires the `pjrt` feature + vendored `xla`
+/// crate) or `"native"` (the built-in CPU executor with identical dispatch
+/// semantics). Tests use this to decide whether missing artifacts mean
+/// "skip" or "run on the builtin manifest".
+pub fn backend_name() -> &'static str {
+    if cfg!(feature = "pjrt") {
+        "pjrt"
+    } else {
+        "native"
+    }
+}

@@ -13,17 +13,35 @@ pub struct MemoryPool {
     inner: Arc<Mutex<PoolInner>>,
 }
 
-#[derive(Default)]
 struct PoolInner {
     /// Free buffers, any capacity; small list, linear scan is fine.
     free: Vec<Vec<f32>>,
     allocated: usize,
     reused: usize,
+    /// Max buffers kept on the free list (hoarding bound).
+    limit: usize,
+}
+
+impl Default for PoolInner {
+    fn default() -> Self {
+        // 16 buffers is plenty for pipelines × in-flight dispatches at our
+        // scales; streaming prefetch rings size their own pools.
+        PoolInner { free: Vec::new(), allocated: 0, reused: 0, limit: 16 }
+    }
 }
 
 impl MemoryPool {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// A pool keeping up to `limit` free buffers — the prefetcher's channel
+    /// ring sizes this as `depth × channels-per-group` so a full in-flight
+    /// window recycles without dropping storage.
+    pub fn with_limit(limit: usize) -> Self {
+        let pool = Self::default();
+        pool.inner.lock().unwrap().limit = limit.max(1);
+        pool
     }
 
     /// Take a zero-length buffer with at least `capacity` reserved.
@@ -91,9 +109,7 @@ impl Drop for PooledBuf {
     fn drop(&mut self) {
         if self.vec.capacity() > 0 {
             let mut inner = self.pool.lock().unwrap();
-            // Bound the free list to avoid hoarding (16 buffers is plenty for
-            // pipelines × in-flight dispatches at our scales).
-            if inner.free.len() < 16 {
+            if inner.free.len() < inner.limit {
                 inner.free.push(std::mem::take(&mut self.vec));
             }
         }

@@ -1,0 +1,410 @@
+//! Read-ahead channel ingest: the T0 stage that overlaps disk I/O with the
+//! T1–T4 pipeline stages (the paper's §4.3 I/O/compute co-optimization,
+//! Fig 8's "load" bars sliding under the compute bars).
+//!
+//! A [`Prefetcher`] coordinates a small pool of I/O worker threads (spawned
+//! by the caller inside its own `thread::scope`, so sources can be borrowed)
+//! with the coordinator's pipeline workers:
+//!
+//! * workers **claim** the next channel group FIFO, read its channels from a
+//!   [`ChannelSource`] into pooled buffers, and push the finished
+//!   [`GroupBatch`] onto a bounded ready ring;
+//! * at most `depth` groups are in flight (being read + ready) at any time —
+//!   when pipelines fall behind, workers block (**backpressure**). A batch a
+//!   consumer has already pulled no longer counts against the window, so a
+//!   full run's peak residency is `depth` + one batch per consumer;
+//! * pipelines **pull** batches with [`Prefetcher::next`], blocking while
+//!   the ring is empty (starvation — measurable as missing overlap).
+//!
+//! Every read records its wall-clock interval; after the run,
+//! [`overlap_seconds`] intersects the merged I/O intervals with the merged
+//! compute intervals to report the *measured* I/O/compute overlap window —
+//! the number `fig8_timeline` prints, nonzero whenever `depth ≥ 2` gives
+//! the workers room to read ahead.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+use crate::coordinator::plan::ChannelGroups;
+use crate::data::ChannelSource;
+use crate::runtime::pool::{MemoryPool, PooledBuf};
+use crate::util::error::{HegridError, Result};
+
+/// One prefetched channel group, ready for a pipeline to stage.
+pub struct GroupBatch {
+    /// Group index within the run's [`ChannelGroups`].
+    pub group: usize,
+    /// Channel ids of the group's members.
+    pub channels: Vec<usize>,
+    /// Per-member value vectors (`n_samples` each); pooled, recycled on drop.
+    pub values: Vec<PooledBuf>,
+}
+
+/// Post-run ingest accounting.
+#[derive(Clone, Debug, Default)]
+pub struct PrefetchStats {
+    /// Total time I/O workers spent reading (sum over groups).
+    pub io_busy_s: f64,
+    /// Per-group read intervals (seconds relative to the prefetcher clock).
+    pub read_intervals: Vec<(f64, f64)>,
+    /// Groups fully read.
+    pub groups_read: usize,
+    /// Largest observed in-flight window (reading + ready); ≤ depth always.
+    pub peak_window: usize,
+}
+
+struct State {
+    next_group: usize,
+    reading: usize,
+    ready: VecDeque<GroupBatch>,
+    error: Option<HegridError>,
+    failed: bool,
+    io_busy: f64,
+    intervals: Vec<(f64, f64)>,
+    groups_read: usize,
+    peak_window: usize,
+}
+
+/// Bounded read-ahead ring shared between I/O workers and pipelines.
+pub struct Prefetcher {
+    n_groups: usize,
+    depth: usize,
+    state: Mutex<State>,
+    cond: Condvar,
+    t0: Instant,
+}
+
+impl Prefetcher {
+    /// `depth` bounds the in-flight window (groups being read + ready);
+    /// clamped to ≥ 1.
+    pub fn new(n_groups: usize, depth: usize) -> Prefetcher {
+        Prefetcher {
+            n_groups,
+            depth: depth.max(1),
+            state: Mutex::new(State {
+                next_group: 0,
+                reading: 0,
+                ready: VecDeque::new(),
+                error: None,
+                failed: false,
+                io_busy: 0.0,
+                intervals: Vec::new(),
+                groups_read: 0,
+                peak_window: 0,
+            }),
+            cond: Condvar::new(),
+            t0: Instant::now(),
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Seconds elapsed on the prefetcher clock (the time base of the
+    /// read/compute intervals fed to [`overlap_seconds`]).
+    pub fn now_s(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    /// I/O worker body: claim groups FIFO, read, push. Call from one or more
+    /// threads inside the caller's scope; returns when every group is
+    /// claimed or the run failed.
+    pub fn run_worker(
+        &self,
+        source: &dyn ChannelSource,
+        groups: &ChannelGroups,
+        pool: &MemoryPool,
+    ) {
+        let n_samples = source.n_samples();
+        loop {
+            // ---- claim (with backpressure) -------------------------------
+            let g = {
+                let mut st = self.state.lock().unwrap();
+                loop {
+                    if st.failed || st.next_group >= self.n_groups {
+                        return;
+                    }
+                    if st.ready.len() + st.reading < self.depth {
+                        let g = st.next_group;
+                        st.next_group += 1;
+                        st.reading += 1;
+                        st.peak_window = st.peak_window.max(st.ready.len() + st.reading);
+                        break g;
+                    }
+                    st = self.cond.wait(st).unwrap();
+                }
+            };
+
+            // ---- read (no locks held) ------------------------------------
+            let channels: Vec<usize> = groups.members(g).to_vec();
+            let start = self.now_s();
+            let mut values = Vec::with_capacity(channels.len());
+            let mut failure: Option<HegridError> = None;
+            for &ch in &channels {
+                let mut buf = pool.take(n_samples);
+                if let Err(e) = source.read_channel_into(ch, &mut buf) {
+                    failure = Some(e);
+                    break;
+                }
+                if buf.len() != n_samples {
+                    failure = Some(HegridError::Internal(format!(
+                        "source produced {} values for channel {ch}, expected {n_samples}",
+                        buf.len()
+                    )));
+                    break;
+                }
+                values.push(buf);
+            }
+            let end = self.now_s();
+
+            // ---- publish -------------------------------------------------
+            let mut st = self.state.lock().unwrap();
+            st.reading -= 1;
+            match failure {
+                Some(e) => {
+                    if st.error.is_none() {
+                        st.error = Some(e);
+                    }
+                    st.failed = true;
+                    self.cond.notify_all();
+                    return;
+                }
+                None if st.failed => {
+                    // The run was aborted while this read was in flight:
+                    // drop the straggler batch (its buffers recycle) so no
+                    // consumer processes work after the failure.
+                    self.cond.notify_all();
+                    return;
+                }
+                None => {
+                    st.io_busy += end - start;
+                    st.intervals.push((start, end));
+                    st.groups_read += 1;
+                    st.ready.push_back(GroupBatch { group: g, channels, values });
+                    self.cond.notify_all();
+                }
+            }
+        }
+    }
+
+    /// Pull the next prefetched group; blocks while the ring is empty.
+    /// `None` once every group has been delivered (or after a failure has
+    /// been reported). The first caller to observe a failure gets
+    /// `Some(Err(..))`; later callers get `None`.
+    pub fn next(&self) -> Option<Result<GroupBatch>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(batch) = st.ready.pop_front() {
+                // A window slot freed up: wake a blocked I/O worker.
+                self.cond.notify_all();
+                return Some(Ok(batch));
+            }
+            if st.failed {
+                return st.error.take().map(Err);
+            }
+            if st.next_group >= self.n_groups && st.reading == 0 {
+                return None;
+            }
+            st = self.cond.wait(st).unwrap();
+        }
+    }
+
+    /// Stop the run early (consumer-side failure): workers stop claiming,
+    /// blocked parties wake, pending `next` calls drain to `None`. Any
+    /// batches already in the ring are dropped (their buffers recycle).
+    pub fn abort(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.failed = true;
+        st.ready.clear();
+        self.cond.notify_all();
+    }
+
+    /// Ingest accounting; call after the workers have finished.
+    pub fn stats(&self) -> PrefetchStats {
+        let st = self.state.lock().unwrap();
+        PrefetchStats {
+            io_busy_s: st.io_busy,
+            read_intervals: st.intervals.clone(),
+            groups_read: st.groups_read,
+            peak_window: st.peak_window,
+        }
+    }
+}
+
+/// Merge possibly-overlapping intervals into a sorted disjoint set.
+pub fn merge_intervals(mut iv: Vec<(f64, f64)>) -> Vec<(f64, f64)> {
+    iv.retain(|(a, b)| b > a);
+    iv.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
+    let mut out: Vec<(f64, f64)> = Vec::with_capacity(iv.len());
+    for (a, b) in iv {
+        match out.last_mut() {
+            Some(last) if a <= last.1 => last.1 = last.1.max(b),
+            _ => out.push((a, b)),
+        }
+    }
+    out
+}
+
+/// Total time during which both interval sets are active — the measured
+/// I/O/compute overlap window. Inputs need not be sorted or disjoint.
+pub fn overlap_seconds(io: &[(f64, f64)], compute: &[(f64, f64)]) -> f64 {
+    let a = merge_intervals(io.to_vec());
+    let b = merge_intervals(compute.to_vec());
+    let (mut i, mut j) = (0, 0);
+    let mut total = 0.0;
+    while i < a.len() && j < b.len() {
+        let lo = a[i].0.max(b[j].0);
+        let hi = a[i].1.min(b[j].1);
+        if hi > lo {
+            total += hi - lo;
+        }
+        if a[i].1 <= b[j].1 {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::InMemorySource;
+    use crate::sim::SimConfig;
+
+    #[test]
+    fn merge_intervals_basic() {
+        assert_eq!(merge_intervals(vec![]), vec![]);
+        assert_eq!(
+            merge_intervals(vec![(3.0, 4.0), (1.0, 2.0)]),
+            vec![(1.0, 2.0), (3.0, 4.0)]
+        );
+        assert_eq!(
+            merge_intervals(vec![(1.0, 2.5), (2.0, 3.0), (3.0, 4.0)]),
+            vec![(1.0, 4.0)]
+        );
+        // Degenerate/inverted intervals are dropped.
+        assert_eq!(merge_intervals(vec![(2.0, 2.0), (5.0, 4.0)]), vec![]);
+    }
+
+    #[test]
+    fn overlap_seconds_cases() {
+        assert_eq!(overlap_seconds(&[], &[(0.0, 1.0)]), 0.0);
+        assert_eq!(overlap_seconds(&[(0.0, 1.0)], &[(2.0, 3.0)]), 0.0);
+        let io = [(0.0, 2.0), (4.0, 6.0)];
+        let cp = [(1.0, 5.0)];
+        assert!((overlap_seconds(&io, &cp) - 2.0).abs() < 1e-12);
+        // Unsorted, overlapping inputs.
+        let io = [(3.0, 4.0), (0.0, 2.0), (1.0, 3.5)];
+        let cp = [(0.5, 1.0), (0.75, 3.0)];
+        assert!((overlap_seconds(&io, &cp) - 2.5).abs() < 1e-12);
+    }
+
+    fn drain_all(pf: &Prefetcher) -> Vec<GroupBatch> {
+        let mut out = Vec::new();
+        while let Some(b) = pf.next() {
+            out.push(b.expect("no failure expected"));
+        }
+        out
+    }
+
+    #[test]
+    fn delivers_every_group_exactly_once() {
+        let d = SimConfig::quick_preset().generate();
+        let source = InMemorySource::new(&d);
+        let groups = ChannelGroups::new(d.n_channels(), 3); // 4 channels → 2 groups
+        for depth in [1usize, 2, 8] {
+            for workers in [1usize, 2] {
+                let pf = Prefetcher::new(groups.len(), depth);
+                let pool = MemoryPool::new();
+                let batches = std::thread::scope(|s| {
+                    for _ in 0..workers {
+                        s.spawn(|| pf.run_worker(&source, &groups, &pool));
+                    }
+                    drain_all(&pf)
+                });
+                assert_eq!(batches.len(), groups.len());
+                let mut seen: Vec<usize> = batches.iter().map(|b| b.group).collect();
+                seen.sort_unstable();
+                assert_eq!(seen, (0..groups.len()).collect::<Vec<_>>());
+                for b in &batches {
+                    assert_eq!(b.channels, groups.members(b.group));
+                    for (ci, &ch) in b.channels.iter().enumerate() {
+                        assert_eq!(*b.values[ci], d.channels[ch], "group {} ch {ch}", b.group);
+                    }
+                }
+                let stats = pf.stats();
+                assert_eq!(stats.groups_read, groups.len());
+                assert!(stats.peak_window <= depth, "window {} > depth {depth}", stats.peak_window);
+            }
+        }
+    }
+
+    #[test]
+    fn backpressure_caps_the_window_at_depth_one() {
+        let d = SimConfig::quick_preset().generate();
+        let source = InMemorySource::new(&d);
+        let groups = ChannelGroups::new(d.n_channels(), 1); // 4 groups
+        let pf = Prefetcher::new(groups.len(), 1);
+        let pool = MemoryPool::new();
+        std::thread::scope(|s| {
+            s.spawn(|| pf.run_worker(&source, &groups, &pool));
+            s.spawn(|| pf.run_worker(&source, &groups, &pool));
+            let got = drain_all(&pf);
+            assert_eq!(got.len(), 4);
+        });
+        assert_eq!(pf.stats().peak_window, 1);
+    }
+
+    #[test]
+    fn source_failure_is_reported_once_then_ends() {
+        struct Failing;
+        impl ChannelSource for Failing {
+            fn meta(&self) -> &crate::data::DatasetMeta {
+                unreachable!("prefetcher never asks the source for metadata")
+            }
+            fn n_samples(&self) -> usize {
+                8
+            }
+            fn n_channels(&self) -> usize {
+                4
+            }
+            fn coords(&self) -> Result<(&[f64], &[f64])> {
+                unreachable!("prefetcher never asks the source for coords")
+            }
+            fn read_channel_into(&self, c: usize, out: &mut Vec<f32>) -> Result<()> {
+                if c >= 2 {
+                    return Err(HegridError::Corrupt(format!("channel {c} bad")));
+                }
+                out.clear();
+                out.resize(8, 1.0);
+                Ok(())
+            }
+        }
+        let groups = ChannelGroups::new(4, 1);
+        let pf = Prefetcher::new(groups.len(), 4);
+        let pool = MemoryPool::new();
+        let (ok, errs, nones) = std::thread::scope(|s| {
+            s.spawn(|| pf.run_worker(&Failing, &groups, &pool));
+            let (mut ok, mut errs) = (0, 0);
+            while let Some(r) = pf.next() {
+                match r {
+                    Ok(_) => ok += 1,
+                    Err(e) => {
+                        assert!(matches!(e, HegridError::Corrupt(_)));
+                        errs += 1;
+                    }
+                }
+            }
+            // After the error, the stream is over.
+            let nones = usize::from(pf.next().is_none());
+            (ok, errs, nones)
+        });
+        assert_eq!(ok, 2);
+        assert_eq!(errs, 1);
+        assert_eq!(nones, 1);
+    }
+}

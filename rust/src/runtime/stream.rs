@@ -13,6 +13,22 @@
 //! per-channel-group values once per group, then reused across all tile
 //! dispatches (the "loaded only once from the host to the device" part of
 //! the shared component, §4.3.1).
+//!
+//! Two backends sit behind the same pool API:
+//!
+//! * `pjrt` feature **on** — AOT HLO artifacts executed through the PJRT C
+//!   API via the `xla` crate (requires vendoring it; see Cargo.toml).
+//! * `pjrt` feature **off** (the offline default) — a native CPU executor
+//!   with identical dispatch semantics (`python/compile/kernels/ref.py`
+//!   transliterated), including the emulated device-buffer cache so H2D
+//!   cache-hit behaviour and timings keep the same shape.
+
+// The PJRT backend needs the (unpublished-offline) `xla` crate: vendor
+// xla-rs, add `xla = { path = "vendor/xla" }` to [dependencies], and build
+// with `--features pjrt`. This line turns the otherwise-cryptic E0433 into
+// a pointer at that step.
+#[cfg(feature = "pjrt")]
+extern crate xla;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -161,7 +177,9 @@ impl Drop for StreamPool {
     }
 }
 
-/// Per-stream worker: own client, executable cache, device-buffer cache.
+/// Per-stream worker (PJRT): own client, executable cache, device-buffer
+/// cache.
+#[cfg(feature = "pjrt")]
 fn stream_main(manifest: Arc<Manifest>, rx: Receiver<Msg>) {
     let client = match xla::PjRtClient::cpu() {
         Ok(c) => c,
@@ -209,6 +227,7 @@ fn stream_main(manifest: Arc<Manifest>, rx: Receiver<Msg>) {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn compile_variant<'a>(
     client: &xla::PjRtClient,
     manifest: &Manifest,
@@ -226,6 +245,7 @@ fn compile_variant<'a>(
     Ok(cache.get(name).expect("just inserted"))
 }
 
+#[cfg(feature = "pjrt")]
 #[allow(clippy::too_many_arguments)]
 fn run_one(
     client: &xla::PjRtClient,
@@ -317,4 +337,159 @@ fn run_one(
         )));
     }
     Ok(ExecuteResponse { acc, wsum, t_h2d, t_exec, t_d2h })
+}
+
+/// Per-stream worker (native backend): same message loop and buffer-cache
+/// semantics as the PJRT path, with the dispatch executed by
+/// `native::run_one` on this thread.
+#[cfg(not(feature = "pjrt"))]
+fn stream_main(manifest: Arc<Manifest>, rx: Receiver<Msg>) {
+    let mut buffers: HashMap<BufferKey, Arc<Vec<f32>>> = HashMap::new();
+    const MAX_GROUP_BUFFERS: usize = 4;
+    let mut group_lru: Vec<BufferKey> = Vec::new();
+
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Warm(name, reply) => {
+                let _ = reply.send(manifest.get(&name).map(|_| ()));
+            }
+            Msg::Execute(req, reply) => {
+                let out = native::run_one(
+                    &manifest,
+                    &mut buffers,
+                    &mut group_lru,
+                    MAX_GROUP_BUFFERS,
+                    &req,
+                );
+                let _ = reply.send(out);
+            }
+        }
+    }
+}
+
+/// Native CPU executor: `python/compile/kernels/ref.py` transliterated.
+/// Weight semantics are identical to [`crate::grid::kernels::ConvKernel`],
+/// but evaluated from the dispatch's `kparam` array exactly as the device
+/// kernel would — the offline stand-in for AOT Pallas + PJRT.
+#[cfg(not(feature = "pjrt"))]
+mod native {
+    use super::*;
+    use crate::grid::kernels::ConvKernelType;
+    use crate::healpix::ang_dist;
+    use std::f64::consts::FRAC_PI_2;
+
+    pub(super) fn run_one(
+        manifest: &Manifest,
+        buffers: &mut HashMap<BufferKey, Arc<Vec<f32>>>,
+        group_lru: &mut Vec<BufferKey>,
+        max_groups: usize,
+        req: &ExecuteRequest,
+    ) -> Result<ExecuteResponse> {
+        let info = manifest.get(&req.variant)?.clone();
+        if req.cell_lon.len() != info.m
+            || req.cell_lat.len() != info.m
+            || req.nbr.len() != info.groups * info.k
+            || req.slon.len() != info.n
+            || req.slat.len() != info.n
+            || req.sval.len() != info.c * info.n
+        {
+            return Err(HegridError::Internal(format!(
+                "dispatch shapes do not match variant {}: cells {}/{}, nbr {}/{}, samples {}/{}, sval {}/{}",
+                info.name,
+                req.cell_lon.len(),
+                info.m,
+                req.nbr.len(),
+                info.groups * info.k,
+                req.slon.len(),
+                info.n,
+                req.sval.len(),
+                info.c * info.n
+            )));
+        }
+        let ktype = ConvKernelType::from_name(&info.kernel_type)?;
+
+        // ---- emulated H2D: copy shared inputs into the cache on miss -----
+        let t0 = Instant::now();
+        let coord_key = |axis: u8| BufferKey::SampleCoords { epoch: req.epoch, axis, n: info.n };
+        if !buffers.contains_key(&coord_key(0)) {
+            buffers.retain(|k, _| matches!(k, BufferKey::SampleCoords { epoch, .. } | BufferKey::GroupValues { epoch, .. } if *epoch == req.epoch));
+            group_lru.retain(|k| matches!(k, BufferKey::GroupValues { epoch, .. } if *epoch == req.epoch));
+            buffers.insert(coord_key(0), Arc::new(req.slon.to_vec()));
+            buffers.insert(coord_key(1), Arc::new(req.slat.to_vec()));
+        }
+        let gkey =
+            BufferKey::GroupValues { epoch: req.epoch, group: req.group, c: info.c, n: info.n };
+        if !buffers.contains_key(&gkey) {
+            buffers.insert(gkey.clone(), Arc::new(req.sval.to_vec()));
+            group_lru.push(gkey.clone());
+            while group_lru.len() > max_groups {
+                let evict = group_lru.remove(0);
+                buffers.remove(&evict);
+            }
+        }
+        let slon = Arc::clone(buffers.get(&coord_key(0)).expect("resident"));
+        let slat = Arc::clone(buffers.get(&coord_key(1)).expect("resident"));
+        let sval = Arc::clone(buffers.get(&gkey).expect("resident"));
+        let t_h2d = t0.elapsed();
+
+        // ---- execute ------------------------------------------------------
+        let t1 = Instant::now();
+        let kp = [
+            req.kparam[0] as f64,
+            req.kparam[1] as f64,
+            req.kparam[2] as f64,
+            req.kparam[3] as f64,
+        ];
+        let (m, k, c, n, gamma) = (info.m, info.k, info.c, info.n, info.gamma.max(1));
+        let mut acc64 = vec![0.0f64; c * m];
+        let mut wsum64 = vec![0.0f64; m];
+        for i in 0..m {
+            let clon = req.cell_lon[i] as f64;
+            let clat = req.cell_lat[i] as f64;
+            let clat_cos = clat.cos();
+            let g = i / gamma;
+            for &j in &req.nbr[g * k..(g + 1) * k] {
+                if j < 0 {
+                    continue;
+                }
+                let j = j as usize;
+                if j >= n {
+                    continue; // padded gather index: out-of-shard, no effect
+                }
+                let sl = slon[j] as f64;
+                let sb = slat[j] as f64;
+                let d = ang_dist(FRAC_PI_2 - clat, clon, FRAC_PI_2 - sb, sl);
+                let d2 = d * d;
+                let (w, r2) = match ktype {
+                    ConvKernelType::Gauss1d => ((-d2 * kp[0]).exp(), kp[1]),
+                    ConvKernelType::Gauss2d => {
+                        let dlon_cos = (sl - clon) * clat_cos;
+                        let dlat = sb - clat;
+                        ((-dlon_cos * dlon_cos * kp[0] - dlat * dlat * kp[1]).exp(), kp[2])
+                    }
+                    ConvKernelType::TaperedSinc => {
+                        let dd = d2.sqrt();
+                        let x = dd * kp[0];
+                        let sinc = if x.abs() < 1e-12 { 1.0 } else { x.sin() / x };
+                        let t = dd * kp[1];
+                        (sinc * (-t * t).exp(), kp[2])
+                    }
+                };
+                if d2 <= r2 {
+                    wsum64[i] += w;
+                    for ci in 0..c {
+                        acc64[ci * m + i] += w * sval[ci * n + j] as f64;
+                    }
+                }
+            }
+        }
+        let t_exec = t1.elapsed();
+
+        // ---- emulated D2H -------------------------------------------------
+        let t2 = Instant::now();
+        let acc: Vec<f32> = acc64.iter().map(|&v| v as f32).collect();
+        let wsum: Vec<f32> = wsum64.iter().map(|&v| v as f32).collect();
+        let t_d2h = t2.elapsed();
+        Ok(ExecuteResponse { acc, wsum, t_h2d, t_exec, t_d2h })
+    }
 }

@@ -18,8 +18,11 @@
 //! 1.5–1.9e7 simulated / 2.83e6 observed per channel) so a full Table-3 sweep
 //! completes in minutes on CPU-PJRT; the `--scale` knob restores any ratio.
 
-use crate::data::{Dataset, DatasetMeta};
+use std::sync::Arc;
+
+use crate::data::{ChannelSource, Dataset, DatasetMeta};
 use crate::sky::GaussianBeam;
+use crate::util::error::Result;
 use crate::util::prng::Xoshiro256pp;
 use crate::util::{deg2rad, SplitMix64};
 
@@ -142,6 +145,15 @@ impl SimConfig {
 
     /// Generate the dataset (drift-scan geometry + sky model + noise).
     pub fn generate(&self) -> Dataset {
+        self.workload().materialize()
+    }
+
+    /// Build the channel-independent half of a simulated dataset:
+    /// coordinates, sky model, sparse spatial responses, and one PRNG seed
+    /// per channel. [`SimWorkload::channel_values`] then synthesizes any
+    /// channel on demand, bit-identically to [`SimConfig::generate`] —
+    /// the basis of [`SimSource`], the deterministic streaming source.
+    pub fn workload(&self) -> SimWorkload {
         let mut seeder = SplitMix64::new(self.seed);
         let sources = self.draw_sources(&mut seeder);
         let (lons, lats) = self.scan_coordinates(&mut seeder);
@@ -193,40 +205,7 @@ impl SimConfig {
             sparse
         });
 
-        // Per-channel values: spectral line profile × spatial response +
-        // independent white noise. Channels are generated in parallel.
         let channel_seeds: Vec<u64> = (0..self.channels).map(|_| seeder.next_u64()).collect();
-        let noise = self.noise_level;
-        let channels: Vec<Vec<f32>> = std::thread::scope(|s| {
-            let handles: Vec<_> = channel_seeds
-                .iter()
-                .enumerate()
-                .map(|(c, &cseed)| {
-                    let (sparse, sources) = (&sparse, &sources);
-                    s.spawn(move || {
-                        let mut rng = Xoshiro256pp::new(cseed);
-                        let line: Vec<f64> = sources
-                            .iter()
-                            .map(|src| {
-                                let x = (c as f64 - src.line_center) / src.line_width;
-                                (-0.5 * x * x).exp()
-                            })
-                            .collect();
-                        sparse
-                            .iter()
-                            .map(|row| {
-                                let mut v = 0.02; // diffuse background
-                                for &(j, r) in row {
-                                    v += r * line[j as usize];
-                                }
-                                (v + noise * rng.normal()) as f32
-                            })
-                            .collect::<Vec<f32>>()
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().expect("channel worker panicked")).collect()
-        });
 
         let meta = DatasetMeta {
             name: self.name.clone(),
@@ -234,7 +213,15 @@ impl SimConfig {
             center_deg: self.center_deg,
             extent_deg: self.extent_deg,
         };
-        Dataset::new(meta, lons, lats, channels).expect("simulator produced consistent arrays")
+        SimWorkload {
+            meta,
+            lons: Arc::new(lons),
+            lats: Arc::new(lats),
+            sources,
+            sparse,
+            channel_seeds,
+            noise_level: self.noise_level,
+        }
     }
 
     fn draw_sources(&self, rng: &mut SplitMix64) -> Vec<Source> {
@@ -298,6 +285,121 @@ impl SimConfig {
             lats.push(lat_c + rng.uniform(-0.5, 0.5) * h);
         }
         (lons, lats)
+    }
+}
+
+/// The channel-independent half of a simulated dataset (see
+/// [`SimConfig::workload`]). Per-channel values are synthesized on demand:
+/// spectral line profile × sparse spatial response + per-channel white
+/// noise, each channel from its own pre-drawn seed.
+pub struct SimWorkload {
+    meta: DatasetMeta,
+    lons: Arc<Vec<f64>>,
+    lats: Arc<Vec<f64>>,
+    sources: Vec<Source>,
+    sparse: Vec<Vec<(u32, f64)>>,
+    channel_seeds: Vec<u64>,
+    noise_level: f64,
+}
+
+impl SimWorkload {
+    pub fn meta(&self) -> &DatasetMeta {
+        &self.meta
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.lons.len()
+    }
+
+    pub fn n_channels(&self) -> usize {
+        self.channel_seeds.len()
+    }
+
+    /// Synthesize channel `c` into `out` (cleared first). Deterministic:
+    /// depends only on the workload and `c`, never on generation order.
+    pub fn channel_values_into(&self, c: usize, out: &mut Vec<f32>) {
+        let mut rng = Xoshiro256pp::new(self.channel_seeds[c]);
+        let line: Vec<f64> = self
+            .sources
+            .iter()
+            .map(|src| {
+                let x = (c as f64 - src.line_center) / src.line_width;
+                (-0.5 * x * x).exp()
+            })
+            .collect();
+        out.clear();
+        out.reserve(self.sparse.len());
+        for row in &self.sparse {
+            let mut v = 0.02; // diffuse background
+            for &(j, r) in row {
+                v += r * line[j as usize];
+            }
+            out.push((v + self.noise_level * rng.normal()) as f32);
+        }
+    }
+
+    pub fn channel_values(&self, c: usize) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.channel_values_into(c, &mut out);
+        out
+    }
+
+    /// Materialize every channel (in parallel) into a [`Dataset`].
+    pub fn materialize(&self) -> Dataset {
+        let channels: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..self.n_channels())
+                .map(|c| s.spawn(move || self.channel_values(c)))
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("channel worker panicked")).collect()
+        });
+        Dataset::new(
+            self.meta.clone(),
+            (*self.lons).clone(),
+            (*self.lats).clone(),
+            channels,
+        )
+        .expect("simulator produced consistent arrays")
+    }
+}
+
+/// Deterministic streaming source: channels are synthesized on demand from
+/// a [`SimWorkload`], so arbitrarily many channels can be streamed without
+/// ever materializing the dataset — the test/bench stand-in for a
+/// larger-than-RAM observation.
+pub struct SimSource {
+    workload: SimWorkload,
+}
+
+impl SimSource {
+    pub fn new(cfg: &SimConfig) -> SimSource {
+        SimSource { workload: cfg.workload() }
+    }
+
+    pub fn workload(&self) -> &SimWorkload {
+        &self.workload
+    }
+}
+
+impl ChannelSource for SimSource {
+    fn meta(&self) -> &DatasetMeta {
+        self.workload.meta()
+    }
+
+    fn n_samples(&self) -> usize {
+        self.workload.n_samples()
+    }
+
+    fn n_channels(&self) -> usize {
+        self.workload.n_channels()
+    }
+
+    fn coords(&self) -> Result<(&[f64], &[f64])> {
+        Ok((self.workload.lons.as_slice(), self.workload.lats.as_slice()))
+    }
+
+    fn read_channel_into(&self, c: usize, out: &mut Vec<f32>) -> Result<()> {
+        self.workload.channel_values_into(c, out);
+        Ok(())
     }
 }
 
@@ -420,6 +522,24 @@ mod tests {
         for v in a {
             assert!(v.is_finite());
             assert!(v.abs() < 100.0);
+        }
+    }
+
+    #[test]
+    fn sim_source_matches_generate_bitwise() {
+        let cfg = SimConfig::quick_preset();
+        let d = cfg.generate();
+        let src = SimSource::new(&cfg);
+        assert_eq!(src.n_samples(), d.n_samples());
+        assert_eq!(src.n_channels(), d.n_channels());
+        let (lons, lats) = src.coords().unwrap();
+        assert_eq!(lons, d.lons.as_slice());
+        assert_eq!(lats, d.lats.as_slice());
+        let mut buf = Vec::new();
+        // Read out of order: values must only depend on the channel index.
+        for c in (0..d.n_channels()).rev() {
+            src.read_channel_into(c, &mut buf).unwrap();
+            assert_eq!(buf, d.channels[c], "channel {c}");
         }
     }
 

@@ -13,6 +13,9 @@ pub enum HegridError {
     Json { offset: usize, message: String },
     /// Invalid user-supplied configuration or CLI arguments.
     Config(String),
+    /// Stored data failed an integrity check (CRC mismatch, truncation):
+    /// the file is structurally valid but its payload cannot be trusted.
+    Corrupt(String),
     /// PJRT runtime failure (compile/execute/transfer).
     Runtime(String),
     /// Internal invariant violation — a bug in HEGrid.
@@ -28,6 +31,7 @@ impl fmt::Display for HegridError {
                 write!(f, "JSON error at byte {offset}: {message}")
             }
             HegridError::Config(m) => write!(f, "config error: {m}"),
+            HegridError::Corrupt(m) => write!(f, "data corruption: {m}"),
             HegridError::Runtime(m) => write!(f, "runtime error: {m}"),
             HegridError::Internal(m) => write!(f, "internal error: {m}"),
         }
@@ -51,6 +55,7 @@ impl HegridError {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for HegridError {
     fn from(e: xla::Error) -> Self {
         HegridError::Runtime(e.to_string())
@@ -69,6 +74,8 @@ mod tests {
         assert_eq!(e.to_string(), "format error: bad magic");
         let e = HegridError::Json { offset: 12, message: "expected ':'".into() };
         assert!(e.to_string().contains("byte 12"));
+        let e = HegridError::Corrupt("channel 3 CRC mismatch".into());
+        assert!(e.to_string().contains("corruption"));
     }
 
     #[test]

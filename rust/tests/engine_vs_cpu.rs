@@ -13,12 +13,13 @@ use hegrid::sky::SkyMap;
 
 fn artifacts_dir() -> Option<String> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("manifest.json").exists() {
-        Some(dir.display().to_string())
-    } else {
+    if !dir.join("manifest.json").exists() && hegrid::runtime::backend_name() == "pjrt" {
+        // Only the PJRT backend needs the AOT HLO files; the native executor
+        // runs on the built-in variant set.
         eprintln!("SKIP: run `make artifacts` first");
-        None
+        return None;
     }
+    Some(dir.display().to_string())
 }
 
 fn base_config() -> Option<HegridConfig> {

@@ -8,7 +8,9 @@ use hegrid::sim::SimConfig;
 
 fn base_config() -> Option<HegridConfig> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("manifest.json").exists() {
+    if !dir.join("manifest.json").exists() && hegrid::runtime::backend_name() == "pjrt" {
+        // Only the PJRT backend needs the AOT HLO files; the native executor
+        // runs on the built-in variant set.
         eprintln!("SKIP: run `make artifacts` first");
         return None;
     }

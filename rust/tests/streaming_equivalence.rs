@@ -1,0 +1,163 @@
+//! Streaming-vs-in-memory equivalence: the same `.hgd` payload gridded
+//! through `InMemorySource` and `HgdStreamSource` (several prefetch depths,
+//! including 1) must produce bit-identical maps, both through the pure CPU
+//! oracle and through the engine. Plus the corruption round trip: a flipped
+//! byte on disk surfaces as a typed `HegridError::Corrupt` from a streaming
+//! run.
+
+use std::path::PathBuf;
+
+use hegrid::config::HegridConfig;
+use hegrid::coordinator::{ChannelGroups, GriddingJob, HegridEngine};
+use hegrid::data::{ChannelSource, Dataset, HgdStreamSource, InMemorySource};
+use hegrid::grid::cpu::CpuGridder;
+use hegrid::runtime::{MemoryPool, Prefetcher};
+use hegrid::sim::{SimConfig, SimSource};
+use hegrid::util::error::HegridError;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("hegrid_streaming_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Pull every channel of `source` through a prefetcher ring and reassemble
+/// them in channel order — the ingest machinery without the device path.
+fn stream_channels(
+    source: &dyn ChannelSource,
+    per_group: usize,
+    depth: usize,
+    workers: usize,
+) -> Vec<Vec<f32>> {
+    let groups = ChannelGroups::new(source.n_channels(), per_group);
+    let pf = Prefetcher::new(groups.len(), depth);
+    let pool = MemoryPool::new();
+    let mut channels: Vec<Option<Vec<f32>>> = (0..source.n_channels()).map(|_| None).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| pf.run_worker(source, &groups, &pool));
+        }
+        while let Some(batch) = pf.next() {
+            let batch = batch.expect("stream delivers every group");
+            for (ci, &ch) in batch.channels.iter().enumerate() {
+                assert!(channels[ch].is_none(), "channel {ch} delivered twice");
+                channels[ch] = Some(batch.values[ci].to_vec());
+            }
+        }
+    });
+    channels.into_iter().map(|c| c.expect("every channel delivered")).collect()
+}
+
+#[test]
+fn streamed_channels_equal_in_memory_across_depths() {
+    let d = SimConfig::quick_preset().generate();
+    let path = tmp("equiv.hgd");
+    d.save(&path).unwrap();
+    let mem = InMemorySource::new(&d);
+    let hgd = HgdStreamSource::open(&path).unwrap();
+    for depth in [1usize, 2, 3, 8] {
+        for per_group in [1usize, 3] {
+            assert_eq!(stream_channels(&mem, per_group, depth, 2), d.channels);
+            assert_eq!(stream_channels(&hgd, per_group, depth, 2), d.channels);
+        }
+    }
+}
+
+#[test]
+fn sim_source_streams_identically_to_materialized() {
+    let cfg = SimConfig::quick_preset();
+    let d = cfg.generate();
+    let src = SimSource::new(&cfg);
+    assert_eq!(stream_channels(&src, 3, 2, 2), d.channels);
+}
+
+#[test]
+fn cpu_maps_bit_identical_through_streaming() {
+    let d = SimConfig::quick_preset().generate();
+    let path = tmp("cpu_equiv.hgd");
+    d.save(&path).unwrap();
+    let cfg = HegridConfig::default();
+    let job = GriddingJob::for_dataset(&d, &cfg).unwrap();
+    let gridder = CpuGridder::new(job.spec.clone(), job.kernel.clone());
+    let eager = gridder.grid_dataset(&d);
+    let hgd = HgdStreamSource::open(&path).unwrap();
+    for depth in [1usize, 4] {
+        let streamed = Dataset::new(
+            d.meta.clone(),
+            d.lons.clone(),
+            d.lats.clone(),
+            stream_channels(&hgd, 2, depth, 2),
+        )
+        .unwrap();
+        let maps = gridder.grid_dataset(&streamed);
+        assert_eq!(maps.len(), eager.len());
+        for (c, (a, b)) in eager.iter().zip(&maps).enumerate() {
+            for (va, vb) in a.values().iter().zip(b.values()) {
+                assert!(
+                    (va.is_nan() && vb.is_nan()) || va == vb,
+                    "channel {c}: {va} != {vb} (depth {depth})"
+                );
+            }
+        }
+    }
+}
+
+fn engine_config() -> Option<HegridConfig> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if hegrid::runtime::backend_name() == "pjrt" && !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: the PJRT backend needs `make artifacts`");
+        return None;
+    }
+    let mut cfg = HegridConfig::default();
+    cfg.artifacts_dir = dir.display().to_string();
+    cfg.streams = 2;
+    cfg.pipelines = 2;
+    cfg.channels_per_dispatch = 4;
+    Some(cfg)
+}
+
+#[test]
+fn engine_streaming_bit_identical_to_in_memory() {
+    let Some(base) = engine_config() else { return };
+    let d = SimConfig::quick_preset().generate();
+    let path = tmp("engine_equiv.hgd");
+    d.save(&path).unwrap();
+    let job = GriddingJob::for_dataset(&d, &base).unwrap();
+    let engine = HegridEngine::new(base.clone()).unwrap();
+    let (mem_maps, _) = engine.grid(&d, &job).unwrap();
+    assert_eq!(mem_maps.len(), d.n_channels());
+    for depth in [1usize, 3] {
+        let mut cfg = base.clone();
+        cfg.prefetch_depth = depth;
+        let engine_s = HegridEngine::new(cfg).unwrap();
+        let source = HgdStreamSource::open(&path).unwrap();
+        let (maps, rep) = engine_s.grid_source(&source, &job).unwrap();
+        assert_eq!(rep.prefetch_depth, depth);
+        assert!(rep.io_busy_s > 0.0, "streaming run must account T0 time");
+        for (c, (a, b)) in mem_maps.iter().zip(&maps).enumerate() {
+            let ds = a.diff_stats(b).unwrap();
+            assert_eq!(ds.max_abs, 0.0, "channel {c} differs (depth {depth})");
+            assert_eq!(ds.only_a + ds.only_b, 0, "coverage differs on channel {c}");
+        }
+    }
+}
+
+#[test]
+fn corrupted_stream_fails_with_typed_error() {
+    let Some(base) = engine_config() else { return };
+    let d = SimConfig::quick_preset().generate();
+    let path = tmp("corrupt_engine.hgd");
+    d.save(&path).unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    let n = bytes.len();
+    bytes[n - 10] ^= 0x55; // inside the last channel's value block
+    std::fs::write(&path, bytes).unwrap();
+    let engine = HegridEngine::new(base).unwrap();
+    let source = HgdStreamSource::open(&path).unwrap();
+    let job = GriddingJob::for_source(&source, &engine.config).unwrap();
+    match engine.grid_source(&source, &job) {
+        Err(HegridError::Corrupt(msg)) => assert!(msg.contains("CRC"), "{msg}"),
+        Err(other) => panic!("expected Corrupt, got {other}"),
+        Ok(_) => panic!("corrupted stream gridded successfully"),
+    }
+}
