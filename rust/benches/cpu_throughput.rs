@@ -1,0 +1,236 @@
+//! CPU gridding hot-path throughput — the repo's measured perf baseline
+//! (`BENCH_cpu_gridding.json`).
+//!
+//! Times the stages of `CpuGridder::grid_with_shared` (prep, cell sweep) and
+//! compares the blocked/trig-free hot path against an in-bench
+//! transliteration of the pre-overhaul reference (per-pair haversine,
+//! per-cell allocations, channel-major accumulation), at 1 worker and at
+//! full parallelism, plus a channel-block-width sweep. Every run re-checks
+//! that both paths agree numerically before timing is trusted.
+//!
+//! `HEGRID_BENCH_FAST=1` shrinks the workload to a CI smoke size.
+
+use std::f64::consts::FRAC_PI_2;
+use std::time::Instant;
+
+use hegrid::benchkit::support::*;
+use hegrid::benchkit::{speedup, Bencher, Series};
+use hegrid::config::HegridConfig;
+use hegrid::coordinator::GriddingJob;
+use hegrid::grid::cpu::{CpuGridder, DEFAULT_CHANNEL_BLOCK};
+use hegrid::grid::kernels::ConvKernel;
+use hegrid::grid::prep::SharedComponent;
+use hegrid::healpix::{ang_dist, PixRange};
+use hegrid::json::Json;
+use hegrid::sim::SimConfig;
+use hegrid::sky::{GridSpec, SkyMap};
+use hegrid::util::threads::{default_parallelism, parallel_items, DisjointWriter};
+
+/// The pre-overhaul hot path (PR ≤ 1), kept verbatim as the measured
+/// reference the speedup criterion is judged against: haversine trig per
+/// sample-cell pair, per-cell `Vec` allocations, channel-major accumulation
+/// walking one `Vec<f32>` per channel.
+fn reference_grid(
+    spec: &GridSpec,
+    kernel: &ConvKernel,
+    shared: &SharedComponent,
+    channels: &[Vec<f32>],
+    workers: usize,
+) -> Vec<SkyMap> {
+    let n_cells = spec.n_cells();
+    let n_ch = channels.len();
+    let mut acc = vec![0.0f64; n_ch * n_cells];
+    let mut wsum = vec![0.0f64; n_cells];
+    {
+        let acc_w = DisjointWriter::new(&mut acc);
+        let wsum_w = DisjointWriter::new(&mut wsum);
+        parallel_items(n_cells, workers, |cell| {
+            let (clon, clat) = spec.cell_center_flat(cell);
+            let ctheta = FRAC_PI_2 - clat;
+            let mut ranges: Vec<PixRange> = Vec::new();
+            shared.healpix.query_disc_rings_into(ctheta, clon, kernel.support, &mut ranges);
+            let clat_cos = clat.cos();
+            let mut w_tot = 0.0f64;
+            let mut local = vec![0.0f64; n_ch];
+            for r in &ranges {
+                let (a, b) = shared.samples_in_pix_range(r.lo, r.hi);
+                for j in a..b {
+                    let (slon, slat) = (shared.slon64[j], shared.slat64[j]);
+                    let d = ang_dist(ctheta, clon, FRAC_PI_2 - slat, slon);
+                    let w = kernel.weight(d * d, (slon - clon) * clat_cos, slat - clat);
+                    if w != 0.0 {
+                        w_tot += w;
+                        let orig = shared.perm[j] as usize;
+                        for (c, ch) in channels.iter().enumerate() {
+                            local[c] += w * ch[orig] as f64;
+                        }
+                    }
+                }
+            }
+            unsafe {
+                wsum_w.write(cell, w_tot);
+                for (c, &v) in local.iter().enumerate() {
+                    acc_w.write(c * n_cells + cell, v);
+                }
+            }
+        });
+    }
+    (0..n_ch)
+        .map(|c| {
+            SkyMap::from_accumulators(spec.clone(), &acc[c * n_cells..(c + 1) * n_cells], &wsum)
+                .expect("accumulator sizes consistent")
+        })
+        .collect()
+}
+
+/// Largest relative cell difference between two map stacks (NaN-aware).
+fn max_rel_diff(a: &[SkyMap], b: &[SkyMap]) -> f64 {
+    let mut worst = 0.0f64;
+    for (ma, mb) in a.iter().zip(b) {
+        for (&va, &vb) in ma.values().iter().zip(mb.values()) {
+            match (va.is_nan(), vb.is_nan()) {
+                (true, true) => {}
+                (false, false) => worst = worst.max((va - vb).abs() / va.abs().max(1.0)),
+                _ => worst = f64::INFINITY,
+            }
+        }
+    }
+    worst
+}
+
+fn main() {
+    print_scale_note();
+    let fast = std::env::var("HEGRID_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let mut bench = Bencher::from_env();
+
+    let dataset =
+        if fast { SimConfig::quick_preset().generate() } else { SimConfig::observed(20).generate() };
+    let cfg = HegridConfig::default();
+    let job = GriddingJob::for_dataset(&dataset, &cfg).expect("job");
+    let workers = default_parallelism();
+    let n_ch = dataset.n_channels();
+    let n_cells = job.spec.n_cells();
+
+    // ---- prep (shared component; per-stage breakdown from PrepStats) ------
+    let t0 = Instant::now();
+    let shared =
+        SharedComponent::for_kernel(&dataset.lons, &dataset.lats, &job.kernel).expect("prep");
+    let prep_s = t0.elapsed().as_secs_f64();
+    eprintln!(
+        "prep: {} samples in {prep_s:.4}s (pixel {:.4}s sort {:.4}s adjust {:.4}s)",
+        shared.n_samples(),
+        shared.stats.t_pixel_idx.as_secs_f64(),
+        shared.stats.t_sort.as_secs_f64(),
+        shared.stats.t_adjust.as_secs_f64(),
+    );
+
+    // ---- correctness gate before timing anything --------------------------
+    let blocked = CpuGridder::new(job.spec.clone(), job.kernel.clone())
+        .grid_with_shared(&shared, &dataset.channels);
+    let reference = reference_grid(&job.spec, &job.kernel, &shared, &dataset.channels, workers);
+    let diff = max_rel_diff(&blocked, &reference);
+    assert!(diff <= 1e-9, "blocked path diverged from reference: max rel diff {diff}");
+    eprintln!("equivalence gate: max rel diff blocked-vs-reference = {diff:.3e}");
+
+    // ---- single-thread + full-parallel comparisons ------------------------
+    let g1 = CpuGridder::new(job.spec.clone(), job.kernel.clone()).with_workers(1);
+    let gn = CpuGridder::new(job.spec.clone(), job.kernel.clone()).with_workers(workers);
+    let blocked_1t = bench.run("blocked 1-thread", || {
+        g1.grid_with_shared(&shared, &dataset.channels);
+    });
+    let blocked_1t_s = blocked_1t.median();
+    let reference_1t = bench.run("reference 1-thread", || {
+        reference_grid(&job.spec, &job.kernel, &shared, &dataset.channels, 1);
+    });
+    let reference_1t_s = reference_1t.median();
+    let blocked_nt = bench.run("blocked n-thread", || {
+        gn.grid_with_shared(&shared, &dataset.channels);
+    });
+    let blocked_nt_s = blocked_nt.median();
+    let reference_nt = bench.run("reference n-thread", || {
+        reference_grid(&job.spec, &job.kernel, &shared, &dataset.channels, workers);
+    });
+    let reference_nt_s = reference_nt.median();
+
+    // ---- channel-block-width sweep (single thread isolates the inner loop)
+    let widths: Vec<usize> = [1usize, 2, 4, 8, 16, 32]
+        .into_iter()
+        .filter(|&b| b <= n_ch.max(1))
+        .collect();
+    let mut sweep = Series::new("grid time vs channel-block width (1 thread, s)");
+    let mut sweep_json = Vec::new();
+    for &b in &widths {
+        let g = CpuGridder::new(job.spec.clone(), job.kernel.clone())
+            .with_workers(1)
+            .with_channel_block(b);
+        let m = bench.run(&format!("block {b}"), || {
+            g.grid_with_shared(&shared, &dataset.channels);
+        });
+        let s = m.median();
+        sweep.push(b.to_string(), s);
+        sweep_json.push(Json::obj(vec![
+            ("block", Json::num(b as f64)),
+            ("grid_s", Json::num(s)),
+        ]));
+    }
+    sweep.print();
+
+    let speedup_1t = speedup(reference_1t_s, blocked_1t_s);
+    let speedup_nt = speedup(reference_nt_s, blocked_nt_s);
+    println!(
+        "single-thread: blocked {blocked_1t_s:.4}s vs reference {reference_1t_s:.4}s \
+         (speedup {speedup_1t:.2}x)"
+    );
+    println!(
+        "{workers}-thread:  blocked {blocked_nt_s:.4}s vs reference {reference_nt_s:.4}s \
+         (speedup {speedup_nt:.2}x)"
+    );
+    println!(
+        "throughput: {:.3e} cells/s, {:.3e} channel-samples/s ({workers} threads)",
+        n_cells as f64 / blocked_nt_s,
+        (dataset.n_samples() * n_ch) as f64 / blocked_nt_s
+    );
+
+    let payload = Json::obj(vec![
+        ("bench", Json::str("cpu_gridding")),
+        ("n_samples", Json::num(dataset.n_samples() as f64)),
+        ("n_channels", Json::num(n_ch as f64)),
+        ("n_cells", Json::num(n_cells as f64)),
+        ("workers", Json::num(workers as f64)),
+        ("default_channel_block", Json::num(DEFAULT_CHANNEL_BLOCK as f64)),
+        (
+            "stages",
+            Json::obj(vec![
+                ("prep_s", Json::num(prep_s)),
+                ("prep_pixel_idx_s", Json::num(shared.stats.t_pixel_idx.as_secs_f64())),
+                ("prep_sort_s", Json::num(shared.stats.t_sort.as_secs_f64())),
+                ("prep_adjust_s", Json::num(shared.stats.t_adjust.as_secs_f64())),
+                ("grid_1t_s", Json::num(blocked_1t_s)),
+                ("grid_nt_s", Json::num(blocked_nt_s)),
+                ("reference_1t_s", Json::num(reference_1t_s)),
+                ("reference_nt_s", Json::num(reference_nt_s)),
+            ]),
+        ),
+        (
+            "throughput",
+            Json::obj(vec![
+                ("cells_per_s_1t", Json::num(n_cells as f64 / blocked_1t_s)),
+                ("cells_per_s", Json::num(n_cells as f64 / blocked_nt_s)),
+                (
+                    "channel_samples_per_s_1t",
+                    Json::num((dataset.n_samples() * n_ch) as f64 / blocked_1t_s),
+                ),
+                (
+                    "channel_samples_per_s",
+                    Json::num((dataset.n_samples() * n_ch) as f64 / blocked_nt_s),
+                ),
+            ]),
+        ),
+        ("speedup_single_thread", Json::num(speedup_1t)),
+        ("speedup_multi_thread", Json::num(speedup_nt)),
+        ("max_rel_diff_vs_reference", Json::num(diff)),
+        ("block_sweep", Json::Arr(sweep_json)),
+        ("measurements", bench.to_json()),
+    ]);
+    write_bench_json("cpu_gridding", &payload);
+}

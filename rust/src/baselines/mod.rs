@@ -24,11 +24,18 @@ use crate::util::error::Result;
 #[derive(Clone, Debug)]
 pub struct CygridBaseline {
     pub threads: usize,
+    /// Channel-block width forwarded to the CPU gridder (0 = default).
+    pub channel_block: usize,
 }
 
 impl CygridBaseline {
     pub fn new(threads: usize) -> Self {
-        CygridBaseline { threads: threads.max(1) }
+        CygridBaseline { threads: threads.max(1), channel_block: 0 }
+    }
+
+    pub fn with_channel_block(mut self, block: usize) -> Self {
+        self.channel_block = block;
+        self
     }
 
     /// Grid all channels; returns the maps and the wall time.
@@ -42,6 +49,7 @@ impl CygridBaseline {
         )?;
         let maps = CpuGridder::new(job.spec.clone(), job.kernel.clone())
             .with_workers(self.threads)
+            .with_channel_block(self.channel_block)
             .grid_with_shared(&shared, &dataset.channels);
         Ok((maps, t0.elapsed()))
     }

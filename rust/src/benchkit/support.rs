@@ -12,6 +12,7 @@ use std::time::Instant;
 use crate::config::HegridConfig;
 use crate::coordinator::{GriddingJob, HegridEngine, PipelineReport};
 use crate::data::{Dataset, HgdStreamSource};
+use crate::json::Json;
 
 /// Locate the repo `artifacts/` directory from a bench binary.
 pub fn artifacts_dir() -> String {
@@ -108,6 +109,18 @@ pub fn bench_iters() -> usize {
     } else {
         2
     }
+}
+
+/// Write a bench's JSON payload to `BENCH_<name>.json` in the current
+/// directory (or `$HEGRID_BENCH_DIR` if set) and return the path. This is
+/// the machine-readable trajectory record CI archives per run — e.g.
+/// `BENCH_cpu_gridding.json` from `cpu_throughput`.
+pub fn write_bench_json(name: &str, payload: &Json) -> PathBuf {
+    let dir = std::env::var("HEGRID_BENCH_DIR").unwrap_or_else(|_| ".".into());
+    let path = Path::new(&dir).join(format!("BENCH_{name}.json"));
+    std::fs::write(&path, payload.to_pretty()).expect("write bench json");
+    eprintln!("wrote {}", path.display());
+    path
 }
 
 /// Paper-scale disclaimer printed by every bench.

@@ -89,6 +89,9 @@ pub struct HegridConfig {
     pub gamma: usize,
     /// Pallas block size bm (Fig 13). 0 = profile default.
     pub block_size: usize,
+    /// Channel-block width B of the CPU gridder's blocked accumulation
+    /// (Cygrid baseline / accuracy oracle hot path). 0 = built-in default.
+    pub cpu_channel_block: usize,
     /// Streaming ingest (T0): channel groups the I/O workers read ahead of
     /// the pipelines. Also bounds how many groups are ever resident, so it
     /// is the memory/overlap trade-off knob. 1 = no read-ahead.
@@ -121,6 +124,7 @@ impl Default for HegridConfig {
             share_preprocessing: true,
             gamma: 1,
             block_size: 0,
+            cpu_channel_block: 0,
             prefetch_depth: 2,
             io_workers: 0,
             kernel_type: "gauss1d".into(),
@@ -191,6 +195,12 @@ impl HegridConfig {
                 self.prefetch_depth
             )));
         }
+        if self.cpu_channel_block > 4096 {
+            return Err(HegridError::Config(format!(
+                "cpu_channel_block {} out of range 0..=4096",
+                self.cpu_channel_block
+            )));
+        }
         if !(self.kernel_sigma_beam > 0.0) || !(self.support_sigma > 0.0) || !(self.oversample > 0.0)
         {
             return Err(HegridError::Config("kernel/oversample parameters must be positive".into()));
@@ -207,6 +217,7 @@ impl HegridConfig {
             ("share_preprocessing", Json::Bool(self.share_preprocessing)),
             ("gamma", Json::num(self.gamma as f64)),
             ("block_size", Json::num(self.block_size as f64)),
+            ("cpu_channel_block", Json::num(self.cpu_channel_block as f64)),
             ("prefetch_depth", Json::num(self.prefetch_depth as f64)),
             ("io_workers", Json::num(self.io_workers as f64)),
             ("kernel_type", Json::str(self.kernel_type.clone())),
@@ -251,6 +262,7 @@ impl HegridConfig {
                 .unwrap_or(d.share_preprocessing),
             gamma: get_usize("gamma", d.gamma)?,
             block_size: get_usize("block_size", d.block_size)?,
+            cpu_channel_block: get_usize("cpu_channel_block", d.cpu_channel_block)?,
             prefetch_depth: get_usize("prefetch_depth", d.prefetch_depth)?,
             io_workers: get_usize("io_workers", d.io_workers)?,
             kernel_type: v
@@ -302,6 +314,7 @@ mod tests {
         c.gamma = 2;
         c.prefetch_depth = 5;
         c.io_workers = 3;
+        c.cpu_channel_block = 16;
         c.profile = DeviceProfile::ServerM;
         c.kernel_type = "gauss2d".into();
         let j = c.to_json().to_pretty();
@@ -326,6 +339,8 @@ mod tests {
         let v = crate::json::parse(r#"{"profile": "tpu"}"#).unwrap();
         assert!(HegridConfig::from_json(&v).is_err());
         let v = crate::json::parse(r#"{"prefetch_depth": 0}"#).unwrap();
+        assert!(HegridConfig::from_json(&v).is_err());
+        let v = crate::json::parse(r#"{"cpu_channel_block": 100000}"#).unwrap();
         assert!(HegridConfig::from_json(&v).is_err());
     }
 

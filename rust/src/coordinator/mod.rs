@@ -475,13 +475,16 @@ impl HegridEngine {
         let stream = g % self.streams.n_streams();
         let kparam = job.kernel.kparam();
 
+        // The group's channel values, borrowed once for all shards.
+        let group_values: Vec<&[f32]> = batch.values.iter().map(|v| v.as_slice()).collect();
+
         for (shard_idx, shard) in plan.shards.iter().enumerate() {
-            // T1: permute + pad this group's channel values into [c, n].
+            // T1: permute + pad this group's channel values into [c, n] —
+            // one pass over the shard's gather index for the whole group
+            // (O(1) validation per channel; see `ShardPlan::permute_group_into`).
             let t1 = Instant::now();
             let mut staged = self.mem.take(variant.c * variant.n);
-            for values in &batch.values {
-                shard.permute_into(values, variant.n, &mut staged)?;
-            }
+            shard.permute_group_into(&group_values, variant.n, &mut staged)?;
             // Pad missing channels (last group) with zeros.
             staged.resize(variant.c * variant.n, 0.0);
             let sval = Arc::new(staged.into_inner());

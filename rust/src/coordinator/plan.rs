@@ -66,6 +66,9 @@ pub struct ShardPlan {
     pub slat: Arc<Vec<f32>>,
     /// Original-sample index of each shard-local sorted sample.
     perm: Vec<u32>,
+    /// Minimum channel length the permute accepts (max original index + 1),
+    /// precomputed so T1 validation is O(1) instead of a scan per channel.
+    required_len: usize,
     tiles: Vec<TileData>,
     pub overflow_groups: usize,
     pub adjacent_reuse: f64,
@@ -76,20 +79,56 @@ impl ShardPlan {
         &self.tiles[t]
     }
 
-    /// Append one channel's shard values in sorted order, zero-padded to
-    /// `n`, onto `out` (building the `[c, n]` staging buffer).
-    pub fn permute_into(&self, values: &[f32], n: usize, out: &mut Vec<f32>) -> Result<()> {
-        if self.perm.iter().any(|&i| i as usize >= values.len()) {
+    fn check_channel_len(&self, values: &[f32]) -> Result<()> {
+        if values.len() < self.required_len {
             return Err(HegridError::Internal(
                 "permute_into: channel shorter than dataset".into(),
             ));
         }
+        Ok(())
+    }
+
+    /// Append one channel's shard values in sorted order, zero-padded to
+    /// `n`, onto `out` (building the `[c, n]` staging buffer).
+    pub fn permute_into(&self, values: &[f32], n: usize, out: &mut Vec<f32>) -> Result<()> {
+        self.check_channel_len(values)?;
         out.reserve(n);
         for &i in &self.perm {
             out.push(values[i as usize]);
         }
         for _ in self.perm.len()..n {
             out.push(0.0);
+        }
+        Ok(())
+    }
+
+    /// Permute every channel of a group in one pass over `perm` (the gather
+    /// index and its cache misses are paid once per group instead of once
+    /// per channel), appending each channel's sorted values zero-padded to
+    /// `n` — the `[c, n]` staging layout T1 feeds the device.
+    pub fn permute_group_into(
+        &self,
+        channels: &[&[f32]],
+        n: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        for values in channels {
+            self.check_channel_len(values)?;
+        }
+        if self.perm.len() > n {
+            return Err(HegridError::Internal(format!(
+                "permute_group_into: shard of {} samples exceeds padded width {n}",
+                self.perm.len()
+            )));
+        }
+        let base = out.len();
+        out.resize(base + channels.len() * n, 0.0);
+        let dst = &mut out[base..];
+        for (j, &i) in self.perm.iter().enumerate() {
+            let i = i as usize;
+            for (c, values) in channels.iter().enumerate() {
+                dst[c * n + j] = values[i];
+            }
         }
         Ok(())
     }
@@ -167,10 +206,13 @@ impl DispatchPlan {
             slon.resize(variant.n, 0.0);
             slat.resize(variant.n, 0.0);
 
+            let required_len =
+                view.perm.iter().map(|&i| i as usize + 1).max().unwrap_or(0);
             shards.push(ShardPlan {
                 slon: Arc::new(slon),
                 slat: Arc::new(slat),
                 perm: view.perm.clone(),
+                required_len,
                 tiles,
                 overflow_groups: table.stats.overflow_groups,
                 adjacent_reuse: table.stats.adjacent_reuse,
@@ -265,6 +307,31 @@ mod tests {
                 &plan.shards[0].tile(0).cell_lon,
                 &plan.shards[1].tile(0).cell_lon
             ));
+        }
+    }
+
+    #[test]
+    fn group_permute_matches_per_channel_permute() {
+        let d = crate::sim::SimConfig::quick_preset().generate();
+        let cfg = HegridConfig::default();
+        let job = super::super::GriddingJob::for_dataset(&d, &cfg).unwrap();
+        let v = fake_variant(256, 32, 4, 1536, 1);
+        let plan = DispatchPlan::build(&d.lons, &d.lats, &job, &v, 0, 4).unwrap();
+        let chans: Vec<Vec<f32>> = (0..3)
+            .map(|c| (0..d.n_samples()).map(|i| (c * 100_000 + i) as f32).collect())
+            .collect();
+        for shard in &plan.shards {
+            let mut per_channel = Vec::new();
+            for ch in &chans {
+                shard.permute_into(ch, v.n, &mut per_channel).unwrap();
+            }
+            let mut grouped = Vec::new();
+            let refs: Vec<&[f32]> = chans.iter().map(|c| c.as_slice()).collect();
+            shard.permute_group_into(&refs, v.n, &mut grouped).unwrap();
+            assert_eq!(per_channel, grouped);
+            // Short channels are rejected (O(1) check).
+            let short = vec![0.0f32; 1];
+            assert!(shard.permute_group_into(&[short.as_slice()], v.n, &mut grouped).is_err());
         }
     }
 

@@ -3,15 +3,43 @@
 //! Implements Eq. (1) directly over the shared LUT in f64 — the correctness
 //! oracle for the device path (integration tests pin PJRT output against it)
 //! and the computational core of the Cygrid baseline (`baselines::cygrid`).
+//!
+//! Hot-path design (README "Performance", `benches/cpu_throughput.rs`):
+//!
+//! * **Trig-free inner loop** — per-sample unit vectors are precomputed in
+//!   [`SharedComponent`]; the sample loop is a squared-chord distance test
+//!   plus one `asin` for accepted pairs ([`crate::healpix::chord2_to_arc`])
+//!   instead of a four-trig haversine per pair.
+//! * **Per-worker scratch** — ring ranges, the contributor list, and the
+//!   channel-block accumulator live in worker-local state reused across
+//!   cells ([`parallel_items_scoped`]), replacing the former per-cell heap
+//!   allocations; cells are claimed in blocks, not one `fetch_add` each.
+//! * **Channel-blocked accumulation** — channel values are permuted once
+//!   into a sample-major `vals[j·n_ch + c]` matrix, and each cell's
+//!   contributors are applied `channel_block` channels at a time: a
+//!   unit-stride FMA loop whose accumulators stay resident in registers/L1
+//!   (the paper's thread-level data reuse, §4.3.3).
+//!
+//! Per-channel accumulation order depends only on the LUT walk, so results
+//! are **bit-identical** across worker counts, claim blocks, and
+//! `channel_block` widths (`rust/tests/cpu_blocked_equivalence.rs`).
 
 use std::f64::consts::FRAC_PI_2;
 
 use crate::data::Dataset;
 use crate::grid::kernels::ConvKernel;
 use crate::grid::prep::SharedComponent;
-use crate::healpix::{ang_dist, PixRange};
+use crate::healpix::{chord2, chord2_to_arc, unit_vec, PixRange};
 use crate::sky::{GridSpec, SkyMap};
-use crate::util::threads::parallel_items;
+use crate::util::threads::{parallel_chunks, parallel_items_scoped, DisjointWriter};
+
+/// Default channel-block width: 8 f64 accumulators (one cache line) — wide
+/// enough to amortise the weight evaluation over the FMAs, small enough to
+/// stay register-resident.
+pub const DEFAULT_CHANNEL_BLOCK: usize = 8;
+
+/// Cells claimed per scheduler round-trip (one `fetch_add` per block).
+const CELL_CLAIM_BLOCK: usize = 16;
 
 /// Multi-channel CPU gridder (gather method, Fig 2 right).
 #[derive(Clone, Debug)]
@@ -19,16 +47,44 @@ pub struct CpuGridder {
     pub spec: GridSpec,
     pub kernel: ConvKernel,
     pub workers: usize,
+    /// Channel-block width B of the blocked accumulation
+    /// (0 = [`DEFAULT_CHANNEL_BLOCK`]; clamped to the channel count).
+    pub channel_block: usize,
+}
+
+/// Per-worker scratch reused across cells — the former per-cell heap
+/// allocations of the hot loop.
+struct CellScratch {
+    ranges: Vec<PixRange>,
+    /// `(weight, sorted sample index)` of the current cell's contributors.
+    contrib: Vec<(f64, u32)>,
+    /// Channel-block accumulators (length = block width).
+    local: Vec<f64>,
 }
 
 impl CpuGridder {
     pub fn new(spec: GridSpec, kernel: ConvKernel) -> Self {
-        CpuGridder { spec, kernel, workers: crate::util::threads::default_parallelism() }
+        CpuGridder {
+            spec,
+            kernel,
+            workers: crate::util::threads::default_parallelism(),
+            channel_block: 0,
+        }
     }
 
     pub fn with_workers(mut self, workers: usize) -> Self {
         self.workers = workers.max(1);
         self
+    }
+
+    pub fn with_channel_block(mut self, block: usize) -> Self {
+        self.channel_block = block;
+        self
+    }
+
+    fn effective_channel_block(&self, n_ch: usize) -> usize {
+        let b = if self.channel_block == 0 { DEFAULT_CHANNEL_BLOCK } else { self.channel_block };
+        b.clamp(1, n_ch.max(1))
     }
 
     /// Grid every channel of `dataset` (builds its own shared component).
@@ -45,46 +101,106 @@ impl CpuGridder {
     pub fn grid_with_shared(&self, shared: &SharedComponent, channels: &[Vec<f32>]) -> Vec<SkyMap> {
         let n_cells = self.spec.n_cells();
         let n_ch = channels.len();
+        let n = shared.n_samples();
+        let block = self.effective_channel_block(n_ch);
+
+        // Permute + transpose once: vals[j·n_ch + c] = channels[c][perm[j]].
+        // Sample-major, so the blocked accumulation below reads unit-stride.
+        let mut vals = vec![0.0f32; n * n_ch];
+        if n_ch > 0 && n > 0 {
+            let w = DisjointWriter::new(&mut vals);
+            let perm = &shared.perm;
+            parallel_chunks(n, self.workers, |_, s, e| {
+                for j in s..e {
+                    let orig = perm[j] as usize;
+                    let row = unsafe { w.slice(j * n_ch, n_ch) };
+                    for (dst, ch) in row.iter_mut().zip(channels) {
+                        *dst = ch[orig];
+                    }
+                }
+            });
+        }
+
         // acc[ch][cell], wsum[cell]; written by disjoint cells in parallel.
         let mut acc = vec![0.0f64; n_ch * n_cells];
         let mut wsum = vec![0.0f64; n_cells];
         {
-            let acc_ptr = CellPtr(acc.as_mut_ptr());
-            let wsum_ptr = CellPtr(wsum.as_mut_ptr());
-            parallel_items(n_cells, self.workers, |cell| {
-                let (clon, clat) = self.spec.cell_center_flat(cell);
-                let ctheta = FRAC_PI_2 - clat;
-                let mut ranges: Vec<PixRange> = Vec::new();
-                shared
-                    .healpix
-                    .query_disc_rings_into(ctheta, clon, self.kernel.support, &mut ranges);
-                let clat_cos = clat.cos();
-                let mut w_tot = 0.0f64;
-                // Local per-channel accumulators to minimise shared writes.
-                let mut local = vec![0.0f64; n_ch];
-                for r in &ranges {
-                    let (a, b) = shared.samples_in_pix_range(r.lo, r.hi);
-                    for j in a..b {
-                        let (slon, slat) = (shared.slon64[j], shared.slat64[j]);
-                        let d = ang_dist(ctheta, clon, FRAC_PI_2 - slat, slon);
-                        let d2 = d * d;
-                        let w = self.kernel.weight(d2, (slon - clon) * clat_cos, slat - clat);
-                        if w != 0.0 {
-                            w_tot += w;
-                            let orig = shared.perm[j] as usize;
-                            for (c, ch) in channels.iter().enumerate() {
-                                local[c] += w * ch[orig] as f64;
+            let acc_w = DisjointWriter::new(&mut acc);
+            let wsum_w = DisjointWriter::new(&mut wsum);
+            let vals = &vals;
+            // Prefilter radius in squared-chord space (chord = 2·sin(d/2)),
+            // padded by 1e-9 relative so rounding at the boundary always
+            // defers to the exact d² cut inside `ConvKernel::weight`. A
+            // support ≥ π covers the whole sphere (sin is no longer
+            // monotone there), so the prefilter is disabled.
+            let chord2_max = if self.kernel.support >= std::f64::consts::PI {
+                f64::INFINITY
+            } else {
+                let half = (0.5 * self.kernel.support).sin();
+                4.0 * half * half * (1.0 + 1e-9)
+            };
+            parallel_items_scoped(
+                n_cells,
+                self.workers,
+                CELL_CLAIM_BLOCK,
+                || CellScratch {
+                    ranges: Vec::new(),
+                    contrib: Vec::new(),
+                    local: vec![0.0f64; block],
+                },
+                |scratch, cell| {
+                    let (clon, clat) = self.spec.cell_center_flat(cell);
+                    shared.healpix.query_disc_rings_into(
+                        FRAC_PI_2 - clat,
+                        clon,
+                        self.kernel.support,
+                        &mut scratch.ranges,
+                    );
+                    let cu = unit_vec(clon, clat);
+                    let clat_cos = clat.cos();
+                    let mut w_tot = 0.0f64;
+                    scratch.contrib.clear();
+                    for r in &scratch.ranges {
+                        let (a, b) = shared.samples_in_pix_range(r.lo, r.hi);
+                        for j in a..b {
+                            let c2 = chord2(&shared.unit[j], &cu);
+                            if c2 > chord2_max {
+                                continue;
+                            }
+                            let d = chord2_to_arc(c2);
+                            let w = self.kernel.weight(
+                                d * d,
+                                (shared.slon64[j] - clon) * clat_cos,
+                                shared.slat64[j] - clat,
+                            );
+                            if w != 0.0 {
+                                w_tot += w;
+                                scratch.contrib.push((w, j as u32));
                             }
                         }
                     }
-                }
-                unsafe {
-                    wsum_ptr.write(cell, w_tot);
-                    for c in 0..n_ch {
-                        acc_ptr.write(c * n_cells + cell, local[c]);
+                    unsafe { wsum_w.write(cell, w_tot) };
+                    // Blocked accumulation: B accumulators swept over the
+                    // contributor list, unit-stride in the sample-major rows.
+                    let mut c0 = 0;
+                    while c0 < n_ch {
+                        let wb = block.min(n_ch - c0);
+                        let local = &mut scratch.local[..wb];
+                        local.fill(0.0);
+                        for &(w, j) in &scratch.contrib {
+                            let base = j as usize * n_ch + c0;
+                            let row = &vals[base..base + wb];
+                            for (sum, &v) in local.iter_mut().zip(row) {
+                                *sum += w * v as f64;
+                            }
+                        }
+                        for (k, &sum) in local.iter().enumerate() {
+                            unsafe { acc_w.write((c0 + k) * n_cells + cell, sum) };
+                        }
+                        c0 += wb;
                     }
-                }
-            });
+                },
+            );
         }
         (0..n_ch)
             .map(|c| {
@@ -99,18 +215,10 @@ impl CpuGridder {
     }
 }
 
-/// Disjoint-cell writer handle.
-struct CellPtr(*mut f64);
-unsafe impl Sync for CellPtr {}
-impl CellPtr {
-    unsafe fn write(&self, i: usize, v: f64) {
-        unsafe { self.0.add(i).write(v) };
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::healpix::ang_dist_vec;
     use crate::sim::SimConfig;
     use crate::util::SplitMix64;
 
@@ -118,7 +226,10 @@ mod tests {
         (GridSpec::centered(30.0, 41.0, 12, 6, 0.25), ConvKernel::gauss1d_for_beam(0.5))
     }
 
-    /// Brute-force Eq. (1) without any LUT.
+    /// Brute-force Eq. (1) without any LUT. Uses the same per-pair distance
+    /// helper as the gridder — the oracle pins the LUT walk, the blocking,
+    /// and the parallel machinery, while the metric itself is pinned against
+    /// the haversine in `healpix::tests::chord_distance_matches_haversine`.
     fn brute_force(
         spec: &GridSpec,
         kernel: &ConvKernel,
@@ -129,15 +240,11 @@ mod tests {
         let mut out = vec![f64::NAN; spec.n_cells()];
         for cell in 0..spec.n_cells() {
             let (clon, clat) = spec.cell_center_flat(cell);
+            let cu = unit_vec(clon, clat);
             let mut acc = 0.0;
             let mut w_tot = 0.0;
             for j in 0..lons.len() {
-                let d = ang_dist(
-                    FRAC_PI_2 - clat,
-                    clon,
-                    FRAC_PI_2 - lats[j],
-                    lons[j],
-                );
+                let d = ang_dist_vec(&unit_vec(lons[j], lats[j]), &cu);
                 let w =
                     kernel.weight(d * d, (lons[j] - clon) * clat.cos(), lats[j] - clat);
                 if w != 0.0 {
@@ -192,6 +299,26 @@ mod tests {
         for (ma, mb) in a.iter().zip(&b) {
             for (va, vb) in ma.values().iter().zip(mb.values()) {
                 assert!((va.is_nan() && vb.is_nan()) || va == vb);
+            }
+        }
+    }
+
+    #[test]
+    fn channel_block_width_does_not_change_results() {
+        let (spec, kernel) = small_setup();
+        let d = SimConfig::quick_preset().generate();
+        let shared = SharedComponent::for_kernel(&d.lons, &d.lats, &kernel).unwrap();
+        let base = CpuGridder::new(spec.clone(), kernel.clone())
+            .with_channel_block(1)
+            .grid_with_shared(&shared, &d.channels);
+        for block in [0usize, 3, d.n_channels(), 64] {
+            let m = CpuGridder::new(spec.clone(), kernel.clone())
+                .with_channel_block(block)
+                .grid_with_shared(&shared, &d.channels);
+            for (ma, mb) in base.iter().zip(&m) {
+                for (va, vb) in ma.values().iter().zip(mb.values()) {
+                    assert_eq!(va.to_bits(), vb.to_bits(), "block {block}");
+                }
             }
         }
     }

@@ -11,10 +11,20 @@
 
 use crate::grid::kernels::ConvKernel;
 use crate::grid::prep::SharedComponent;
-use crate::healpix::{ang_dist, PixRange};
+use crate::healpix::{ang_dist_vec, unit_vec, PixRange};
 use crate::sky::GridSpec;
-use crate::util::threads::parallel_items;
+use crate::util::threads::{parallel_items_scoped, DisjointWriter};
 use std::f64::consts::FRAC_PI_2;
+
+/// Groups claimed per scheduler round-trip.
+const GROUP_CLAIM_BLOCK: usize = 8;
+
+/// Per-worker scratch reused across groups (ring ranges + candidate list) —
+/// replaces the former per-group heap allocations.
+struct GroupScratch {
+    ranges: Vec<PixRange>,
+    found: Vec<(f64, i32)>,
+}
 
 /// Build statistics (Fig 13/14/16 instrumentation).
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -86,74 +96,83 @@ impl NeighborTable {
         let max_cand = std::sync::atomic::AtomicUsize::new(0);
 
         {
-            let nbr_ptr = NbrPtr(nbr.as_mut_ptr());
+            let nbr_w = DisjointWriter::new(&mut nbr);
             let lons = &lons;
             let lats = &lats;
-            parallel_items(total_groups, workers.max(1), |g| {
-                // Member cells of this group (global flattened cell ids).
-                let first_cell = g * gamma;
-                if first_cell >= n_cells {
-                    return; // pure padding group
-                }
-                let members: Vec<usize> =
-                    (first_cell..(first_cell + gamma).min(n_cells)).collect();
-                // Group center + search margin.
-                let clon = members.iter().map(|&i| lons[i]).sum::<f64>() / members.len() as f64;
-                let clat = members.iter().map(|&i| lats[i]).sum::<f64>() / members.len() as f64;
-                let margin = members
-                    .iter()
-                    .map(|&i| ang_dist(FRAC_PI_2 - clat, clon, FRAC_PI_2 - lats[i], lons[i]))
-                    .fold(0.0f64, f64::max);
-                let radius = kernel.support + margin;
+            parallel_items_scoped(
+                total_groups,
+                workers.max(1),
+                GROUP_CLAIM_BLOCK,
+                || GroupScratch { ranges: Vec::new(), found: Vec::with_capacity(k) },
+                |scratch, g| {
+                    // Member cells of this group: the contiguous flattened-id
+                    // range [first_cell, end).
+                    let first_cell = g * gamma;
+                    if first_cell >= n_cells {
+                        return; // pure padding group
+                    }
+                    let end = (first_cell + gamma).min(n_cells);
+                    let count = (end - first_cell) as f64;
+                    // Group center + search margin.
+                    let clon = lons[first_cell..end].iter().sum::<f64>() / count;
+                    let clat = lats[first_cell..end].iter().sum::<f64>() / count;
+                    let cu = unit_vec(clon, clat);
+                    let margin = (first_cell..end)
+                        .map(|i| ang_dist_vec(&cu, &unit_vec(lons[i], lats[i])))
+                        .fold(0.0f64, f64::max);
+                    // Padded by 1e-12 rad (≪ any pixel) so ulp-level
+                    // disagreement with other distance formulations at the
+                    // exact support boundary can only *add* a zero-weight
+                    // candidate, never drop a true neighbour.
+                    let radius = kernel.support + margin + 1e-12;
 
-                // Ring walk (Algorithm 1's contribution region) → candidates.
-                let mut ranges: Vec<PixRange> = Vec::new();
-                shared.healpix.query_disc_rings_into(
-                    FRAC_PI_2 - clat,
-                    clon,
-                    radius,
-                    &mut ranges,
-                );
-                let out = unsafe { nbr_ptr.slice(g * k, k) };
-                let mut found: Vec<(f64, i32)> = Vec::with_capacity(k);
-                for r in &ranges {
-                    let (a, b) = shared.samples_in_pix_range(r.lo, r.hi);
-                    for j in a..b {
-                        // Exact prefilter against the group center: any sample
-                        // within R of a member is within R + margin of the
-                        // center, so this never drops a true neighbour.
-                        let d = ang_dist(
-                            FRAC_PI_2 - clat,
-                            clon,
-                            FRAC_PI_2 - shared.slat64[j],
-                            shared.slon64[j],
-                        );
-                        if d <= radius {
-                            found.push((d, j as i32));
+                    // Ring walk (Algorithm 1's contribution region) →
+                    // candidates.
+                    shared.healpix.query_disc_rings_into(
+                        FRAC_PI_2 - clat,
+                        clon,
+                        radius,
+                        &mut scratch.ranges,
+                    );
+                    let out = unsafe { nbr_w.slice(g * k, k) };
+                    let found = &mut scratch.found;
+                    found.clear();
+                    for r in &scratch.ranges {
+                        let (a, b) = shared.samples_in_pix_range(r.lo, r.hi);
+                        for j in a..b {
+                            // Exact prefilter against the group center,
+                            // trig-free via the precomputed unit vectors: any
+                            // sample within R of a member is within R + margin
+                            // of the center, so this never drops a true
+                            // neighbour.
+                            let d = ang_dist_vec(&cu, &shared.unit[j]);
+                            if d <= radius {
+                                found.push((d, j as i32));
+                            }
                         }
                     }
-                }
-                let candidates = found.len();
-                if candidates > k {
-                    // Keep the K *nearest* candidates: far samples carry
-                    // exponentially small weights, so this truncation is the
-                    // graceful one (first-K-in-ring-order would drop whole
-                    // rings and bias the result spatially).
-                    overflow.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    found.select_nth_unstable_by(k - 1, |a, b| {
-                        a.0.partial_cmp(&b.0).expect("distances are finite")
-                    });
-                    found.truncate(k);
-                    // Restore ascending sample order (reuse measurement and
-                    // gather locality both rely on it).
-                    found.sort_unstable_by_key(|e| e.1);
-                }
-                for (slot, (_, j)) in out.iter_mut().zip(&found) {
-                    *slot = *j;
-                }
-                total_cand.fetch_add(found.len(), std::sync::atomic::Ordering::Relaxed);
-                max_cand.fetch_max(candidates, std::sync::atomic::Ordering::Relaxed);
-            });
+                    let candidates = found.len();
+                    if candidates > k {
+                        // Keep the K *nearest* candidates: far samples carry
+                        // exponentially small weights, so this truncation is
+                        // the graceful one (first-K-in-ring-order would drop
+                        // whole rings and bias the result spatially).
+                        overflow.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        found.select_nth_unstable_by(k - 1, |a, b| {
+                            a.0.partial_cmp(&b.0).expect("distances are finite")
+                        });
+                        found.truncate(k);
+                        // Restore ascending sample order (reuse measurement
+                        // and gather locality both rely on it).
+                        found.sort_unstable_by_key(|e| e.1);
+                    }
+                    for (slot, &(_, j)) in out.iter_mut().zip(found.iter()) {
+                        *slot = j;
+                    }
+                    total_cand.fetch_add(found.len(), std::sync::atomic::Ordering::Relaxed);
+                    max_cand.fetch_max(candidates, std::sync::atomic::Ordering::Relaxed);
+                },
+            );
         }
 
         let mut table = NeighborTable {
@@ -268,19 +287,10 @@ impl NeighborTable {
     }
 }
 
-/// Disjoint-slice writer handle (each group owns `nbr[g·k .. (g+1)·k]`).
-struct NbrPtr(*mut i32);
-unsafe impl Sync for NbrPtr {}
-impl NbrPtr {
-    #[allow(clippy::mut_from_ref)]
-    unsafe fn slice(&self, start: usize, len: usize) -> &mut [i32] {
-        unsafe { std::slice::from_raw_parts_mut(self.0.add(start), len) }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::healpix::ang_dist;
     use crate::util::SplitMix64;
 
     fn setup(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>, GridSpec, ConvKernel) {

@@ -13,6 +13,7 @@
 //! permute_channel`] reorders a channel's value column into the sorted
 //! layout (the per-pipeline half of step ③).
 
+use std::f64::consts::FRAC_PI_2;
 use std::time::Duration;
 
 use crate::grid::kernels::ConvKernel;
@@ -20,7 +21,11 @@ use crate::grid::sort::{radix_sort_by_key, KeyIdx};
 use crate::healpix::Healpix;
 use crate::logging::timed;
 use crate::util::error::{HegridError, Result};
-use crate::util::threads::{default_parallelism, parallel_chunks};
+use crate::util::threads::{default_parallelism, parallel_chunks, DisjointWriter};
+
+/// Columns below this size are permuted serially — the gather is pure
+/// memory traffic, so thread spawn overhead dominates on small inputs.
+const PAR_PERMUTE_MIN: usize = 1 << 15;
 
 /// Build-time metrics of a shared component (Fig 8's T-stage accounting).
 #[derive(Clone, Debug, Default)]
@@ -53,6 +58,20 @@ pub struct SharedComponent {
     /// Sorted coordinates in full precision for the CPU gridder.
     pub slon64: Vec<f64>,
     pub slat64: Vec<f64>,
+    /// Precomputed per-sample trig (sorted order): sin/cos of the latitude
+    /// and the colatitude θ = π/2 − lat. `unit` below is assembled from the
+    /// same sin/cos evaluations; the columns themselves are kept for device
+    /// staging and ring-walk consumers that work in (θ, sin, cos) terms.
+    pub sin_lat: Vec<f64>,
+    pub cos_lat: Vec<f64>,
+    pub ctheta: Vec<f64>,
+    /// Per-sample unit 3-vectors (bit-identical to `unit_vec(lon, lat)`) —
+    /// the operand of the trig-free chord distance in the gridder and
+    /// neighbour-walk inner loops (redundancy elimination, §4.3).
+    pub unit: Vec<[f64; 3]>,
+    /// Worker budget the component was built with; reused by the parallel
+    /// [`SharedComponent::permute_channel`].
+    pub workers: usize,
     pub stats: PrepStats,
 }
 
@@ -74,11 +93,11 @@ impl SharedComponent {
         let mut items: Vec<KeyIdx> = vec![KeyIdx { key: 0, idx: 0 }; n];
         let (_, t) = timed(|| {
             let hp = &healpix;
-            let items_ptr = SendPtr(items.as_mut_ptr());
+            let items_w = DisjointWriter::new(&mut items);
             parallel_chunks(n, workers, |_, s, e| {
                 for i in s..e {
                     let key = hp.ang2pix_radec(lons[i], lats[i]);
-                    unsafe { items_ptr.write(i, KeyIdx { key, idx: i as u32 }) };
+                    unsafe { items_w.write(i, KeyIdx { key, idx: i as u32 }) };
                 }
             });
         });
@@ -88,23 +107,52 @@ impl SharedComponent {
         let (_, t) = timed(|| radix_sort_by_key(&mut items, workers));
         stats.t_sort = t;
 
-        // ③ adjust coordinate memory to the sorted order.
-        let mut sorted_pix = Vec::with_capacity(n);
-        let mut perm = Vec::with_capacity(n);
-        let mut slon = Vec::with_capacity(n);
-        let mut slat = Vec::with_capacity(n);
-        let mut slon64 = Vec::with_capacity(n);
-        let mut slat64 = Vec::with_capacity(n);
+        // ③ adjust coordinate memory to the sorted order, in parallel, and
+        // precompute the per-sample trig columns (sin/cos lat, colatitude,
+        // unit vector) so the gridding inner loops are trig-free.
+        let mut sorted_pix = vec![0u64; n];
+        let mut perm = vec![0u32; n];
+        let mut slon = vec![0.0f32; n];
+        let mut slat = vec![0.0f32; n];
+        let mut slon64 = vec![0.0f64; n];
+        let mut slat64 = vec![0.0f64; n];
+        let mut sin_lat = vec![0.0f64; n];
+        let mut cos_lat = vec![0.0f64; n];
+        let mut ctheta = vec![0.0f64; n];
+        let mut unit = vec![[0.0f64; 3]; n];
         let (_, t) = timed(|| {
-            for e in &items {
-                sorted_pix.push(e.key);
-                perm.push(e.idx);
-                let i = e.idx as usize;
-                slon.push(lons[i] as f32);
-                slat.push(lats[i] as f32);
-                slon64.push(lons[i]);
-                slat64.push(lats[i]);
-            }
+            let w_pix = DisjointWriter::new(&mut sorted_pix);
+            let w_perm = DisjointWriter::new(&mut perm);
+            let w_slon = DisjointWriter::new(&mut slon);
+            let w_slat = DisjointWriter::new(&mut slat);
+            let w_slon64 = DisjointWriter::new(&mut slon64);
+            let w_slat64 = DisjointWriter::new(&mut slat64);
+            let w_sin = DisjointWriter::new(&mut sin_lat);
+            let w_cos = DisjointWriter::new(&mut cos_lat);
+            let w_ctheta = DisjointWriter::new(&mut ctheta);
+            let w_unit = DisjointWriter::new(&mut unit);
+            let items = &items;
+            parallel_chunks(n, workers, |_, s, e| {
+                for j in s..e {
+                    let entry = &items[j];
+                    let i = entry.idx as usize;
+                    let (sin_lat, cos_lat) = lats[i].sin_cos();
+                    let (sin_lon, cos_lon) = lons[i].sin_cos();
+                    unsafe {
+                        w_pix.write(j, entry.key);
+                        w_perm.write(j, entry.idx);
+                        w_slon.write(j, lons[i] as f32);
+                        w_slat.write(j, lats[i] as f32);
+                        w_slon64.write(j, lons[i]);
+                        w_slat64.write(j, lats[i]);
+                        w_sin.write(j, sin_lat);
+                        w_cos.write(j, cos_lat);
+                        w_ctheta.write(j, FRAC_PI_2 - lats[i]);
+                        // Same ops/order as `healpix::unit_vec` ⇒ bit-equal.
+                        w_unit.write(j, [cos_lat * cos_lon, cos_lat * sin_lon, sin_lat]);
+                    }
+                }
+            });
         });
         stats.t_adjust = t;
 
@@ -117,7 +165,21 @@ impl SharedComponent {
         });
         stats.t_lut = t;
 
-        Ok(SharedComponent { healpix, sorted_pix, perm, slon, slat, slon64, slat64, stats })
+        Ok(SharedComponent {
+            healpix,
+            sorted_pix,
+            perm,
+            slon,
+            slat,
+            slon64,
+            slat64,
+            sin_lat,
+            cos_lat,
+            ctheta,
+            unit,
+            workers,
+            stats,
+        })
     }
 
     /// Build with the HEALPix resolution matched to a kernel's support.
@@ -153,12 +215,18 @@ impl SharedComponent {
             slat: self.slat[lo..hi].to_vec(),
             slon64: self.slon64[lo..hi].to_vec(),
             slat64: self.slat64[lo..hi].to_vec(),
+            sin_lat: self.sin_lat[lo..hi].to_vec(),
+            cos_lat: self.cos_lat[lo..hi].to_vec(),
+            ctheta: self.ctheta[lo..hi].to_vec(),
+            unit: self.unit[lo..hi].to_vec(),
+            workers: self.workers,
             stats: self.stats.clone(),
         }
     }
 
-    /// Reorder one channel's value column into the sorted layout, appending
-    /// into `out` (cleared first). The per-pipeline half of step ③.
+    /// Reorder one channel's value column into the sorted layout, replacing
+    /// the contents of `out`. The per-pipeline half of step ③ — parallelised
+    /// over sample chunks once the column is large enough to pay for it.
     pub fn permute_channel(&self, values: &[f32], out: &mut Vec<f32>) -> Result<()> {
         if values.len() != self.perm.len() {
             return Err(HegridError::Internal(format!(
@@ -167,21 +235,18 @@ impl SharedComponent {
                 self.perm.len()
             )));
         }
+        let n = self.perm.len();
         out.clear();
-        out.reserve(values.len());
-        for &i in &self.perm {
-            out.push(values[i as usize]);
-        }
+        out.resize(n, 0.0);
+        let workers = if n >= PAR_PERMUTE_MIN { self.workers } else { 1 };
+        let w = DisjointWriter::new(&mut out[..]);
+        let perm = &self.perm;
+        parallel_chunks(n, workers, |_, s, e| {
+            for j in s..e {
+                unsafe { w.write(j, values[perm[j] as usize]) };
+            }
+        });
         Ok(())
-    }
-}
-
-/// Disjoint-index writer handle for parallel initialisation.
-struct SendPtr(*mut KeyIdx);
-unsafe impl Sync for SendPtr {}
-impl SendPtr {
-    unsafe fn write(&self, i: usize, v: KeyIdx) {
-        unsafe { self.0.add(i).write(v) };
     }
 }
 
@@ -216,6 +281,25 @@ mod tests {
             assert!(!seen[i as usize]);
             seen[i as usize] = true;
         }
+    }
+
+    #[test]
+    fn trig_columns_match_recomputation() {
+        let (lons, lats) = random_coords(3000, 11);
+        let sc = SharedComponent::build(&lons, &lats, 0.02, 4).unwrap();
+        for j in (0..3000).step_by(53) {
+            let i = sc.perm[j] as usize;
+            assert_eq!(sc.sin_lat[j], lats[i].sin());
+            assert_eq!(sc.cos_lat[j], lats[i].cos());
+            assert_eq!(sc.ctheta[j], FRAC_PI_2 - lats[i]);
+            assert_eq!(sc.unit[j], crate::healpix::unit_vec(lons[i], lats[i]));
+        }
+        // Parallel and serial builds agree bit-for-bit.
+        let sc1 = SharedComponent::build(&lons, &lats, 0.02, 1).unwrap();
+        assert_eq!(sc.perm, sc1.perm);
+        assert_eq!(sc.sin_lat, sc1.sin_lat);
+        assert_eq!(sc.unit, sc1.unit);
+        assert_eq!(sc.slon64, sc1.slon64);
     }
 
     #[test]
@@ -276,6 +360,9 @@ mod tests {
             let i = sub.perm[j] as usize;
             assert_eq!(sub.slon64[j], lons[i]);
             assert_eq!(sub.sorted_pix[j], sc.sorted_pix[500 + j]);
+            assert_eq!(sub.unit[j], sc.unit[500 + j]);
+            assert_eq!(sub.cos_lat[j], sc.cos_lat[500 + j]);
+            assert_eq!(sub.ctheta[j], sc.ctheta[500 + j]);
         }
         // Span lookup agrees with the parent's, shifted.
         let (a, b) = sub.samples_in_pix_range(sub.sorted_pix[0], sub.sorted_pix[999]);

@@ -424,6 +424,45 @@ pub fn ang_dist(theta1: f64, phi1: f64, theta2: f64, phi2: f64) -> f64 {
     2.0 * h.sqrt().clamp(0.0, 1.0).asin()
 }
 
+/// Unit 3-vector of a direction given as (lon, lat), radians.
+///
+/// The trig half of the chord distance: precompute this per sample
+/// ([`crate::grid::prep::SharedComponent`]) and per cell, and the hot-loop
+/// distance [`ang_dist_vec`] needs no trig beyond one `asin` per pair.
+#[inline]
+pub fn unit_vec(lon: f64, lat: f64) -> [f64; 3] {
+    let (sin_lat, cos_lat) = lat.sin_cos();
+    let (sin_lon, cos_lon) = lon.sin_cos();
+    [cos_lat * cos_lon, cos_lat * sin_lon, sin_lat]
+}
+
+/// Squared chord length between two unit vectors — a trig-free, monotone
+/// proxy for angular distance (`chord = 2·sin(d/2)`), usable directly as a
+/// cut-off prefilter.
+#[inline]
+pub fn chord2(a: &[f64; 3], b: &[f64; 3]) -> f64 {
+    let dx = a[0] - b[0];
+    let dy = a[1] - b[1];
+    let dz = a[2] - b[2];
+    dx * dx + dy * dy + dz * dz
+}
+
+/// Arc length from a squared chord: `d = 2·asin(√c²/2)`.
+///
+/// Numerically stable at small separations — the chord is formed from
+/// coordinate *differences*, so there is no `acos(≈1)` cancellation; agrees
+/// with the haversine [`ang_dist`] to ~1 ulp (pinned by tests).
+#[inline]
+pub fn chord2_to_arc(c2: f64) -> f64 {
+    2.0 * (0.5 * c2.sqrt()).min(1.0).asin()
+}
+
+/// Angular distance between two precomputed unit vectors (see [`unit_vec`]).
+#[inline]
+pub fn ang_dist_vec(a: &[f64; 3], b: &[f64; 3]) -> f64 {
+    chord2_to_arc(chord2(a, b))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -546,6 +585,50 @@ mod tests {
         assert_eq!(pix, hp.ang2pix(FRAC_PI_2 - lat, lon));
         let (plon, plat) = hp.pix2radec(pix);
         assert!(ang_dist(FRAC_PI_2 - lat, lon, FRAC_PI_2 - plat, plon) < hp.max_pixrad_bound());
+    }
+
+    #[test]
+    fn chord_distance_matches_haversine() {
+        let mut rng = SplitMix64::new(99);
+        for _ in 0..5000 {
+            let (lon1, lat1) = (rng.uniform(0.0, TAU), rng.uniform(-1.5, 1.5));
+            let (lon2, lat2) = (rng.uniform(0.0, TAU), rng.uniform(-1.5, 1.5));
+            let d_h = ang_dist(FRAC_PI_2 - lat1, lon1, FRAC_PI_2 - lat2, lon2);
+            let d_c = ang_dist_vec(&unit_vec(lon1, lat1), &unit_vec(lon2, lat2));
+            // Both are stable formulations; near-antipodal pairs amplify the
+            // asin, hence the |π − d| guard on the tight bound.
+            let tol = if (PI - d_h).abs() > 1e-3 { 1e-12 * (1.0 + d_h) } else { 1e-9 };
+            assert!((d_c - d_h).abs() <= tol, "({lon1},{lat1})-({lon2},{lat2}): {d_c} vs {d_h}");
+        }
+    }
+
+    #[test]
+    fn chord_distance_small_separations_exact_scale() {
+        // The chord's error is *absolute* (~ulps of the O(1) vector
+        // components), so the bound is abs + rel, not purely relative.
+        let mut rng = SplitMix64::new(100);
+        for _ in 0..2000 {
+            let (lon, lat) = (rng.uniform(0.0, TAU), rng.uniform(-1.4, 1.4));
+            let eps = rng.uniform(1e-9, 1e-3);
+            let d_h = ang_dist(FRAC_PI_2 - lat, lon, FRAC_PI_2 - (lat + eps), lon);
+            let d_c = ang_dist_vec(&unit_vec(lon, lat), &unit_vec(lon, lat + eps));
+            assert!((d_c - d_h).abs() <= 1e-14 + 1e-12 * d_h, "{d_c} vs {d_h} at eps={eps}");
+        }
+    }
+
+    #[test]
+    fn chord_helpers_edge_values() {
+        let a = unit_vec(0.3, 0.7);
+        assert_eq!(chord2(&a, &a), 0.0);
+        assert_eq!(ang_dist_vec(&a, &a), 0.0);
+        // Unit norm.
+        let n2 = a[0] * a[0] + a[1] * a[1] + a[2] * a[2];
+        assert!((n2 - 1.0).abs() < 1e-15);
+        // Antipodal: chord² = 4 ⇒ arc = π (min-clamp guards rounding above 1).
+        assert!((chord2_to_arc(4.0) - PI).abs() < 1e-12);
+        assert!((chord2_to_arc(4.0 + 1e-9) - PI).abs() < 1e-12);
+        let b = unit_vec(0.3 + PI, -0.7);
+        assert!((ang_dist_vec(&a, &b) - PI).abs() < 1e-7);
     }
 
     /// Brute-force completeness: every pixel whose center is within `r` of the

@@ -9,8 +9,9 @@
 //! ```
 //!
 //! Engine knobs (grid/accuracy): `--streams N --pipelines N --channels-per-dispatch C
-//! --gamma G --block B --kernel gauss1d|gauss2d|tapered_sinc --profile v|m
-//! --oversample F --no-share --artifacts DIR --prefetch-depth D --io-workers N`.
+//! --gamma G --block B --cpu-block B --kernel gauss1d|gauss2d|tapered_sinc
+//! --profile v|m --oversample F --no-share --artifacts DIR --prefetch-depth D
+//! --io-workers N`.
 //!
 //! `grid --streaming` reads channels lazily from the HGD file through the
 //! T0 prefetcher (bounded memory; I/O overlaps compute) instead of loading
@@ -30,8 +31,8 @@ use hegrid::util::error::{HegridError, Result};
 
 const VALUE_OPTS: &[&str] = &[
     "preset", "points", "channels", "field", "beam", "seed", "out", "input", "out-prefix",
-    "streams", "pipelines", "channels-per-dispatch", "gamma", "block", "kernel", "profile",
-    "oversample", "artifacts", "threads", "variant", "prefetch-depth", "io-workers",
+    "streams", "pipelines", "channels-per-dispatch", "gamma", "block", "cpu-block", "kernel",
+    "profile", "oversample", "artifacts", "threads", "variant", "prefetch-depth", "io-workers",
 ];
 
 fn main() -> ExitCode {
@@ -93,6 +94,7 @@ fn engine_config(args: &cli::Args) -> Result<HegridConfig> {
         share_preprocessing: !args.flag("no-share"),
         gamma: args.get_usize("gamma", 1)?,
         block_size: args.get_usize("block", 0)?,
+        cpu_channel_block: args.get_usize("cpu-block", 0)?,
         prefetch_depth: args.get_usize("prefetch-depth", 2)?,
         io_workers: args.get_usize("io-workers", 0)?,
         kernel_type: args.get_or("kernel", "gauss1d").to_string(),
@@ -247,9 +249,11 @@ fn cmd_accuracy(args: &cli::Args) -> Result<()> {
     let dataset = load_input(args)?;
     let cfg = engine_config(args)?;
     let job = GriddingJob::for_dataset(&dataset, &cfg)?;
+    let cpu_block = cfg.cpu_channel_block;
     let engine = HegridEngine::new(cfg)?;
     let (he_maps, report) = engine.grid(&dataset, &job)?;
     let (cy_maps, cy_time) = CygridBaseline::new(hegrid::util::threads::default_parallelism())
+        .with_channel_block(cpu_block)
         .run(&dataset, &job)?;
     println!(
         "HEGrid {:.3}s vs Cygrid {:.3}s (speedup {:.2}x)",

@@ -3,12 +3,16 @@
 //! (parallel pixel_idx computation / radix sort) and the CPU baselines.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, OnceLock};
 use std::thread;
 
 /// Number of worker threads to use by default (logical cores, capped).
+/// Queried from the OS once and cached — this sits on per-call paths
+/// (`SharedComponent::for_kernel`, config accessors, gridder constructors).
 pub fn default_parallelism() -> usize {
-    thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(32)
+    static CACHED: OnceLock<usize> = OnceLock::new();
+    *CACHED
+        .get_or_init(|| thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(32))
 }
 
 /// Run `f(chunk_index, start, end)` over `n` items split into ~`workers`
@@ -75,6 +79,94 @@ where
     });
 }
 
+/// Work-stealing loop with **per-worker state** and **block claiming**: each
+/// worker calls `init()` once, then repeatedly claims `claim_block` contiguous
+/// indices from a shared cursor (one `fetch_add` per block instead of one per
+/// item) and runs `f(&mut state, i)` for each.
+///
+/// This is the substrate for hot loops that need reusable scratch buffers
+/// (ring ranges, contributor lists, channel-block accumulators): the former
+/// per-item allocations become per-worker allocations made once. Block
+/// claiming keeps the cursor off the coherence hot path when items are cheap;
+/// irregular per-item cost still balances because blocks are claimed
+/// dynamically.
+pub fn parallel_items_scoped<S, I, F>(n: usize, workers: usize, claim_block: usize, init: I, f: F)
+where
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let claim_block = claim_block.max(1);
+    let workers = workers.clamp(1, n.div_ceil(claim_block));
+    if workers == 1 {
+        let mut state = init();
+        for i in 0..n {
+            f(&mut state, i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    thread::scope(|s| {
+        for _ in 0..workers {
+            let (init, f, next) = (&init, &f, &next);
+            s.spawn(move || {
+                let mut state = init();
+                loop {
+                    let start = next.fetch_add(claim_block, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    for i in start..(start + claim_block).min(n) {
+                        f(&mut state, i);
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// Raw-pointer writer for parallel initialisation of disjoint slice indices.
+///
+/// Scoped worker closures only get `&self` through `Fn`, so filling a
+/// pre-sized buffer from several threads needs a shared handle; this wraps
+/// the base pointer and makes the disjointness contract explicit. Callers
+/// guarantee every index is written by at most one thread, stays in bounds,
+/// and is not read through another alias while writers are live.
+pub struct DisjointWriter<T>(*mut T);
+
+unsafe impl<T: Send> Sync for DisjointWriter<T> {}
+unsafe impl<T: Send> Send for DisjointWriter<T> {}
+
+impl<T> DisjointWriter<T> {
+    pub fn new(slice: &mut [T]) -> Self {
+        DisjointWriter(slice.as_mut_ptr())
+    }
+
+    /// Write `v` at index `i`.
+    ///
+    /// # Safety
+    /// `i` must be in bounds of the source slice, and no other thread may
+    /// access index `i` concurrently.
+    pub unsafe fn write(&self, i: usize, v: T)
+    where
+        T: Copy,
+    {
+        unsafe { self.0.add(i).write(v) };
+    }
+
+    /// Mutable view of `[start, start + len)`.
+    ///
+    /// # Safety
+    /// The range must be in bounds of the source slice and disjoint from
+    /// every range/index other threads access concurrently.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice(&self, start: usize, len: usize) -> &mut [T] {
+        unsafe { std::slice::from_raw_parts_mut(self.0.add(start), len) }
+    }
+}
+
 /// A persistent FIFO worker pool executing boxed jobs; the substrate under the
 /// coordinator's pipeline workers ("CPU processes" in the paper's terms).
 pub struct WorkerPool {
@@ -119,7 +211,11 @@ impl WorkerPool {
 
     /// Enqueue a job (FIFO).
     pub fn submit<F: FnOnce() + Send + 'static>(&self, job: F) {
-        self.queued.fetch_add(1, Ordering::Acquire);
+        // Release publishes the increment (and everything before the submit)
+        // to the Acquire load in `pending`; the worker's post-job decrement
+        // is the matching Release on the completion side. The previous
+        // Acquire here ordered nothing — an increment is a store-side event.
+        self.queued.fetch_add(1, Ordering::Release);
         self.tx
             .as_ref()
             .expect("pool shut down")
@@ -177,6 +273,76 @@ mod tests {
     fn parallel_zero_items_is_noop() {
         parallel_chunks(0, 4, |_, _, _| panic!("must not run"));
         parallel_items(0, 4, |_| panic!("must not run"));
+        parallel_items_scoped(0, 4, 8, || (), |_, _| panic!("must not run"));
+    }
+
+    #[test]
+    fn parallel_items_scoped_covers_everything_once() {
+        let n = 10_037;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        let inits = AtomicUsize::new(0);
+        parallel_items_scoped(
+            n,
+            8,
+            64,
+            || {
+                inits.fetch_add(1, Ordering::Relaxed);
+                0usize
+            },
+            |count, i| {
+                *count += 1;
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            },
+        );
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        let inits = inits.load(Ordering::Relaxed);
+        assert!((1..=8).contains(&inits), "one init per worker, got {inits}");
+    }
+
+    #[test]
+    fn parallel_items_scoped_single_worker_runs_in_order() {
+        let order = Mutex::new(Vec::new());
+        parallel_items_scoped(9, 1, 4, || (), |_, i| order.lock().unwrap().push(i));
+        assert_eq!(*order.lock().unwrap(), (0..9).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_items_scoped_few_items_shrink_worker_count() {
+        // 5 items in blocks of 4 need at most 2 workers; must still cover all.
+        let hits: Vec<AtomicUsize> = (0..5).map(|_| AtomicUsize::new(0)).collect();
+        parallel_items_scoped(5, 16, 4, || (), |_, i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn disjoint_writer_parallel_fill() {
+        let n = 4097;
+        let mut out = vec![0u64; n];
+        {
+            let w = DisjointWriter::new(&mut out);
+            parallel_chunks(n, 5, |_, s, e| {
+                for i in s..e {
+                    unsafe { w.write(i, i as u64 * 3) };
+                }
+            });
+        }
+        assert!(out.iter().enumerate().all(|(i, &v)| v == i as u64 * 3));
+        // Slice view over a disjoint range.
+        let w = DisjointWriter::new(&mut out);
+        let s = unsafe { w.slice(10, 4) };
+        s.fill(7);
+        assert_eq!(out[9], 27);
+        assert_eq!(&out[10..14], &[7, 7, 7, 7]);
+    }
+
+    #[test]
+    fn default_parallelism_is_cached_and_sane() {
+        let a = default_parallelism();
+        let b = default_parallelism();
+        assert_eq!(a, b);
+        assert!((1..=32).contains(&a));
     }
 
     #[test]

@@ -1,0 +1,179 @@
+//! Equivalence suite for the blocked/trig-free CPU hot path.
+//!
+//! Pins `CpuGridder::grid_with_shared` against a no-LUT brute-force oracle
+//! (tight tolerance — only accumulation order differs), and requires
+//! **bit-identical** output across worker counts and channel-block widths
+//! {1, 4, odd n_ch, auto, oversized}, for every kernel family, plus the
+//! empty-channel / empty-dataset edge cases.
+
+use hegrid::grid::cpu::CpuGridder;
+use hegrid::grid::kernels::ConvKernel;
+use hegrid::grid::prep::SharedComponent;
+use hegrid::healpix::{ang_dist_vec, unit_vec};
+use hegrid::sky::{GridSpec, SkyMap};
+use hegrid::util::SplitMix64;
+
+fn setup(n: usize, n_ch: usize, seed: u64) -> (GridSpec, Vec<f64>, Vec<f64>, Vec<Vec<f32>>) {
+    let spec = GridSpec::centered(30.0, 41.0, 14, 8, 0.22);
+    let (lon_lo, lon_hi, lat_lo, lat_hi) = spec.bounds();
+    let mut rng = SplitMix64::new(seed);
+    let lons: Vec<f64> = (0..n).map(|_| rng.uniform(lon_lo, lon_hi)).collect();
+    let lats: Vec<f64> = (0..n).map(|_| rng.uniform(lat_lo, lat_hi)).collect();
+    let channels: Vec<Vec<f32>> =
+        (0..n_ch).map(|_| (0..n).map(|_| rng.normal() as f32).collect()).collect();
+    (spec, lons, lats, channels)
+}
+
+/// Brute-force Eq. (1): exhaustive, no LUT, same per-pair distance helper as
+/// the gridder (the metric itself is pinned against the haversine in the
+/// healpix unit tests). Returns per-channel cell values (NaN = no coverage).
+fn brute_force(
+    spec: &GridSpec,
+    kernel: &ConvKernel,
+    lons: &[f64],
+    lats: &[f64],
+    channels: &[Vec<f32>],
+) -> Vec<Vec<f64>> {
+    let mut out = vec![vec![f64::NAN; spec.n_cells()]; channels.len()];
+    for cell in 0..spec.n_cells() {
+        let (clon, clat) = spec.cell_center_flat(cell);
+        let cu = unit_vec(clon, clat);
+        let mut acc = vec![0.0f64; channels.len()];
+        let mut w_tot = 0.0f64;
+        for j in 0..lons.len() {
+            let d = ang_dist_vec(&unit_vec(lons[j], lats[j]), &cu);
+            let w = kernel.weight(d * d, (lons[j] - clon) * clat.cos(), lats[j] - clat);
+            if w != 0.0 {
+                w_tot += w;
+                for (c, ch) in channels.iter().enumerate() {
+                    acc[c] += w * ch[j] as f64;
+                }
+            }
+        }
+        if w_tot > 0.0 {
+            for (c, a) in acc.iter().enumerate() {
+                out[c][cell] = a / w_tot;
+            }
+        }
+    }
+    out
+}
+
+fn assert_close_to_oracle(maps: &[SkyMap], oracle: &[Vec<f64>]) {
+    assert_eq!(maps.len(), oracle.len());
+    for (c, (m, want_col)) in maps.iter().zip(oracle).enumerate() {
+        for (cell, (&got, &want)) in m.values().iter().zip(want_col).enumerate() {
+            if want.is_nan() {
+                assert!(got.is_nan(), "ch {c} cell {cell}: {got} vs NaN");
+            } else {
+                assert!(
+                    (got - want).abs() <= 1e-12 * want.abs().max(1.0),
+                    "ch {c} cell {cell}: {got} vs {want}"
+                );
+            }
+        }
+    }
+}
+
+fn assert_maps_bit_identical(a: &[SkyMap], b: &[SkyMap], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}");
+    for (c, (ma, mb)) in a.iter().zip(b).enumerate() {
+        for (cell, (va, vb)) in ma.values().iter().zip(mb.values()).enumerate() {
+            assert_eq!(va.to_bits(), vb.to_bits(), "{what}: ch {c} cell {cell} values");
+        }
+        for (cell, (wa, wb)) in ma.weights().iter().zip(mb.weights()).enumerate() {
+            assert_eq!(wa.to_bits(), wb.to_bits(), "{what}: ch {c} cell {cell} weights");
+        }
+    }
+}
+
+fn kernels_under_test() -> Vec<ConvKernel> {
+    let base = ConvKernel::gauss1d_for_beam(0.5);
+    vec![
+        base.clone(),
+        ConvKernel::gauss2d(base.sigma, base.sigma * 1.5, base.support),
+        ConvKernel::tapered_sinc(base.sigma / 1.5, base.sigma * 2.52, base.support),
+    ]
+}
+
+#[test]
+fn blocked_gridder_matches_brute_force() {
+    // Gaussian kernels only: their weights are strictly positive inside the
+    // support, so `w_tot` has no cancellation and the 1e-12 accumulation-
+    // order tolerance is sound. `tapered_sinc` (signed side lobes) is
+    // covered by the bit-identity tests below and the kernel unit tests.
+    let (spec, lons, lats, channels) = setup(700, 5, 42);
+    let base = ConvKernel::gauss1d_for_beam(0.5);
+    let gauss2d = ConvKernel::gauss2d(base.sigma, base.sigma * 1.5, base.support);
+    for kernel in [base, gauss2d] {
+        let shared = SharedComponent::for_kernel(&lons, &lats, &kernel).unwrap();
+        let maps = CpuGridder::new(spec.clone(), kernel.clone())
+            .grid_with_shared(&shared, &channels);
+        let oracle = brute_force(&spec, &kernel, &lons, &lats, &channels);
+        assert_close_to_oracle(&maps, &oracle);
+    }
+}
+
+#[test]
+fn block_widths_are_bit_identical() {
+    // 7 channels: widths 1, 4 (uneven split), odd 5, odd n_ch itself,
+    // auto (0), and oversized all agree bit-for-bit.
+    let (spec, lons, lats, channels) = setup(900, 7, 7);
+    let kernel = ConvKernel::gauss1d_for_beam(0.5);
+    let shared = SharedComponent::for_kernel(&lons, &lats, &kernel).unwrap();
+    let base = CpuGridder::new(spec.clone(), kernel.clone())
+        .with_channel_block(1)
+        .grid_with_shared(&shared, &channels);
+    for block in [4usize, 5, 7, 0, 1024] {
+        let maps = CpuGridder::new(spec.clone(), kernel.clone())
+            .with_channel_block(block)
+            .grid_with_shared(&shared, &channels);
+        assert_maps_bit_identical(&base, &maps, &format!("block {block}"));
+    }
+}
+
+#[test]
+fn worker_counts_are_bit_identical_across_blocks() {
+    let (spec, lons, lats, channels) = setup(800, 5, 13);
+    for kernel in kernels_under_test() {
+        let shared = SharedComponent::for_kernel(&lons, &lats, &kernel).unwrap();
+        for block in [1usize, 4] {
+            let serial = CpuGridder::new(spec.clone(), kernel.clone())
+                .with_workers(1)
+                .with_channel_block(block)
+                .grid_with_shared(&shared, &channels);
+            let parallel = CpuGridder::new(spec.clone(), kernel.clone())
+                .with_workers(7)
+                .with_channel_block(block)
+                .grid_with_shared(&shared, &channels);
+            assert_maps_bit_identical(&serial, &parallel, &format!("workers, block {block}"));
+        }
+    }
+}
+
+#[test]
+fn empty_channels_yield_empty_output() {
+    let (spec, lons, lats, _) = setup(300, 0, 3);
+    let kernel = ConvKernel::gauss1d_for_beam(0.5);
+    let shared = SharedComponent::for_kernel(&lons, &lats, &kernel).unwrap();
+    let maps = CpuGridder::new(spec, kernel).grid_with_shared(&shared, &[]);
+    assert!(maps.is_empty());
+}
+
+#[test]
+fn empty_dataset_yields_nan_maps() {
+    let spec = GridSpec::centered(30.0, 41.0, 14, 8, 0.22);
+    let kernel = ConvKernel::gauss1d_for_beam(0.5);
+    let shared = SharedComponent::for_kernel(&[], &[], &kernel).unwrap();
+    let empty_channels: Vec<Vec<f32>> = vec![Vec::new(); 3];
+    for block in [0usize, 1, 2] {
+        let maps = CpuGridder::new(spec.clone(), kernel.clone())
+            .with_channel_block(block)
+            .grid_with_shared(&shared, &empty_channels);
+        assert_eq!(maps.len(), 3);
+        for m in &maps {
+            assert_eq!(m.coverage(), 0.0);
+            assert!(m.values().iter().all(|v| v.is_nan()));
+        }
+    }
+}
