@@ -68,6 +68,7 @@ impl HcgridBaseline {
         let mut cfg = base.clone();
         cfg.streams = 1;
         cfg.pipelines = 1;
+        cfg.pipeline_width = 1; // sequential: one group in flight, ever
         cfg.channels_per_dispatch = 1;
         cfg.share_preprocessing = false;
         cfg.gamma = 1;
@@ -109,6 +110,7 @@ mod tests {
         let mut cfg = base.clone();
         cfg.streams = 1;
         cfg.pipelines = 1;
+        cfg.pipeline_width = 1;
         cfg.channels_per_dispatch = 1;
         cfg.share_preprocessing = false;
         assert_eq!(cfg.effective_streams(), 1);

@@ -1,0 +1,301 @@
+//! Bench-regression gate: diff two `BENCH_*.json` payloads and fail on a
+//! throughput regression.
+//!
+//! CI archives `BENCH_cpu_gridding.json` on every run. On pull requests the
+//! gate downloads the most recent **non-expired artifact produced by a
+//! `main` run** (so a PR cannot ratchet against its own earlier regressed
+//! runs), re-runs the smoke bench, and compares:
+//!
+//! * **throughput metrics** (`cells_per_s`, `cells_per_s_1t`,
+//!   `channel_samples_per_s`, …) — higher is better; a drop beyond the
+//!   threshold (default 15%) **fails** the gate;
+//! * **stage times** (`prep_s`, `grid_1t_s`, …) — lower is better; changes
+//!   are reported for the PR author but never fail on their own (absolute
+//!   stage times are too machine-sensitive for a hard gate);
+//! * **workload identity** (`n_samples`, `n_channels`) — if the two runs
+//!   measured different workloads the comparison is meaningless, so the gate
+//!   reports `incomparable` and passes (the next merge re-baselines).
+//!
+//! A missing baseline (first run, expired artifact) soft-warns and passes —
+//! the gate guards trajectories, not absolute numbers. The CLI entry point
+//! is `hegrid bench-gate` (see `main.rs`); this module is the pure
+//! comparator so the failure logic is unit-testable on canned payloads.
+
+use std::path::Path;
+
+use crate::json::Json;
+use crate::util::error::{HegridError, Result};
+
+/// Default relative throughput drop that fails the gate.
+pub const DEFAULT_THRESHOLD: f64 = 0.15;
+
+/// Throughput metrics gated against the threshold (higher is better).
+const THROUGHPUT_METRICS: &[&str] =
+    &["cells_per_s", "cells_per_s_1t", "channel_samples_per_s", "channel_samples_per_s_1t"];
+
+/// Stage times reported informationally (lower is better, never fatal).
+const STAGE_METRICS: &[&str] = &["prep_s", "grid_1t_s", "grid_nt_s"];
+
+/// Workload-identity fields; a mismatch makes the runs incomparable.
+const IDENTITY_FIELDS: &[&str] = &["n_samples", "n_channels"];
+
+/// One compared metric.
+#[derive(Clone, Debug)]
+pub struct GateFinding {
+    pub metric: String,
+    pub baseline: f64,
+    pub current: f64,
+    /// Relative change, signed so that **negative is worse** for the reader:
+    /// throughput drops and stage-time increases both come out negative.
+    pub change: f64,
+    /// This finding alone fails the gate.
+    pub regressed: bool,
+}
+
+/// Outcome of one gate evaluation.
+#[derive(Clone, Debug)]
+pub struct GateReport {
+    pub findings: Vec<GateFinding>,
+    /// The two payloads measured different workloads; comparison skipped.
+    pub incomparable: Option<String>,
+    pub threshold: f64,
+}
+
+impl GateReport {
+    pub fn failed(&self) -> bool {
+        self.findings.iter().any(|f| f.regressed)
+    }
+
+    /// Human-readable summary lines (one per finding).
+    pub fn lines(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        if let Some(why) = &self.incomparable {
+            out.push(format!("bench-gate: runs are incomparable ({why}); skipping"));
+            return out;
+        }
+        for f in &self.findings {
+            out.push(format!(
+                "bench-gate: {:<28} baseline {:>12.4e}  current {:>12.4e}  {:+.1}%{}",
+                f.metric,
+                f.baseline,
+                f.current,
+                f.change * 100.0,
+                if f.regressed {
+                    format!("  REGRESSION (> {:.0}%)", self.threshold * 100.0)
+                } else {
+                    String::new()
+                }
+            ));
+        }
+        out
+    }
+}
+
+fn num_at(payload: &Json, path: &[&str]) -> Option<f64> {
+    let mut v = payload;
+    for key in path {
+        v = v.get(key)?;
+    }
+    v.as_f64()
+}
+
+/// Compare a fresh bench payload against a stored baseline.
+///
+/// Both payloads are expected in the `BENCH_cpu_gridding` schema
+/// (`throughput.*`, `stages.*`, top-level identity fields); metrics absent
+/// on either side are skipped, so schema growth never breaks old baselines.
+pub fn compare(baseline: &Json, current: &Json, threshold: f64) -> GateReport {
+    let mut report =
+        GateReport { findings: Vec::new(), incomparable: None, threshold };
+
+    for &field in IDENTITY_FIELDS {
+        let (b, c) = (num_at(baseline, &[field]), num_at(current, &[field]));
+        if let (Some(b), Some(c)) = (b, c) {
+            if b != c {
+                report.incomparable =
+                    Some(format!("{field}: baseline {b} vs current {c}"));
+                return report;
+            }
+        }
+    }
+
+    for &metric in THROUGHPUT_METRICS {
+        let b = num_at(baseline, &["throughput", metric]);
+        let c = num_at(current, &["throughput", metric]);
+        if let (Some(b), Some(c)) = (b, c) {
+            if b <= 0.0 || !b.is_finite() || !c.is_finite() {
+                continue;
+            }
+            let change = (c - b) / b; // negative = slower
+            report.findings.push(GateFinding {
+                metric: format!("throughput.{metric}"),
+                baseline: b,
+                current: c,
+                change,
+                regressed: change < -threshold,
+            });
+        }
+    }
+
+    for &metric in STAGE_METRICS {
+        let b = num_at(baseline, &["stages", metric]);
+        let c = num_at(current, &["stages", metric]);
+        if let (Some(b), Some(c)) = (b, c) {
+            if b <= 0.0 || !b.is_finite() || !c.is_finite() {
+                continue;
+            }
+            // Time: an increase is bad, so flip the sign (negative = worse).
+            let change = (b - c) / b;
+            report.findings.push(GateFinding {
+                metric: format!("stages.{metric}"),
+                baseline: b,
+                current: c,
+                change,
+                regressed: false,
+            });
+        }
+    }
+
+    report
+}
+
+/// File-level gate outcome (what the CLI maps to an exit code).
+#[derive(Debug, PartialEq, Eq)]
+pub enum GateOutcome {
+    /// No baseline on disk: soft-warn, pass (first run / expired artifact).
+    NoBaseline,
+    Passed,
+    Failed,
+}
+
+/// Run the gate over two JSON files. `baseline` may be absent — that is the
+/// "no prior artifact" path and passes with a warning. A missing or
+/// unparsable *current* payload is a hard error: the bench that was supposed
+/// to produce it did not run.
+pub fn gate_files(baseline: &Path, current: &Path, threshold: f64) -> Result<GateOutcome> {
+    let cur_text = std::fs::read_to_string(current)
+        .map_err(HegridError::io(current.display().to_string()))?;
+    let cur = crate::json::parse(&cur_text)?;
+    if !baseline.exists() {
+        eprintln!(
+            "bench-gate: no baseline at {} — nothing to compare (first run?); passing",
+            baseline.display()
+        );
+        return Ok(GateOutcome::NoBaseline);
+    }
+    let base_text = std::fs::read_to_string(baseline)
+        .map_err(HegridError::io(baseline.display().to_string()))?;
+    let base = crate::json::parse(&base_text)?;
+    let report = compare(&base, &cur, threshold);
+    for line in report.lines() {
+        println!("{line}");
+    }
+    Ok(if report.failed() { GateOutcome::Failed } else { GateOutcome::Passed })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Canned payload in the `BENCH_cpu_gridding` schema.
+    fn payload(cells_per_s: f64, cells_per_s_1t: f64, grid_1t_s: f64) -> Json {
+        Json::obj(vec![
+            ("bench", Json::str("cpu_gridding")),
+            ("n_samples", Json::num(4000.0)),
+            ("n_channels", Json::num(4.0)),
+            (
+                "throughput",
+                Json::obj(vec![
+                    ("cells_per_s", Json::num(cells_per_s)),
+                    ("cells_per_s_1t", Json::num(cells_per_s_1t)),
+                ]),
+            ),
+            ("stages", Json::obj(vec![("grid_1t_s", Json::num(grid_1t_s))])),
+        ])
+    }
+
+    #[test]
+    fn passes_within_threshold() {
+        let base = payload(1.0e6, 2.5e5, 0.8);
+        let cur = payload(0.9e6, 2.4e5, 0.9); // 10% / 4% drops, under 15%
+        let r = compare(&base, &cur, DEFAULT_THRESHOLD);
+        assert!(!r.failed(), "{:?}", r.findings);
+        assert!(r.incomparable.is_none());
+        assert_eq!(r.findings.len(), 3);
+        assert!(!r.lines().is_empty());
+    }
+
+    #[test]
+    fn fails_synthetic_20_percent_regression() {
+        let base = payload(1.0e6, 2.5e5, 0.8);
+        let cur = payload(0.8e6, 2.5e5, 0.8); // 20% throughput drop
+        let r = compare(&base, &cur, DEFAULT_THRESHOLD);
+        assert!(r.failed());
+        let bad: Vec<_> = r.findings.iter().filter(|f| f.regressed).collect();
+        assert_eq!(bad.len(), 1);
+        assert_eq!(bad[0].metric, "throughput.cells_per_s");
+        assert!((bad[0].change + 0.2).abs() < 1e-12);
+        assert!(r.lines().iter().any(|l| l.contains("REGRESSION")));
+    }
+
+    #[test]
+    fn stage_time_blowup_reports_but_does_not_fail() {
+        let base = payload(1.0e6, 2.5e5, 0.8);
+        let cur = payload(1.0e6, 2.5e5, 8.0); // 10x slower stage time
+        let r = compare(&base, &cur, DEFAULT_THRESHOLD);
+        assert!(!r.failed());
+        let stage = r.findings.iter().find(|f| f.metric == "stages.grid_1t_s").unwrap();
+        assert!(stage.change < 0.0, "slower stage reads as negative change");
+    }
+
+    #[test]
+    fn different_workloads_are_incomparable() {
+        let base = payload(1.0e6, 2.5e5, 0.8);
+        let mut cur = payload(0.1e6, 2.5e5, 0.8);
+        if let Json::Obj(fields) = &mut cur {
+            fields.insert("n_samples".into(), Json::num(999.0));
+        }
+        let r = compare(&base, &cur, DEFAULT_THRESHOLD);
+        assert!(r.incomparable.is_some());
+        assert!(!r.failed(), "incomparable runs must pass");
+    }
+
+    #[test]
+    fn missing_metrics_are_skipped_not_fatal() {
+        let base = payload(1.0e6, 2.5e5, 0.8);
+        let cur = Json::obj(vec![("bench", Json::str("cpu_gridding"))]);
+        let r = compare(&base, &cur, DEFAULT_THRESHOLD);
+        assert!(!r.failed());
+        assert!(r.findings.is_empty());
+    }
+
+    #[test]
+    fn gate_files_outcomes() {
+        let dir = std::env::temp_dir().join("hegrid_gate_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let cur_path = dir.join("current.json");
+        let base_path = dir.join("baseline.json");
+        let _ = std::fs::remove_file(&base_path);
+        std::fs::write(&cur_path, payload(1.0e6, 2.5e5, 0.8).to_pretty()).unwrap();
+
+        // No baseline: soft pass.
+        assert_eq!(
+            gate_files(&base_path, &cur_path, DEFAULT_THRESHOLD).unwrap(),
+            GateOutcome::NoBaseline
+        );
+        // Healthy baseline: pass.
+        std::fs::write(&base_path, payload(1.05e6, 2.5e5, 0.8).to_pretty()).unwrap();
+        assert_eq!(
+            gate_files(&base_path, &cur_path, DEFAULT_THRESHOLD).unwrap(),
+            GateOutcome::Passed
+        );
+        // Fast baseline: the fresh run regressed. 1.0/1.3 ≈ 23% drop.
+        std::fs::write(&base_path, payload(1.3e6, 2.5e5, 0.8).to_pretty()).unwrap();
+        assert_eq!(
+            gate_files(&base_path, &cur_path, DEFAULT_THRESHOLD).unwrap(),
+            GateOutcome::Failed
+        );
+        // Missing current payload is a hard error.
+        assert!(gate_files(&base_path, &dir.join("nope.json"), DEFAULT_THRESHOLD).is_err());
+    }
+}

@@ -5,6 +5,7 @@
 //! table/series printers to emit rows shaped like the paper's tables and
 //! figures. Results can also be dumped as JSON for EXPERIMENTS.md.
 
+pub mod gate;
 pub mod support;
 
 use std::time::{Duration, Instant};

@@ -81,6 +81,11 @@ pub struct HegridConfig {
     pub streams: usize,
     /// CPU pipeline worker threads (paper: CPU processes). 0 = auto.
     pub pipelines: usize,
+    /// Channel-group pipelines in flight at once on the persistent executor:
+    /// while group *k* grids (T3), group *k+1* permutes (T1–T2) and group
+    /// *k+2* prefetches (T0). Takes precedence over `pipelines` when set;
+    /// 0 = fall back to `pipelines`/auto. 1 = the sequential coordinator.
+    pub pipeline_width: usize,
     /// Channels per device dispatch (C of the artifact variant).
     pub channels_per_dispatch: usize,
     /// Share the pre-processing component across pipelines (Fig 11/12 knob).
@@ -120,6 +125,7 @@ impl Default for HegridConfig {
             artifacts_dir: "artifacts".into(),
             streams: 0,
             pipelines: 0,
+            pipeline_width: 0,
             channels_per_dispatch: 10,
             share_preprocessing: true,
             gamma: 1,
@@ -151,9 +157,12 @@ impl HegridConfig {
         want.clamp(1, self.profile.max_streams().max(1))
     }
 
-    /// Effective pipeline worker count.
+    /// Effective pipeline worker count (the run's pipeline width):
+    /// `pipeline_width` when set, else `pipelines`, else auto.
     pub fn effective_pipelines(&self) -> usize {
-        if self.pipelines == 0 {
+        if self.pipeline_width > 0 {
+            self.pipeline_width
+        } else if self.pipelines == 0 {
             crate::util::threads::default_parallelism().min(8)
         } else {
             self.pipelines
@@ -189,6 +198,12 @@ impl HegridConfig {
         if self.channels_per_dispatch == 0 {
             return Err(HegridError::Config("channels_per_dispatch must be >= 1".into()));
         }
+        if self.pipeline_width > 64 {
+            return Err(HegridError::Config(format!(
+                "pipeline_width {} out of range 0..=64",
+                self.pipeline_width
+            )));
+        }
         if self.prefetch_depth == 0 || self.prefetch_depth > 1024 {
             return Err(HegridError::Config(format!(
                 "prefetch_depth {} out of range 1..=1024",
@@ -213,6 +228,7 @@ impl HegridConfig {
             ("artifacts_dir", Json::str(self.artifacts_dir.clone())),
             ("streams", Json::num(self.streams as f64)),
             ("pipelines", Json::num(self.pipelines as f64)),
+            ("pipeline_width", Json::num(self.pipeline_width as f64)),
             ("channels_per_dispatch", Json::num(self.channels_per_dispatch as f64)),
             ("share_preprocessing", Json::Bool(self.share_preprocessing)),
             ("gamma", Json::num(self.gamma as f64)),
@@ -255,6 +271,7 @@ impl HegridConfig {
                 .to_string(),
             streams: get_usize("streams", d.streams)?,
             pipelines: get_usize("pipelines", d.pipelines)?,
+            pipeline_width: get_usize("pipeline_width", d.pipeline_width)?,
             channels_per_dispatch: get_usize("channels_per_dispatch", d.channels_per_dispatch)?,
             share_preprocessing: v
                 .get("share_preprocessing")
@@ -308,9 +325,26 @@ mod tests {
     }
 
     #[test]
+    fn pipeline_width_takes_precedence() {
+        let mut c = HegridConfig::default();
+        c.pipelines = 3;
+        assert_eq!(c.effective_pipelines(), 3);
+        c.pipeline_width = 2;
+        assert_eq!(c.effective_pipelines(), 2);
+        c.pipeline_width = 1;
+        assert_eq!(c.effective_pipelines(), 1, "width 1 = sequential coordinator");
+        c.pipeline_width = 0;
+        c.pipelines = 0;
+        assert!(c.effective_pipelines() >= 1);
+        c.pipeline_width = 65;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
     fn json_round_trip() {
         let mut c = HegridConfig::default();
         c.streams = 4;
+        c.pipeline_width = 4;
         c.gamma = 2;
         c.prefetch_depth = 5;
         c.io_workers = 3;

@@ -22,14 +22,20 @@
 //! groups — bounded independently of channel count, which is what makes
 //! larger-than-RAM datasets streamable.
 //!
-//! Multiple pipelines run concurrently: the prefetcher's FIFO of channel
-//! groups feeds a pool of CPU workers (the paper's processes), each pinned
-//! to a PJRT stream slot (the paper's GPU streams) so its group-value
-//! buffers stay device-resident across tile dispatches. The **shared
-//! component** (sorted samples + LUT + neighbour tables + device-resident
-//! coordinates) is built once and reused by every pipeline; disabling it
-//! (Fig 11/12) rebuilds all of it per group, reproducing the redundant
-//! compute + transfer the paper eliminates.
+//! Multiple pipelines run concurrently: `pipeline_width` of them execute as
+//! one sweep on the persistent [`PipelineExecutor`] (parked workers — no
+//! per-run thread spawns), pulling channel groups from the prefetcher's
+//! FIFO. Each pipeline pins its dispatches to a PJRT stream slot (the
+//! paper's GPU streams) so its group-value buffers stay device-resident
+//! across tile dispatches; while group *k* drains its kernel (T3), group
+//! *k+1* permutes and submits (T1–T2) and group *k+2* is read ahead (T0).
+//! Every stage records its execution window ([`StageSpan`]), so a run
+//! reports per-stage occupancy and the measured inter-pipeline overlap
+//! ([`PipelineReport::stage_overlap_s`]). The **shared component** (sorted
+//! samples + LUT + neighbour tables + device-resident coordinates + staged
+//! unit-vector columns) is built once and reused by every pipeline;
+//! disabling it (Fig 11/12) rebuilds all of it per group, reproducing the
+//! redundant compute + transfer the paper eliminates.
 
 pub mod plan;
 pub mod simulator;
@@ -49,9 +55,59 @@ use crate::runtime::{
 };
 use crate::sky::{GridSpec, SkyMap};
 use crate::util::error::{HegridError, Result};
+use crate::util::threads::PipelineExecutor;
 
 pub use plan::{ChannelGroups, DispatchPlan};
 pub use simulator::{simulate, SimParams, SimResult, StageCost};
+
+/// Pipeline stages for span-level accounting (occupancy + inter-pipeline
+/// overlap — the Fig-8/9 instrumentation of the multi-pipeline design).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PipeStage {
+    /// T0: channel-group reads by the I/O workers.
+    T0Ingest,
+    /// Per-group shared-component rebuild (only with sharing disabled).
+    Prep,
+    /// T1: permute + pad group values into the staging layout.
+    T1Permute,
+    /// T2: tile submission to the pinned stream.
+    T2Submit,
+    /// T3: kernel execution + drain wait.
+    T3Kernel,
+    /// T4: accumulation of tile outputs into the global maps.
+    T4Reduce,
+}
+
+impl PipeStage {
+    pub const ALL: [PipeStage; 6] = [
+        PipeStage::T0Ingest,
+        PipeStage::Prep,
+        PipeStage::T1Permute,
+        PipeStage::T2Submit,
+        PipeStage::T3Kernel,
+        PipeStage::T4Reduce,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PipeStage::T0Ingest => "T0",
+            PipeStage::Prep => "prep",
+            PipeStage::T1Permute => "T1",
+            PipeStage::T2Submit => "T2",
+            PipeStage::T3Kernel => "T3",
+            PipeStage::T4Reduce => "T4",
+        }
+    }
+}
+
+/// One stage execution window, in seconds on the run clock (the prefetcher
+/// clock that also timestamps the T0 read intervals).
+#[derive(Clone, Copy, Debug)]
+pub struct StageSpan {
+    pub stage: PipeStage,
+    pub start: f64,
+    pub end: f64,
+}
 
 /// What to grid: a dataset onto a map with a kernel.
 #[derive(Clone, Debug)]
@@ -118,6 +174,11 @@ pub struct PipelineReport {
     /// compute — the paper's Fig-8 I/O/compute overlap. ~0 for in-memory
     /// sources (reads are memcpys) and for `prefetch_depth = 1`.
     pub io_overlap_s: f64,
+    /// Per-stage execution windows across every pipeline (plus the T0 read
+    /// intervals), all on one clock — the raw material for
+    /// [`PipelineReport::stage_occupancy`] and
+    /// [`PipelineReport::stage_overlap_s`].
+    pub spans: Vec<StageSpan>,
 }
 
 impl PipelineReport {
@@ -141,6 +202,59 @@ impl PipelineReport {
     /// Measured one-off pre-processing cost (per build).
     pub fn prep_cost(&self) -> f64 {
         self.stage_s("prep+nbr") / self.shared_builds.max(1) as f64
+    }
+
+    /// Execution windows of `stage` across all pipelines (run clock).
+    pub fn stage_windows(&self, stage: PipeStage) -> Vec<(f64, f64)> {
+        self.spans
+            .iter()
+            .filter(|s| s.stage == stage)
+            .map(|s| (s.start, s.end))
+            .collect()
+    }
+
+    /// Total pipeline-seconds spent in `stage` (raw sum across pipelines;
+    /// concurrent windows count multiply).
+    pub fn stage_busy_s(&self, stage: PipeStage) -> f64 {
+        self.spans
+            .iter()
+            .filter(|s| s.stage == stage)
+            .map(|s| s.end - s.start)
+            .sum()
+    }
+
+    /// Mean number of pipelines concurrently inside `stage`
+    /// (`stage_busy_s / wall`) — the per-stage occupancy the fig8/table3
+    /// benches report. > 1 means the stage itself ran multi-pipeline.
+    pub fn stage_occupancy(&self, stage: PipeStage) -> f64 {
+        let w = self.wall.as_secs_f64();
+        if w > 0.0 {
+            self.stage_busy_s(stage) / w
+        } else {
+            0.0
+        }
+    }
+
+    /// Measured wall-clock window during which stages `a` and `b` were both
+    /// active in *some* pipeline. Within one pipeline the stages serialise,
+    /// so e.g. `stage_overlap_s(T1Permute, T3Kernel) > 0` demonstrates
+    /// inter-pipeline overlap: a group's permute hid under another group's
+    /// kernel (zero by construction at `pipeline_width = 1`).
+    pub fn stage_overlap_s(&self, a: PipeStage, b: PipeStage) -> f64 {
+        overlap_seconds(&self.stage_windows(a), &self.stage_windows(b))
+    }
+
+    /// Overlap of the **union** of several stages' windows with `b`'s
+    /// windows — e.g. "T0+T1 hidden under T3". Summing two
+    /// [`PipelineReport::stage_overlap_s`] values would double-count wall
+    /// seconds where both hidden stages run at once; the union counts each
+    /// hidden second exactly once.
+    pub fn stages_overlap_s(&self, a: &[PipeStage], b: PipeStage) -> f64 {
+        let mut windows = Vec::new();
+        for &stage in a {
+            windows.extend(self.stage_windows(stage));
+        }
+        overlap_seconds(&windows, &self.stage_windows(b))
     }
 }
 
@@ -282,13 +396,17 @@ impl HegridEngine {
         let mut stages = StageTimes::default();
         let shared_plan: Option<Arc<DispatchPlan>> = if self.config.share_preprocessing {
             let t0 = Instant::now();
+            // Full host parallelism for the one-off build: it runs before
+            // any pipeline exists, so the pipeline-width knob must not
+            // throttle it (that would contaminate width sweeps with prep
+            // speed differences).
             let plan = DispatchPlan::build(
                 lons,
                 lats,
                 job,
                 &variant,
                 self.epoch_counter.fetch_add(plan::EPOCHS_PER_PLAN, Ordering::Relaxed),
-                self.config.effective_pipelines(),
+                crate::util::threads::default_parallelism(),
             )?;
             stages.add("prep+nbr", t0.elapsed());
             report.shared_builds = 1;
@@ -320,9 +438,19 @@ impl HegridEngine {
         let stage_sink: Mutex<StageTimes> = Mutex::new(stages);
         let dispatches = AtomicU64::new(0);
         let compute_spans: Mutex<Vec<(f64, f64)>> = Mutex::new(Vec::new());
+        let span_sink: Mutex<Vec<StageSpan>> = Mutex::new(Vec::new());
         let acc_ptr = SyncPtr(acc.as_mut_ptr());
         let wsum_ptr = SyncPtr(wsum.as_mut_ptr());
         let first_error: Mutex<Option<HegridError>> = Mutex::new(None);
+        // Cap the width at what can actually run: the group count (extra
+        // pipelines would find the prefetcher already drained) and the
+        // executor's capacity (pool workers + the participating caller).
+        let n_pipe = self
+            .config
+            .effective_pipelines()
+            .min(groups.len().max(1))
+            .min(PipelineExecutor::global().workers() + 1);
+        report.n_pipelines = n_pipe;
 
         std::thread::scope(|scope| {
             for _ in 0..n_io {
@@ -331,64 +459,63 @@ impl HegridEngine {
                 let io_pool = &io_pool;
                 scope.spawn(move || prefetcher.run_worker(source, groups, io_pool));
             }
-            for _ in 0..self.config.effective_pipelines().min(groups.len().max(1)) {
-                let prefetcher = &prefetcher;
-                let variant = &variant;
-                let shared_plan = shared_plan.clone();
-                let stage_sink = &stage_sink;
-                let dispatches = &dispatches;
-                let shared_builds = &shared_builds;
-                let overflow = &overflow;
-                let compute_spans = &compute_spans;
-                let acc_ptr = &acc_ptr;
-                let wsum_ptr = &wsum_ptr;
-                let first_error = &first_error;
-                scope.spawn(move || {
-                    let mut local_stages = StageTimes::default();
-                    let mut local_spans: Vec<(f64, f64)> = Vec::new();
-                    loop {
-                        let batch = match prefetcher.next() {
-                            None => break,
-                            Some(Err(e)) => {
-                                let mut slot = first_error.lock().unwrap();
-                                if slot.is_none() {
-                                    *slot = Some(e);
-                                }
-                                break;
-                            }
-                            Some(Ok(b)) => b,
-                        };
-                        let t_start = prefetcher.now_s();
-                        let out = self.run_pipeline(
-                            lons,
-                            lats,
-                            job,
-                            variant,
-                            &batch,
-                            shared_plan.as_deref(),
-                            &mut local_stages,
-                            shared_builds,
-                            overflow,
-                            dispatches,
-                            n_cells,
-                            acc_ptr,
-                            wsum_ptr,
-                        );
-                        local_spans.push((t_start, prefetcher.now_s()));
-                        if let Err(e) = out {
+            // The channel-group pipelines are one sweep on the persistent
+            // executor (item = pipeline slot): the calling thread runs one
+            // pipeline itself and parked executor workers pick up the rest,
+            // so no run pays a pipeline-thread spawn. With `pipeline_width`
+            // ≥ 2, group k's T3 drain overlaps group k+1's T1–T2 staging
+            // while group k+2 prefetches underneath (T0). Every pipeline is
+            // a pull-until-drained loop, so a busy pool only narrows the
+            // effective width — never stalls the run.
+            PipelineExecutor::global().run(n_pipe, n_pipe, 1, || (), |_, _pipe| {
+                let mut local_stages = StageTimes::default();
+                let mut local_spans: Vec<StageSpan> = Vec::new();
+                let mut batch_spans: Vec<(f64, f64)> = Vec::new();
+                loop {
+                    let batch = match prefetcher.next() {
+                        None => break,
+                        Some(Err(e)) => {
                             let mut slot = first_error.lock().unwrap();
                             if slot.is_none() {
                                 *slot = Some(e);
                             }
-                            // Unblock the I/O workers, or the scope never joins.
-                            prefetcher.abort();
                             break;
                         }
+                        Some(Ok(b)) => b,
+                    };
+                    let t_start = prefetcher.now_s();
+                    let out = self.run_pipeline(
+                        lons,
+                        lats,
+                        job,
+                        &variant,
+                        &batch,
+                        shared_plan.as_deref(),
+                        &mut local_stages,
+                        &mut local_spans,
+                        &prefetcher,
+                        &shared_builds,
+                        &overflow,
+                        &dispatches,
+                        n_cells,
+                        &acc_ptr,
+                        &wsum_ptr,
+                    );
+                    batch_spans.push((t_start, prefetcher.now_s()));
+                    if let Err(e) = out {
+                        let mut slot = first_error.lock().unwrap();
+                        if slot.is_none() {
+                            *slot = Some(e);
+                        }
+                        // Unblock the I/O workers, or the scope never joins.
+                        prefetcher.abort();
+                        break;
                     }
-                    stage_sink.lock().unwrap().merge(&local_stages);
-                    compute_spans.lock().unwrap().extend(local_spans);
-                });
-            }
+                }
+                stage_sink.lock().unwrap().merge(&local_stages);
+                compute_spans.lock().unwrap().extend(batch_spans);
+                span_sink.lock().unwrap().extend(local_spans);
+            });
         });
         if let Some(e) = first_error.into_inner().unwrap() {
             return Err(e);
@@ -398,6 +525,10 @@ impl HegridEngine {
         let spans = compute_spans.into_inner().unwrap();
         report.io_busy_s = io.io_busy_s;
         report.io_overlap_s = overlap_seconds(&io.read_intervals, &spans);
+        report.spans = span_sink.into_inner().unwrap();
+        for &(a, b) in &io.read_intervals {
+            report.spans.push(StageSpan { stage: PipeStage::T0Ingest, start: a, end: b });
+        }
         report.stages = stage_sink.into_inner().unwrap();
         report.stages.add("T0 ingest(io)", Duration::from_secs_f64(io.io_busy_s));
         report.shared_builds = shared_builds.into_inner() as usize;
@@ -441,6 +572,8 @@ impl HegridEngine {
         batch: &GroupBatch,
         shared_plan: Option<&DispatchPlan>,
         stages: &mut StageTimes,
+        spans: &mut Vec<StageSpan>,
+        pf: &Prefetcher,
         shared_builds: &AtomicU64,
         overflow: &AtomicU64,
         dispatches: &AtomicU64,
@@ -455,6 +588,7 @@ impl HegridEngine {
             Some(p) => p,
             None => {
                 let t0 = Instant::now();
+                let s0 = pf.now_s();
                 local_plan = DispatchPlan::build(
                     lons,
                     lats,
@@ -464,6 +598,7 @@ impl HegridEngine {
                     1, // a lone pipeline gets no extra build parallelism
                 )?;
                 stages.add("prep+nbr", t0.elapsed());
+                spans.push(StageSpan { stage: PipeStage::Prep, start: s0, end: pf.now_s() });
                 shared_builds.fetch_add(1, Ordering::Relaxed);
                 overflow.store(local_plan.overflow_groups() as u64, Ordering::Relaxed);
                 &local_plan
@@ -483,16 +618,19 @@ impl HegridEngine {
             // one pass over the shard's gather index for the whole group
             // (O(1) validation per channel; see `ShardPlan::permute_group_into`).
             let t1 = Instant::now();
+            let s1 = pf.now_s();
             let mut staged = self.mem.take(variant.c * variant.n);
             shard.permute_group_into(&group_values, variant.n, &mut staged)?;
             // Pad missing channels (last group) with zeros.
             staged.resize(variant.c * variant.n, 0.0);
             let sval = Arc::new(staged.into_inner());
             stages.add("T1 permute", t1.elapsed());
+            spans.push(StageSpan { stage: PipeStage::T1Permute, start: s1, end: pf.now_s() });
 
             // T2+T3: submit every tile of this shard to our pinned stream,
             // then drain — submission overlaps with execution.
             let t2 = Instant::now();
+            let s2 = pf.now_s();
             let mut pending: Vec<(usize, Receiver<Result<ExecuteResponse>>)> = Vec::new();
             for t in 0..plan.tiles_per_shard() {
                 let tile = shard.tile(t);
@@ -505,6 +643,7 @@ impl HegridEngine {
                     nbr: Arc::clone(&tile.nbr),
                     slon: Arc::clone(&shard.slon),
                     slat: Arc::clone(&shard.slat),
+                    sunit: Arc::clone(&shard.sunit),
                     sval: Arc::clone(&sval),
                     kparam,
                 };
@@ -512,11 +651,13 @@ impl HegridEngine {
                 dispatches.fetch_add(1, Ordering::Relaxed);
             }
             stages.add("T2 submit", t2.elapsed());
+            spans.push(StageSpan { stage: PipeStage::T2Submit, start: s2, end: pf.now_s() });
 
             let mut t3_total = Duration::ZERO;
             let mut h2d_total = Duration::ZERO;
             let mut d2h_total = Duration::ZERO;
             let t_drain = Instant::now();
+            let s3 = pf.now_s();
             let mut responses: Vec<(usize, ExecuteResponse)> = Vec::new();
             for (t, rx) in pending {
                 let resp = self.streams.wait(rx)?;
@@ -526,6 +667,7 @@ impl HegridEngine {
                 responses.push((t, resp));
             }
             stages.add("T3 kernel(+wait)", t_drain.elapsed());
+            spans.push(StageSpan { stage: PipeStage::T3Kernel, start: s3, end: pf.now_s() });
             stages.add("T2 H2D(device)", h2d_total);
             stages.add("T3 kernel(device)", t3_total);
             stages.add("T4 D2H(device)", d2h_total);
@@ -534,6 +676,7 @@ impl HegridEngine {
             // distinct groups are disjoint; wsum is identical across groups,
             // so only group 0 accumulates it (per shard).
             let t4 = Instant::now();
+            let s4 = pf.now_s();
             for (t, resp) in responses {
                 let cell0 = t * variant.m;
                 let valid = n_cells.saturating_sub(cell0).min(variant.m);
@@ -546,6 +689,7 @@ impl HegridEngine {
                 }
             }
             stages.add("T4 reduce", t4.elapsed());
+            spans.push(StageSpan { stage: PipeStage::T4Reduce, start: s4, end: pf.now_s() });
         }
         Ok(())
     }
@@ -589,5 +733,27 @@ mod tests {
         r.stages.add("T1 permute", Duration::from_millis(250));
         assert!((r.stage_s("T1 permute") - 0.25).abs() < 1e-9);
         assert_eq!(r.stage_s("absent"), 0.0);
+    }
+
+    #[test]
+    fn span_accounting_occupancy_and_overlap() {
+        let mut r = PipelineReport { wall: Duration::from_secs(2), ..Default::default() };
+        // Pipeline A: T1 [0,1), T3 [1,2). Pipeline B: T1 [0.5,1.5).
+        r.spans.push(StageSpan { stage: PipeStage::T1Permute, start: 0.0, end: 1.0 });
+        r.spans.push(StageSpan { stage: PipeStage::T3Kernel, start: 1.0, end: 2.0 });
+        r.spans.push(StageSpan { stage: PipeStage::T1Permute, start: 0.5, end: 1.5 });
+        assert!((r.stage_busy_s(PipeStage::T1Permute) - 2.0).abs() < 1e-12);
+        assert!((r.stage_occupancy(PipeStage::T1Permute) - 1.0).abs() < 1e-12);
+        // B's permute [0.5,1.5) overlaps A's kernel [1,2) for 0.5s.
+        assert!((r.stage_overlap_s(PipeStage::T1Permute, PipeStage::T3Kernel) - 0.5).abs() < 1e-12);
+        // A T0 read [1.0,1.5) also hides under the kernel; the union overlap
+        // counts the shared [1.0,1.5) window once, not per hidden stage.
+        r.spans.push(StageSpan { stage: PipeStage::T0Ingest, start: 1.0, end: 1.5 });
+        assert!((r.stage_overlap_s(PipeStage::T0Ingest, PipeStage::T3Kernel) - 0.5).abs() < 1e-12);
+        let union =
+            r.stages_overlap_s(&[PipeStage::T0Ingest, PipeStage::T1Permute], PipeStage::T3Kernel);
+        assert!((union - 0.5).abs() < 1e-12, "union overlap double-counted: {union}");
+        assert_eq!(PipeStage::ALL.len(), 6);
+        assert_eq!(PipeStage::T3Kernel.name(), "T3");
     }
 }

@@ -64,6 +64,11 @@ pub struct ShardPlan {
     /// Sorted, padded sample coordinates (length = variant `n`).
     pub slon: Arc<Vec<f32>>,
     pub slat: Arc<Vec<f32>>,
+    /// Staged unit-vector columns `[3, n]` (x | y | z planes), f32-cast from
+    /// the shared component's precomputed f64 trig — T2 ships these so the
+    /// device kernel's per-pair distance is a chord test on staged columns
+    /// rather than per-pair haversine trig from raw lon/lat.
+    pub sunit: Arc<Vec<f32>>,
     /// Original-sample index of each shard-local sorted sample.
     perm: Vec<u32>,
     /// Minimum channel length the permute accepts (max original index + 1),
@@ -211,6 +216,7 @@ impl DispatchPlan {
             shards.push(ShardPlan {
                 slon: Arc::new(slon),
                 slat: Arc::new(slat),
+                sunit: Arc::new(view.staged_unit_f32(variant.n)),
                 perm: view.perm.clone(),
                 required_len,
                 tiles,
@@ -293,6 +299,16 @@ mod tests {
         assert_eq!(plan.epoch_for_shard(2), 102);
         for shard in &plan.shards {
             assert_eq!(shard.slon.len(), 1536);
+            // Staged unit columns: [3, n] planes, consistent with slon/slat.
+            assert_eq!(shard.sunit.len(), 3 * 1536);
+            for j in (0..shard.perm.len()).step_by(211) {
+                let u = crate::healpix::unit_vec(shard.slon[j] as f64, shard.slat[j] as f64);
+                // f32-cast of f64 unit vectors built from f64 coords vs unit
+                // vectors of f32-rounded coords: equal to f32 precision.
+                assert!((shard.sunit[j] as f64 - u[0]).abs() < 1e-6);
+                assert!((shard.sunit[1536 + j] as f64 - u[1]).abs() < 1e-6);
+                assert!((shard.sunit[2 * 1536 + j] as f64 - u[2]).abs() < 1e-6);
+            }
             for t in 0..plan.tiles_per_shard() {
                 let tile = shard.tile(t);
                 assert_eq!(tile.cell_lon.len(), 256);

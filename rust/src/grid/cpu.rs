@@ -14,6 +14,9 @@
 //!   channel-block accumulator live in worker-local state reused across
 //!   cells ([`parallel_items_scoped`]), replacing the former per-cell heap
 //!   allocations; cells are claimed in blocks, not one `fetch_add` each.
+//!   The sweep runs on the persistent
+//!   [`PipelineExecutor`](crate::util::threads::PipelineExecutor) (parked
+//!   workers), so it no longer pays a scoped thread spawn per call.
 //! * **Channel-blocked accumulation** — channel values are permuted once
 //!   into a sample-major `vals[j·n_ch + c]` matrix, and each cell's
 //!   contributors are applied `channel_block` channels at a time: a

@@ -20,7 +20,9 @@ use std::f64::consts::FRAC_PI_2;
 const GROUP_CLAIM_BLOCK: usize = 8;
 
 /// Per-worker scratch reused across groups (ring ranges + candidate list) —
-/// replaces the former per-group heap allocations.
+/// replaces the former per-group heap allocations. Lives for one executor
+/// sweep: [`parallel_items_scoped`] runs the group walk on the persistent
+/// [`PipelineExecutor`](crate::util::threads::PipelineExecutor).
 struct GroupScratch {
     ranges: Vec<PixRange>,
     found: Vec<(f64, i32)>,

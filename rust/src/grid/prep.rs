@@ -13,7 +13,6 @@
 //! permute_channel`] reorders a channel's value column into the sorted
 //! layout (the per-pipeline half of step ③).
 
-use std::f64::consts::FRAC_PI_2;
 use std::time::Duration;
 
 use crate::grid::kernels::ConvKernel;
@@ -58,16 +57,12 @@ pub struct SharedComponent {
     /// Sorted coordinates in full precision for the CPU gridder.
     pub slon64: Vec<f64>,
     pub slat64: Vec<f64>,
-    /// Precomputed per-sample trig (sorted order): sin/cos of the latitude
-    /// and the colatitude θ = π/2 − lat. `unit` below is assembled from the
-    /// same sin/cos evaluations; the columns themselves are kept for device
-    /// staging and ring-walk consumers that work in (θ, sin, cos) terms.
-    pub sin_lat: Vec<f64>,
-    pub cos_lat: Vec<f64>,
-    pub ctheta: Vec<f64>,
-    /// Per-sample unit 3-vectors (bit-identical to `unit_vec(lon, lat)`) —
-    /// the operand of the trig-free chord distance in the gridder and
-    /// neighbour-walk inner loops (redundancy elimination, §4.3).
+    /// Per-sample unit 3-vectors (bit-identical to `unit_vec(lon, lat)`),
+    /// precomputed once from the sorted coordinates — the operand of the
+    /// trig-free chord distance in the gridder and neighbour-walk inner
+    /// loops, and the source of the f32 staging planes T2 ships to the
+    /// device ([`SharedComponent::staged_unit_f32`]). Redundancy
+    /// elimination, §4.3.
     pub unit: Vec<[f64; 3]>,
     /// Worker budget the component was built with; reused by the parallel
     /// [`SharedComponent::permute_channel`].
@@ -108,17 +103,14 @@ impl SharedComponent {
         stats.t_sort = t;
 
         // ③ adjust coordinate memory to the sorted order, in parallel, and
-        // precompute the per-sample trig columns (sin/cos lat, colatitude,
-        // unit vector) so the gridding inner loops are trig-free.
+        // precompute the per-sample unit vectors so the gridding inner loops
+        // (and the device staging planes) are trig-free.
         let mut sorted_pix = vec![0u64; n];
         let mut perm = vec![0u32; n];
         let mut slon = vec![0.0f32; n];
         let mut slat = vec![0.0f32; n];
         let mut slon64 = vec![0.0f64; n];
         let mut slat64 = vec![0.0f64; n];
-        let mut sin_lat = vec![0.0f64; n];
-        let mut cos_lat = vec![0.0f64; n];
-        let mut ctheta = vec![0.0f64; n];
         let mut unit = vec![[0.0f64; 3]; n];
         let (_, t) = timed(|| {
             let w_pix = DisjointWriter::new(&mut sorted_pix);
@@ -127,9 +119,6 @@ impl SharedComponent {
             let w_slat = DisjointWriter::new(&mut slat);
             let w_slon64 = DisjointWriter::new(&mut slon64);
             let w_slat64 = DisjointWriter::new(&mut slat64);
-            let w_sin = DisjointWriter::new(&mut sin_lat);
-            let w_cos = DisjointWriter::new(&mut cos_lat);
-            let w_ctheta = DisjointWriter::new(&mut ctheta);
             let w_unit = DisjointWriter::new(&mut unit);
             let items = &items;
             parallel_chunks(n, workers, |_, s, e| {
@@ -145,9 +134,6 @@ impl SharedComponent {
                         w_slat.write(j, lats[i] as f32);
                         w_slon64.write(j, lons[i]);
                         w_slat64.write(j, lats[i]);
-                        w_sin.write(j, sin_lat);
-                        w_cos.write(j, cos_lat);
-                        w_ctheta.write(j, FRAC_PI_2 - lats[i]);
                         // Same ops/order as `healpix::unit_vec` ⇒ bit-equal.
                         w_unit.write(j, [cos_lat * cos_lon, cos_lat * sin_lon, sin_lat]);
                     }
@@ -173,9 +159,6 @@ impl SharedComponent {
             slat,
             slon64,
             slat64,
-            sin_lat,
-            cos_lat,
-            ctheta,
             unit,
             workers,
             stats,
@@ -215,13 +198,31 @@ impl SharedComponent {
             slat: self.slat[lo..hi].to_vec(),
             slon64: self.slon64[lo..hi].to_vec(),
             slat64: self.slat64[lo..hi].to_vec(),
-            sin_lat: self.sin_lat[lo..hi].to_vec(),
-            cos_lat: self.cos_lat[lo..hi].to_vec(),
-            ctheta: self.ctheta[lo..hi].to_vec(),
             unit: self.unit[lo..hi].to_vec(),
             workers: self.workers,
             stats: self.stats.clone(),
         }
+    }
+
+    /// Device-staging view of the precomputed unit-vector columns: `[3,
+    /// pad_to]` f32 planes (x | y | z), zero-padded past the sample count.
+    ///
+    /// This is what T2 uploads alongside the raw coordinates, so the device
+    /// kernel computes per-pair distances as a squared-chord test on staged
+    /// columns instead of re-deriving trig from lon/lat for every
+    /// sample-cell pair (the same redundancy elimination the CPU hot path
+    /// got in `grid::cpu`). Pad entries are never gathered (`nbr` indices
+    /// stay below the shard size) but must be finite for vectorised math.
+    pub fn staged_unit_f32(&self, pad_to: usize) -> Vec<f32> {
+        let n = self.n_samples();
+        assert!(pad_to >= n, "pad_to {pad_to} < {n} samples");
+        let mut out = vec![0.0f32; 3 * pad_to];
+        for (j, u) in self.unit.iter().enumerate() {
+            out[j] = u[0] as f32;
+            out[pad_to + j] = u[1] as f32;
+            out[2 * pad_to + j] = u[2] as f32;
+        }
+        out
     }
 
     /// Reorder one channel's value column into the sorted layout, replacing
@@ -284,20 +285,16 @@ mod tests {
     }
 
     #[test]
-    fn trig_columns_match_recomputation() {
+    fn unit_columns_match_recomputation() {
         let (lons, lats) = random_coords(3000, 11);
         let sc = SharedComponent::build(&lons, &lats, 0.02, 4).unwrap();
         for j in (0..3000).step_by(53) {
             let i = sc.perm[j] as usize;
-            assert_eq!(sc.sin_lat[j], lats[i].sin());
-            assert_eq!(sc.cos_lat[j], lats[i].cos());
-            assert_eq!(sc.ctheta[j], FRAC_PI_2 - lats[i]);
             assert_eq!(sc.unit[j], crate::healpix::unit_vec(lons[i], lats[i]));
         }
         // Parallel and serial builds agree bit-for-bit.
         let sc1 = SharedComponent::build(&lons, &lats, 0.02, 1).unwrap();
         assert_eq!(sc.perm, sc1.perm);
-        assert_eq!(sc.sin_lat, sc1.sin_lat);
         assert_eq!(sc.unit, sc1.unit);
         assert_eq!(sc.slon64, sc1.slon64);
     }
@@ -335,6 +332,22 @@ mod tests {
     }
 
     #[test]
+    fn staged_unit_columns_match_precomputed_vectors() {
+        let (lons, lats) = random_coords(500, 21);
+        let sc = SharedComponent::build(&lons, &lats, 0.02, 2).unwrap();
+        let pad = 640;
+        let staged = sc.staged_unit_f32(pad);
+        assert_eq!(staged.len(), 3 * pad);
+        for j in (0..500).step_by(37) {
+            assert_eq!(staged[j], sc.unit[j][0] as f32);
+            assert_eq!(staged[pad + j], sc.unit[j][1] as f32);
+            assert_eq!(staged[2 * pad + j], sc.unit[j][2] as f32);
+        }
+        // Padding is finite zeros.
+        assert!(staged[500..pad].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
     fn resolution_controls_nside() {
         let (lons, lats) = random_coords(100, 4);
         let coarse = SharedComponent::build(&lons, &lats, 0.1, 2).unwrap();
@@ -361,8 +374,6 @@ mod tests {
             assert_eq!(sub.slon64[j], lons[i]);
             assert_eq!(sub.sorted_pix[j], sc.sorted_pix[500 + j]);
             assert_eq!(sub.unit[j], sc.unit[500 + j]);
-            assert_eq!(sub.cos_lat[j], sc.cos_lat[500 + j]);
-            assert_eq!(sub.ctheta[j], sc.ctheta[500 + j]);
         }
         // Span lookup agrees with the parent's, shifted.
         let (a, b) = sub.samples_in_pix_range(sub.sorted_pix[0], sub.sorted_pix[999]);

@@ -1,17 +1,18 @@
 //! `hegrid` — the leader binary.
 //!
 //! ```text
-//! hegrid simulate  --preset quick|simulated|observed|extended [...] --out data.hgd
-//! hegrid grid      --input data.hgd [--out-prefix out/map] [engine knobs]
-//! hegrid inspect   --input data.hgd
-//! hegrid accuracy  --input data.hgd [--out-prefix out/acc]   (Fig-17 check)
-//! hegrid info      [--artifacts artifacts]                   (list variants)
+//! hegrid simulate   --preset quick|simulated|observed|extended [...] --out data.hgd
+//! hegrid grid       --input data.hgd [--out-prefix out/map] [engine knobs]
+//! hegrid inspect    --input data.hgd
+//! hegrid accuracy   --input data.hgd [--out-prefix out/acc]   (Fig-17 check)
+//! hegrid info       [--artifacts artifacts]                   (list variants)
+//! hegrid bench-gate --current BENCH_x.json [--baseline prev.json] [--threshold 0.15]
 //! ```
 //!
-//! Engine knobs (grid/accuracy): `--streams N --pipelines N --channels-per-dispatch C
-//! --gamma G --block B --cpu-block B --kernel gauss1d|gauss2d|tapered_sinc
-//! --profile v|m --oversample F --no-share --artifacts DIR --prefetch-depth D
-//! --io-workers N`.
+//! Engine knobs (grid/accuracy): `--streams N --pipelines N --pipeline-width W
+//! --channels-per-dispatch C --gamma G --block B --cpu-block B
+//! --kernel gauss1d|gauss2d|tapered_sinc --profile v|m --oversample F
+//! --no-share --artifacts DIR --prefetch-depth D --io-workers N`.
 //!
 //! `grid --streaming` reads channels lazily from the HGD file through the
 //! T0 prefetcher (bounded memory; I/O overlaps compute) instead of loading
@@ -31,8 +32,9 @@ use hegrid::util::error::{HegridError, Result};
 
 const VALUE_OPTS: &[&str] = &[
     "preset", "points", "channels", "field", "beam", "seed", "out", "input", "out-prefix",
-    "streams", "pipelines", "channels-per-dispatch", "gamma", "block", "cpu-block", "kernel",
-    "profile", "oversample", "artifacts", "threads", "variant", "prefetch-depth", "io-workers",
+    "streams", "pipelines", "pipeline-width", "channels-per-dispatch", "gamma", "block",
+    "cpu-block", "kernel", "profile", "oversample", "artifacts", "threads", "variant",
+    "prefetch-depth", "io-workers", "baseline", "current", "threshold",
 ];
 
 fn main() -> ExitCode {
@@ -58,6 +60,7 @@ fn run(argv: &[String]) -> Result<()> {
         Some("inspect") => cmd_inspect(&args)?,
         Some("accuracy") => cmd_accuracy(&args)?,
         Some("info") => cmd_info(&args)?,
+        Some("bench-gate") => cmd_bench_gate(&args)?,
         Some("help") | None => {
             print_help();
             return Ok(());
@@ -79,7 +82,8 @@ fn print_help() {
          \x20 grid      grid a dataset (--streaming: bounded-memory prefetched ingest)\n\
          \x20 inspect   print an HGD file's header\n\
          \x20 accuracy  compare HEGrid output against the Cygrid baseline (Fig 17)\n\
-         \x20 info      list AOT artifact variants\n\n\
+         \x20 info      list AOT artifact variants\n\
+         \x20 bench-gate  diff a fresh BENCH_*.json against a stored baseline (CI perf gate)\n\n\
          run `cargo doc --open` or see README.md for the full option list",
         hegrid::VERSION
     );
@@ -90,6 +94,7 @@ fn engine_config(args: &cli::Args) -> Result<HegridConfig> {
         artifacts_dir: args.get_or("artifacts", "artifacts").to_string(),
         streams: args.get_usize("streams", 0)?,
         pipelines: args.get_usize("pipelines", 0)?,
+        pipeline_width: args.get_usize("pipeline-width", 0)?,
         channels_per_dispatch: args.get_usize("channels-per-dispatch", 10)?,
         share_preprocessing: !args.flag("no-share"),
         gamma: args.get_usize("gamma", 1)?,
@@ -215,6 +220,20 @@ fn cmd_grid(args: &cli::Args) -> Result<()> {
         report.io_busy_s,
         report.io_overlap_s
     );
+    {
+        use hegrid::coordinator::PipeStage;
+        let occ: Vec<String> = PipeStage::ALL
+            .iter()
+            .map(|s| format!("{}={:.2}", s.name(), report.stage_occupancy(*s)))
+            .collect();
+        println!(
+            "  pipelines: width={} stage occupancy [{}] overlap(T1,T3)={:.3}s overlap(T0,T3)={:.3}s",
+            report.n_pipelines,
+            occ.join(" "),
+            report.stage_overlap_s(PipeStage::T1Permute, PipeStage::T3Kernel),
+            report.stage_overlap_s(PipeStage::T0Ingest, PipeStage::T3Kernel)
+        );
+    }
     if let Some(prefix) = args.get("out-prefix") {
         if let Some(parent) = Path::new(prefix).parent() {
             if !parent.as_os_str().is_empty() {
@@ -281,6 +300,26 @@ fn cmd_accuracy(args: &cli::Args) -> Result<()> {
         println!("wrote {prefix}_hegrid.pgm / {prefix}_cygrid.pgm");
     }
     Ok(())
+}
+
+fn cmd_bench_gate(args: &cli::Args) -> Result<()> {
+    use hegrid::benchkit::gate::{gate_files, GateOutcome, DEFAULT_THRESHOLD};
+    let current = args
+        .get("current")
+        .ok_or_else(|| HegridError::Config("--current <BENCH_*.json> is required".into()))?
+        .to_string();
+    let baseline = args.get_or("baseline", "baseline/BENCH_cpu_gridding.json").to_string();
+    let threshold = args.get_f64("threshold", DEFAULT_THRESHOLD)?;
+    if !(0.0..1.0).contains(&threshold) {
+        return Err(HegridError::Config(format!("--threshold {threshold} out of range [0, 1)")));
+    }
+    match gate_files(Path::new(&baseline), Path::new(&current), threshold)? {
+        GateOutcome::NoBaseline | GateOutcome::Passed => Ok(()),
+        GateOutcome::Failed => Err(HegridError::Config(format!(
+            "bench-gate: throughput regressed more than {:.0}% vs {baseline}",
+            threshold * 100.0
+        ))),
+    }
 }
 
 fn cmd_info(args: &cli::Args) -> Result<()> {

@@ -60,9 +60,15 @@ pub struct ExecuteRequest {
     pub cell_lat: Arc<Vec<f32>>,
     /// `[groups, k]` flattened.
     pub nbr: Arc<Vec<i32>>,
-    /// Sorted sample coordinates, padded to the variant's `n`.
+    /// Sorted sample coordinates, padded to the variant's `n`. Still shipped
+    /// for the anisotropic (gauss2d) weight terms and the fixed AOT artifact
+    /// ABI; the isotropic distance itself comes from `sunit`.
     pub slon: Arc<Vec<f32>>,
     pub slat: Arc<Vec<f32>>,
+    /// Staged per-sample unit-vector columns `[3, n]` (x | y | z planes),
+    /// precomputed once in the shared component (T2 ships columns instead of
+    /// deriving per-pair trig from raw lon/lat on the device).
+    pub sunit: Arc<Vec<f32>>,
     /// Sorted, padded channel values `[c, n]` flattened.
     pub sval: Arc<Vec<f32>>,
     pub kparam: [f32; 4],
@@ -201,9 +207,12 @@ fn stream_main(manifest: Arc<Manifest>, rx: Receiver<Msg>) {
     };
     let mut executables: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
     let mut buffers: HashMap<BufferKey, xla::PjRtBuffer> = HashMap::new();
-    // Evict stale epochs/groups: keep at most this many group-value buffers.
+    // Evict stale epochs/groups: keep at most this many group-value buffers
+    // and coordinate epochs (LRU each).
     const MAX_GROUP_BUFFERS: usize = 4;
+    const MAX_COORD_EPOCHS: usize = 8;
     let mut group_lru: Vec<BufferKey> = Vec::new();
+    let mut coord_epochs: Vec<u64> = Vec::new();
 
     while let Ok(msg) = rx.recv() {
         match msg {
@@ -219,6 +228,8 @@ fn stream_main(manifest: Arc<Manifest>, rx: Receiver<Msg>) {
                     &mut buffers,
                     &mut group_lru,
                     MAX_GROUP_BUFFERS,
+                    &mut coord_epochs,
+                    MAX_COORD_EPOCHS,
                     &req,
                 );
                 let _ = reply.send(out);
@@ -254,9 +265,14 @@ fn run_one(
     buffers: &mut HashMap<BufferKey, xla::PjRtBuffer>,
     group_lru: &mut Vec<BufferKey>,
     max_groups: usize,
+    coord_epochs: &mut Vec<u64>,
+    max_epochs: usize,
     req: &ExecuteRequest,
 ) -> Result<ExecuteResponse> {
     let info = manifest.get(&req.variant)?.clone();
+    // NOTE: the AOT HLO artifacts predate the staged unit-vector columns —
+    // this backend uploads raw lon/lat only and ignores `req.sunit` until
+    // the artifacts are regenerated with the 8-input signature.
     // Shape validation up front — shape bugs become errors, not UB.
     if req.cell_lon.len() != info.m
         || req.cell_lat.len() != info.m
@@ -288,10 +304,20 @@ fn run_one(
     let kparam = client.buffer_from_host_buffer::<f32>(&req.kparam[..], &[4], None)?;
 
     let coord_key = |axis: u8| BufferKey::SampleCoords { epoch: req.epoch, axis, n: info.n };
-    if !buffers.contains_key(&coord_key(0)) {
-        // New epoch: drop previous coordinate + group buffers.
-        buffers.retain(|k, _| matches!(k, BufferKey::SampleCoords { epoch, .. } | BufferKey::GroupValues { epoch, .. } if *epoch == req.epoch));
-        group_lru.retain(|k| matches!(k, BufferKey::GroupValues { epoch, .. } if *epoch == req.epoch));
+    // LRU (touch-on-use) over resident epochs: multi-shard plans at
+    // pipeline_width ≥ 2 interleave shard epochs on one stream, and
+    // exact-epoch eviction would re-upload shared inputs on every switch.
+    if let Some(pos) = coord_epochs.iter().position(|&e| e == req.epoch) {
+        let e = coord_epochs.remove(pos);
+        coord_epochs.push(e);
+    } else {
+        coord_epochs.push(req.epoch);
+        while coord_epochs.len() > max_epochs {
+            let gone = coord_epochs.remove(0);
+            buffers.retain(|k, _| !matches!(k, BufferKey::SampleCoords { epoch, .. } | BufferKey::GroupValues { epoch, .. } if *epoch == gone));
+            group_lru
+                .retain(|k| !matches!(k, BufferKey::GroupValues { epoch, .. } if *epoch == gone));
+        }
         let slon = client.buffer_from_host_buffer::<f32>(&req.slon, &[info.n], None)?;
         let slat = client.buffer_from_host_buffer::<f32>(&req.slat, &[info.n], None)?;
         buffers.insert(coord_key(0), slon);
@@ -346,7 +372,13 @@ fn run_one(
 fn stream_main(manifest: Arc<Manifest>, rx: Receiver<Msg>) {
     let mut buffers: HashMap<BufferKey, Arc<Vec<f32>>> = HashMap::new();
     const MAX_GROUP_BUFFERS: usize = 4;
+    // Coordinate epochs resident per stream: large enough that a
+    // many-shard plan interleaved across pipelines does not evict the
+    // epoch it is about to revisit (coords are 5n f32 per epoch — cheap
+    // next to the thrash they prevent).
+    const MAX_COORD_EPOCHS: usize = 8;
     let mut group_lru: Vec<BufferKey> = Vec::new();
+    let mut coord_epochs: Vec<u64> = Vec::new();
 
     while let Ok(msg) = rx.recv() {
         match msg {
@@ -359,6 +391,8 @@ fn stream_main(manifest: Arc<Manifest>, rx: Receiver<Msg>) {
                     &mut buffers,
                     &mut group_lru,
                     MAX_GROUP_BUFFERS,
+                    &mut coord_epochs,
+                    MAX_COORD_EPOCHS,
                     &req,
                 );
                 let _ = reply.send(out);
@@ -371,18 +405,25 @@ fn stream_main(manifest: Arc<Manifest>, rx: Receiver<Msg>) {
 /// Weight semantics are identical to [`crate::grid::kernels::ConvKernel`],
 /// but evaluated from the dispatch's `kparam` array exactly as the device
 /// kernel would — the offline stand-in for AOT Pallas + PJRT.
+///
+/// Per-pair distances use the **staged unit-vector columns** (`sunit`,
+/// uploaded once per epoch like the coordinates): one squared-chord dot
+/// product + `asin` per pair, with the cell's unit vector derived once per
+/// cell — no per-pair haversine trig from raw lon/lat.
 #[cfg(not(feature = "pjrt"))]
 mod native {
     use super::*;
     use crate::grid::kernels::ConvKernelType;
-    use crate::healpix::ang_dist;
-    use std::f64::consts::FRAC_PI_2;
+    use crate::healpix::{chord2_to_arc, unit_vec};
 
+    #[allow(clippy::too_many_arguments)]
     pub(super) fn run_one(
         manifest: &Manifest,
         buffers: &mut HashMap<BufferKey, Arc<Vec<f32>>>,
         group_lru: &mut Vec<BufferKey>,
         max_groups: usize,
+        coord_epochs: &mut Vec<u64>,
+        max_epochs: usize,
         req: &ExecuteRequest,
     ) -> Result<ExecuteResponse> {
         let info = manifest.get(&req.variant)?.clone();
@@ -391,10 +432,11 @@ mod native {
             || req.nbr.len() != info.groups * info.k
             || req.slon.len() != info.n
             || req.slat.len() != info.n
+            || req.sunit.len() != 3 * info.n
             || req.sval.len() != info.c * info.n
         {
             return Err(HegridError::Internal(format!(
-                "dispatch shapes do not match variant {}: cells {}/{}, nbr {}/{}, samples {}/{}, sval {}/{}",
+                "dispatch shapes do not match variant {}: cells {}/{}, nbr {}/{}, samples {}/{}, sunit {}/{}, sval {}/{}",
                 info.name,
                 req.cell_lon.len(),
                 info.m,
@@ -402,6 +444,8 @@ mod native {
                 info.groups * info.k,
                 req.slon.len(),
                 info.n,
+                req.sunit.len(),
+                3 * info.n,
                 req.sval.len(),
                 info.c * info.n
             )));
@@ -411,11 +455,28 @@ mod native {
         // ---- emulated H2D: copy shared inputs into the cache on miss -----
         let t0 = Instant::now();
         let coord_key = |axis: u8| BufferKey::SampleCoords { epoch: req.epoch, axis, n: info.n };
-        if !buffers.contains_key(&coord_key(0)) {
-            buffers.retain(|k, _| matches!(k, BufferKey::SampleCoords { epoch, .. } | BufferKey::GroupValues { epoch, .. } if *epoch == req.epoch));
-            group_lru.retain(|k| matches!(k, BufferKey::GroupValues { epoch, .. } if *epoch == req.epoch));
+        // Recent epochs stay resident under an LRU (touch-on-use) instead of
+        // exact-epoch eviction: with `pipeline_width` ≥ 2 and a multi-shard
+        // plan, one stream interleaves dispatches from different shard
+        // epochs, and evicting everything that isn't `req.epoch` would
+        // re-upload coordinates + group values on every switch.
+        if let Some(pos) = coord_epochs.iter().position(|&e| e == req.epoch) {
+            let e = coord_epochs.remove(pos);
+            coord_epochs.push(e);
+        } else {
+            coord_epochs.push(req.epoch);
+            while coord_epochs.len() > max_epochs {
+                let gone = coord_epochs.remove(0);
+                buffers.retain(|k, _| !matches!(k, BufferKey::SampleCoords { epoch, .. } | BufferKey::GroupValues { epoch, .. } if *epoch == gone));
+                group_lru.retain(
+                    |k| !matches!(k, BufferKey::GroupValues { epoch, .. } if *epoch == gone),
+                );
+            }
             buffers.insert(coord_key(0), Arc::new(req.slon.to_vec()));
             buffers.insert(coord_key(1), Arc::new(req.slat.to_vec()));
+            // Axis 2: the staged `[3, n]` unit-vector planes, resident per
+            // epoch exactly like the coordinate columns.
+            buffers.insert(coord_key(2), Arc::new(req.sunit.to_vec()));
         }
         let gkey =
             BufferKey::GroupValues { epoch: req.epoch, group: req.group, c: info.c, n: info.n };
@@ -429,6 +490,7 @@ mod native {
         }
         let slon = Arc::clone(buffers.get(&coord_key(0)).expect("resident"));
         let slat = Arc::clone(buffers.get(&coord_key(1)).expect("resident"));
+        let sunit = Arc::clone(buffers.get(&coord_key(2)).expect("resident"));
         let sval = Arc::clone(buffers.get(&gkey).expect("resident"));
         let t_h2d = t0.elapsed();
 
@@ -443,10 +505,12 @@ mod native {
         let (m, k, c, n, gamma) = (info.m, info.k, info.c, info.n, info.gamma.max(1));
         let mut acc64 = vec![0.0f64; c * m];
         let mut wsum64 = vec![0.0f64; m];
+        let (sux, suy, suz) = (&sunit[..n], &sunit[n..2 * n], &sunit[2 * n..3 * n]);
         for i in 0..m {
             let clon = req.cell_lon[i] as f64;
             let clat = req.cell_lat[i] as f64;
             let clat_cos = clat.cos();
+            let cu = unit_vec(clon, clat);
             let g = i / gamma;
             for &j in &req.nbr[g * k..(g + 1) * k] {
                 if j < 0 {
@@ -456,15 +520,17 @@ mod native {
                 if j >= n {
                     continue; // padded gather index: out-of-shard, no effect
                 }
-                let sl = slon[j] as f64;
-                let sb = slat[j] as f64;
-                let d = ang_dist(FRAC_PI_2 - clat, clon, FRAC_PI_2 - sb, sl);
+                let dx = cu[0] - sux[j] as f64;
+                let dy = cu[1] - suy[j] as f64;
+                let dz = cu[2] - suz[j] as f64;
+                let d = chord2_to_arc(dx * dx + dy * dy + dz * dz);
                 let d2 = d * d;
                 let (w, r2) = match ktype {
                     ConvKernelType::Gauss1d => ((-d2 * kp[0]).exp(), kp[1]),
                     ConvKernelType::Gauss2d => {
-                        let dlon_cos = (sl - clon) * clat_cos;
-                        let dlat = sb - clat;
+                        // Anisotropic terms still need the raw coordinates.
+                        let dlon_cos = (slon[j] as f64 - clon) * clat_cos;
+                        let dlat = slat[j] as f64 - clat;
                         ((-dlon_cos * dlon_cos * kp[0] - dlat * dlat * kp[1]).exp(), kp[2])
                     }
                     ConvKernelType::TaperedSinc => {

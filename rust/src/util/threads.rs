@@ -1,9 +1,11 @@
-//! Thread-pool substrate: a small fixed-size worker pool with scoped parallel
-//! iteration. Stands in for `rayon` (not vendored). Used by pre-processing
-//! (parallel pixel_idx computation / radix sort) and the CPU baselines.
+//! Thread-pool substrate: a persistent [`PipelineExecutor`] with parked
+//! workers plus the scoped parallel-iteration helpers built on it. Stands in
+//! for `rayon` (not vendored). Used by pre-processing (parallel pixel_idx
+//! computation / radix sort), the CPU baselines, and the coordinator's
+//! channel-group pipelines.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex, OnceLock};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 use std::thread;
 
 /// Number of worker threads to use by default (logical cores, capped).
@@ -16,7 +18,8 @@ pub fn default_parallelism() -> usize {
 }
 
 /// Run `f(chunk_index, start, end)` over `n` items split into ~`workers`
-/// contiguous chunks, in parallel, on scoped threads. Blocks until done.
+/// contiguous chunks, in parallel, on the shared [`PipelineExecutor`].
+/// Blocks until done.
 ///
 /// `f` must be `Sync` — chunks are disjoint so data races are the caller's
 /// responsibility to avoid via disjoint output slices or atomics.
@@ -32,17 +35,14 @@ where
         f(0, 0, n);
         return;
     }
+    // Same partition as the historical scoped-spawn version: chunk w covers
+    // [w·chunk, (w+1)·chunk) ∩ [0, n). Chunks are claimed dynamically but
+    // each runs exactly once with its own index, which is all the callers
+    // (radix-sort histograms, disjoint fills) rely on.
     let chunk = n.div_ceil(workers);
-    thread::scope(|s| {
-        for w in 0..workers {
-            let start = w * chunk;
-            let end = ((w + 1) * chunk).min(n);
-            if start >= end {
-                break;
-            }
-            let f = &f;
-            s.spawn(move || f(w, start, end));
-        }
+    let n_chunks = n.div_ceil(chunk);
+    PipelineExecutor::global().run(n_chunks, n_chunks, 1, || (), |_, w| {
+        f(w, w * chunk, ((w + 1) * chunk).min(n));
     });
 }
 
@@ -53,36 +53,13 @@ pub fn parallel_items<F>(n: usize, workers: usize, f: F)
 where
     F: Fn(usize) + Sync,
 {
-    if n == 0 {
-        return;
-    }
-    let workers = workers.clamp(1, n);
-    if workers == 1 {
-        for i in 0..n {
-            f(i);
-        }
-        return;
-    }
-    let next = AtomicUsize::new(0);
-    thread::scope(|s| {
-        for _ in 0..workers {
-            let f = &f;
-            let next = &next;
-            s.spawn(move || loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                f(i);
-            });
-        }
-    });
+    parallel_items_scoped(n, workers, 1, || (), |_, i| f(i));
 }
 
 /// Work-stealing loop with **per-worker state** and **block claiming**: each
-/// worker calls `init()` once, then repeatedly claims `claim_block` contiguous
-/// indices from a shared cursor (one `fetch_add` per block instead of one per
-/// item) and runs `f(&mut state, i)` for each.
+/// participating worker calls `init()` once, then repeatedly claims
+/// `claim_block` contiguous indices from a shared cursor (one `fetch_add` per
+/// block instead of one per item) and runs `f(&mut state, i)` for each.
 ///
 /// This is the substrate for hot loops that need reusable scratch buffers
 /// (ring ranges, contributor lists, channel-block accumulators): the former
@@ -90,41 +67,291 @@ where
 /// claiming keeps the cursor off the coherence hot path when items are cheap;
 /// irregular per-item cost still balances because blocks are claimed
 /// dynamically.
+///
+/// Runs on the process-wide [`PipelineExecutor`]: the calling thread always
+/// participates (progress is never blocked on pool availability) and parked
+/// pool workers join as helpers, so a sweep no longer pays a thread spawn.
 pub fn parallel_items_scoped<S, I, F>(n: usize, workers: usize, claim_block: usize, init: I, f: F)
 where
     I: Fn() -> S + Sync,
     F: Fn(&mut S, usize) + Sync,
 {
-    if n == 0 {
-        return;
-    }
-    let claim_block = claim_block.max(1);
-    let workers = workers.clamp(1, n.div_ceil(claim_block));
-    if workers == 1 {
-        let mut state = init();
-        for i in 0..n {
-            f(&mut state, i);
-        }
-        return;
-    }
-    let next = AtomicUsize::new(0);
-    thread::scope(|s| {
-        for _ in 0..workers {
-            let (init, f, next) = (&init, &f, &next);
-            s.spawn(move || {
-                let mut state = init();
-                loop {
-                    let start = next.fetch_add(claim_block, Ordering::Relaxed);
-                    if start >= n {
-                        break;
-                    }
-                    for i in start..(start + claim_block).min(n) {
-                        f(&mut state, i);
-                    }
+    PipelineExecutor::global().run(n, workers, claim_block, init, f);
+}
+
+/// Cumulative counters of a [`PipelineExecutor`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecutorStats {
+    /// Multi-participant sweeps executed (single-participant sweeps run
+    /// inline on the caller and are not counted).
+    pub sweeps: u64,
+    /// Times a parked pool worker joined a sweep as a helper.
+    pub helper_joins: u64,
+}
+
+/// A long-lived pool of parked worker threads executing **sweeps** — the
+/// persistent replacement for the scoped thread spawn every parallel
+/// iteration used to pay.
+///
+/// A sweep is `n` items claimed in blocks from a shared cursor, with a
+/// per-participant scratch slot created by `init()` at sweep entry (and
+/// dropped at sweep exit, so no state leaks between sweeps). The submitting
+/// thread always participates as worker 0; parked pool workers join as
+/// helpers up to the sweep's participant cap. Because the caller always
+/// makes progress on its own sweep, nested sweeps (a sweep body submitting
+/// another sweep) and concurrent sweeps from independent threads cannot
+/// deadlock — a busy pool only degrades a sweep toward caller-only
+/// execution.
+///
+/// The coordinator runs its channel-group pipelines as the items of one
+/// sweep (`pipeline_width` of them in flight), and the gridding hot loops
+/// ([`parallel_items_scoped`], [`parallel_chunks`]) run as fine-grained
+/// sweeps, so the whole engine shares one set of parked workers.
+pub struct PipelineExecutor {
+    inner: Arc<ExecInner>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+struct ExecInner {
+    reg: Mutex<Registry>,
+    /// Signalled when a sweep is registered (workers wait here while idle).
+    work: Condvar,
+    /// Signalled when a participant leaves a sweep (submitters wait here).
+    done: Condvar,
+    sweeps: AtomicU64,
+    helper_joins: AtomicU64,
+}
+
+struct Registry {
+    shutdown: bool,
+    entries: Vec<EntryPtr>,
+}
+
+/// Raw pointer to a sweep descriptor living on a submitting thread's stack.
+/// Valid while the entry is registered or a participant holds `active` —
+/// see the join protocol in [`PipelineExecutor::run`].
+struct EntryPtr(*const SweepEntry);
+unsafe impl Send for EntryPtr {}
+
+struct SweepEntry {
+    /// Shared item cursor (lives next to the entry on the submitter stack).
+    cursor: *const AtomicUsize,
+    n: usize,
+    /// Participants ever admitted (the caller counts as the first).
+    joined: AtomicUsize,
+    max_participants: usize,
+    /// Participants currently inside the sweep body.
+    active: AtomicUsize,
+    /// A helper panicked inside the body (on the submitter stack, like the
+    /// cursor, so the body's claim loop can poll it and bail early instead
+    /// of grinding through the remaining items; re-raised on the caller).
+    panicked: *const AtomicBool,
+    /// Type- and lifetime-erased per-participant body (claims blocks until
+    /// the cursor is exhausted). The `'static` bound here is a lie told to
+    /// the type system — the join protocol guarantees no worker dereferences
+    /// it after the submitting frame is gone.
+    body: *const (dyn Fn() + Sync),
+}
+
+fn exec_worker_main(inner: Arc<ExecInner>) {
+    loop {
+        let entry: *const SweepEntry = {
+            let mut reg = inner.reg.lock().expect("executor registry poisoned");
+            loop {
+                if reg.shutdown {
+                    return;
                 }
-            });
+                let found = reg.entries.iter().map(|p| p.0).find(|&p| {
+                    let e = unsafe { &*p };
+                    e.joined.load(Ordering::Relaxed) < e.max_participants
+                        && unsafe { &*e.cursor }.load(Ordering::Relaxed) < e.n
+                });
+                match found {
+                    Some(p) => {
+                        // Join under the lock: the entry is still registered,
+                        // so the pointer is valid, and the submitter cannot
+                        // deregister while `active` is being raised here.
+                        let e = unsafe { &*p };
+                        e.joined.fetch_add(1, Ordering::Relaxed);
+                        e.active.fetch_add(1, Ordering::Relaxed);
+                        break p;
+                    }
+                    None => reg = inner.work.wait(reg).expect("executor registry poisoned"),
+                }
+            }
+        };
+        inner.helper_joins.fetch_add(1, Ordering::Relaxed);
+        let e = unsafe { &*entry };
+        let body = unsafe { &*e.body };
+        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(body)).is_err() {
+            unsafe { &*e.panicked }.store(true, Ordering::Release);
         }
-    });
+        // Leaving: once `active` drops the submitter may free the sweep, so
+        // the entry must not be touched after this decrement. Taking the
+        // registry lock before notifying closes the missed-wakeup window
+        // against a submitter that is between its condition check and its
+        // `done.wait`.
+        e.active.fetch_sub(1, Ordering::Release);
+        let _guard = inner.reg.lock().expect("executor registry poisoned");
+        inner.done.notify_all();
+    }
+}
+
+impl PipelineExecutor {
+    /// Spawn a dedicated executor with `workers` parked threads, each named
+    /// `"{name}-{i}"`. Most code should use [`PipelineExecutor::global`].
+    pub fn new(name: &str, workers: usize) -> PipelineExecutor {
+        let workers = workers.max(1);
+        let inner = Arc::new(ExecInner {
+            reg: Mutex::new(Registry { shutdown: false, entries: Vec::new() }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            sweeps: AtomicU64::new(0),
+            helper_joins: AtomicU64::new(0),
+        });
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let inner = Arc::clone(&inner);
+            handles.push(
+                thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || exec_worker_main(inner))
+                    .expect("spawn executor worker"),
+            );
+        }
+        PipelineExecutor { inner, handles }
+    }
+
+    /// The process-wide executor (lazily spawned, [`default_parallelism`]
+    /// workers). Every parallel helper and the coordinator's pipelines run
+    /// on it, so the whole process shares one set of parked threads.
+    pub fn global() -> &'static PipelineExecutor {
+        static GLOBAL: OnceLock<PipelineExecutor> = OnceLock::new();
+        GLOBAL.get_or_init(|| PipelineExecutor::new("hegrid-exec", default_parallelism()))
+    }
+
+    /// Pool worker threads (excludes the participating caller).
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    pub fn stats(&self) -> ExecutorStats {
+        ExecutorStats {
+            sweeps: self.inner.sweeps.load(Ordering::Relaxed),
+            helper_joins: self.inner.helper_joins.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Execute one sweep: `n` items, at most `workers` participants
+    /// (caller included), claimed `claim_block` at a time; each participant
+    /// gets a fresh `init()` scratch for the duration of the sweep.
+    ///
+    /// Blocks until every item ran. With one effective participant the sweep
+    /// runs inline, in order, entirely on the caller — `workers == 1` is the
+    /// exact sequential semantics.
+    pub fn run<S, I, F>(&self, n: usize, workers: usize, claim_block: usize, init: I, f: F)
+    where
+        I: Fn() -> S + Sync,
+        F: Fn(&mut S, usize) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let claim_block = claim_block.max(1);
+        let max_participants = workers.clamp(1, n.div_ceil(claim_block));
+        if max_participants == 1 {
+            let mut state = init();
+            for i in 0..n {
+                f(&mut state, i);
+            }
+            return;
+        }
+        self.inner.sweeps.fetch_add(1, Ordering::Relaxed);
+        let cursor = AtomicUsize::new(0);
+        let panicked = AtomicBool::new(false);
+        let body = || {
+            let mut state = init();
+            loop {
+                // A panic anywhere in the sweep dooms it (run re-raises), so
+                // other participants stop claiming instead of grinding
+                // through the remaining items.
+                if panicked.load(Ordering::Acquire) {
+                    break;
+                }
+                let start = cursor.fetch_add(claim_block, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                for i in start..(start + claim_block).min(n) {
+                    f(&mut state, i);
+                }
+            }
+        };
+        // Erase the body's lifetime for the registry: helpers only
+        // dereference it while `active`/registration keep this frame alive
+        // (the Leave guard below blocks until both clear).
+        let body_ptr: *const (dyn Fn() + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn() + Sync), &'static (dyn Fn() + Sync)>(&body)
+        };
+        let entry = SweepEntry {
+            cursor: &cursor,
+            n,
+            joined: AtomicUsize::new(1),
+            max_participants,
+            active: AtomicUsize::new(1),
+            panicked: &panicked,
+            body: body_ptr,
+        };
+        {
+            let mut reg = self.inner.reg.lock().expect("executor registry poisoned");
+            reg.entries.push(EntryPtr(&entry));
+            self.inner.work.notify_all();
+        }
+
+        // The caller is participant 0. The guard leaves the sweep, waits out
+        // every helper, and deregisters — running even if `f` panics on this
+        // thread, so a helper can never observe a freed sweep.
+        struct Leave<'a> {
+            inner: &'a ExecInner,
+            entry: &'a SweepEntry,
+        }
+        impl Drop for Leave<'_> {
+            fn drop(&mut self) {
+                self.entry.active.fetch_sub(1, Ordering::Release);
+                let mut reg = self.inner.reg.lock().expect("executor registry poisoned");
+                while self.entry.active.load(Ordering::Acquire) != 0 {
+                    reg = self.inner.done.wait(reg).expect("executor registry poisoned");
+                }
+                let target = self.entry as *const SweepEntry;
+                reg.entries.retain(|p| !std::ptr::eq(p.0, target));
+            }
+        }
+        let leave = Leave { inner: &self.inner, entry: &entry };
+        if let Err(payload) = std::panic::catch_unwind(std::panic::AssertUnwindSafe(&body)) {
+            // Tell the helpers to stop claiming before waiting them out,
+            // then continue unwinding on this thread.
+            panicked.store(true, Ordering::Release);
+            drop(leave);
+            std::panic::resume_unwind(payload);
+        }
+        drop(leave);
+        if panicked.load(Ordering::Acquire) {
+            panic!("PipelineExecutor: a helper worker panicked during the sweep");
+        }
+    }
+}
+
+impl Drop for PipelineExecutor {
+    fn drop(&mut self) {
+        {
+            let mut reg = self.inner.reg.lock().expect("executor registry poisoned");
+            reg.shutdown = true;
+            self.inner.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
 }
 
 /// Raw-pointer writer for parallel initialisation of disjoint slice indices.
@@ -198,7 +425,11 @@ impl WorkerPool {
                     match job {
                         Ok(job) => {
                             job();
-                            queued.fetch_sub(1, Ordering::Release);
+                            // AcqRel mirrors `submit`: the Release half
+                            // publishes the job's effects to `pending`
+                            // readers, the Acquire half keeps this RMW in the
+                            // same release sequence as concurrent submits.
+                            queued.fetch_sub(1, Ordering::AcqRel);
                         }
                         Err(_) => break, // all senders dropped
                     }
@@ -211,11 +442,15 @@ impl WorkerPool {
 
     /// Enqueue a job (FIFO).
     pub fn submit<F: FnOnce() + Send + 'static>(&self, job: F) {
-        // Release publishes the increment (and everything before the submit)
-        // to the Acquire load in `pending`; the worker's post-job decrement
-        // is the matching Release on the completion side. The previous
-        // Acquire here ordered nothing — an increment is a store-side event.
-        self.queued.fetch_add(1, Ordering::Release);
+        // AcqRel: the Release half publishes the increment (and everything
+        // before the submit) to the Acquire load in `pending`; the Acquire
+        // half pairs with the workers' completion-side decrements, so a
+        // submitter observing its own increment also observes the effects of
+        // every job whose decrement precedes it in the counter's modification
+        // order. A plain Release here let `pending` transiently under-report
+        // mid-burst: the submitter's next read was not ordered after
+        // completions it raced with.
+        self.queued.fetch_add(1, Ordering::AcqRel);
         self.tx
             .as_ref()
             .expect("pool shut down")
@@ -357,6 +592,107 @@ mod tests {
         }
         drop(pool); // joins
         assert_eq!(sum.load(Ordering::Relaxed), 99 * 100 / 2);
+    }
+
+    #[test]
+    fn executor_sweep_scratch_is_per_sweep_and_dropped() {
+        // Two sweeps on one dedicated executor: every participant gets a
+        // fresh init() per sweep and its scratch is dropped at sweep exit —
+        // nothing leaks into the next sweep.
+        static DROPS: AtomicUsize = AtomicUsize::new(0);
+        struct Scratch(u64);
+        impl Drop for Scratch {
+            fn drop(&mut self) {
+                DROPS.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let ex = PipelineExecutor::new("test-exec", 3);
+        let inits = AtomicUsize::new(0);
+        let sum = AtomicU64::new(0);
+        for sweep in 0..2u64 {
+            let before = inits.load(Ordering::Relaxed);
+            ex.run(
+                1000,
+                4,
+                16,
+                || {
+                    inits.fetch_add(1, Ordering::Relaxed);
+                    Scratch(0)
+                },
+                |s, i| {
+                    s.0 += i as u64;
+                    sum.fetch_add(i as u64, Ordering::Relaxed);
+                },
+            );
+            let after = inits.load(Ordering::Relaxed);
+            assert!((1..=4).contains(&(after - before)), "sweep {sweep}: {}", after - before);
+        }
+        assert_eq!(sum.load(Ordering::Relaxed), 2 * 999 * 1000 / 2);
+        assert_eq!(DROPS.load(Ordering::Relaxed), inits.load(Ordering::Relaxed));
+        let stats = ex.stats();
+        assert_eq!(stats.sweeps, 2);
+    }
+
+    #[test]
+    fn executor_nested_sweeps_complete() {
+        // A sweep body that submits its own sweeps must make progress even
+        // when the pool is saturated (the caller always participates).
+        let total = AtomicUsize::new(0);
+        parallel_items_scoped(8, 4, 1, || (), |_, _| {
+            parallel_items(100, 4, |_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 800);
+    }
+
+    #[test]
+    #[should_panic]
+    fn executor_propagates_sweep_panics() {
+        let ex = PipelineExecutor::new("panic-exec", 2);
+        ex.run(64, 4, 1, || (), |_, i| {
+            if i == 0 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn worker_pool_pending_accounting_under_hammer() {
+        const SUBMITTERS: usize = 8;
+        const PER: usize = 200;
+        let pool = WorkerPool::new("hammer", 4);
+        let done = Arc::new(AtomicUsize::new(0));
+        thread::scope(|s| {
+            for _ in 0..SUBMITTERS {
+                let pool = &pool;
+                let done = &done;
+                s.spawn(move || {
+                    for _ in 0..PER {
+                        let done = Arc::clone(done);
+                        pool.submit(move || {
+                            done.fetch_add(1, Ordering::Release);
+                        });
+                        let p = pool.pending();
+                        // An underflowed counter shows up as a huge value.
+                        assert!(p <= SUBMITTERS * PER, "pending wrapped: {p}");
+                    }
+                });
+            }
+        });
+        // All jobs submitted; wait for completion, then the counter must
+        // settle at exactly zero (each worker decrements after its job).
+        while done.load(Ordering::Acquire) < SUBMITTERS * PER {
+            thread::yield_now();
+        }
+        let mut spins = 0u64;
+        while pool.pending() != 0 {
+            spins += 1;
+            assert!(spins < 100_000_000, "pending() stuck at {}", pool.pending());
+            thread::yield_now();
+        }
+        drop(pool);
+        assert_eq!(done.load(Ordering::Acquire), SUBMITTERS * PER);
     }
 
     #[test]

@@ -1,0 +1,163 @@
+//! Multi-pipeline concurrency correctness: `pipeline_width` must change
+//! scheduling only, never numerics, and the persistent executor must be
+//! reusable across sweeps.
+//!
+//! * widths 1/2/4 produce **bit-identical** maps vs the sequential
+//!   coordinator (width 1), on both the in-memory and streaming ingest
+//!   paths;
+//! * a run at width ≥ 2 records per-stage spans (the occupancy/overlap
+//!   instrumentation the benches report);
+//! * one executor runs two sweeps with per-sweep scratch (reset between
+//!   sweeps, dropped at sweep exit).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use hegrid::config::HegridConfig;
+use hegrid::coordinator::{GriddingJob, HegridEngine, PipeStage, PipelineReport};
+use hegrid::data::HgdStreamSource;
+use hegrid::sim::SimConfig;
+use hegrid::sky::SkyMap;
+use hegrid::util::threads::PipelineExecutor;
+
+fn base_config() -> HegridConfig {
+    let mut cfg = HegridConfig::default();
+    cfg.artifacts_dir =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").display().to_string();
+    cfg.streams = 2;
+    cfg.channels_per_dispatch = 3; // quick preset: 4 channels → 2 groups
+    cfg.prefetch_depth = 3;
+    cfg
+}
+
+fn have_backend() -> bool {
+    // The native executor runs on the built-in variant set; only the PJRT
+    // backend needs generated artifacts.
+    hegrid::runtime::backend_name() == "native"
+        || std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/manifest.json")
+            .exists()
+}
+
+fn grid_at_width(width: usize) -> (Vec<SkyMap>, PipelineReport) {
+    let dataset = SimConfig::quick_preset().generate();
+    let mut cfg = base_config();
+    cfg.pipeline_width = width;
+    let job = GriddingJob::for_dataset(&dataset, &cfg).unwrap();
+    let engine = HegridEngine::new(cfg).unwrap();
+    engine.grid(&dataset, &job).unwrap()
+}
+
+fn assert_bit_identical(a: &[SkyMap], b: &[SkyMap], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: channel count");
+    for (c, (ma, mb)) in a.iter().zip(b).enumerate() {
+        let d = ma.diff_stats(mb).unwrap();
+        assert_eq!(d.max_abs, 0.0, "{what}: channel {c} differs");
+        assert_eq!(d.only_a + d.only_b, 0, "{what}: channel {c} coverage differs");
+    }
+}
+
+#[test]
+fn pipeline_width_is_bit_identical_to_sequential() {
+    if !have_backend() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let (sequential, rep1) = grid_at_width(1);
+    assert_eq!(rep1.n_pipelines, 1);
+    for width in [2usize, 4] {
+        let (maps, rep) = grid_at_width(width);
+        // n_pipelines reports what actually ran: the width, capped by the
+        // channel-group count and the executor's capacity.
+        let cap = PipelineExecutor::global().workers() + 1;
+        assert_eq!(rep.n_pipelines, width.min(rep.n_groups.max(1)).min(cap));
+        assert_bit_identical(&maps, &sequential, &format!("width {width} vs sequential"));
+    }
+}
+
+#[test]
+fn streaming_pipeline_width_is_bit_identical() {
+    if !have_backend() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let dataset = SimConfig::quick_preset().generate();
+    let dir = std::env::temp_dir().join("hegrid_pipeline_overlap");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("quick.hgd");
+    dataset.save(&path).unwrap();
+
+    let mut reference: Option<Vec<SkyMap>> = None;
+    for width in [1usize, 2, 4] {
+        let mut cfg = base_config();
+        cfg.pipeline_width = width;
+        let engine = HegridEngine::new(cfg).unwrap();
+        let source = HgdStreamSource::open(&path).unwrap();
+        let job = GriddingJob::for_source(&source, &engine.config).unwrap();
+        let (maps, rep) = engine.grid_source(&source, &job).unwrap();
+        let cap = PipelineExecutor::global().workers() + 1;
+        assert_eq!(rep.n_pipelines, width.min(rep.n_groups.max(1)).min(cap));
+        // Span instrumentation: every run records T1/T3 windows for each
+        // group, plus T0 read intervals, all non-degenerate and ordered.
+        assert!(rep.stage_busy_s(PipeStage::T1Permute) >= 0.0);
+        assert!(!rep.stage_windows(PipeStage::T3Kernel).is_empty());
+        assert!(!rep.stage_windows(PipeStage::T0Ingest).is_empty());
+        for (s, e) in rep.stage_windows(PipeStage::T3Kernel) {
+            assert!(e >= s);
+        }
+        // Within one pipeline the stages serialise, so the T1∩T3 overlap at
+        // width 1 is zero by construction.
+        if width == 1 {
+            let ov = rep.stage_overlap_s(PipeStage::T1Permute, PipeStage::T3Kernel);
+            assert!(ov < 1e-9, "sequential run overlapped T1/T3 by {ov}s");
+        }
+        match &reference {
+            None => reference = Some(maps),
+            Some(r) => assert_bit_identical(&maps, r, &format!("streaming width {width}")),
+        }
+    }
+}
+
+#[test]
+fn executor_reuse_across_sweeps_resets_scratch() {
+    // Two sweeps on one executor: fresh per-participant scratch each sweep
+    // (counted via init calls and Drop), correct totals both times.
+    static DROPS: AtomicUsize = AtomicUsize::new(0);
+    struct Scratch {
+        seen: usize,
+    }
+    impl Drop for Scratch {
+        fn drop(&mut self) {
+            DROPS.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    let ex = PipelineExecutor::new("overlap-test-exec", 3);
+    let inits = AtomicUsize::new(0);
+    let n = 5000usize;
+    for sweep in 0..2 {
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        let before = inits.load(Ordering::Relaxed);
+        ex.run(
+            n,
+            4,
+            32,
+            || {
+                inits.fetch_add(1, Ordering::Relaxed);
+                Scratch { seen: 0 }
+            },
+            |s, i| {
+                // A stale scratch from the previous sweep would arrive with
+                // seen > 0 before this participant's first item.
+                s.seen += 1;
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            },
+        );
+        let fresh = inits.load(Ordering::Relaxed) - before;
+        assert!((1..=4).contains(&fresh), "sweep {sweep}: {fresh} inits");
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1), "sweep {sweep}");
+        // Every scratch created so far has been dropped: nothing carries
+        // over into the next sweep.
+        assert_eq!(DROPS.load(Ordering::Relaxed), inits.load(Ordering::Relaxed));
+    }
+    assert_eq!(ex.stats().sweeps, 2);
+}
