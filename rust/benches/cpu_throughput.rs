@@ -8,6 +8,14 @@
 //! full parallelism, plus a channel-block-width sweep. Every run re-checks
 //! that both paths agree numerically before timing is trusted.
 //!
+//! The SIMD section sweeps the grid over every compiled-in ISA (forced via
+//! `CpuGridder::with_simd`, bit-identity asserted against scalar first) and
+//! isolates the lane-per-channel blocked accumulation in a ≥16-channel
+//! microbench — the single number behind the "SIMD vs forced-scalar"
+//! speedup claim. The dispatched ISA is recorded as `simd_isa` in
+//! `BENCH_cpu_gridding.json`, where the regression gate treats it as part
+//! of the workload identity (different ISA ⇒ incomparable, re-baseline).
+//!
 //! `HEGRID_BENCH_FAST=1` shrinks the workload to a CI smoke size.
 
 use std::f64::consts::FRAC_PI_2;
@@ -20,11 +28,13 @@ use hegrid::coordinator::GriddingJob;
 use hegrid::grid::cpu::{CpuGridder, DEFAULT_CHANNEL_BLOCK};
 use hegrid::grid::kernels::ConvKernel;
 use hegrid::grid::prep::SharedComponent;
+use hegrid::grid::simd::{available_backends, dispatch, AlignedF32, Scalar, SimdBackend, SimdIsa};
 use hegrid::healpix::{ang_dist, PixRange};
 use hegrid::json::Json;
 use hegrid::sim::SimConfig;
 use hegrid::sky::{GridSpec, SkyMap};
 use hegrid::util::threads::{default_parallelism, parallel_items, DisjointWriter};
+use hegrid::util::SplitMix64;
 
 /// The pre-overhaul hot path (PR ≤ 1), kept verbatim as the measured
 /// reference the speedup criterion is judged against: haversine trig per
@@ -153,15 +163,20 @@ fn main() {
     let reference_nt_s = reference_nt.median();
 
     // ---- channel-block-width sweep (single thread isolates the inner loop)
+    // Forced scalar: under a SIMD backend the block rounds up to the lane
+    // width, so b = 1/2/4 would collapse to one configuration and flatten
+    // the low end of the curve (it also keeps the sweep comparable with
+    // pre-SIMD baselines).
     let widths: Vec<usize> = [1usize, 2, 4, 8, 16, 32]
         .into_iter()
         .filter(|&b| b <= n_ch.max(1))
         .collect();
-    let mut sweep = Series::new("grid time vs channel-block width (1 thread, s)");
+    let mut sweep = Series::new("grid time vs channel-block width (1 thread, scalar, s)");
     let mut sweep_json = Vec::new();
     for &b in &widths {
         let g = CpuGridder::new(job.spec.clone(), job.kernel.clone())
             .with_workers(1)
+            .with_simd(SimdIsa::Scalar)
             .with_channel_block(b);
         let m = bench.run(&format!("block {b}"), || {
             g.grid_with_shared(&shared, &dataset.channels);
@@ -174,6 +189,105 @@ fn main() {
         ]));
     }
     sweep.print();
+
+    // ---- SIMD: forced-ISA grid sweep (1 thread isolates the inner loop) --
+    let dispatched = dispatch();
+    eprintln!("simd: dispatched ISA = {} ({} f64 lanes)", dispatched.name(), dispatched.lanes());
+    let mut isa_series = Series::new("grid time vs forced SIMD ISA (1 thread, s)");
+    let mut isa_json = Vec::new();
+    let mut grid_scalar_1t_s = f64::NAN;
+    let mut grid_simd_1t_s = f64::NAN;
+    let scalar_maps = CpuGridder::new(job.spec.clone(), job.kernel.clone())
+        .with_workers(1)
+        .with_simd(SimdIsa::Scalar)
+        .grid_with_shared(&shared, &dataset.channels);
+    for backend in available_backends() {
+        let isa = SimdIsa::from_name(backend.name()).expect("backend names are ISA names");
+        let g = CpuGridder::new(job.spec.clone(), job.kernel.clone())
+            .with_workers(1)
+            .with_simd(isa);
+        // Correctness gate: every backend must be bit-identical to scalar.
+        let maps = g.grid_with_shared(&shared, &dataset.channels);
+        for (ma, mb) in maps.iter().zip(&scalar_maps) {
+            for (va, vb) in ma.values().iter().zip(mb.values()) {
+                assert_eq!(
+                    va.to_bits(),
+                    vb.to_bits(),
+                    "{} diverged from scalar bitwise",
+                    backend.name()
+                );
+            }
+        }
+        let m = bench.run(&format!("grid 1t [{}]", backend.name()), || {
+            g.grid_with_shared(&shared, &dataset.channels);
+        });
+        let s = m.median();
+        isa_series.push(backend.name().to_string(), s);
+        isa_json.push(Json::obj(vec![
+            ("isa", Json::str(backend.name())),
+            ("lanes", Json::num(backend.lanes() as f64)),
+            ("grid_1t_s", Json::num(s)),
+        ]));
+        if backend.lanes() == 1 {
+            grid_scalar_1t_s = s;
+        }
+        if backend.name() == dispatched.name() {
+            grid_simd_1t_s = s;
+        }
+    }
+    isa_series.print();
+
+    // ---- SIMD: lane-per-channel blocked-accumulation microbench ----------
+    // Isolates the loop the lanes actually widen (the full grid also pays
+    // the neighbour walk and weight evaluation): ≥16 channels, one block
+    // spanning the padded row, scalar vs dispatched backend on identical
+    // contributor lists. Bit-identity is asserted before timing.
+    let accum_ch = 32usize;
+    let accum_samples = 4096usize;
+    let accum_contribs = 2048usize;
+    let accum_reps = if fast { 64 } else { 512 };
+    let time_accum = |bench: &mut Bencher, backend: &'static dyn SimdBackend| -> (f64, Vec<f64>) {
+        let mut rng = SplitMix64::new(99);
+        let stride = accum_ch.next_multiple_of(backend.lanes());
+        let mut vals = AlignedF32::zeroed(accum_samples * stride);
+        for j in 0..accum_samples {
+            for c in 0..accum_ch {
+                vals[j * stride + c] = rng.normal() as f32;
+            }
+        }
+        let contrib: Vec<(f64, u32)> = (0..accum_contribs)
+            .map(|_| {
+                let j = (rng.uniform(0.0, accum_samples as f64) as u32)
+                    .min(accum_samples as u32 - 1);
+                (rng.uniform(0.0, 1.0), j)
+            })
+            .collect();
+        let mut acc = vec![0.0f64; stride];
+        let m = bench.run(&format!("accum x{accum_reps} [{}]", backend.name()), || {
+            for _ in 0..accum_reps {
+                acc.fill(0.0);
+                backend.accumulate_contribs(&mut acc, &contrib, &vals, stride, 0);
+            }
+            std::hint::black_box(&acc);
+        });
+        acc.fill(0.0);
+        backend.accumulate_contribs(&mut acc, &contrib, &vals, stride, 0);
+        acc.truncate(accum_ch);
+        (m.median(), acc)
+    };
+    let (accum_scalar_s, accum_scalar_out) = time_accum(&mut bench, &Scalar);
+    let (accum_simd_s, accum_simd_out) = time_accum(&mut bench, dispatched);
+    for (a, b) in accum_scalar_out.iter().zip(&accum_simd_out) {
+        assert_eq!(a.to_bits(), b.to_bits(), "accumulation diverged from scalar bitwise");
+    }
+    let accum_speedup = speedup(accum_scalar_s, accum_simd_s);
+    println!(
+        "simd [{}]: blocked accumulation ({accum_ch} ch) {accum_simd_s:.4}s vs scalar \
+         {accum_scalar_s:.4}s (speedup {accum_speedup:.2}x); \
+         full grid 1t {grid_simd_1t_s:.4}s vs scalar {grid_scalar_1t_s:.4}s ({:.2}x)",
+        dispatched.name(),
+        speedup(grid_scalar_1t_s, grid_simd_1t_s)
+    );
 
     let speedup_1t = speedup(reference_1t_s, blocked_1t_s);
     let speedup_nt = speedup(reference_nt_s, blocked_nt_s);
@@ -230,6 +344,24 @@ fn main() {
         ("speedup_multi_thread", Json::num(speedup_nt)),
         ("max_rel_diff_vs_reference", Json::num(diff)),
         ("block_sweep", Json::Arr(sweep_json)),
+        // Dispatched ISA: part of the workload identity (the gate treats a
+        // baseline recorded under another ISA as incomparable).
+        ("simd_isa", Json::str(dispatched.name())),
+        (
+            "simd",
+            Json::obj(vec![
+                ("dispatched", Json::str(dispatched.name())),
+                ("lanes", Json::num(dispatched.lanes() as f64)),
+                ("grid_1t_scalar_s", Json::num(grid_scalar_1t_s)),
+                ("grid_1t_simd_s", Json::num(grid_simd_1t_s)),
+                ("grid_speedup_vs_scalar", Json::num(speedup(grid_scalar_1t_s, grid_simd_1t_s))),
+                ("accum_channels", Json::num(accum_ch as f64)),
+                ("accum_scalar_s", Json::num(accum_scalar_s)),
+                ("accum_simd_s", Json::num(accum_simd_s)),
+                ("accum_speedup", Json::num(accum_speedup)),
+            ]),
+        ),
+        ("isa_sweep", Json::Arr(isa_json)),
         ("measurements", bench.to_json()),
     ]);
     write_bench_json("cpu_gridding", &payload);

@@ -26,15 +26,26 @@ pub struct CygridBaseline {
     pub threads: usize,
     /// Channel-block width forwarded to the CPU gridder (0 = default).
     pub channel_block: usize,
+    /// SIMD ISA forwarded to the CPU gridder (default: auto dispatch).
+    pub simd: crate::grid::simd::SimdIsa,
 }
 
 impl CygridBaseline {
     pub fn new(threads: usize) -> Self {
-        CygridBaseline { threads: threads.max(1), channel_block: 0 }
+        CygridBaseline {
+            threads: threads.max(1),
+            channel_block: 0,
+            simd: crate::grid::simd::SimdIsa::Auto,
+        }
     }
 
     pub fn with_channel_block(mut self, block: usize) -> Self {
         self.channel_block = block;
+        self
+    }
+
+    pub fn with_simd(mut self, isa: crate::grid::simd::SimdIsa) -> Self {
+        self.simd = isa;
         self
     }
 
@@ -50,6 +61,7 @@ impl CygridBaseline {
         let maps = CpuGridder::new(job.spec.clone(), job.kernel.clone())
             .with_workers(self.threads)
             .with_channel_block(self.channel_block)
+            .with_simd(self.simd)
             .grid_with_shared(&shared, &dataset.channels);
         Ok((maps, t0.elapsed()))
     }

@@ -39,6 +39,13 @@ const STAGE_METRICS: &[&str] = &["prep_s", "grid_1t_s", "grid_nt_s"];
 /// Workload-identity fields; a mismatch makes the runs incomparable.
 const IDENTITY_FIELDS: &[&str] = &["n_samples", "n_channels"];
 
+/// String-valued identity fields. `simd_isa` is the dispatched SIMD backend:
+/// a baseline recorded under a different ISA (another runner generation, a
+/// forced-scalar run) measures different code and must not fail the gate —
+/// it re-baselines instead. Absent on either side = pre-SIMD payload,
+/// compared as before (fields stay additive).
+const IDENTITY_STR_FIELDS: &[&str] = &["simd_isa"];
+
 /// One compared metric.
 #[derive(Clone, Debug)]
 pub struct GateFinding {
@@ -114,6 +121,18 @@ pub fn compare(baseline: &Json, current: &Json, threshold: f64) -> GateReport {
             if b != c {
                 report.incomparable =
                     Some(format!("{field}: baseline {b} vs current {c}"));
+                return report;
+            }
+        }
+    }
+
+    for &field in IDENTITY_STR_FIELDS {
+        let b = baseline.get(field).and_then(|x| x.as_str());
+        let c = current.get(field).and_then(|x| x.as_str());
+        if let (Some(b), Some(c)) = (b, c) {
+            if b != c {
+                report.incomparable =
+                    Some(format!("{field}: baseline '{b}' vs current '{c}'"));
                 return report;
             }
         }
@@ -258,6 +277,33 @@ mod tests {
         let r = compare(&base, &cur, DEFAULT_THRESHOLD);
         assert!(r.incomparable.is_some());
         assert!(!r.failed(), "incomparable runs must pass");
+    }
+
+    #[test]
+    fn different_simd_isa_is_incomparable_pass_not_regression() {
+        let set_isa = |mut p: Json, isa: &str| {
+            if let Json::Obj(fields) = &mut p {
+                fields.insert("simd_isa".into(), Json::str(isa));
+            }
+            p
+        };
+        // Baseline recorded under avx2, current forced scalar and 5x slower:
+        // incomparable pass, never a regression.
+        let base = set_isa(payload(1.0e6, 2.5e5, 0.8), "avx2");
+        let cur = set_isa(payload(0.2e6, 0.5e5, 4.0), "scalar");
+        let r = compare(&base, &cur, DEFAULT_THRESHOLD);
+        assert!(r.incomparable.is_some(), "{:?}", r.findings);
+        assert!(!r.failed());
+        assert!(r.lines()[0].contains("incomparable"));
+        // Same ISA on both sides still gates normally.
+        let cur_same = set_isa(payload(0.2e6, 0.5e5, 4.0), "avx2");
+        assert!(compare(&base, &cur_same, DEFAULT_THRESHOLD).failed());
+        // A pre-SIMD baseline (no simd_isa field) stays comparable — the
+        // schema change is additive per ROADMAP's baseline rule.
+        let old_base = payload(1.0e6, 2.5e5, 0.8);
+        let r = compare(&old_base, &cur_same, DEFAULT_THRESHOLD);
+        assert!(r.incomparable.is_none());
+        assert!(r.failed());
     }
 
     #[test]

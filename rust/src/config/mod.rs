@@ -95,8 +95,17 @@ pub struct HegridConfig {
     /// Pallas block size bm (Fig 13). 0 = profile default.
     pub block_size: usize,
     /// Channel-block width B of the CPU gridder's blocked accumulation
-    /// (Cygrid baseline / accuracy oracle hot path). 0 = built-in default.
+    /// (Cygrid baseline / accuracy oracle hot path). 0 = built-in default;
+    /// rounded up to the SIMD lane width at run time.
     pub cpu_channel_block: usize,
+    /// SIMD ISA of the CPU gridding hot path: auto | scalar | avx2 | neon
+    /// (CLI `--simd`). `auto` uses the process-wide dispatched backend; a
+    /// forced ISA unavailable on the host degrades to scalar with a warning.
+    pub simd_isa: String,
+    /// Core-affinity policy for the executor's pool workers:
+    /// none | compact | spread (CLI `--affinity`; Linux only, best effort,
+    /// behind the default-on `affinity` feature).
+    pub executor_affinity: String,
     /// Streaming ingest (T0): channel groups the I/O workers read ahead of
     /// the pipelines. Also bounds how many groups are ever resident, so it
     /// is the memory/overlap trade-off knob. 1 = no read-ahead.
@@ -131,6 +140,8 @@ impl Default for HegridConfig {
             gamma: 1,
             block_size: 0,
             cpu_channel_block: 0,
+            simd_isa: "auto".into(),
+            executor_affinity: "none".into(),
             prefetch_depth: 2,
             io_workers: 0,
             kernel_type: "gauss1d".into(),
@@ -176,6 +187,18 @@ impl HegridConfig {
         want.clamp(1, self.prefetch_depth.max(1))
     }
 
+    /// Parsed SIMD ISA request (validated names only; `auto` after a
+    /// `validate()`-passing construction can never hit the fallback).
+    pub fn simd(&self) -> crate::grid::simd::SimdIsa {
+        crate::grid::simd::SimdIsa::from_name(&self.simd_isa).unwrap_or_default()
+    }
+
+    /// Parsed executor-affinity policy (same validation contract as
+    /// [`HegridConfig::simd`]).
+    pub fn affinity(&self) -> crate::util::threads::AffinityMode {
+        crate::util::threads::AffinityMode::from_name(&self.executor_affinity).unwrap_or_default()
+    }
+
     /// Effective Pallas block size.
     pub fn effective_block(&self) -> usize {
         if self.block_size == 0 {
@@ -216,6 +239,8 @@ impl HegridConfig {
                 self.cpu_channel_block
             )));
         }
+        crate::grid::simd::SimdIsa::from_name(&self.simd_isa)?;
+        crate::util::threads::AffinityMode::from_name(&self.executor_affinity)?;
         if !(self.kernel_sigma_beam > 0.0) || !(self.support_sigma > 0.0) || !(self.oversample > 0.0)
         {
             return Err(HegridError::Config("kernel/oversample parameters must be positive".into()));
@@ -234,6 +259,8 @@ impl HegridConfig {
             ("gamma", Json::num(self.gamma as f64)),
             ("block_size", Json::num(self.block_size as f64)),
             ("cpu_channel_block", Json::num(self.cpu_channel_block as f64)),
+            ("simd_isa", Json::str(self.simd_isa.clone())),
+            ("executor_affinity", Json::str(self.executor_affinity.clone())),
             ("prefetch_depth", Json::num(self.prefetch_depth as f64)),
             ("io_workers", Json::num(self.io_workers as f64)),
             ("kernel_type", Json::str(self.kernel_type.clone())),
@@ -280,6 +307,16 @@ impl HegridConfig {
             gamma: get_usize("gamma", d.gamma)?,
             block_size: get_usize("block_size", d.block_size)?,
             cpu_channel_block: get_usize("cpu_channel_block", d.cpu_channel_block)?,
+            simd_isa: v
+                .get("simd_isa")
+                .and_then(|x| x.as_str())
+                .unwrap_or(&d.simd_isa)
+                .to_string(),
+            executor_affinity: v
+                .get("executor_affinity")
+                .and_then(|x| x.as_str())
+                .unwrap_or(&d.executor_affinity)
+                .to_string(),
             prefetch_depth: get_usize("prefetch_depth", d.prefetch_depth)?,
             io_workers: get_usize("io_workers", d.io_workers)?,
             kernel_type: v
@@ -349,6 +386,8 @@ mod tests {
         c.prefetch_depth = 5;
         c.io_workers = 3;
         c.cpu_channel_block = 16;
+        c.simd_isa = "scalar".into();
+        c.executor_affinity = "compact".into();
         c.profile = DeviceProfile::ServerM;
         c.kernel_type = "gauss2d".into();
         let j = c.to_json().to_pretty();
@@ -376,6 +415,24 @@ mod tests {
         assert!(HegridConfig::from_json(&v).is_err());
         let v = crate::json::parse(r#"{"cpu_channel_block": 100000}"#).unwrap();
         assert!(HegridConfig::from_json(&v).is_err());
+        let v = crate::json::parse(r#"{"simd_isa": "sse9"}"#).unwrap();
+        assert!(HegridConfig::from_json(&v).is_err());
+        let v = crate::json::parse(r#"{"executor_affinity": "scatter"}"#).unwrap();
+        assert!(HegridConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn simd_and_affinity_accessors_parse() {
+        use crate::grid::simd::SimdIsa;
+        use crate::util::threads::AffinityMode;
+        let mut c = HegridConfig::default();
+        assert_eq!(c.simd(), SimdIsa::Auto);
+        assert_eq!(c.affinity(), AffinityMode::None);
+        c.simd_isa = "scalar".into();
+        c.executor_affinity = "spread".into();
+        c.validate().unwrap();
+        assert_eq!(c.simd(), SimdIsa::Scalar);
+        assert_eq!(c.affinity(), AffinityMode::Spread);
     }
 
     #[test]

@@ -114,6 +114,9 @@ pub struct StageSpan {
 pub struct GriddingJob {
     pub spec: GridSpec,
     pub kernel: ConvKernel,
+    /// SIMD ISA request forwarded to the neighbour-table build (config
+    /// `simd_isa` / CLI `--simd`).
+    pub simd: crate::grid::simd::SimdIsa,
 }
 
 impl GriddingJob {
@@ -129,7 +132,7 @@ impl GriddingJob {
             cfg.oversample,
         );
         let kernel = ConvKernel::from_config(meta.beam_arcsec, cfg)?;
-        Ok(GriddingJob { spec, kernel })
+        Ok(GriddingJob { spec, kernel, simd: cfg.simd() })
     }
 
     /// Derive map + kernel from dataset metadata and the engine config.
@@ -270,6 +273,10 @@ pub struct HegridEngine {
 impl HegridEngine {
     pub fn new(config: HegridConfig) -> Result<HegridEngine> {
         config.validate()?;
+        // Executor-worker core pinning (config `executor_affinity`): applied
+        // lazily by each pool worker on its next sweep, so it also covers
+        // the case where the global executor spawned before the engine.
+        crate::util::threads::set_executor_affinity(config.affinity());
         let dir = std::path::Path::new(&config.artifacts_dir);
         // The native executor interprets dispatches from variant shapes
         // alone, so a *missing* artifacts directory falls back to the

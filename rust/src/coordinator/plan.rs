@@ -175,7 +175,7 @@ impl DispatchPlan {
             let lo = s * variant.n;
             let hi = ((s + 1) * variant.n).min(n);
             let view = shared.slice(lo, hi);
-            let table = NeighborTable::build(
+            let table = NeighborTable::build_with_simd(
                 &view,
                 &job.spec,
                 &job.kernel,
@@ -183,6 +183,7 @@ impl DispatchPlan {
                 variant.k,
                 variant.gamma,
                 workers.max(1),
+                job.simd,
             );
             debug_assert_eq!(table.n_tiles, n_tiles);
 

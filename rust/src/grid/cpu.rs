@@ -7,42 +7,54 @@
 //! Hot-path design (README "Performance", `benches/cpu_throughput.rs`):
 //!
 //! * **Trig-free inner loop** — per-sample unit vectors are precomputed in
-//!   [`SharedComponent`]; the sample loop is a squared-chord distance test
-//!   plus one `asin` for accepted pairs ([`crate::healpix::chord2_to_arc`])
-//!   instead of a four-trig haversine per pair.
-//! * **Per-worker scratch** — ring ranges, the contributor list, and the
-//!   channel-block accumulator live in worker-local state reused across
-//!   cells ([`parallel_items_scoped`]), replacing the former per-cell heap
-//!   allocations; cells are claimed in blocks, not one `fetch_add` each.
-//!   The sweep runs on the persistent
+//!   [`SharedComponent`] (SoA columns) and per-cell trig comes from the
+//!   separable row/column tables ([`CellTrig`]); the sample loop is a
+//!   squared-chord distance test plus one `asin` for accepted pairs
+//!   ([`crate::healpix::chord2_to_arc`]) instead of a four-trig haversine
+//!   per pair.
+//! * **SIMD lane-per-channel core** — both inner loops run on a
+//!   [`SimdBackend`] ([`crate::grid::simd`]): the chord² prefilter is
+//!   batched over 2/4 samples per vector with compare-mask compaction into
+//!   the candidate list, and the blocked accumulation maps one *channel*
+//!   per f64 lane. Because each lane owns its channel, per-channel
+//!   accumulation order is exactly the scalar order and every backend is
+//!   **bit-identical** to the scalar fallback (forced-ISA tests pin this).
+//!   The backend dispatches once per process (AVX2+FMA / NEON / scalar),
+//!   overridable via config `simd_isa` / `--simd` / `HEGRID_SIMD`.
+//! * **Per-worker scratch** — ring ranges, candidate + contributor lists,
+//!   and the channel-block accumulator live in worker-local state reused
+//!   across cells ([`parallel_items_scoped`]), replacing the former
+//!   per-cell heap allocations; cells are claimed in adaptively sized
+//!   blocks ([`adaptive_claim_block`]), not one `fetch_add` each. The sweep
+//!   runs on the persistent
 //!   [`PipelineExecutor`](crate::util::threads::PipelineExecutor) (parked
 //!   workers), so it no longer pays a scoped thread spawn per call.
 //! * **Channel-blocked accumulation** — channel values are permuted once
-//!   into a sample-major `vals[j·n_ch + c]` matrix, and each cell's
-//!   contributors are applied `channel_block` channels at a time: a
-//!   unit-stride FMA loop whose accumulators stay resident in registers/L1
-//!   (the paper's thread-level data reuse, §4.3.3).
+//!   into a lane-padded sample-major [`ValueMatrix`]
+//!   (`vals[j·stride + c]`, rows padded to the SIMD width, 64-byte-aligned
+//!   allocation), and each cell's contributors are applied `channel_block`
+//!   channels at a time: a unit-stride multiply-add loop with no tail
+//!   handling whose accumulators stay resident in registers/L1 (the paper's
+//!   thread-level data reuse, §4.3.3).
 //!
 //! Per-channel accumulation order depends only on the LUT walk, so results
-//! are **bit-identical** across worker counts, claim blocks, and
+//! are **bit-identical** across worker counts, claim blocks, ISAs, and
 //! `channel_block` widths (`rust/tests/cpu_blocked_equivalence.rs`).
 
 use std::f64::consts::FRAC_PI_2;
 
 use crate::data::Dataset;
 use crate::grid::kernels::ConvKernel;
-use crate::grid::prep::SharedComponent;
-use crate::healpix::{chord2, chord2_to_arc, unit_vec, PixRange};
-use crate::sky::{GridSpec, SkyMap};
-use crate::util::threads::{parallel_chunks, parallel_items_scoped, DisjointWriter};
+use crate::grid::prep::{SharedComponent, ValueMatrix};
+use crate::grid::simd::{SimdBackend, SimdIsa};
+use crate::healpix::{chord2_prefilter_bound, chord2_to_arc, PixRange};
+use crate::sky::{CellTrig, GridSpec, SkyMap};
+use crate::util::threads::{adaptive_claim_block, parallel_items_scoped, DisjointWriter};
 
 /// Default channel-block width: 8 f64 accumulators (one cache line) — wide
 /// enough to amortise the weight evaluation over the FMAs, small enough to
 /// stay register-resident.
 pub const DEFAULT_CHANNEL_BLOCK: usize = 8;
-
-/// Cells claimed per scheduler round-trip (one `fetch_add` per block).
-const CELL_CLAIM_BLOCK: usize = 16;
 
 /// Multi-channel CPU gridder (gather method, Fig 2 right).
 #[derive(Clone, Debug)]
@@ -51,14 +63,19 @@ pub struct CpuGridder {
     pub kernel: ConvKernel,
     pub workers: usize,
     /// Channel-block width B of the blocked accumulation
-    /// (0 = [`DEFAULT_CHANNEL_BLOCK`]; clamped to the channel count).
+    /// (0 = [`DEFAULT_CHANNEL_BLOCK`]; rounded up to the SIMD lane width
+    /// and clamped to the padded channel count).
     pub channel_block: usize,
+    /// SIMD ISA request (default: the process-wide dispatched backend).
+    pub simd: SimdIsa,
 }
 
 /// Per-worker scratch reused across cells — the former per-cell heap
 /// allocations of the hot loop.
 struct CellScratch {
     ranges: Vec<PixRange>,
+    /// `(chord², sorted sample index)` accepted by the SIMD prefilter.
+    cand: Vec<(f64, u32)>,
     /// `(weight, sorted sample index)` of the current cell's contributors.
     contrib: Vec<(f64, u32)>,
     /// Channel-block accumulators (length = block width).
@@ -72,6 +89,7 @@ impl CpuGridder {
             kernel,
             workers: crate::util::threads::default_parallelism(),
             channel_block: 0,
+            simd: SimdIsa::Auto,
         }
     }
 
@@ -85,9 +103,18 @@ impl CpuGridder {
         self
     }
 
-    fn effective_channel_block(&self, n_ch: usize) -> usize {
+    /// Force a SIMD backend (forced-ISA equivalence tests, `--simd`).
+    pub fn with_simd(mut self, isa: SimdIsa) -> Self {
+        self.simd = isa;
+        self
+    }
+
+    /// Requested block width, rounded up to the lane width and clamped to
+    /// the lane-padded channel count (`stride`), so the accumulation loop
+    /// never needs a sub-lane tail.
+    fn effective_channel_block(&self, stride: usize, lanes: usize) -> usize {
         let b = if self.channel_block == 0 { DEFAULT_CHANNEL_BLOCK } else { self.channel_block };
-        b.clamp(1, n_ch.max(1))
+        b.next_multiple_of(lanes).clamp(lanes, stride.max(lanes))
     }
 
     /// Grid every channel of `dataset` (builds its own shared component).
@@ -104,25 +131,18 @@ impl CpuGridder {
     pub fn grid_with_shared(&self, shared: &SharedComponent, channels: &[Vec<f32>]) -> Vec<SkyMap> {
         let n_cells = self.spec.n_cells();
         let n_ch = channels.len();
-        let n = shared.n_samples();
-        let block = self.effective_channel_block(n_ch);
+        let backend: &'static dyn SimdBackend = self.simd.resolve();
+        let lanes = backend.lanes();
 
-        // Permute + transpose once: vals[j·n_ch + c] = channels[c][perm[j]].
-        // Sample-major, so the blocked accumulation below reads unit-stride.
-        let mut vals = vec![0.0f32; n * n_ch];
-        if n_ch > 0 && n > 0 {
-            let w = DisjointWriter::new(&mut vals);
-            let perm = &shared.perm;
-            parallel_chunks(n, self.workers, |_, s, e| {
-                for j in s..e {
-                    let orig = perm[j] as usize;
-                    let row = unsafe { w.slice(j * n_ch, n_ch) };
-                    for (dst, ch) in row.iter_mut().zip(channels) {
-                        *dst = ch[orig];
-                    }
-                }
-            });
-        }
+        // Permute + transpose once into the lane-padded sample-major matrix
+        // (vals.row(j)[c] = channels[c][perm[j]]).
+        let vals: ValueMatrix = shared.value_matrix(channels, lanes, self.workers);
+        let stride = vals.stride;
+        let block = self.effective_channel_block(stride, lanes);
+
+        // Separable per-row/per-column cell trig (satellite of the SIMD
+        // overhaul: nlat + nlon sin_cos calls instead of nlat·nlon).
+        let trig: CellTrig = self.spec.trig();
 
         // acc[ch][cell], wsum[cell]; written by disjoint cells in parallel.
         let mut acc = vec![0.0f64; n_ch * n_cells];
@@ -131,73 +151,80 @@ impl CpuGridder {
             let acc_w = DisjointWriter::new(&mut acc);
             let wsum_w = DisjointWriter::new(&mut wsum);
             let vals = &vals;
-            // Prefilter radius in squared-chord space (chord = 2·sin(d/2)),
-            // padded by 1e-9 relative so rounding at the boundary always
-            // defers to the exact d² cut inside `ConvKernel::weight`. A
-            // support ≥ π covers the whole sphere (sin is no longer
-            // monotone there), so the prefilter is disabled.
-            let chord2_max = if self.kernel.support >= std::f64::consts::PI {
-                f64::INFINITY
-            } else {
-                let half = (0.5 * self.kernel.support).sin();
-                4.0 * half * half * (1.0 + 1e-9)
-            };
+            let trig = &trig;
+            // Prefilter radius in squared-chord space, padded so rounding at
+            // the boundary always defers to the exact d² cut inside
+            // `ConvKernel::weight` (see `chord2_prefilter_bound`).
+            let chord2_max = chord2_prefilter_bound(self.kernel.support);
             parallel_items_scoped(
                 n_cells,
                 self.workers,
-                CELL_CLAIM_BLOCK,
+                adaptive_claim_block(n_cells, self.workers),
                 || CellScratch {
                     ranges: Vec::new(),
+                    cand: Vec::new(),
                     contrib: Vec::new(),
                     local: vec![0.0f64; block],
                 },
                 |scratch, cell| {
-                    let (clon, clat) = self.spec.cell_center_flat(cell);
+                    let (clon, clat) = trig.lonlat(cell);
                     shared.healpix.query_disc_rings_into(
                         FRAC_PI_2 - clat,
                         clon,
                         self.kernel.support,
                         &mut scratch.ranges,
                     );
-                    let cu = unit_vec(clon, clat);
-                    let clat_cos = clat.cos();
-                    let mut w_tot = 0.0f64;
-                    scratch.contrib.clear();
+                    let cu = trig.unit(cell);
+                    let clat_cos = trig.cos_lat(cell);
+                    // ① batched chord² prefilter with compare-mask
+                    // compaction into the candidate list.
+                    scratch.cand.clear();
                     for r in &scratch.ranges {
                         let (a, b) = shared.samples_in_pix_range(r.lo, r.hi);
-                        for j in a..b {
-                            let c2 = chord2(&shared.unit[j], &cu);
-                            if c2 > chord2_max {
-                                continue;
-                            }
-                            let d = chord2_to_arc(c2);
-                            let w = self.kernel.weight(
-                                d * d,
-                                (shared.slon64[j] - clon) * clat_cos,
-                                shared.slat64[j] - clat,
-                            );
-                            if w != 0.0 {
-                                w_tot += w;
-                                scratch.contrib.push((w, j as u32));
-                            }
+                        backend.chord2_filter(
+                            &shared.unit_x[a..b],
+                            &shared.unit_y[a..b],
+                            &shared.unit_z[a..b],
+                            &cu,
+                            chord2_max,
+                            a as u32,
+                            &mut scratch.cand,
+                        );
+                    }
+                    // ② exact weight per candidate (one `asin` per accept).
+                    let mut w_tot = 0.0f64;
+                    scratch.contrib.clear();
+                    for &(c2, j) in &scratch.cand {
+                        let d = chord2_to_arc(c2);
+                        let j = j as usize;
+                        let w = self.kernel.weight(
+                            d * d,
+                            (shared.slon64[j] - clon) * clat_cos,
+                            shared.slat64[j] - clat,
+                        );
+                        if w != 0.0 {
+                            w_tot += w;
+                            scratch.contrib.push((w, j as u32));
                         }
                     }
                     unsafe { wsum_w.write(cell, w_tot) };
-                    // Blocked accumulation: B accumulators swept over the
-                    // contributor list, unit-stride in the sample-major rows.
+                    // ③ blocked lane-per-channel accumulation: B accumulators
+                    // swept over the contributor list, unit-stride in the
+                    // lane-padded rows — no tail handling (pad lanes
+                    // accumulate exact zeros that are never written out).
                     let mut c0 = 0;
                     while c0 < n_ch {
-                        let wb = block.min(n_ch - c0);
+                        let wb = block.min(stride - c0);
                         let local = &mut scratch.local[..wb];
                         local.fill(0.0);
-                        for &(w, j) in &scratch.contrib {
-                            let base = j as usize * n_ch + c0;
-                            let row = &vals[base..base + wb];
-                            for (sum, &v) in local.iter_mut().zip(row) {
-                                *sum += w * v as f64;
-                            }
-                        }
-                        for (k, &sum) in local.iter().enumerate() {
+                        backend.accumulate_contribs(
+                            local,
+                            &scratch.contrib,
+                            vals.as_slice(),
+                            stride,
+                            c0,
+                        );
+                        for (k, &sum) in local.iter().enumerate().take(n_ch - c0) {
                             unsafe { acc_w.write((c0 + k) * n_cells + cell, sum) };
                         }
                         c0 += wb;
@@ -221,7 +248,7 @@ impl CpuGridder {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::healpix::ang_dist_vec;
+    use crate::healpix::{ang_dist_vec, unit_vec};
     use crate::sim::SimConfig;
     use crate::util::SplitMix64;
 

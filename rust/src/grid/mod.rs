@@ -7,9 +7,11 @@ pub mod kernels;
 pub mod nbr;
 pub mod occupancy;
 pub mod prep;
+pub mod simd;
 pub mod sort;
 
 pub use cpu::CpuGridder;
 pub use kernels::{ConvKernel, ConvKernelType};
 pub use nbr::{NbrStats, NeighborTable};
-pub use prep::{PrepStats, SharedComponent};
+pub use prep::{PrepStats, SharedComponent, ValueMatrix};
+pub use simd::{SimdBackend, SimdIsa};

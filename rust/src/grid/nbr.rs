@@ -11,20 +11,20 @@
 
 use crate::grid::kernels::ConvKernel;
 use crate::grid::prep::SharedComponent;
-use crate::healpix::{ang_dist_vec, unit_vec, PixRange};
+use crate::grid::simd;
+use crate::healpix::{ang_dist_vec, chord2_prefilter_bound, chord2_to_arc, unit_vec, PixRange};
 use crate::sky::GridSpec;
-use crate::util::threads::{parallel_items_scoped, DisjointWriter};
+use crate::util::threads::{adaptive_claim_block, parallel_items_scoped, DisjointWriter};
 use std::f64::consts::FRAC_PI_2;
 
-/// Groups claimed per scheduler round-trip.
-const GROUP_CLAIM_BLOCK: usize = 8;
-
-/// Per-worker scratch reused across groups (ring ranges + candidate list) —
+/// Per-worker scratch reused across groups (ring ranges + candidate lists) —
 /// replaces the former per-group heap allocations. Lives for one executor
 /// sweep: [`parallel_items_scoped`] runs the group walk on the persistent
 /// [`PipelineExecutor`](crate::util::threads::PipelineExecutor).
 struct GroupScratch {
     ranges: Vec<PixRange>,
+    /// `(chord², sorted sample index)` accepted by the SIMD prefilter.
+    cand: Vec<(f64, u32)>,
     found: Vec<(f64, i32)>,
 }
 
@@ -66,7 +66,8 @@ pub struct NeighborTable {
 
 impl NeighborTable {
     /// Materialise neighbour lists for every cell of `spec` against the
-    /// sorted samples of `shared`, tiled for an `(m, k, gamma)` artifact.
+    /// sorted samples of `shared`, tiled for an `(m, k, gamma)` artifact,
+    /// on the process-wide dispatched SIMD backend.
     pub fn build(
         shared: &SharedComponent,
         spec: &GridSpec,
@@ -75,6 +76,25 @@ impl NeighborTable {
         k: usize,
         gamma: usize,
         workers: usize,
+    ) -> NeighborTable {
+        Self::build_with_simd(shared, spec, kernel, m, k, gamma, workers, simd::SimdIsa::Auto)
+    }
+
+    /// [`NeighborTable::build`] with an explicit SIMD ISA request (config
+    /// `simd_isa` / CLI `--simd`, forwarded by the engine through
+    /// [`crate::coordinator::GriddingJob`]). Every backend produces
+    /// bit-identical candidate lists (pinned by the simd unit tests), so
+    /// the resulting table is ISA-independent.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build_with_simd(
+        shared: &SharedComponent,
+        spec: &GridSpec,
+        kernel: &ConvKernel,
+        m: usize,
+        k: usize,
+        gamma: usize,
+        workers: usize,
+        isa: simd::SimdIsa,
     ) -> NeighborTable {
         assert!(m > 0 && k > 0 && gamma > 0);
         assert!(m % gamma == 0, "gamma must divide the tile size");
@@ -101,11 +121,20 @@ impl NeighborTable {
             let nbr_w = DisjointWriter::new(&mut nbr);
             let lons = &lons;
             let lats = &lats;
+            // Per-row/per-column trig of the member cells (bit-identical to
+            // per-cell `unit_vec`; see `sky::CellTrig`).
+            let trig = spec.trig();
+            let trig = &trig;
+            let backend = isa.resolve();
             parallel_items_scoped(
                 total_groups,
                 workers.max(1),
-                GROUP_CLAIM_BLOCK,
-                || GroupScratch { ranges: Vec::new(), found: Vec::with_capacity(k) },
+                adaptive_claim_block(total_groups, workers.max(1)),
+                || GroupScratch {
+                    ranges: Vec::new(),
+                    cand: Vec::new(),
+                    found: Vec::with_capacity(k),
+                },
                 |scratch, g| {
                     // Member cells of this group: the contiguous flattened-id
                     // range [first_cell, end).
@@ -120,7 +149,7 @@ impl NeighborTable {
                     let clat = lats[first_cell..end].iter().sum::<f64>() / count;
                     let cu = unit_vec(clon, clat);
                     let margin = (first_cell..end)
-                        .map(|i| ang_dist_vec(&cu, &unit_vec(lons[i], lats[i])))
+                        .map(|i| ang_dist_vec(&cu, &trig.unit(i)))
                         .fold(0.0f64, f64::max);
                     // Padded by 1e-12 rad (≪ any pixel) so ulp-level
                     // disagreement with other distance formulations at the
@@ -137,20 +166,34 @@ impl NeighborTable {
                         &mut scratch.ranges,
                     );
                     let out = unsafe { nbr_w.slice(g * k, k) };
-                    let found = &mut scratch.found;
-                    found.clear();
+                    // ① batched chord² prefilter (padded bound, see
+                    // `chord2_prefilter_bound`): any sample within R of a
+                    // member is within R + margin of the center, so this
+                    // never drops a true neighbour.
+                    let c2_pref = chord2_prefilter_bound(radius);
+                    scratch.cand.clear();
                     for r in &scratch.ranges {
                         let (a, b) = shared.samples_in_pix_range(r.lo, r.hi);
-                        for j in a..b {
-                            // Exact prefilter against the group center,
-                            // trig-free via the precomputed unit vectors: any
-                            // sample within R of a member is within R + margin
-                            // of the center, so this never drops a true
-                            // neighbour.
-                            let d = ang_dist_vec(&cu, &shared.unit[j]);
-                            if d <= radius {
-                                found.push((d, j as i32));
-                            }
+                        backend.chord2_filter(
+                            &shared.unit_x[a..b],
+                            &shared.unit_y[a..b],
+                            &shared.unit_z[a..b],
+                            &cu,
+                            c2_pref,
+                            a as u32,
+                            &mut scratch.cand,
+                        );
+                    }
+                    // ② exact arc test on accepts only — one `asin` per
+                    // prefiltered candidate instead of one per ring sample
+                    // (the same shape as `CpuGridder`'s hot loop; the former
+                    // per-candidate `ang_dist_vec` metric is gone).
+                    let found = &mut scratch.found;
+                    found.clear();
+                    for &(c2, j) in &scratch.cand {
+                        let d = chord2_to_arc(c2);
+                        if d <= radius {
+                            found.push((d, j as i32));
                         }
                     }
                     let candidates = found.len();

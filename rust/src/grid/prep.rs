@@ -58,12 +58,16 @@ pub struct SharedComponent {
     pub slon64: Vec<f64>,
     pub slat64: Vec<f64>,
     /// Per-sample unit 3-vectors (bit-identical to `unit_vec(lon, lat)`),
-    /// precomputed once from the sorted coordinates — the operand of the
-    /// trig-free chord distance in the gridder and neighbour-walk inner
+    /// precomputed once from the sorted coordinates and stored as **SoA
+    /// columns** so the SIMD backends ([`crate::grid::simd`]) can batch the
+    /// squared-chord prefilter over 2/4 samples per vector — the operand of
+    /// the trig-free chord distance in the gridder and neighbour-walk inner
     /// loops, and the source of the f32 staging planes T2 ships to the
     /// device ([`SharedComponent::staged_unit_f32`]). Redundancy
     /// elimination, §4.3.
-    pub unit: Vec<[f64; 3]>,
+    pub unit_x: Vec<f64>,
+    pub unit_y: Vec<f64>,
+    pub unit_z: Vec<f64>,
     /// Worker budget the component was built with; reused by the parallel
     /// [`SharedComponent::permute_channel`].
     pub workers: usize,
@@ -111,7 +115,9 @@ impl SharedComponent {
         let mut slat = vec![0.0f32; n];
         let mut slon64 = vec![0.0f64; n];
         let mut slat64 = vec![0.0f64; n];
-        let mut unit = vec![[0.0f64; 3]; n];
+        let mut unit_x = vec![0.0f64; n];
+        let mut unit_y = vec![0.0f64; n];
+        let mut unit_z = vec![0.0f64; n];
         let (_, t) = timed(|| {
             let w_pix = DisjointWriter::new(&mut sorted_pix);
             let w_perm = DisjointWriter::new(&mut perm);
@@ -119,7 +125,9 @@ impl SharedComponent {
             let w_slat = DisjointWriter::new(&mut slat);
             let w_slon64 = DisjointWriter::new(&mut slon64);
             let w_slat64 = DisjointWriter::new(&mut slat64);
-            let w_unit = DisjointWriter::new(&mut unit);
+            let w_ux = DisjointWriter::new(&mut unit_x);
+            let w_uy = DisjointWriter::new(&mut unit_y);
+            let w_uz = DisjointWriter::new(&mut unit_z);
             let items = &items;
             parallel_chunks(n, workers, |_, s, e| {
                 for j in s..e {
@@ -135,7 +143,9 @@ impl SharedComponent {
                         w_slon64.write(j, lons[i]);
                         w_slat64.write(j, lats[i]);
                         // Same ops/order as `healpix::unit_vec` ⇒ bit-equal.
-                        w_unit.write(j, [cos_lat * cos_lon, cos_lat * sin_lon, sin_lat]);
+                        w_ux.write(j, cos_lat * cos_lon);
+                        w_uy.write(j, cos_lat * sin_lon);
+                        w_uz.write(j, sin_lat);
                     }
                 }
             });
@@ -159,10 +169,18 @@ impl SharedComponent {
             slat,
             slon64,
             slat64,
-            unit,
+            unit_x,
+            unit_y,
+            unit_z,
             workers,
             stats,
         })
+    }
+
+    /// Unit 3-vector of sorted sample `j` (gathers the SoA columns).
+    #[inline]
+    pub fn unit3(&self, j: usize) -> [f64; 3] {
+        [self.unit_x[j], self.unit_y[j], self.unit_z[j]]
     }
 
     /// Build with the HEALPix resolution matched to a kernel's support.
@@ -198,7 +216,9 @@ impl SharedComponent {
             slat: self.slat[lo..hi].to_vec(),
             slon64: self.slon64[lo..hi].to_vec(),
             slat64: self.slat64[lo..hi].to_vec(),
-            unit: self.unit[lo..hi].to_vec(),
+            unit_x: self.unit_x[lo..hi].to_vec(),
+            unit_y: self.unit_y[lo..hi].to_vec(),
+            unit_z: self.unit_z[lo..hi].to_vec(),
             workers: self.workers,
             stats: self.stats.clone(),
         }
@@ -217,12 +237,39 @@ impl SharedComponent {
         let n = self.n_samples();
         assert!(pad_to >= n, "pad_to {pad_to} < {n} samples");
         let mut out = vec![0.0f32; 3 * pad_to];
-        for (j, u) in self.unit.iter().enumerate() {
-            out[j] = u[0] as f32;
-            out[pad_to + j] = u[1] as f32;
-            out[2 * pad_to + j] = u[2] as f32;
+        for j in 0..n {
+            out[j] = self.unit_x[j] as f32;
+            out[pad_to + j] = self.unit_y[j] as f32;
+            out[2 * pad_to + j] = self.unit_z[j] as f32;
         }
         out
+    }
+
+    /// Permute + transpose every channel into a **lane-padded, sample-major
+    /// value matrix**: `row(j)[c] = channels[c][perm[j]]`, rows padded with
+    /// zeros to a multiple of `lanes` and backed by a 64-byte-aligned
+    /// allocation, so the SIMD accumulation loop needs no tail handling
+    /// (pad lanes accumulate exact zeros that are never written out).
+    pub fn value_matrix(&self, channels: &[Vec<f32>], lanes: usize, workers: usize) -> ValueMatrix {
+        let n = self.n_samples();
+        let n_ch = channels.len();
+        let lanes = lanes.max(1);
+        let stride = if n_ch == 0 { 0 } else { n_ch.next_multiple_of(lanes) };
+        let mut buf = crate::grid::simd::AlignedF32::zeroed(n * stride);
+        if n_ch > 0 && n > 0 {
+            let w = DisjointWriter::new(&mut buf[..]);
+            let perm = &self.perm;
+            parallel_chunks(n, workers.max(1), |_, s, e| {
+                for j in s..e {
+                    let orig = perm[j] as usize;
+                    let row = unsafe { w.slice(j * stride, n_ch) };
+                    for (dst, ch) in row.iter_mut().zip(channels) {
+                        *dst = ch[orig];
+                    }
+                }
+            });
+        }
+        ValueMatrix { buf, n_ch, stride }
     }
 
     /// Reorder one channel's value column into the sorted layout, replacing
@@ -248,6 +295,30 @@ impl SharedComponent {
             }
         });
         Ok(())
+    }
+}
+
+/// Sample-major channel-value matrix in the sorted layout, rows lane-padded
+/// and 64-byte aligned — the operand of the SIMD channel-blocked
+/// accumulation (built by [`SharedComponent::value_matrix`]).
+#[derive(Debug)]
+pub struct ValueMatrix {
+    buf: crate::grid::simd::AlignedF32,
+    /// Real channels per row (pad columns beyond this are zero).
+    pub n_ch: usize,
+    /// Row stride in f32s: `n_ch` rounded up to the lane multiple.
+    pub stride: usize,
+}
+
+impl ValueMatrix {
+    /// The full backing slice (`n_samples · stride` f32s).
+    pub fn as_slice(&self) -> &[f32] {
+        &self.buf
+    }
+
+    /// Row of sorted sample `j`, pad columns included.
+    pub fn row(&self, j: usize) -> &[f32] {
+        &self.buf[j * self.stride..(j + 1) * self.stride]
     }
 }
 
@@ -290,12 +361,14 @@ mod tests {
         let sc = SharedComponent::build(&lons, &lats, 0.02, 4).unwrap();
         for j in (0..3000).step_by(53) {
             let i = sc.perm[j] as usize;
-            assert_eq!(sc.unit[j], crate::healpix::unit_vec(lons[i], lats[i]));
+            assert_eq!(sc.unit3(j), crate::healpix::unit_vec(lons[i], lats[i]));
         }
         // Parallel and serial builds agree bit-for-bit.
         let sc1 = SharedComponent::build(&lons, &lats, 0.02, 1).unwrap();
         assert_eq!(sc.perm, sc1.perm);
-        assert_eq!(sc.unit, sc1.unit);
+        assert_eq!(sc.unit_x, sc1.unit_x);
+        assert_eq!(sc.unit_y, sc1.unit_y);
+        assert_eq!(sc.unit_z, sc1.unit_z);
         assert_eq!(sc.slon64, sc1.slon64);
     }
 
@@ -339,12 +412,38 @@ mod tests {
         let staged = sc.staged_unit_f32(pad);
         assert_eq!(staged.len(), 3 * pad);
         for j in (0..500).step_by(37) {
-            assert_eq!(staged[j], sc.unit[j][0] as f32);
-            assert_eq!(staged[pad + j], sc.unit[j][1] as f32);
-            assert_eq!(staged[2 * pad + j], sc.unit[j][2] as f32);
+            assert_eq!(staged[j], sc.unit_x[j] as f32);
+            assert_eq!(staged[pad + j], sc.unit_y[j] as f32);
+            assert_eq!(staged[2 * pad + j], sc.unit_z[j] as f32);
         }
         // Padding is finite zeros.
         assert!(staged[500..pad].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn value_matrix_pads_rows_to_lane_multiples() {
+        let (lons, lats) = random_coords(200, 31);
+        let sc = SharedComponent::build(&lons, &lats, 0.02, 2).unwrap();
+        let channels: Vec<Vec<f32>> =
+            (0..5).map(|c| (0..200).map(|i| (c * 1000 + i) as f32).collect()).collect();
+        for lanes in [1usize, 2, 4] {
+            let vm = sc.value_matrix(&channels, lanes, 2);
+            assert_eq!(vm.n_ch, 5);
+            assert_eq!(vm.stride, 5usize.next_multiple_of(lanes));
+            assert_eq!(vm.stride % lanes, 0);
+            assert_eq!(vm.as_slice().len(), 200 * vm.stride);
+            for j in (0..200).step_by(17) {
+                let row = vm.row(j);
+                let orig = sc.perm[j] as usize;
+                for (c, ch) in channels.iter().enumerate() {
+                    assert_eq!(row[c], ch[orig]);
+                }
+                assert!(row[5..].iter().all(|&v| v == 0.0), "pad lanes stay zero");
+            }
+        }
+        // Degenerate shapes.
+        let empty = sc.value_matrix(&[], 4, 2);
+        assert_eq!((empty.n_ch, empty.stride, empty.as_slice().len()), (0, 0, 0));
     }
 
     #[test]
@@ -373,7 +472,7 @@ mod tests {
             let i = sub.perm[j] as usize;
             assert_eq!(sub.slon64[j], lons[i]);
             assert_eq!(sub.sorted_pix[j], sc.sorted_pix[500 + j]);
-            assert_eq!(sub.unit[j], sc.unit[500 + j]);
+            assert_eq!(sub.unit3(j), sc.unit3(500 + j));
         }
         // Span lookup agrees with the parent's, shifted.
         let (a, b) = sub.samples_in_pix_range(sub.sorted_pix[0], sub.sorted_pix[999]);

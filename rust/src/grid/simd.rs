@@ -1,0 +1,686 @@
+//! Lane-per-channel SIMD backends for the CPU gridding hot path.
+//!
+//! The two inner loops that dominate `CpuGridder::grid_with_shared` (and the
+//! neighbour walk in `NeighborTable::build`) are
+//!
+//! 1. the **squared-chord prefilter** — `chord²(sample, cell) ≤ r²` over the
+//!    samples of each LUT ring range, and
+//! 2. the **channel-blocked accumulation** — `acc[c] += w · vals[j][c]` over
+//!    a cell's contributor list.
+//!
+//! Both vectorise with a **lane-per-channel / lane-per-sample mapping**: each
+//! SIMD lane owns one channel (resp. one sample), so the per-channel
+//! accumulation order — the invariant `rust/tests/cpu_blocked_equivalence.rs`
+//! pins — is exactly the scalar order and results stay **bit-identical**
+//! across backends. To keep that guarantee the vector code mirrors the
+//! scalar operation sequence precisely:
+//!
+//! * accumulation is a widen (f32→f64, exact) + multiply + add — **not** a
+//!   fused multiply-add, which rounds once instead of twice and would change
+//!   low bits;
+//! * `chord²` is `(dx·dx + dy·dy) + dz·dz` in the same association as the
+//!   scalar [`crate::healpix::chord2`].
+//!
+//! Backends are selected once per process ([`dispatch`]): an explicit
+//! `HEGRID_SIMD` env override (`scalar|avx2|neon`, how CI forces the
+//! fallback path), else AVX2+FMA when the CPU reports it, else NEON on
+//! aarch64, else scalar. Per-call-site overrides go through [`SimdIsa`]
+//! (config `simd_isa` / CLI `--simd`).
+
+use std::sync::OnceLock;
+
+/// Requested instruction set (config `simd_isa` / CLI `--simd`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SimdIsa {
+    /// Use the process-wide dispatched backend ([`dispatch`]).
+    #[default]
+    Auto,
+    Scalar,
+    Avx2,
+    Neon,
+}
+
+impl SimdIsa {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimdIsa::Auto => "auto",
+            SimdIsa::Scalar => "scalar",
+            SimdIsa::Avx2 => "avx2",
+            SimdIsa::Neon => "neon",
+        }
+    }
+
+    pub fn from_name(s: &str) -> crate::util::error::Result<Self> {
+        match s {
+            "auto" | "" => Ok(SimdIsa::Auto),
+            "scalar" => Ok(SimdIsa::Scalar),
+            "avx2" => Ok(SimdIsa::Avx2),
+            "neon" => Ok(SimdIsa::Neon),
+            _ => Err(crate::util::error::HegridError::Config(format!(
+                "unknown SIMD ISA '{s}' (expected auto|scalar|avx2|neon)"
+            ))),
+        }
+    }
+
+    /// The backend this request resolves to on this host, falling back to
+    /// scalar (with a warning) when the forced ISA is not available — a
+    /// forced-but-unsupported ISA must degrade, not crash, because configs
+    /// travel between machines.
+    pub fn resolve(&self) -> &'static dyn SimdBackend {
+        match backend_for(*self) {
+            Ok(b) => b,
+            Err(_) => {
+                crate::log_warn!(
+                    "simd: ISA '{}' unavailable on this host; falling back to scalar",
+                    self.name()
+                );
+                &Scalar
+            }
+        }
+    }
+}
+
+/// One vectorisation strategy for the gridding inner loops.
+///
+/// Implementations must be **bit-identical** to [`Scalar`] on every input:
+/// the equivalence tests force each compiled-in backend against scalar and
+/// compare output bits. The whole contributor/range loop lives inside the
+/// backend so the per-item cost is not a virtual call.
+pub trait SimdBackend: Sync {
+    /// Backend name as recorded in bench payloads (`scalar`, `avx2`, `neon`).
+    fn name(&self) -> &'static str;
+
+    /// f64 lanes per vector (1 for scalar). Channel blocks and value-matrix
+    /// row strides are padded to a multiple of this so the accumulation loop
+    /// needs no tail handling.
+    fn lanes(&self) -> usize;
+
+    /// For every sample `i` in `0..ux.len()` with
+    /// `chord²((ux[i],uy[i],uz[i]), cu) ≤ c2_max`, push
+    /// `(chord², base + i)` onto `out`, in ascending `i` order.
+    #[allow(clippy::too_many_arguments)]
+    fn chord2_filter(
+        &self,
+        ux: &[f64],
+        uy: &[f64],
+        uz: &[f64],
+        cu: &[f64; 3],
+        c2_max: f64,
+        base: u32,
+        out: &mut Vec<(f64, u32)>,
+    );
+
+    /// Blocked accumulation over a contributor list:
+    /// `acc[k] += w · vals[j·stride + c0 + k]` for every `(w, j)` of
+    /// `contrib` in order, `k` in `0..acc.len()`.
+    ///
+    /// `acc.len()` must be a multiple of [`SimdBackend::lanes`] and
+    /// `c0 + acc.len() ≤ stride` (rows are lane-padded by
+    /// [`crate::grid::prep::SharedComponent::value_matrix`]).
+    fn accumulate_contribs(
+        &self,
+        acc: &mut [f64],
+        contrib: &[(f64, u32)],
+        vals: &[f32],
+        stride: usize,
+        c0: usize,
+    );
+}
+
+/// Portable scalar fallback — the reference semantics every other backend
+/// must reproduce bit-for-bit.
+pub struct Scalar;
+
+impl SimdBackend for Scalar {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn lanes(&self) -> usize {
+        1
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn chord2_filter(
+        &self,
+        ux: &[f64],
+        uy: &[f64],
+        uz: &[f64],
+        cu: &[f64; 3],
+        c2_max: f64,
+        base: u32,
+        out: &mut Vec<(f64, u32)>,
+    ) {
+        for i in 0..ux.len() {
+            let dx = ux[i] - cu[0];
+            let dy = uy[i] - cu[1];
+            let dz = uz[i] - cu[2];
+            let c2 = dx * dx + dy * dy + dz * dz;
+            if c2 <= c2_max {
+                out.push((c2, base + i as u32));
+            }
+        }
+    }
+
+    fn accumulate_contribs(
+        &self,
+        acc: &mut [f64],
+        contrib: &[(f64, u32)],
+        vals: &[f32],
+        stride: usize,
+        c0: usize,
+    ) {
+        let width = acc.len();
+        for &(w, j) in contrib {
+            let base = j as usize * stride + c0;
+            let row = &vals[base..base + width];
+            for (sum, &v) in acc.iter_mut().zip(row) {
+                *sum += w * v as f64;
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{Scalar, SimdBackend};
+    use std::arch::x86_64::*;
+
+    /// AVX2 backend: 4 f64 lanes. FMA is required for dispatch (every AVX2
+    /// part since Haswell has it) but the accumulation deliberately issues
+    /// separate multiply + add so results match the scalar two-rounding
+    /// sequence bit-for-bit.
+    pub struct Avx2;
+
+    pub fn supported() -> bool {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn chord2_filter_impl(
+        ux: &[f64],
+        uy: &[f64],
+        uz: &[f64],
+        cu: &[f64; 3],
+        c2_max: f64,
+        base: u32,
+        out: &mut Vec<(f64, u32)>,
+    ) {
+        let n = ux.len();
+        let cx = _mm256_set1_pd(cu[0]);
+        let cy = _mm256_set1_pd(cu[1]);
+        let cz = _mm256_set1_pd(cu[2]);
+        let cmax = _mm256_set1_pd(c2_max);
+        let mut i = 0;
+        while i + 4 <= n {
+            let dx = _mm256_sub_pd(_mm256_loadu_pd(ux.as_ptr().add(i)), cx);
+            let dy = _mm256_sub_pd(_mm256_loadu_pd(uy.as_ptr().add(i)), cy);
+            let dz = _mm256_sub_pd(_mm256_loadu_pd(uz.as_ptr().add(i)), cz);
+            // Same association as the scalar chord2: (dx² + dy²) + dz².
+            let c2 = _mm256_add_pd(
+                _mm256_add_pd(_mm256_mul_pd(dx, dx), _mm256_mul_pd(dy, dy)),
+                _mm256_mul_pd(dz, dz),
+            );
+            let mask = _mm256_movemask_pd(_mm256_cmp_pd::<_CMP_LE_OQ>(c2, cmax));
+            if mask != 0 {
+                let mut c2s = [0.0f64; 4];
+                _mm256_storeu_pd(c2s.as_mut_ptr(), c2);
+                for (k, &c2k) in c2s.iter().enumerate() {
+                    if mask & (1 << k) != 0 {
+                        out.push((c2k, base + (i + k) as u32));
+                    }
+                }
+            }
+            i += 4;
+        }
+        // Tail: delegate to the scalar reference so the bit-identity
+        // semantics live in exactly one place.
+        Scalar.chord2_filter(&ux[i..], &uy[i..], &uz[i..], cu, c2_max, base + i as u32, out);
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn accumulate_impl(
+        acc: &mut [f64],
+        contrib: &[(f64, u32)],
+        vals: &[f32],
+        stride: usize,
+        c0: usize,
+    ) {
+        let width = acc.len();
+        debug_assert!(width % 4 == 0 && c0 + width <= stride);
+        for &(w, j) in contrib {
+            let wv = _mm256_set1_pd(w);
+            let row = vals.as_ptr().add(j as usize * stride + c0);
+            let mut k = 0;
+            while k < width {
+                // Widen 4 f32 → 4 f64 (exact), then mul + add — NOT fmadd,
+                // to match the scalar rounding sequence.
+                let v = _mm256_cvtps_pd(_mm_loadu_ps(row.add(k)));
+                let a = _mm256_loadu_pd(acc.as_ptr().add(k));
+                let r = _mm256_add_pd(a, _mm256_mul_pd(wv, v));
+                _mm256_storeu_pd(acc.as_mut_ptr().add(k), r);
+                k += 4;
+            }
+        }
+    }
+
+    impl super::SimdBackend for Avx2 {
+        fn name(&self) -> &'static str {
+            "avx2"
+        }
+
+        fn lanes(&self) -> usize {
+            4
+        }
+
+        #[allow(clippy::too_many_arguments)]
+        fn chord2_filter(
+            &self,
+            ux: &[f64],
+            uy: &[f64],
+            uz: &[f64],
+            cu: &[f64; 3],
+            c2_max: f64,
+            base: u32,
+            out: &mut Vec<(f64, u32)>,
+        ) {
+            debug_assert!(supported());
+            unsafe { chord2_filter_impl(ux, uy, uz, cu, c2_max, base, out) }
+        }
+
+        fn accumulate_contribs(
+            &self,
+            acc: &mut [f64],
+            contrib: &[(f64, u32)],
+            vals: &[f32],
+            stride: usize,
+            c0: usize,
+        ) {
+            debug_assert!(supported());
+            unsafe { accumulate_impl(acc, contrib, vals, stride, c0) }
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{Scalar, SimdBackend};
+    use std::arch::aarch64::*;
+
+    /// NEON backend: 2 f64 lanes. Mandatory on aarch64, so "supported" is a
+    /// formality kept for symmetry with the AVX2 guard.
+    pub struct Neon;
+
+    pub fn supported() -> bool {
+        std::arch::is_aarch64_feature_detected!("neon")
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn chord2_filter_impl(
+        ux: &[f64],
+        uy: &[f64],
+        uz: &[f64],
+        cu: &[f64; 3],
+        c2_max: f64,
+        base: u32,
+        out: &mut Vec<(f64, u32)>,
+    ) {
+        let n = ux.len();
+        let cx = vdupq_n_f64(cu[0]);
+        let cy = vdupq_n_f64(cu[1]);
+        let cz = vdupq_n_f64(cu[2]);
+        let cmax = vdupq_n_f64(c2_max);
+        let mut i = 0;
+        while i + 2 <= n {
+            let dx = vsubq_f64(vld1q_f64(ux.as_ptr().add(i)), cx);
+            let dy = vsubq_f64(vld1q_f64(uy.as_ptr().add(i)), cy);
+            let dz = vsubq_f64(vld1q_f64(uz.as_ptr().add(i)), cz);
+            // Same association as the scalar chord2: (dx² + dy²) + dz².
+            let c2 = vaddq_f64(
+                vaddq_f64(vmulq_f64(dx, dx), vmulq_f64(dy, dy)),
+                vmulq_f64(dz, dz),
+            );
+            let le = vcleq_f64(c2, cmax);
+            if vgetq_lane_u64::<0>(le) != 0 {
+                out.push((vgetq_lane_f64::<0>(c2), base + i as u32));
+            }
+            if vgetq_lane_u64::<1>(le) != 0 {
+                out.push((vgetq_lane_f64::<1>(c2), base + (i + 1) as u32));
+            }
+            i += 2;
+        }
+        // Tail: delegate to the scalar reference so the bit-identity
+        // semantics live in exactly one place.
+        Scalar.chord2_filter(&ux[i..], &uy[i..], &uz[i..], cu, c2_max, base + i as u32, out);
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn accumulate_impl(
+        acc: &mut [f64],
+        contrib: &[(f64, u32)],
+        vals: &[f32],
+        stride: usize,
+        c0: usize,
+    ) {
+        let width = acc.len();
+        debug_assert!(width % 2 == 0 && c0 + width <= stride);
+        for &(w, j) in contrib {
+            let wv = vdupq_n_f64(w);
+            let row = vals.as_ptr().add(j as usize * stride + c0);
+            let mut k = 0;
+            while k < width {
+                // Widen 2 f32 → 2 f64 (exact), then mul + add — NOT vfma,
+                // to match the scalar rounding sequence.
+                let v = vcvt_f64_f32(vld1_f32(row.add(k)));
+                let a = vld1q_f64(acc.as_ptr().add(k));
+                let r = vaddq_f64(a, vmulq_f64(wv, v));
+                vst1q_f64(acc.as_mut_ptr().add(k), r);
+                k += 2;
+            }
+        }
+    }
+
+    impl super::SimdBackend for Neon {
+        fn name(&self) -> &'static str {
+            "neon"
+        }
+
+        fn lanes(&self) -> usize {
+            2
+        }
+
+        #[allow(clippy::too_many_arguments)]
+        fn chord2_filter(
+            &self,
+            ux: &[f64],
+            uy: &[f64],
+            uz: &[f64],
+            cu: &[f64; 3],
+            c2_max: f64,
+            base: u32,
+            out: &mut Vec<(f64, u32)>,
+        ) {
+            debug_assert!(supported());
+            unsafe { chord2_filter_impl(ux, uy, uz, cu, c2_max, base, out) }
+        }
+
+        fn accumulate_contribs(
+            &self,
+            acc: &mut [f64],
+            contrib: &[(f64, u32)],
+            vals: &[f32],
+            stride: usize,
+            c0: usize,
+        ) {
+            debug_assert!(supported());
+            unsafe { accumulate_impl(acc, contrib, vals, stride, c0) }
+        }
+    }
+}
+
+/// The backend for an explicit ISA request. `Err` when the ISA is not
+/// compiled in or the CPU does not report the feature.
+pub fn backend_for(isa: SimdIsa) -> crate::util::error::Result<&'static dyn SimdBackend> {
+    use crate::util::error::HegridError;
+    match isa {
+        SimdIsa::Auto => Ok(dispatch()),
+        SimdIsa::Scalar => Ok(&Scalar),
+        SimdIsa::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            if avx2::supported() {
+                return Ok(&avx2::Avx2);
+            }
+            Err(HegridError::Config("avx2 not available on this host".into()))
+        }
+        SimdIsa::Neon => {
+            #[cfg(target_arch = "aarch64")]
+            if neon::supported() {
+                return Ok(&neon::Neon);
+            }
+            Err(HegridError::Config("neon not available on this host".into()))
+        }
+    }
+}
+
+/// Every backend usable on this host, scalar first. The forced-ISA
+/// equivalence tests sweep this list against scalar.
+pub fn available_backends() -> Vec<&'static dyn SimdBackend> {
+    let mut out: Vec<&'static dyn SimdBackend> = vec![&Scalar];
+    #[cfg(target_arch = "x86_64")]
+    if avx2::supported() {
+        out.push(&avx2::Avx2);
+    }
+    #[cfg(target_arch = "aarch64")]
+    if neon::supported() {
+        out.push(&neon::Neon);
+    }
+    out
+}
+
+/// The process-wide backend, selected once: `HEGRID_SIMD` env override
+/// (invalid or unsupported values warn and fall through), else the widest
+/// ISA the CPU reports. Everything that does not carry an explicit
+/// [`SimdIsa`] (neighbour builds, `SimdIsa::Auto` gridders) runs on this.
+pub fn dispatch() -> &'static dyn SimdBackend {
+    static DISPATCHED: OnceLock<&'static dyn SimdBackend> = OnceLock::new();
+    *DISPATCHED.get_or_init(|| {
+        if let Ok(name) = std::env::var("HEGRID_SIMD") {
+            match SimdIsa::from_name(&name) {
+                // "auto" (or empty) falls through to detection — calling
+                // backend_for(Auto) here would re-enter this OnceLock
+                // initialiser through dispatch() and deadlock.
+                Ok(SimdIsa::Auto) => {}
+                Ok(isa) => match backend_for(isa) {
+                    Ok(b) => return b,
+                    Err(_) => {
+                        crate::log_warn!("simd: ignoring unusable HEGRID_SIMD='{name}'");
+                    }
+                },
+                Err(_) => {
+                    crate::log_warn!("simd: ignoring unusable HEGRID_SIMD='{name}'");
+                }
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        if avx2::supported() {
+            return &avx2::Avx2;
+        }
+        #[cfg(target_arch = "aarch64")]
+        if neon::supported() {
+            return &neon::Neon;
+        }
+        &Scalar
+    })
+}
+
+/// A 64-byte-aligned, zero-initialised `f32` buffer — the backing store of
+/// the lane-padded value matrix. Alignment keeps vector rows from straddling
+/// cache lines more than necessary; the SIMD loads themselves are unaligned
+/// so alignment is a performance property, not a safety one.
+pub struct AlignedF32 {
+    ptr: std::ptr::NonNull<f32>,
+    len: usize,
+}
+
+// The buffer is plain memory; sharing references across threads is safe.
+unsafe impl Send for AlignedF32 {}
+unsafe impl Sync for AlignedF32 {}
+
+impl AlignedF32 {
+    pub const ALIGN: usize = 64;
+
+    pub fn zeroed(len: usize) -> AlignedF32 {
+        if len == 0 {
+            return AlignedF32 { ptr: std::ptr::NonNull::dangling(), len: 0 };
+        }
+        let layout = Self::layout(len);
+        let raw = unsafe { std::alloc::alloc_zeroed(layout) };
+        let Some(ptr) = std::ptr::NonNull::new(raw as *mut f32) else {
+            std::alloc::handle_alloc_error(layout);
+        };
+        AlignedF32 { ptr, len }
+    }
+
+    fn layout(len: usize) -> std::alloc::Layout {
+        std::alloc::Layout::from_size_align(len * std::mem::size_of::<f32>(), Self::ALIGN)
+            .expect("aligned buffer layout")
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl std::ops::Deref for AlignedF32 {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl std::ops::DerefMut for AlignedF32 {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl Drop for AlignedF32 {
+    fn drop(&mut self) {
+        if self.len > 0 {
+            unsafe { std::alloc::dealloc(self.ptr.as_ptr() as *mut u8, Self::layout(self.len)) };
+        }
+    }
+}
+
+impl std::fmt::Debug for AlignedF32 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "AlignedF32(len={})", self.len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::healpix::{chord2, unit_vec};
+    use crate::util::SplitMix64;
+
+    fn random_units(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+        let mut rng = SplitMix64::new(seed);
+        let mut ux = Vec::with_capacity(n);
+        let mut uy = Vec::with_capacity(n);
+        let mut uz = Vec::with_capacity(n);
+        for _ in 0..n {
+            let u = unit_vec(rng.uniform(0.0, 6.28), rng.uniform(-1.5, 1.5));
+            ux.push(u[0]);
+            uy.push(u[1]);
+            uz.push(u[2]);
+        }
+        (ux, uy, uz)
+    }
+
+    #[test]
+    fn isa_names_round_trip() {
+        for isa in [SimdIsa::Auto, SimdIsa::Scalar, SimdIsa::Avx2, SimdIsa::Neon] {
+            assert_eq!(SimdIsa::from_name(isa.name()).unwrap(), isa);
+        }
+        assert_eq!(SimdIsa::from_name("").unwrap(), SimdIsa::Auto);
+        assert!(SimdIsa::from_name("sse9").is_err());
+    }
+
+    #[test]
+    fn dispatch_and_fallback_are_sane() {
+        let d = dispatch();
+        assert!(d.lanes() >= 1);
+        // Scalar is always available and always resolvable.
+        assert_eq!(backend_for(SimdIsa::Scalar).unwrap().name(), "scalar");
+        assert_eq!(SimdIsa::Scalar.resolve().lanes(), 1);
+        // An unsupported forced ISA degrades to scalar via resolve().
+        let missing = if cfg!(target_arch = "x86_64") { SimdIsa::Neon } else { SimdIsa::Avx2 };
+        assert!(backend_for(missing).is_err());
+        assert_eq!(missing.resolve().name(), "scalar");
+        // available_backends starts with scalar and contains the dispatched
+        // backend (unless dispatch was env-forced to something absent, which
+        // backend_for would have rejected anyway).
+        let avail = available_backends();
+        assert_eq!(avail[0].name(), "scalar");
+        assert!(avail.iter().any(|b| b.name() == d.name()));
+    }
+
+    #[test]
+    fn chord2_filter_matches_scalar_bitwise_on_all_backends() {
+        // 257 samples: not a multiple of any lane width, exercises tails.
+        let (ux, uy, uz) = random_units(257, 7);
+        let cu = unit_vec(1.0, 0.3);
+        for &c2_max in &[0.05f64, 0.5, f64::INFINITY] {
+            let mut want = Vec::new();
+            Scalar.chord2_filter(&ux, &uy, &uz, &cu, c2_max, 10, &mut want);
+            // Cross-check the scalar backend against the healpix helper.
+            for &(c2, j) in &want {
+                let a = [ux[(j - 10) as usize], uy[(j - 10) as usize], uz[(j - 10) as usize]];
+                assert_eq!(c2.to_bits(), chord2(&a, &cu).to_bits());
+            }
+            for backend in available_backends() {
+                let mut got = Vec::new();
+                backend.chord2_filter(&ux, &uy, &uz, &cu, c2_max, 10, &mut got);
+                assert_eq!(got.len(), want.len(), "{} c2_max={c2_max}", backend.name());
+                for (g, w) in got.iter().zip(&want) {
+                    assert_eq!(g.1, w.1, "{}", backend.name());
+                    assert_eq!(g.0.to_bits(), w.0.to_bits(), "{}", backend.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn accumulate_matches_scalar_bitwise_on_all_backends() {
+        let mut rng = SplitMix64::new(11);
+        let n_samples = 300;
+        let n_ch = 13;
+        for backend in available_backends() {
+            let lanes = backend.lanes();
+            let stride = n_ch.next_multiple_of(lanes);
+            let mut vals = AlignedF32::zeroed(n_samples * stride);
+            for j in 0..n_samples {
+                for c in 0..n_ch {
+                    vals[j * stride + c] = rng.normal() as f32;
+                }
+            }
+            let contrib: Vec<(f64, u32)> = (0..97)
+                .map(|_| {
+                    let j = (rng.uniform(0.0, n_samples as f64) as u32).min(n_samples as u32 - 1);
+                    (rng.uniform(0.0, 1.0), j)
+                })
+                .collect();
+            for c0 in (0..stride).step_by(lanes.max(4)) {
+                let width = (stride - c0).min(lanes.max(4));
+                let width = width.next_multiple_of(lanes).min(stride - c0);
+                if width == 0 {
+                    continue;
+                }
+                let mut want = vec![0.0f64; width];
+                Scalar.accumulate_contribs(&mut want, &contrib, &vals, stride, c0);
+                let mut got = vec![0.0f64; width];
+                backend.accumulate_contribs(&mut got, &contrib, &vals, stride, c0);
+                for (g, w) in got.iter().zip(&want) {
+                    assert_eq!(g.to_bits(), w.to_bits(), "{} c0={c0}", backend.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn aligned_buffer_is_aligned_and_zeroed() {
+        let buf = AlignedF32::zeroed(1000);
+        assert_eq!(buf.len(), 1000);
+        assert_eq!(buf.as_ptr() as usize % AlignedF32::ALIGN, 0);
+        assert!(buf.iter().all(|&v| v == 0.0));
+        let empty = AlignedF32::zeroed(0);
+        assert!(empty.is_empty());
+        assert_eq!(&empty[..], &[] as &[f32]);
+    }
+}

@@ -463,6 +463,23 @@ pub fn ang_dist_vec(a: &[f64; 3], b: &[f64; 3]) -> f64 {
     chord2_to_arc(chord2(a, b))
 }
 
+/// Squared-chord prefilter bound for an arc-distance cut at `radius`:
+/// `(2·sin(radius/2))²`, padded by 1e-9 **relative** so rounding differences
+/// between the chord and arc formulations at the exact boundary can only
+/// *add* a candidate for the exact downstream test, never drop a true one.
+/// A radius ≥ π covers the whole sphere (sin is no longer monotone there),
+/// so the prefilter is disabled (`+∞`). Shared by the gridding and
+/// neighbour-walk hot loops (`grid::cpu`, `grid::nbr`).
+#[inline]
+pub fn chord2_prefilter_bound(radius: f64) -> f64 {
+    if radius >= PI {
+        f64::INFINITY
+    } else {
+        let half = (0.5 * radius).sin();
+        4.0 * half * half * (1.0 + 1e-9)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

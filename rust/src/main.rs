@@ -11,6 +11,7 @@
 //!
 //! Engine knobs (grid/accuracy): `--streams N --pipelines N --pipeline-width W
 //! --channels-per-dispatch C --gamma G --block B --cpu-block B
+//! --simd auto|scalar|avx2|neon --affinity none|compact|spread
 //! --kernel gauss1d|gauss2d|tapered_sinc --profile v|m --oversample F
 //! --no-share --artifacts DIR --prefetch-depth D --io-workers N`.
 //!
@@ -33,8 +34,8 @@ use hegrid::util::error::{HegridError, Result};
 const VALUE_OPTS: &[&str] = &[
     "preset", "points", "channels", "field", "beam", "seed", "out", "input", "out-prefix",
     "streams", "pipelines", "pipeline-width", "channels-per-dispatch", "gamma", "block",
-    "cpu-block", "kernel", "profile", "oversample", "artifacts", "threads", "variant",
-    "prefetch-depth", "io-workers", "baseline", "current", "threshold",
+    "cpu-block", "simd", "affinity", "kernel", "profile", "oversample", "artifacts", "threads",
+    "variant", "prefetch-depth", "io-workers", "baseline", "current", "threshold",
 ];
 
 fn main() -> ExitCode {
@@ -100,6 +101,8 @@ fn engine_config(args: &cli::Args) -> Result<HegridConfig> {
         gamma: args.get_usize("gamma", 1)?,
         block_size: args.get_usize("block", 0)?,
         cpu_channel_block: args.get_usize("cpu-block", 0)?,
+        simd_isa: args.get_or("simd", "auto").to_string(),
+        executor_affinity: args.get_or("affinity", "none").to_string(),
         prefetch_depth: args.get_usize("prefetch-depth", 2)?,
         io_workers: args.get_usize("io-workers", 0)?,
         kernel_type: args.get_or("kernel", "gauss1d").to_string(),
@@ -269,10 +272,12 @@ fn cmd_accuracy(args: &cli::Args) -> Result<()> {
     let cfg = engine_config(args)?;
     let job = GriddingJob::for_dataset(&dataset, &cfg)?;
     let cpu_block = cfg.cpu_channel_block;
+    let simd = cfg.simd();
     let engine = HegridEngine::new(cfg)?;
     let (he_maps, report) = engine.grid(&dataset, &job)?;
     let (cy_maps, cy_time) = CygridBaseline::new(hegrid::util::threads::default_parallelism())
         .with_channel_block(cpu_block)
+        .with_simd(simd)
         .run(&dataset, &job)?;
     println!(
         "HEGrid {:.3}s vs Cygrid {:.3}s (speedup {:.2}x)",

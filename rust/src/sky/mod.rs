@@ -103,6 +103,73 @@ impl GridSpec {
     pub fn extent_deg(&self) -> (f64, f64) {
         (rad2deg(self.step) * self.nlon as f64, rad2deg(self.step) * self.nlat as f64)
     }
+
+    /// Precompute the per-row / per-column trig tables of this grid
+    /// ([`CellTrig`]) for the gridding hot loops.
+    pub fn trig(&self) -> CellTrig {
+        CellTrig::new(self)
+    }
+}
+
+/// Per-row and per-column trig tables of a [`GridSpec`].
+///
+/// A plate-carrée grid is separable: every cell in row `r` shares
+/// `(lat, sin lat, cos lat)` and every cell in column `c` shares
+/// `(lon, sin lon, cos lon)`, so `nlat + nlon` `sin_cos` calls replace the
+/// `nlat · nlon` per-cell evaluations the gridder and neighbour builder used
+/// to pay. [`CellTrig::unit`] combines the cached values with exactly the
+/// operations of [`crate::healpix::unit_vec`], so everything derived from the
+/// table is bit-identical to the per-cell recomputation (pinned by tests).
+#[derive(Clone, Debug)]
+pub struct CellTrig {
+    nlon: usize,
+    /// Per row: (lat, sin lat, cos lat).
+    rows: Vec<(f64, f64, f64)>,
+    /// Per column: (lon, sin lon, cos lon).
+    cols: Vec<(f64, f64, f64)>,
+}
+
+impl CellTrig {
+    pub fn new(spec: &GridSpec) -> CellTrig {
+        let rows = (0..spec.nlat)
+            .map(|r| {
+                let (_, lat) = spec.cell_center(r, 0);
+                let (s, c) = lat.sin_cos();
+                (lat, s, c)
+            })
+            .collect();
+        let cols = (0..spec.nlon)
+            .map(|c| {
+                let (lon, _) = spec.cell_center(0, c);
+                let (s, co) = lon.sin_cos();
+                (lon, s, co)
+            })
+            .collect();
+        CellTrig { nlon: spec.nlon, rows, cols }
+    }
+
+    /// World coordinates of flattened cell `idx` (row-major), bit-identical
+    /// to [`GridSpec::cell_center_flat`].
+    #[inline]
+    pub fn lonlat(&self, idx: usize) -> (f64, f64) {
+        (self.cols[idx % self.nlon].0, self.rows[idx / self.nlon].0)
+    }
+
+    /// `cos(lat)` of the cell's row (the longitude-offset scale of the
+    /// kernel evaluation), bit-identical to `lat.cos()`.
+    #[inline]
+    pub fn cos_lat(&self, idx: usize) -> f64 {
+        self.rows[idx / self.nlon].2
+    }
+
+    /// Unit 3-vector of the cell center — same combination of the cached
+    /// sin/cos values as [`crate::healpix::unit_vec`], hence bit-identical.
+    #[inline]
+    pub fn unit(&self, idx: usize) -> [f64; 3] {
+        let (_, sin_lat, cos_lat) = self.rows[idx / self.nlon];
+        let (_, sin_lon, cos_lon) = self.cols[idx % self.nlon];
+        [cos_lat * cos_lon, cos_lat * sin_lon, sin_lat]
+    }
 }
 
 /// A gridded sky image for one channel: values and accumulated weights.
@@ -336,6 +403,22 @@ mod tests {
             let a = s.cell_center_flat(idx);
             let b = s.cell_center(idx / s.nlon, idx % s.nlon);
             assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn cell_trig_tables_are_bit_identical_to_per_cell_trig() {
+        let s = spec_small();
+        let trig = s.trig();
+        for idx in 0..s.n_cells() {
+            let (lon, lat) = s.cell_center_flat(idx);
+            assert_eq!(trig.lonlat(idx), (lon, lat), "cell {idx}");
+            assert_eq!(trig.cos_lat(idx).to_bits(), lat.cos().to_bits(), "cell {idx}");
+            let u = crate::healpix::unit_vec(lon, lat);
+            let t = trig.unit(idx);
+            for k in 0..3 {
+                assert_eq!(t[k].to_bits(), u[k].to_bits(), "cell {idx} axis {k}");
+            }
         }
     }
 

@@ -17,6 +17,126 @@ pub fn default_parallelism() -> usize {
         .get_or_init(|| thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(32))
 }
 
+/// Claim-block size for a sweep of `n_items` across `workers` participants:
+/// aim for ~8 blocks per worker (dynamic balancing headroom), clamped so
+/// tiny sweeps still fan out item-by-item and huge sweeps don't pay one
+/// cursor `fetch_add` per handful of items.
+///
+/// Replaces the old fixed `CELL_CLAIM_BLOCK`/`GROUP_CLAIM_BLOCK` constants:
+/// a fixed block serialised small maps on one claim (e.g. 128 cells in
+/// blocks of 16 keeps at most 8 workers busy) while charging big maps a
+/// cursor round-trip every 16 cells.
+pub fn adaptive_claim_block(n_items: usize, workers: usize) -> usize {
+    (n_items / (workers.max(1) * 8)).clamp(1, 64)
+}
+
+/// Core-affinity policy for the executor's pool workers
+/// (config `executor_affinity` / CLI `--affinity`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AffinityMode {
+    /// No pinning (workers migrate freely; the OS default).
+    #[default]
+    None,
+    /// Worker `i` → core `i % n_cpus`: pack workers onto the lowest cores,
+    /// maximising shared-cache locality of the lane-widened gridding loops.
+    Compact,
+    /// Worker `i` → core `i · (n_cpus / workers)`: space workers out across
+    /// the topology (sockets/CCXs enumerate contiguously on Linux),
+    /// maximising per-worker cache and memory bandwidth.
+    Spread,
+}
+
+impl AffinityMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AffinityMode::None => "none",
+            AffinityMode::Compact => "compact",
+            AffinityMode::Spread => "spread",
+        }
+    }
+
+    pub fn from_name(s: &str) -> crate::util::error::Result<Self> {
+        match s {
+            "none" | "" => Ok(AffinityMode::None),
+            "compact" => Ok(AffinityMode::Compact),
+            "spread" => Ok(AffinityMode::Spread),
+            _ => Err(crate::util::error::HegridError::Config(format!(
+                "unknown affinity mode '{s}' (expected none|compact|spread)"
+            ))),
+        }
+    }
+}
+
+/// Process-wide affinity request: `generation << 8 | mode`. Workers compare
+/// the generation against the one they last applied and re-pin themselves on
+/// the next sweep they join, so the policy can change after the global
+/// executor has spawned (it is created lazily on first parallel call, which
+/// can precede config parsing).
+static AFFINITY: AtomicU64 = AtomicU64::new(0);
+
+/// Request an executor-worker affinity policy. Takes effect on each pool
+/// worker the next time it joins a sweep; the submitting thread (sweep
+/// participant 0) is never pinned — it belongs to the caller.
+pub fn set_executor_affinity(mode: AffinityMode) {
+    let cur = AFFINITY.load(Ordering::Relaxed);
+    if (cur & 0xff) == mode as u64 {
+        return; // unchanged — don't force a no-op re-pin of every worker
+    }
+    let generation = (cur >> 8) + 1;
+    AFFINITY.store((generation << 8) | mode as u64, Ordering::Release);
+}
+
+/// Currently requested affinity policy (test/report accessor).
+pub fn executor_affinity() -> AffinityMode {
+    match AFFINITY.load(Ordering::Acquire) & 0xff {
+        1 => AffinityMode::Compact,
+        2 => AffinityMode::Spread,
+        _ => AffinityMode::None,
+    }
+}
+
+/// Pin the calling pool worker according to `mode`. Linux-only (via the
+/// C library's `sched_setaffinity`, declared directly so the offline crate
+/// set stays dependency-free) behind the default-on `affinity` feature;
+/// a no-op elsewhere. Best effort: failures are ignored — pinning is a
+/// performance hint, never a correctness requirement.
+#[cfg(all(target_os = "linux", feature = "affinity"))]
+fn apply_affinity(worker: usize, pool_workers: usize, mode: AffinityMode) {
+    const SET_BITS: usize = 1024;
+    #[repr(C)]
+    struct CpuSet {
+        bits: [u64; SET_BITS / 64],
+    }
+    extern "C" {
+        // pid 0 = the calling thread.
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const CpuSet) -> i32;
+    }
+    let n_cpus = thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(SET_BITS);
+    let mut set = CpuSet { bits: [0; SET_BITS / 64] };
+    match mode {
+        AffinityMode::None => {
+            // Reset to every CPU we can name; the kernel intersects with the
+            // online set.
+            set.bits = [u64::MAX; SET_BITS / 64];
+        }
+        AffinityMode::Compact => {
+            let cpu = worker % n_cpus;
+            set.bits[cpu / 64] |= 1 << (cpu % 64);
+        }
+        AffinityMode::Spread => {
+            let stride = (n_cpus / pool_workers.max(1)).max(1);
+            let cpu = (worker * stride) % n_cpus;
+            set.bits[cpu / 64] |= 1 << (cpu % 64);
+        }
+    }
+    unsafe {
+        let _ = sched_setaffinity(0, std::mem::size_of::<CpuSet>(), &set);
+    }
+}
+
+#[cfg(not(all(target_os = "linux", feature = "affinity")))]
+fn apply_affinity(_worker: usize, _pool_workers: usize, _mode: AffinityMode) {}
+
 /// Run `f(chunk_index, start, end)` over `n` items split into ~`workers`
 /// contiguous chunks, in parallel, on the shared [`PipelineExecutor`].
 /// Blocks until done.
@@ -153,7 +273,9 @@ struct SweepEntry {
     body: *const (dyn Fn() + Sync),
 }
 
-fn exec_worker_main(inner: Arc<ExecInner>) {
+fn exec_worker_main(inner: Arc<ExecInner>, index: usize, pool_workers: usize) {
+    // Affinity generation this worker last applied (0 = never).
+    let mut applied_affinity = 0u64;
     loop {
         let entry: *const SweepEntry = {
             let mut reg = inner.reg.lock().expect("executor registry poisoned");
@@ -181,6 +303,13 @@ fn exec_worker_main(inner: Arc<ExecInner>) {
             }
         };
         inner.helper_joins.fetch_add(1, Ordering::Relaxed);
+        // Re-pin lazily when the requested policy changed since the last
+        // sweep this worker ran (policies can be set after spawn).
+        let affinity = AFFINITY.load(Ordering::Acquire);
+        if affinity != applied_affinity {
+            applied_affinity = affinity;
+            apply_affinity(index, pool_workers, executor_affinity());
+        }
         let e = unsafe { &*entry };
         let body = unsafe { &*e.body };
         if std::panic::catch_unwind(std::panic::AssertUnwindSafe(body)).is_err() {
@@ -215,7 +344,7 @@ impl PipelineExecutor {
             handles.push(
                 thread::Builder::new()
                     .name(format!("{name}-{i}"))
-                    .spawn(move || exec_worker_main(inner))
+                    .spawn(move || exec_worker_main(inner, i, workers))
                     .expect("spawn executor worker"),
             );
         }
@@ -570,6 +699,42 @@ mod tests {
         s.fill(7);
         assert_eq!(out[9], 27);
         assert_eq!(&out[10..14], &[7, 7, 7, 7]);
+    }
+
+    #[test]
+    fn adaptive_claim_block_scales_with_work() {
+        // Small sweeps claim item-by-item so every worker stays engaged.
+        assert_eq!(adaptive_claim_block(128, 8), 2);
+        assert_eq!(adaptive_claim_block(5, 16), 1);
+        assert_eq!(adaptive_claim_block(0, 4), 1);
+        // Huge sweeps cap the cursor traffic at one fetch_add per 64 items.
+        assert_eq!(adaptive_claim_block(1_000_000, 8), 64);
+        // Mid-size: ~8 blocks per worker.
+        assert_eq!(adaptive_claim_block(640, 8), 10);
+        // Degenerate worker count.
+        assert_eq!(adaptive_claim_block(100, 0), 12);
+    }
+
+    #[test]
+    fn affinity_mode_round_trips_and_applies() {
+        for mode in [AffinityMode::None, AffinityMode::Compact, AffinityMode::Spread] {
+            assert_eq!(AffinityMode::from_name(mode.name()).unwrap(), mode);
+        }
+        assert_eq!(AffinityMode::from_name("").unwrap(), AffinityMode::None);
+        assert!(AffinityMode::from_name("scatter").is_err());
+
+        // Setting a policy is visible to the accessor; sweeps still complete
+        // with pinning active (best-effort, never a correctness hazard).
+        set_executor_affinity(AffinityMode::Compact);
+        assert_eq!(executor_affinity(), AffinityMode::Compact);
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        parallel_items_scoped(1000, 4, 8, || (), |_, i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        // Restore the default so other tests run unpinned.
+        set_executor_affinity(AffinityMode::None);
+        assert_eq!(executor_affinity(), AffinityMode::None);
     }
 
     #[test]

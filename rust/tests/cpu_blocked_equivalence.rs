@@ -1,14 +1,19 @@
-//! Equivalence suite for the blocked/trig-free CPU hot path.
+//! Equivalence suite for the blocked/trig-free/SIMD CPU hot path.
 //!
 //! Pins `CpuGridder::grid_with_shared` against a no-LUT brute-force oracle
 //! (tight tolerance — only accumulation order differs), and requires
-//! **bit-identical** output across worker counts and channel-block widths
-//! {1, 4, odd n_ch, auto, oversized}, for every kernel family, plus the
-//! empty-channel / empty-dataset edge cases.
+//! **bit-identical** output across worker counts, channel-block widths
+//! {1, 4, odd n_ch, auto, oversized}, and every compiled-in SIMD backend
+//! forced against scalar (lane-per-channel mapping: each lane owns one
+//! channel, so per-channel accumulation order — and therefore every output
+//! bit — is ISA-independent), for every kernel family, including
+//! non-multiple-of-lane channel counts down to 1, plus the empty-channel /
+//! empty-dataset edge cases.
 
 use hegrid::grid::cpu::CpuGridder;
 use hegrid::grid::kernels::ConvKernel;
 use hegrid::grid::prep::SharedComponent;
+use hegrid::grid::simd::{available_backends, SimdIsa};
 use hegrid::healpix::{ang_dist_vec, unit_vec};
 use hegrid::sky::{GridSpec, SkyMap};
 use hegrid::util::SplitMix64;
@@ -147,6 +152,68 @@ fn worker_counts_are_bit_identical_across_blocks() {
                 .with_channel_block(block)
                 .grid_with_shared(&shared, &channels);
             assert_maps_bit_identical(&serial, &parallel, &format!("workers, block {block}"));
+        }
+    }
+}
+
+#[test]
+fn forced_isa_backends_are_bit_identical_to_scalar() {
+    // Every compiled-in backend, every kernel family, channel counts that
+    // are not lane multiples (incl. 1) — all must reproduce the forced-
+    // scalar output bit-for-bit. 500 samples is enough to exercise the
+    // vector bodies and the non-multiple-of-lane range tails of the chord²
+    // prefilter.
+    let backends = available_backends();
+    assert_eq!(backends[0].name(), "scalar");
+    for n_ch in [1usize, 3, 5, 8] {
+        let (spec, lons, lats, channels) = setup(500, n_ch, 100 + n_ch as u64);
+        for kernel in kernels_under_test() {
+            let shared = SharedComponent::for_kernel(&lons, &lats, &kernel).unwrap();
+            let scalar = CpuGridder::new(spec.clone(), kernel.clone())
+                .with_simd(SimdIsa::Scalar)
+                .grid_with_shared(&shared, &channels);
+            for backend in &backends {
+                let isa = SimdIsa::from_name(backend.name()).unwrap();
+                let maps = CpuGridder::new(spec.clone(), kernel.clone())
+                    .with_simd(isa)
+                    .grid_with_shared(&shared, &channels);
+                assert_maps_bit_identical(
+                    &scalar,
+                    &maps,
+                    &format!("isa {} n_ch {n_ch} kernel {}", backend.name(), kernel.type_name()),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn forced_isa_identity_holds_across_blocks_and_workers() {
+    // ISA × block × worker interactions: an uneven block split over a
+    // non-multiple-of-lane channel count, serial and parallel.
+    let (spec, lons, lats, channels) = setup(700, 7, 77);
+    let kernel = ConvKernel::gauss1d_for_beam(0.5);
+    let shared = SharedComponent::for_kernel(&lons, &lats, &kernel).unwrap();
+    let base = CpuGridder::new(spec.clone(), kernel.clone())
+        .with_simd(SimdIsa::Scalar)
+        .with_workers(1)
+        .with_channel_block(1)
+        .grid_with_shared(&shared, &channels);
+    for backend in available_backends() {
+        let isa = SimdIsa::from_name(backend.name()).unwrap();
+        for block in [1usize, 3, 0] {
+            for workers in [1usize, 6] {
+                let maps = CpuGridder::new(spec.clone(), kernel.clone())
+                    .with_simd(isa)
+                    .with_workers(workers)
+                    .with_channel_block(block)
+                    .grid_with_shared(&shared, &channels);
+                assert_maps_bit_identical(
+                    &base,
+                    &maps,
+                    &format!("isa {} block {block} workers {workers}", backend.name()),
+                );
+            }
         }
     }
 }
