@@ -16,6 +16,11 @@
 //! `BENCH_cpu_gridding.json`, where the regression gate treats it as part
 //! of the workload identity (different ISA ⇒ incomparable, re-baseline).
 //!
+//! A small end-to-end engine run with `pipeline_width auto` records the
+//! adaptive-width controller's chosen trace (`width_trace`, `width_final`)
+//! and the detected NUMA node count (`numa_nodes`) — additive fields, so
+//! pre-existing baselines stay comparable under the gate.
+//!
 //! `HEGRID_BENCH_FAST=1` shrinks the workload to a CI smoke size.
 
 use std::f64::consts::FRAC_PI_2;
@@ -289,6 +294,34 @@ fn main() {
         speedup(grid_scalar_1t_s, grid_simd_1t_s)
     );
 
+    // ---- adaptive pipeline width + NUMA (engine smoke run) ---------------
+    // Records the self-tuning signals as additive JSON fields: the width
+    // trace the occupancy controller chose on a small end-to-end engine
+    // run, and the detected NUMA node count. Old baselines lack the fields
+    // and stay comparable (the gate skips metrics absent on either side).
+    let mut auto_cfg = bench_config();
+    auto_cfg.pipeline_width_auto = true;
+    auto_cfg.channels_per_dispatch = 3; // quick preset: 4 channels → 2 groups
+    let auto_engine = engine(auto_cfg);
+    let small = SimConfig::quick_preset().generate();
+    let auto_job = GriddingJob::for_dataset(&small, &auto_engine.config).expect("job");
+    let (_, auto_report) = auto_engine.grid(&small, &auto_job).expect("auto-width run");
+    assert!(auto_report.width_auto && !auto_report.width_trace.is_empty());
+    let width_trace: Vec<Json> = auto_report
+        .width_trace
+        .iter()
+        .map(|&(t, w)| {
+            Json::obj(vec![("t_s", Json::num(t)), ("width", Json::num(w as f64))])
+        })
+        .collect();
+    let width_final = auto_report.width_trace.last().map(|&(_, w)| w).unwrap_or(0);
+    eprintln!(
+        "adaptive width: {} change(s), final width {}, numa_nodes={}",
+        auto_report.width_trace.len() - 1,
+        width_final,
+        auto_report.numa_nodes
+    );
+
     let speedup_1t = speedup(reference_1t_s, blocked_1t_s);
     let speedup_nt = speedup(reference_nt_s, blocked_nt_s);
     println!(
@@ -362,6 +395,11 @@ fn main() {
             ]),
         ),
         ("isa_sweep", Json::Arr(isa_json)),
+        // Adaptive-width controller trace + detected NUMA node count from
+        // the engine smoke run above — additive fields (see benchkit::gate).
+        ("numa_nodes", Json::num(auto_report.numa_nodes as f64)),
+        ("width_trace", Json::Arr(width_trace)),
+        ("width_final", Json::num(width_final as f64)),
         ("measurements", bench.to_json()),
     ]);
     write_bench_json("cpu_gridding", &payload);

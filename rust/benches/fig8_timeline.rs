@@ -148,4 +148,29 @@ fn main() {
         "expect: ~0 at width 1 (one pipeline serialises its own stages); > 0 for\n\
          width ≥ 2 — the paper's §4.2 inter-pipeline overlap, now measured per stage."
     );
+
+    // ---- adaptive width: the controller sweeps the knob itself -------------
+    // `pipeline_width auto` replaces the hand sweep above: the coordinator
+    // starts at width 2 and shrinks/grows from the same measured occupancy
+    // these benches print (shrink on saturated T3 streams / starved T0,
+    // grow while pipelines stay busy under the stream ceiling).
+    println!();
+    let mut cfg_a = base.clone();
+    cfg_a.pipeline_width_auto = true;
+    cfg_a.prefetch_depth = 4;
+    let he_a = engine(cfg_a);
+    let (times, rep) = warm_and_measure_streaming(&he_a, &path, &job_s, bench_iters());
+    let trace: Vec<String> =
+        rep.width_trace.iter().map(|&(t, w)| format!("{w}@{t:.2}s")).collect();
+    println!(
+        "width=auto: wall {:.4}s  hidden(T0∪T1,T3) {:.4}s  numa_nodes={}  trace [{}]",
+        median(times),
+        rep.stages_overlap_s(&[PipeStage::T0Ingest, PipeStage::T1Permute], PipeStage::T3Kernel),
+        rep.numa_nodes,
+        trace.join(" -> ")
+    );
+    println!(
+        "expect: the trace settles near the best fixed width of the sweep above\n\
+         (bit-identical results either way; rust/tests/pipeline_overlap.rs pins that)."
+    );
 }

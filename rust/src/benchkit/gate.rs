@@ -20,6 +20,24 @@
 //! the gate guards trajectories, not absolute numbers. The CLI entry point
 //! is `hegrid bench-gate` (see `main.rs`); this module is the pure
 //! comparator so the failure logic is unit-testable on canned payloads.
+//!
+//! Schema growth is **additive** by contract (ROADMAP's baseline rule):
+//! metrics absent on either side are skipped, and unknown fields (e.g. the
+//! `width_trace`/`numa_nodes` fields newer benches record) are ignored, so
+//! old baselines stay comparable.
+//!
+//! ```
+//! use hegrid::benchkit::gate::{compare, DEFAULT_THRESHOLD};
+//!
+//! let base = hegrid::json::parse(
+//!     r#"{"n_samples": 100, "throughput": {"cells_per_s": 1000.0}}"#,
+//! ).unwrap();
+//! let cur = hegrid::json::parse(
+//!     r#"{"n_samples": 100, "throughput": {"cells_per_s": 500.0}}"#,
+//! ).unwrap();
+//! let report = compare(&base, &cur, DEFAULT_THRESHOLD);
+//! assert!(report.failed()); // a 50% throughput drop breaches the 15% gate
+//! ```
 
 use std::path::Path;
 
@@ -304,6 +322,30 @@ mod tests {
         let r = compare(&old_base, &cur_same, DEFAULT_THRESHOLD);
         assert!(r.incomparable.is_none());
         assert!(r.failed());
+    }
+
+    #[test]
+    fn additive_width_trace_and_numa_fields_stay_comparable() {
+        // PR 5 benches add `width_trace` (adaptive-width controller trace)
+        // and `numa_nodes` to the payload. A pre-PR5 baseline lacks both;
+        // the comparison must neither fail nor go incomparable — the fields
+        // are additive per ROADMAP's baseline rule.
+        let base = payload(1.0e6, 2.5e5, 0.8);
+        let mut cur = payload(0.95e6, 2.4e5, 0.85);
+        if let Json::Obj(fields) = &mut cur {
+            fields.insert("numa_nodes".into(), Json::num(2.0));
+            fields.insert(
+                "width_trace".into(),
+                Json::Arr(vec![Json::obj(vec![
+                    ("t_s", Json::num(0.0)),
+                    ("width", Json::num(2.0)),
+                ])]),
+            );
+        }
+        let r = compare(&base, &cur, DEFAULT_THRESHOLD);
+        assert!(r.incomparable.is_none(), "{:?}", r.incomparable);
+        assert!(!r.failed(), "{:?}", r.findings);
+        assert_eq!(r.findings.len(), 3, "same metric set as without the new fields");
     }
 
     #[test]

@@ -86,6 +86,17 @@ pub struct HegridConfig {
     /// *k+2* prefetches (T0). Takes precedence over `pipelines` when set;
     /// 0 = fall back to `pipelines`/auto. 1 = the sequential coordinator.
     pub pipeline_width: usize,
+    /// Adaptive pipeline width (CLI `--pipeline-width auto`): start narrow
+    /// and let the coordinator's occupancy controller shrink/grow the
+    /// concurrent pipeline count from measured stage occupancy (shrink when
+    /// T3 saturates the streams or T0 starves the pipelines, grow while
+    /// pipelines are busy and streams have headroom). Takes precedence over
+    /// `pipeline_width`/`pipelines`; bounded by `pipeline_width_max`.
+    /// Results stay bit-identical to every fixed width.
+    pub pipeline_width_auto: bool,
+    /// Upper bound of the adaptive width controller (CLI
+    /// `--pipeline-width-max`). 0 = auto (min(host parallelism, 8)).
+    pub pipeline_width_max: usize,
     /// Channels per device dispatch (C of the artifact variant).
     pub channels_per_dispatch: usize,
     /// Share the pre-processing component across pipelines (Fig 11/12 knob).
@@ -135,6 +146,8 @@ impl Default for HegridConfig {
             streams: 0,
             pipelines: 0,
             pipeline_width: 0,
+            pipeline_width_auto: false,
+            pipeline_width_max: 0,
             channels_per_dispatch: 10,
             share_preprocessing: true,
             gamma: 1,
@@ -169,7 +182,10 @@ impl HegridConfig {
     }
 
     /// Effective pipeline worker count (the run's pipeline width):
-    /// `pipeline_width` when set, else `pipelines`, else auto.
+    /// `pipeline_width` when set, else `pipelines`, else auto. With
+    /// `pipeline_width_auto` this is only the *fixed-width fallback*; the
+    /// coordinator starts from [`HegridConfig::effective_width_max`] slots
+    /// and lets the controller pick the live width.
     pub fn effective_pipelines(&self) -> usize {
         if self.pipeline_width > 0 {
             self.pipeline_width
@@ -177,6 +193,16 @@ impl HegridConfig {
             crate::util::threads::default_parallelism().min(8)
         } else {
             self.pipelines
+        }
+    }
+
+    /// Upper bound of the adaptive width controller:
+    /// `pipeline_width_max` when set, else min(host parallelism, 8).
+    pub fn effective_width_max(&self) -> usize {
+        if self.pipeline_width_max > 0 {
+            self.pipeline_width_max
+        } else {
+            crate::util::threads::default_parallelism().min(8).max(1)
         }
     }
 
@@ -227,6 +253,12 @@ impl HegridConfig {
                 self.pipeline_width
             )));
         }
+        if self.pipeline_width_max > 64 {
+            return Err(HegridError::Config(format!(
+                "pipeline_width_max {} out of range 0..=64",
+                self.pipeline_width_max
+            )));
+        }
         if self.prefetch_depth == 0 || self.prefetch_depth > 1024 {
             return Err(HegridError::Config(format!(
                 "prefetch_depth {} out of range 1..=1024",
@@ -254,6 +286,8 @@ impl HegridConfig {
             ("streams", Json::num(self.streams as f64)),
             ("pipelines", Json::num(self.pipelines as f64)),
             ("pipeline_width", Json::num(self.pipeline_width as f64)),
+            ("pipeline_width_auto", Json::Bool(self.pipeline_width_auto)),
+            ("pipeline_width_max", Json::num(self.pipeline_width_max as f64)),
             ("channels_per_dispatch", Json::num(self.channels_per_dispatch as f64)),
             ("share_preprocessing", Json::Bool(self.share_preprocessing)),
             ("gamma", Json::num(self.gamma as f64)),
@@ -299,6 +333,11 @@ impl HegridConfig {
             streams: get_usize("streams", d.streams)?,
             pipelines: get_usize("pipelines", d.pipelines)?,
             pipeline_width: get_usize("pipeline_width", d.pipeline_width)?,
+            pipeline_width_auto: v
+                .get("pipeline_width_auto")
+                .and_then(|x| x.as_bool())
+                .unwrap_or(d.pipeline_width_auto),
+            pipeline_width_max: get_usize("pipeline_width_max", d.pipeline_width_max)?,
             channels_per_dispatch: get_usize("channels_per_dispatch", d.channels_per_dispatch)?,
             share_preprocessing: v
                 .get("share_preprocessing")
@@ -378,10 +417,28 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_width_bounds() {
+        let mut c = HegridConfig::default();
+        assert!(!c.pipeline_width_auto);
+        // Auto default bound: min(host parallelism, 8), never 0.
+        let auto_max = c.effective_width_max();
+        assert!((1..=8).contains(&auto_max), "{auto_max}");
+        c.pipeline_width_max = 5;
+        assert_eq!(c.effective_width_max(), 5);
+        c.pipeline_width_max = 65;
+        assert!(c.validate().is_err());
+        c.pipeline_width_max = 0;
+        c.pipeline_width_auto = true;
+        c.validate().unwrap();
+    }
+
+    #[test]
     fn json_round_trip() {
         let mut c = HegridConfig::default();
         c.streams = 4;
         c.pipeline_width = 4;
+        c.pipeline_width_auto = true;
+        c.pipeline_width_max = 6;
         c.gamma = 2;
         c.prefetch_depth = 5;
         c.io_workers = 3;

@@ -31,7 +31,16 @@
 //! *k+1* permutes and submits (T1–T2) and group *k+2* is read ahead (T0).
 //! Every stage records its execution window ([`StageSpan`]), so a run
 //! reports per-stage occupancy and the measured inter-pipeline overlap
-//! ([`PipelineReport::stage_overlap_s`]). The **shared component** (sorted
+//! ([`PipelineReport::stage_overlap_s`]). With `pipeline_width auto` the
+//! same spans feed a width governor: a rolling occupancy window decides
+//! after every group-batch whether to shrink the width (T3 saturating the
+//! streams, T0 starving the pipelines) or grow it (busy pipelines with
+//! stream headroom), bounded by `pipeline_width_max` — the fig8/table3
+//! sweeps become self-tuning, and the chosen schedule is reported as
+//! [`PipelineReport::width_trace`]. Adaptive runs put each slot on a
+//! dedicated scoped thread so a shed (parked) slot never occupies one of
+//! the executor's pool workers, which the active pipelines' nested
+//! fine-grained sweeps still need. The **shared component** (sorted
 //! samples + LUT + neighbour tables + device-resident coordinates + staged
 //! unit-vector columns) is built once and reused by every pipeline;
 //! disabling it (Fig 11/12) rebuilds all of it per group, reproducing the
@@ -42,12 +51,13 @@ pub mod simulator;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Receiver;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::config::HegridConfig;
 use crate::data::{ChannelSource, Dataset, DatasetMeta, InMemorySource};
 use crate::grid::kernels::ConvKernel;
+use crate::grid::occupancy::{decide_width, StageOccupancy, WidthDecision, WidthPolicy};
 use crate::logging::StageTimes;
 use crate::runtime::prefetch::{overlap_seconds, GroupBatch, Prefetcher};
 use crate::runtime::{
@@ -182,6 +192,15 @@ pub struct PipelineReport {
     /// [`PipelineReport::stage_occupancy`] and
     /// [`PipelineReport::stage_overlap_s`].
     pub spans: Vec<StageSpan>,
+    /// The run used the adaptive width controller (`pipeline_width auto`).
+    pub width_auto: bool,
+    /// `(run-clock seconds, width)` at every controller change, starting
+    /// with the initial width at t = 0. Fixed-width runs get the single
+    /// entry `(0, width)`. Benches record this as an additive JSON field.
+    pub width_trace: Vec<(f64, usize)>,
+    /// NUMA nodes detected on the host (1 = UMA or detection unavailable);
+    /// see [`crate::util::numa`].
+    pub numa_nodes: usize,
 }
 
 impl PipelineReport {
@@ -261,6 +280,135 @@ impl PipelineReport {
     }
 }
 
+/// Run-time governor of the pipeline width: every pipeline slot asks to be
+/// admitted before pulling another group, and each finished batch feeds the
+/// rolling [`StageOccupancy`] window that decides shrink/grow
+/// ([`decide_width`]). In fixed-width runs the governor is inert (every
+/// slot admitted, no decisions), so the knob's semantics are unchanged.
+///
+/// Width changes only gate *which slots may pull the next group* — a
+/// group's channels are still owned by exactly one pipeline and processed
+/// in a fixed order, so any width schedule produces bit-identical maps
+/// (pinned by `rust/tests/pipeline_overlap.rs`, auto included).
+struct WidthGovernor {
+    auto: bool,
+    max: usize,
+    policy: WidthPolicy,
+    state: Mutex<GovernorState>,
+    cond: Condvar,
+}
+
+struct GovernorState {
+    /// Slots `0..allowed` may pull; the rest park until a grow or the end
+    /// of the run. Never below 1, so slot 0 (always run by the sweep's
+    /// caller) keeps draining and the run cannot stall.
+    allowed: usize,
+    done: bool,
+    occ: StageOccupancy,
+    /// T0 read intervals already folded into `occ` (prefix length of the
+    /// prefetcher's interval list).
+    io_seen: usize,
+    /// Batches observed since the last width change (decision cooldown).
+    since_change: usize,
+    trace: Vec<(f64, usize)>,
+}
+
+impl WidthGovernor {
+    /// Rolling occupancy window: long enough to smooth one slow group,
+    /// short enough that cold-start behaviour ages out.
+    const WINDOW_S: f64 = 2.0;
+    /// Batches a fresh width must observe before the next decision.
+    const COOLDOWN: usize = 2;
+
+    fn new(initial: usize, max: usize, auto: bool, policy: WidthPolicy) -> WidthGovernor {
+        let initial = initial.clamp(1, max.max(1));
+        WidthGovernor {
+            auto,
+            max: max.max(1),
+            policy,
+            state: Mutex::new(GovernorState {
+                allowed: initial,
+                done: false,
+                occ: StageOccupancy::new(Self::WINDOW_S),
+                io_seen: 0,
+                since_change: 0,
+                trace: vec![(0.0, initial)],
+            }),
+            cond: Condvar::new(),
+        }
+    }
+
+    /// Block until pipeline slot `slot` may pull another group; `false`
+    /// once the run is over (shed slots exit their loop through this).
+    fn admit(&self, slot: usize) -> bool {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.done {
+                return false;
+            }
+            if slot < st.allowed {
+                return true;
+            }
+            st = self.cond.wait(st).unwrap();
+        }
+    }
+
+    /// Feed one finished batch's stage spans (plus the prefetcher's T0 read
+    /// intervals, of which `io_intervals` is the full list so far) and, in
+    /// auto mode, re-evaluate the width.
+    fn observe(&self, batch_spans: &[StageSpan], io_intervals: &[(f64, f64)], now: f64) {
+        if !self.auto {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        for &s in batch_spans {
+            st.occ.record(s);
+        }
+        while st.io_seen < io_intervals.len() {
+            let iv = io_intervals[st.io_seen];
+            st.occ.record_interval(PipeStage::T0Ingest, iv);
+            st.io_seen += 1;
+        }
+        st.occ.prune(now);
+        st.since_change += 1;
+        if st.since_change < Self::COOLDOWN {
+            return;
+        }
+        let w = st.allowed;
+        let next = match decide_width(&st.occ, now, w, &self.policy) {
+            WidthDecision::Grow => (w + 1).min(self.max),
+            WidthDecision::Shrink => (w - 1).max(1),
+            WidthDecision::Hold => w,
+        };
+        if next != w {
+            st.allowed = next;
+            st.since_change = 0;
+            // Callers read the run clock before taking this lock, so a
+            // stalled observer can arrive with an older `now` than the last
+            // recorded change; clamp to keep the trace monotone.
+            let t = st.trace.last().map_or(now, |&(prev, _)| now.max(prev));
+            st.trace.push((t, next));
+            if next > w {
+                // A parked slot may resume pulling.
+                self.cond.notify_all();
+            }
+        }
+    }
+
+    /// The run is over (prefetcher drained or failed): release every parked
+    /// slot so the executor sweep can join. Idempotent — every pipeline
+    /// calls it on exit.
+    fn finish(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.done = true;
+        self.cond.notify_all();
+    }
+
+    fn trace(&self) -> Vec<(f64, usize)> {
+        self.state.lock().unwrap().trace.clone()
+    }
+}
+
 /// The engine: config + manifest + stream pool. Reusable across jobs.
 pub struct HegridEngine {
     pub config: HegridConfig,
@@ -277,6 +425,12 @@ impl HegridEngine {
         // lazily by each pool worker on its next sweep, so it also covers
         // the case where the global executor spawned before the engine.
         crate::util::threads::set_executor_affinity(config.affinity());
+        if config.affinity() != crate::util::threads::AffinityMode::None {
+            // NUMA warm-up: pin the pool now and first-touch per-worker
+            // scratch on each worker's node before the first sweep (no-op
+            // effectwise on single-node hosts; see util::numa).
+            PipelineExecutor::global().init();
+        }
         let dir = std::path::Path::new(&config.artifacts_dir);
         // The native executor interprets dispatches from variant shapes
         // alone, so a *missing* artifacts directory falls back to the
@@ -432,13 +586,39 @@ impl HegridEngine {
         // workers read channel groups ahead of the pipelines into pooled
         // buffers, bounded at `prefetch_depth` groups (backpressure).
         let prefetcher = Prefetcher::new(groups.len(), self.config.prefetch_depth);
+        // Pipeline slots: capped at what can actually run — the group count
+        // (extra pipelines would find the prefetcher already drained) and
+        // the host's thread budget (the executor's pool workers + the
+        // participating caller, which fixed-width sweeps are bound by and
+        // which doubles as a core-count proxy for auto's scoped threads).
+        // In auto mode the cap is `pipeline_width_max` and the governor
+        // starts narrow (2) and adapts; fixed-width runs admit every slot
+        // for the whole run.
+        let auto = self.config.pipeline_width_auto;
+        let width_cap = groups.len().max(1).min(PipelineExecutor::global().workers() + 1);
+        let n_pipe = if auto {
+            self.config.effective_width_max().min(width_cap)
+        } else {
+            self.config.effective_pipelines().min(width_cap)
+        };
+        let initial_width = if auto { n_pipe.min(2) } else { n_pipe };
+        report.n_pipelines = n_pipe;
+        report.width_auto = auto;
+        report.numa_nodes = crate::util::numa::topology().n_nodes();
+        // T0 workers actually spawned (a worker per group at most). The
+        // governor's starved-T0 rule scales with this, not the configured
+        // count — with fewer spawned workers the saturation bar must drop.
+        let n_io = report.io_workers.min(groups.len().max(1));
+        let governor = WidthGovernor::new(
+            initial_width,
+            n_pipe,
+            auto,
+            WidthPolicy::for_run(self.streams.n_streams(), n_io),
+        );
         // Buffers in circulation: the ring window plus one batch held by each
         // pipeline while it stages — size the free list for all of them so a
         // full steady state recycles instead of reallocating.
-        let io_pool = MemoryPool::with_limit(
-            (self.config.prefetch_depth + self.config.effective_pipelines()) * variant.c + 4,
-        );
-        let n_io = report.io_workers.min(groups.len().max(1));
+        let io_pool = MemoryPool::with_limit((self.config.prefetch_depth + n_pipe) * variant.c + 4);
 
         let shared_builds = AtomicU64::new(report.shared_builds as u64);
         let overflow = AtomicU64::new(0);
@@ -449,15 +629,91 @@ impl HegridEngine {
         let acc_ptr = SyncPtr(acc.as_mut_ptr());
         let wsum_ptr = SyncPtr(wsum.as_mut_ptr());
         let first_error: Mutex<Option<HegridError>> = Mutex::new(None);
-        // Cap the width at what can actually run: the group count (extra
-        // pipelines would find the prefetcher already drained) and the
-        // executor's capacity (pool workers + the participating caller).
-        let n_pipe = self
-            .config
-            .effective_pipelines()
-            .min(groups.len().max(1))
-            .min(PipelineExecutor::global().workers() + 1);
-        report.n_pipelines = n_pipe;
+
+        // One pipeline slot: pull admitted batches until the run drains.
+        // Shared by both execution paths below.
+        let pipeline_loop = |pipe: usize| {
+            // Unwind safety: if this pipeline panics mid-batch, abort the
+            // ingest (io workers drain and exit) and release every parked
+            // slot — otherwise a shed slot waiting on the governor would
+            // hang the join while the panic propagates. Disarmed on the
+            // normal exit path, where the loop's own finish() calls handle
+            // shutdown.
+            let mut guard =
+                AbortOnUnwind { prefetcher: &prefetcher, governor: &governor, armed: true };
+            let mut local_stages = StageTimes::default();
+            let mut local_spans: Vec<StageSpan> = Vec::new();
+            let mut batch_spans: Vec<(f64, f64)> = Vec::new();
+            loop {
+                if !governor.admit(pipe) {
+                    break;
+                }
+                let batch = match prefetcher.next() {
+                    None => {
+                        // Drained: release every parked slot.
+                        governor.finish();
+                        break;
+                    }
+                    Some(Err(e)) => {
+                        let mut slot = first_error.lock().unwrap();
+                        if slot.is_none() {
+                            *slot = Some(e);
+                        }
+                        governor.finish();
+                        break;
+                    }
+                    Some(Ok(b)) => b,
+                };
+                let t_start = prefetcher.now_s();
+                let span_base = local_spans.len();
+                let out = self.run_pipeline(
+                    lons,
+                    lats,
+                    job,
+                    &variant,
+                    &batch,
+                    shared_plan.as_deref(),
+                    &mut local_stages,
+                    &mut local_spans,
+                    &prefetcher,
+                    &shared_builds,
+                    &overflow,
+                    &dispatches,
+                    n_cells,
+                    &acc_ptr,
+                    &wsum_ptr,
+                );
+                batch_spans.push((t_start, prefetcher.now_s()));
+                if let Err(e) = out {
+                    let mut slot = first_error.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(e);
+                    }
+                    // Unblock the I/O workers and the parked slots, or the
+                    // scope never joins.
+                    prefetcher.abort();
+                    governor.finish();
+                    break;
+                }
+                // Feed this batch's spans (and any new T0 read intervals)
+                // into the rolling occupancy window — this is where the
+                // width shrinks or grows. Gated here, not just inside
+                // observe(): the prefetcher stats snapshot (a clone of the
+                // interval list, behind the shared prefetcher lock) must
+                // not be paid on fixed-width runs.
+                if auto {
+                    governor.observe(
+                        &local_spans[span_base..],
+                        &prefetcher.stats().read_intervals,
+                        prefetcher.now_s(),
+                    );
+                }
+            }
+            stage_sink.lock().unwrap().merge(&local_stages);
+            compute_spans.lock().unwrap().extend(batch_spans);
+            span_sink.lock().unwrap().extend(local_spans);
+            guard.armed = false;
+        };
 
         std::thread::scope(|scope| {
             for _ in 0..n_io {
@@ -466,63 +722,33 @@ impl HegridEngine {
                 let io_pool = &io_pool;
                 scope.spawn(move || prefetcher.run_worker(source, groups, io_pool));
             }
-            // The channel-group pipelines are one sweep on the persistent
-            // executor (item = pipeline slot): the calling thread runs one
-            // pipeline itself and parked executor workers pick up the rest,
-            // so no run pays a pipeline-thread spawn. With `pipeline_width`
-            // ≥ 2, group k's T3 drain overlaps group k+1's T1–T2 staging
-            // while group k+2 prefetches underneath (T0). Every pipeline is
-            // a pull-until-drained loop, so a busy pool only narrows the
-            // effective width — never stalls the run.
-            PipelineExecutor::global().run(n_pipe, n_pipe, 1, || (), |_, _pipe| {
-                let mut local_stages = StageTimes::default();
-                let mut local_spans: Vec<StageSpan> = Vec::new();
-                let mut batch_spans: Vec<(f64, f64)> = Vec::new();
-                loop {
-                    let batch = match prefetcher.next() {
-                        None => break,
-                        Some(Err(e)) => {
-                            let mut slot = first_error.lock().unwrap();
-                            if slot.is_none() {
-                                *slot = Some(e);
-                            }
-                            break;
-                        }
-                        Some(Ok(b)) => b,
-                    };
-                    let t_start = prefetcher.now_s();
-                    let out = self.run_pipeline(
-                        lons,
-                        lats,
-                        job,
-                        &variant,
-                        &batch,
-                        shared_plan.as_deref(),
-                        &mut local_stages,
-                        &mut local_spans,
-                        &prefetcher,
-                        &shared_builds,
-                        &overflow,
-                        &dispatches,
-                        n_cells,
-                        &acc_ptr,
-                        &wsum_ptr,
-                    );
-                    batch_spans.push((t_start, prefetcher.now_s()));
-                    if let Err(e) = out {
-                        let mut slot = first_error.lock().unwrap();
-                        if slot.is_none() {
-                            *slot = Some(e);
-                        }
-                        // Unblock the I/O workers, or the scope never joins.
-                        prefetcher.abort();
-                        break;
-                    }
+            if auto {
+                // Adaptive mode runs each slot on a dedicated scoped thread
+                // (one coarse spawn per slot per run): a shed slot parks on
+                // the governor's condvar holding only its own OS thread, so
+                // the persistent executor's pool workers stay free for the
+                // nested fine-grained sweeps the *active* pipelines issue
+                // (permute, value-matrix fills, CPU gridding). Running the
+                // slots as executor sweep items here would park pool
+                // workers for the whole run whenever width < slots.
+                for pipe in 0..n_pipe {
+                    let pipeline_loop = &pipeline_loop;
+                    scope.spawn(move || pipeline_loop(pipe));
                 }
-                stage_sink.lock().unwrap().merge(&local_stages);
-                compute_spans.lock().unwrap().extend(batch_spans);
-                span_sink.lock().unwrap().extend(local_spans);
-            });
+            } else {
+                // Fixed width: one sweep on the persistent executor (item =
+                // pipeline slot, every slot admitted for the whole run): the
+                // calling thread runs one pipeline itself and parked
+                // executor workers pick up the rest, so no run pays a
+                // pipeline-thread spawn. With `pipeline_width` ≥ 2, group
+                // k's T3 drain overlaps group k+1's T1–T2 staging while
+                // group k+2 prefetches underneath (T0). Every pipeline is a
+                // pull-until-drained loop, so a busy pool only narrows the
+                // effective width — never stalls the run.
+                PipelineExecutor::global().run(n_pipe, n_pipe, 1, || (), |_, pipe| {
+                    pipeline_loop(pipe)
+                });
+            }
         });
         if let Some(e) = first_error.into_inner().unwrap() {
             return Err(e);
@@ -532,6 +758,13 @@ impl HegridEngine {
         let spans = compute_spans.into_inner().unwrap();
         report.io_busy_s = io.io_busy_s;
         report.io_overlap_s = overlap_seconds(&io.read_intervals, &spans);
+        report.width_trace = governor.trace();
+        if auto {
+            // `n_pipelines` keeps its "what actually ran" semantics: the
+            // peak width the governor admitted — slots above it only ever
+            // parked (the pre-run value was the slot cap).
+            report.n_pipelines = report.width_trace.iter().map(|&(_, w)| w).max().unwrap_or(n_pipe);
+        }
         report.spans = span_sink.into_inner().unwrap();
         for &(a, b) in &io.read_intervals {
             report.spans.push(StageSpan { stage: PipeStage::T0Ingest, start: a, end: b });
@@ -702,6 +935,25 @@ impl HegridEngine {
     }
 }
 
+/// Drop guard for a pipeline slot's pull loop: while `armed`, an unwind
+/// aborts the prefetcher (io workers drain and exit) and finishes the width
+/// governor (parked slots wake and exit), so a panicking pipeline cannot
+/// strand the run. Disarmed on the normal exit path.
+struct AbortOnUnwind<'a> {
+    prefetcher: &'a Prefetcher,
+    governor: &'a WidthGovernor,
+    armed: bool,
+}
+
+impl Drop for AbortOnUnwind<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            self.prefetcher.abort();
+            self.governor.finish();
+        }
+    }
+}
+
 /// Raw-pointer accumulator handle. Safety: channel ranges are disjoint across
 /// groups (each group owns its channels); `wsum` is written only by group 0;
 /// tiles within a group are processed by a single pipeline thread.
@@ -740,6 +992,60 @@ mod tests {
         r.stages.add("T1 permute", Duration::from_millis(250));
         assert!((r.stage_s("T1 permute") - 0.25).abs() < 1e-9);
         assert_eq!(r.stage_s("absent"), 0.0);
+    }
+
+    #[test]
+    fn width_governor_shrinks_on_saturated_t3_and_releases_parked_slots() {
+        let g = WidthGovernor::new(2, 4, true, WidthPolicy::for_run(2, 2));
+        assert!(g.admit(0) && g.admit(1));
+        // Two kernels wall-to-wall across the whole window: T3 occupancy 2.0
+        // ≥ 2 streams × 0.85 ⇒ shrink (after the 2-batch cooldown).
+        let sat = [
+            StageSpan { stage: PipeStage::T3Kernel, start: 0.0, end: 2.0 },
+            StageSpan { stage: PipeStage::T3Kernel, start: 0.0, end: 2.0 },
+        ];
+        g.observe(&sat, &[], 2.0); // first batch: cooldown, record only
+        g.observe(&sat, &[], 2.0);
+        let trace = g.trace();
+        assert_eq!(trace.first(), Some(&(0.0, 2)));
+        assert_eq!(trace.last(), Some(&(2.0, 1)));
+        // Slot 1 is shed now; a parked slot wakes on finish and exits.
+        std::thread::scope(|s| {
+            let h = s.spawn(|| g.admit(1));
+            std::thread::sleep(Duration::from_millis(20));
+            g.finish();
+            assert!(!h.join().unwrap());
+        });
+        assert!(!g.admit(0), "after finish no slot pulls again");
+    }
+
+    #[test]
+    fn width_governor_grows_when_busy_with_stream_headroom() {
+        let g = WidthGovernor::new(2, 4, true, WidthPolicy::for_run(4, 2));
+        // Both pipelines ~always busy, kernels far under 4 stream slots.
+        let busy = [
+            StageSpan { stage: PipeStage::T1Permute, start: 0.0, end: 1.0 },
+            StageSpan { stage: PipeStage::T3Kernel, start: 1.0, end: 2.0 },
+            StageSpan { stage: PipeStage::T1Permute, start: 0.1, end: 1.1 },
+            StageSpan { stage: PipeStage::T3Kernel, start: 1.1, end: 2.0 },
+        ];
+        g.observe(&busy, &[], 2.0);
+        g.observe(&busy, &[], 2.0);
+        assert_eq!(g.trace().last(), Some(&(2.0, 3)));
+        assert!(g.admit(2), "grown width admits the third slot");
+        g.finish();
+    }
+
+    #[test]
+    fn width_governor_is_inert_for_fixed_widths() {
+        let g = WidthGovernor::new(3, 3, false, WidthPolicy::for_run(1, 1));
+        let sat = [StageSpan { stage: PipeStage::T3Kernel, start: 0.0, end: 2.0 }];
+        for _ in 0..5 {
+            g.observe(&sat, &[], 2.0);
+        }
+        assert_eq!(g.trace(), vec![(0.0, 3)]);
+        assert!(g.admit(2));
+        g.finish();
     }
 
     #[test]

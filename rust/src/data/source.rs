@@ -17,6 +17,21 @@
 //! Sources are consumed by the I/O workers of
 //! [`crate::runtime::prefetch::Prefetcher`], which is why every method takes
 //! `&self` and implementations must be `Sync`.
+//!
+//! ```
+//! use hegrid::data::{ChannelSource, InMemorySource};
+//!
+//! let dataset = hegrid::sim::SimConfig::quick_preset().generate();
+//! let source = InMemorySource::new(&dataset);
+//! assert_eq!(source.n_channels(), dataset.n_channels());
+//! assert_eq!(source.coords().unwrap().0, dataset.lons.as_slice());
+//!
+//! // Reads land in a caller-owned buffer (the prefetcher recycles pooled
+//! // ones) and round-trip the channel exactly.
+//! let mut buf = Vec::new();
+//! source.read_channel_into(0, &mut buf).unwrap();
+//! assert_eq!(buf, dataset.channels[0]);
+//! ```
 
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;

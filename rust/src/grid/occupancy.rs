@@ -1,4 +1,17 @@
-//! Analytical occupancy model — the mechanism behind Fig 13.
+//! Occupancy models: the analytical device model behind Fig 13, and the
+//! **rolling pipeline-stage occupancy** that drives the adaptive
+//! `pipeline_width auto` controller.
+//!
+//! The device half ([`OccupancyModel`]) reproduces the paper's register-file
+//! argument for the optimal thread-block size. The pipeline half
+//! ([`StageOccupancy`] + [`decide_width`]) turns the coordinator's measured
+//! [`StageSpan`]s into shrink/grow decisions: the fig8/table3 sweeps showed
+//! the best `pipeline_width` is whatever keeps T3 streams saturated without
+//! queueing and keeps pipelines out of ingest starvation — so instead of
+//! hand-sweeping the knob, the coordinator feeds each finished group-batch's
+//! spans into a rolling window and re-decides the width. The decision
+//! function is pure (no clocks, no pipelines), so the canned-trace tests
+//! below exercise exactly what the coordinator runs.
 //!
 //! The paper explains the optimal thread-block size on the V100 through the
 //! register file: HEGrid's kernel uses 88 registers/thread, the SM has 65,536
@@ -16,6 +29,173 @@
 //!
 //! The measured counterpart (CPU-PJRT tile-size sweep) runs in
 //! `benches/fig13_14_blocksize.rs`.
+
+use std::collections::VecDeque;
+
+use crate::coordinator::{PipeStage, StageSpan};
+
+/// Rolling per-stage busy model over the most recent `window_s` seconds of
+/// the run clock — the adaptive-width counterpart of
+/// `PipelineReport::stage_occupancy`, which looks at the *whole* run after
+/// the fact. The controller needs the recent past only: early-run behaviour
+/// (cold caches, the first kernel compile) must age out of the decision.
+#[derive(Clone, Debug)]
+pub struct StageOccupancy {
+    window_s: f64,
+    spans: VecDeque<StageSpan>,
+}
+
+impl StageOccupancy {
+    pub fn new(window_s: f64) -> StageOccupancy {
+        StageOccupancy { window_s: window_s.max(1e-3), spans: VecDeque::new() }
+    }
+
+    pub fn window_s(&self) -> f64 {
+        self.window_s
+    }
+
+    /// Record a finished stage execution window (run-clock seconds).
+    /// Degenerate (empty/inverted) spans are dropped.
+    pub fn record(&mut self, span: StageSpan) {
+        if span.end > span.start {
+            self.spans.push_back(span);
+        }
+    }
+
+    /// Record a raw `(start, end)` interval for `stage` (the T0 read
+    /// intervals arrive from the prefetcher in this shape).
+    pub fn record_interval(&mut self, stage: PipeStage, interval: (f64, f64)) {
+        self.record(StageSpan { stage, start: interval.0, end: interval.1 });
+    }
+
+    /// Drop spans that ended before the rolling window `[now - window, now]`.
+    pub fn prune(&mut self, now: f64) {
+        let lo = now - self.window_s;
+        self.spans.retain(|s| s.end >= lo);
+    }
+
+    /// Busy seconds of `stage` inside the window, summed across pipelines
+    /// (concurrent windows count multiply); spans are clipped to the window.
+    pub fn busy_s(&self, stage: PipeStage, now: f64) -> f64 {
+        let lo = (now - self.window_s).max(0.0);
+        self.spans
+            .iter()
+            .filter(|s| s.stage == stage)
+            .map(|s| (s.end.min(now) - s.start.max(lo)).max(0.0))
+            .sum()
+    }
+
+    /// Mean number of pipelines concurrently inside `stage` over the window
+    /// (busy seconds / window span).
+    pub fn occupancy(&self, stage: PipeStage, now: f64) -> f64 {
+        let span = now.min(self.window_s);
+        if span > 0.0 {
+            self.busy_s(stage, now) / span
+        } else {
+            0.0
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+}
+
+/// Tunables of the adaptive-width controller. Defaults are deliberately
+/// conservative: a wrong Hold costs nothing (the width stays where a fixed
+/// sweep would have put it), a wrong Grow/Shrink oscillation costs overlap.
+#[derive(Clone, Copy, Debug)]
+pub struct WidthPolicy {
+    /// Stream slots T3 dispatches into (`HegridConfig::effective_streams`).
+    pub n_streams: usize,
+    /// T0 I/O workers feeding the prefetch ring.
+    pub io_workers: usize,
+    /// Fraction of a resource's capacity treated as saturated.
+    pub saturation: f64,
+    /// Mean per-pipeline busy fraction above which the run counts as
+    /// width-limited (grow candidate).
+    pub busy_grow: f64,
+    /// Mean per-pipeline busy fraction below which pipelines count as
+    /// starved (shrink candidate when ingest is the bottleneck).
+    pub idle_shrink: f64,
+}
+
+impl WidthPolicy {
+    /// Policy for a run with `n_streams` stream slots and `io_workers` T0
+    /// threads (both clamped to ≥ 1), default thresholds.
+    pub fn for_run(n_streams: usize, io_workers: usize) -> WidthPolicy {
+        WidthPolicy {
+            n_streams: n_streams.max(1),
+            io_workers: io_workers.max(1),
+            saturation: 0.85,
+            busy_grow: 0.75,
+            idle_shrink: 0.35,
+        }
+    }
+}
+
+/// One controller verdict; the coordinator applies it as ±1 within
+/// `[1, pipeline_width_max]`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WidthDecision {
+    Shrink,
+    Hold,
+    Grow,
+}
+
+/// Shrink/grow decision from measured occupancy at width `width`:
+///
+/// * **Shrink** when T3 saturates the streams (mean concurrent kernels ≥
+///   `n_streams · saturation`) — extra pipelines only queue on the slots
+///   (HCGrid's collapse mode: one stage saturates, the pipeline stalls);
+/// * **Shrink** when the run is ingest-bound: the I/O workers read flat out
+///   while the pipelines' mean busy fraction collapses (they sit in
+///   `Prefetcher::next`) — width does not create disk bandwidth;
+/// * **Grow** when every pipeline is nearly always busy and the projected
+///   T3 occupancy after adding one more (`t3 · (width+1)/width`) still fits
+///   under the stream ceiling;
+/// * **Hold** otherwise.
+///
+/// Pure: callers feed a [`StageOccupancy`] window and the run clock.
+pub fn decide_width(
+    occ: &StageOccupancy,
+    now: f64,
+    width: usize,
+    policy: &WidthPolicy,
+) -> WidthDecision {
+    if occ.is_empty() || width == 0 {
+        return WidthDecision::Hold;
+    }
+    let t3 = occ.occupancy(PipeStage::T3Kernel, now);
+    let t0 = occ.occupancy(PipeStage::T0Ingest, now);
+    let pipe_stages = [
+        PipeStage::Prep,
+        PipeStage::T1Permute,
+        PipeStage::T2Submit,
+        PipeStage::T3Kernel,
+        PipeStage::T4Reduce,
+    ];
+    let busy: f64 = pipe_stages.iter().map(|&s| occ.occupancy(s, now)).sum();
+    let per_pipe = busy / width as f64;
+    let stream_cap = policy.n_streams as f64 * policy.saturation;
+    if width > 1 && t3 >= stream_cap {
+        return WidthDecision::Shrink;
+    }
+    if width > 1
+        && t0 >= policy.io_workers as f64 * policy.saturation
+        && per_pipe <= policy.idle_shrink
+    {
+        return WidthDecision::Shrink;
+    }
+    if per_pipe >= policy.busy_grow && t3 * (width as f64 + 1.0) / width as f64 <= stream_cap {
+        return WidthDecision::Grow;
+    }
+    WidthDecision::Hold
+}
 
 /// Occupancy model constants (defaults = the paper's V100 numbers).
 #[derive(Clone, Copy, Debug)]
@@ -175,5 +355,105 @@ mod tests {
         // 1024 threads × 88 regs > 65,536 ⇒ no block fits.
         assert_eq!(m.blocks_per_sm(1024), 0);
         assert_eq!(m.throughput(1024), 0.0);
+    }
+
+    // ---- adaptive-width controller on canned StageSpan traces -------------
+
+    fn span(stage: PipeStage, start: f64, end: f64) -> StageSpan {
+        StageSpan { stage, start, end }
+    }
+
+    fn window(spans: &[StageSpan]) -> StageOccupancy {
+        let mut occ = StageOccupancy::new(10.0);
+        for &s in spans {
+            occ.record(s);
+        }
+        occ
+    }
+
+    #[test]
+    fn stage_occupancy_clips_and_prunes() {
+        let mut occ = StageOccupancy::new(10.0);
+        occ.record(span(PipeStage::T3Kernel, 0.0, 4.0));
+        occ.record(span(PipeStage::T3Kernel, 2.0, 6.0));
+        occ.record(span(PipeStage::T1Permute, 5.0, 5.0)); // degenerate: dropped
+        assert_eq!(occ.len(), 2);
+        // At now=6 the window is [0,6]: 4 + 4 busy seconds over span 6.
+        assert!((occ.busy_s(PipeStage::T3Kernel, 6.0) - 8.0).abs() < 1e-12);
+        assert!((occ.occupancy(PipeStage::T3Kernel, 6.0) - 8.0 / 6.0).abs() < 1e-12);
+        // At now=13 the window is [3,13]: spans clip to 1 + 3 seconds.
+        assert!((occ.busy_s(PipeStage::T3Kernel, 13.0) - 4.0).abs() < 1e-12);
+        // Spans ending before the window fall out on prune.
+        occ.prune(15.0); // window [5,15]: the [0,4) span goes
+        assert_eq!(occ.len(), 1);
+        occ.record_interval(PipeStage::T0Ingest, (14.0, 15.0));
+        assert!((occ.busy_s(PipeStage::T0Ingest, 15.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn saturated_t3_shrinks() {
+        // Two streams, width 4: two kernels run wall-to-wall for the whole
+        // window ⇒ T3 occupancy 2.0 ≥ 2 × 0.85 — the streams are full and
+        // the other two pipelines only queue.
+        let occ = window(&[
+            span(PipeStage::T3Kernel, 0.0, 10.0),
+            span(PipeStage::T3Kernel, 0.0, 10.0),
+        ]);
+        let policy = WidthPolicy::for_run(2, 2);
+        assert_eq!(decide_width(&occ, 10.0, 4, &policy), WidthDecision::Shrink);
+        // Width 1 never shrinks below the floor.
+        assert_eq!(decide_width(&occ, 10.0, 1, &policy), WidthDecision::Hold);
+    }
+
+    #[test]
+    fn starved_t0_shrinks() {
+        // One I/O worker reads flat out while the 4 pipelines barely touch
+        // their stages: ingest-bound, width does not create bandwidth.
+        let occ = window(&[
+            span(PipeStage::T0Ingest, 0.0, 10.0),
+            span(PipeStage::T1Permute, 0.0, 0.5),
+            span(PipeStage::T3Kernel, 1.0, 1.5),
+        ]);
+        let policy = WidthPolicy::for_run(4, 1);
+        assert_eq!(decide_width(&occ, 10.0, 4, &policy), WidthDecision::Shrink);
+    }
+
+    #[test]
+    fn balanced_busy_grows_until_stream_ceiling() {
+        // Two pipelines busy ~87% of the window, kernels at 0.8 of 4 slots:
+        // projected T3 after one more pipeline (1.2) still fits ⇒ Grow.
+        let spans = [
+            span(PipeStage::T1Permute, 0.0, 4.0),
+            span(PipeStage::T3Kernel, 4.0, 8.0),
+            span(PipeStage::T4Reduce, 8.0, 9.0),
+            span(PipeStage::T1Permute, 1.0, 5.0),
+            span(PipeStage::T3Kernel, 5.0, 9.0),
+            span(PipeStage::T4Reduce, 9.0, 9.5),
+        ];
+        let occ = window(&spans);
+        assert_eq!(
+            decide_width(&occ, 10.0, 2, &WidthPolicy::for_run(4, 2)),
+            WidthDecision::Grow
+        );
+        // Same trace with a single stream slot: growing would push the
+        // projected T3 (1.2) past the ceiling (0.85) ⇒ Hold.
+        assert_eq!(
+            decide_width(&occ, 10.0, 2, &WidthPolicy::for_run(1, 2)),
+            WidthDecision::Hold
+        );
+    }
+
+    #[test]
+    fn idle_window_holds() {
+        let occ = StageOccupancy::new(10.0);
+        assert!(occ.is_empty());
+        let policy = WidthPolicy::for_run(4, 2);
+        assert_eq!(decide_width(&occ, 5.0, 3, &policy), WidthDecision::Hold);
+        // Moderate load (neither starved nor width-limited) also holds.
+        let occ = window(&[
+            span(PipeStage::T1Permute, 0.0, 2.0),
+            span(PipeStage::T3Kernel, 2.0, 5.0),
+        ]);
+        assert_eq!(decide_width(&occ, 10.0, 2, &policy), WidthDecision::Hold);
     }
 }

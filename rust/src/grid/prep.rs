@@ -20,7 +20,10 @@ use crate::grid::sort::{radix_sort_by_key, KeyIdx};
 use crate::healpix::Healpix;
 use crate::logging::timed;
 use crate::util::error::{HegridError, Result};
-use crate::util::threads::{default_parallelism, parallel_chunks, DisjointWriter};
+use crate::util::threads::{
+    adaptive_claim_block, default_parallelism, parallel_chunks, parallel_items_scoped,
+    DisjointWriter,
+};
 
 /// Columns below this size are permuted serially — the gather is pure
 /// memory traffic, so thread spawn overhead dominates on small inputs.
@@ -118,6 +121,12 @@ impl SharedComponent {
         let mut unit_x = vec![0.0f64; n];
         let mut unit_y = vec![0.0f64; n];
         let mut unit_z = vec![0.0f64; n];
+        // NUMA note: these columns get their first write from the parallel
+        // fill below, which runs on the (optionally pinned) executor
+        // workers — so under `--affinity` on a multi-node host the pages
+        // already land distributed across the consumers' nodes (first-touch
+        // via the fill itself; an extra pre-touch sweep would only re-write
+        // the same pages). See util::numa for the placement machinery.
         let (_, t) = timed(|| {
             let w_pix = DisjointWriter::new(&mut sorted_pix);
             let w_perm = DisjointWriter::new(&mut perm);
@@ -237,6 +246,12 @@ impl SharedComponent {
         let n = self.n_samples();
         assert!(pad_to >= n, "pad_to {pad_to} < {n} samples");
         let mut out = vec![0.0f32; 3 * pad_to];
+        // The fill below is serial (per-epoch, off the hot path), so on
+        // multi-node hosts with pinned workers pre-fault the planes from the
+        // executor instead: stream threads on every node read them for H2D
+        // staging, and a serial first write would pile all pages onto the
+        // building thread's node. No-op on UMA / `affinity none`.
+        crate::util::numa::first_touch_zeroed(&mut out);
         for j in 0..n {
             out[j] = self.unit_x[j] as f32;
             out[pad_to + j] = self.unit_y[j] as f32;
@@ -259,13 +274,24 @@ impl SharedComponent {
         if n_ch > 0 && n > 0 {
             let w = DisjointWriter::new(&mut buf[..]);
             let perm = &self.perm;
-            parallel_chunks(n, workers.max(1), |_, s, e| {
-                for j in s..e {
-                    let orig = perm[j] as usize;
-                    let row = unsafe { w.slice(j * stride, n_ch) };
-                    for (dst, ch) in row.iter_mut().zip(channels) {
-                        *dst = ch[orig];
-                    }
+            let workers = workers.max(1);
+            // This fill is the matrix's first write (`alloc_zeroed` maps
+            // pages lazily), so the claim granularity doubles as the NUMA
+            // placement granularity: with pinned workers on a multi-node
+            // host, claim ~page-sized row blocks so pages interleave across
+            // the nodes — the blocked accumulation later gathers rows at
+            // random from every worker. Otherwise claim adaptively for
+            // minimum cursor traffic. Output is identical either way.
+            let claim = if crate::util::numa::placement_active() {
+                (4096 / (stride * 4).max(1)).max(1)
+            } else {
+                adaptive_claim_block(n, workers)
+            };
+            parallel_items_scoped(n, workers, claim, || (), |_, j| {
+                let orig = perm[j] as usize;
+                let row = unsafe { w.slice(j * stride, n_ch) };
+                for (dst, ch) in row.iter_mut().zip(channels) {
+                    *dst = ch[orig];
                 }
             });
         }

@@ -26,6 +26,29 @@
 //! fallback path), else AVX2+FMA when the CPU reports it, else NEON on
 //! aarch64, else scalar. Per-call-site overrides go through [`SimdIsa`]
 //! (config `simd_isa` / CLI `--simd`).
+//!
+//! ```
+//! use hegrid::grid::simd::{dispatch, Scalar, SimdBackend};
+//!
+//! // 4 samples × 1 channel, rows padded to the dispatched lane width.
+//! let backend = dispatch();
+//! let stride = backend.lanes();
+//! let mut vals = vec![0.0f32; 4 * stride];
+//! for j in 0..4 {
+//!     vals[j * stride] = (j + 1) as f32;
+//! }
+//! let contrib = [(0.5f64, 0u32), (2.0, 3)]; // (weight, sample index)
+//!
+//! // Scalar reference…
+//! let mut want = vec![0.0f64; stride];
+//! Scalar.accumulate_contribs(&mut want, &contrib, &vals, stride, 0);
+//! assert_eq!(want[0], 0.5 * 1.0 + 2.0 * 4.0);
+//!
+//! // …and the dispatched backend (AVX2/NEON/scalar) is bit-identical.
+//! let mut got = vec![0.0f64; stride];
+//! backend.accumulate_contribs(&mut got, &contrib, &vals, stride, 0);
+//! assert_eq!(got[0].to_bits(), want[0].to_bits());
+//! ```
 
 use std::sync::OnceLock;
 

@@ -9,11 +9,17 @@
 //! hegrid bench-gate --current BENCH_x.json [--baseline prev.json] [--threshold 0.15]
 //! ```
 //!
-//! Engine knobs (grid/accuracy): `--streams N --pipelines N --pipeline-width W
+//! Engine knobs (grid/accuracy): `--streams N --pipelines N
+//! --pipeline-width W|auto --pipeline-width-max W
 //! --channels-per-dispatch C --gamma G --block B --cpu-block B
 //! --simd auto|scalar|avx2|neon --affinity none|compact|spread
 //! --kernel gauss1d|gauss2d|tapered_sinc --profile v|m --oversample F
 //! --no-share --artifacts DIR --prefetch-depth D --io-workers N`.
+//!
+//! `--pipeline-width auto` turns on the occupancy-driven width controller
+//! (see docs/tuning.md): the coordinator starts at width 2 and shrinks/grows
+//! the concurrent pipeline count from measured stage occupancy, bounded by
+//! `--pipeline-width-max`. Results are bit-identical to any fixed width.
 //!
 //! `grid --streaming` reads channels lazily from the HGD file through the
 //! T0 prefetcher (bounded memory; I/O overlaps compute) instead of loading
@@ -33,9 +39,10 @@ use hegrid::util::error::{HegridError, Result};
 
 const VALUE_OPTS: &[&str] = &[
     "preset", "points", "channels", "field", "beam", "seed", "out", "input", "out-prefix",
-    "streams", "pipelines", "pipeline-width", "channels-per-dispatch", "gamma", "block",
-    "cpu-block", "simd", "affinity", "kernel", "profile", "oversample", "artifacts", "threads",
-    "variant", "prefetch-depth", "io-workers", "baseline", "current", "threshold",
+    "streams", "pipelines", "pipeline-width", "pipeline-width-max", "channels-per-dispatch",
+    "gamma", "block", "cpu-block", "simd", "affinity", "kernel", "profile", "oversample",
+    "artifacts", "threads", "variant", "prefetch-depth", "io-workers", "baseline", "current",
+    "threshold",
 ];
 
 fn main() -> ExitCode {
@@ -91,11 +98,27 @@ fn print_help() {
 }
 
 fn engine_config(args: &cli::Args) -> Result<HegridConfig> {
+    // `--pipeline-width` takes an integer or the literal `auto` (the
+    // occupancy-driven controller, bounded by `--pipeline-width-max`).
+    let (pipeline_width, pipeline_width_auto) = match args.get("pipeline-width") {
+        None => (0, false),
+        Some("auto") => (0, true),
+        Some(v) => (
+            v.parse().map_err(|_| {
+                HegridError::Config(format!(
+                    "option --pipeline-width expects an integer or 'auto', got '{v}'"
+                ))
+            })?,
+            false,
+        ),
+    };
     let mut cfg = HegridConfig {
         artifacts_dir: args.get_or("artifacts", "artifacts").to_string(),
         streams: args.get_usize("streams", 0)?,
         pipelines: args.get_usize("pipelines", 0)?,
-        pipeline_width: args.get_usize("pipeline-width", 0)?,
+        pipeline_width,
+        pipeline_width_auto,
+        pipeline_width_max: args.get_usize("pipeline-width-max", 0)?,
         channels_per_dispatch: args.get_usize("channels-per-dispatch", 10)?,
         share_preprocessing: !args.flag("no-share"),
         gamma: args.get_usize("gamma", 1)?,
@@ -236,6 +259,15 @@ fn cmd_grid(args: &cli::Args) -> Result<()> {
             report.stage_overlap_s(PipeStage::T1Permute, PipeStage::T3Kernel),
             report.stage_overlap_s(PipeStage::T0Ingest, PipeStage::T3Kernel)
         );
+        if report.width_auto {
+            let trace: Vec<String> =
+                report.width_trace.iter().map(|&(t, w)| format!("{w}@{t:.2}s")).collect();
+            println!(
+                "  adaptive width: trace [{}] numa_nodes={}",
+                trace.join(" -> "),
+                report.numa_nodes
+            );
+        }
     }
     if let Some(prefix) = args.get("out-prefix") {
         if let Some(parent) = Path::new(prefix).parent() {

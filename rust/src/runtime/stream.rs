@@ -272,7 +272,23 @@ fn run_one(
     let info = manifest.get(&req.variant)?.clone();
     // NOTE: the AOT HLO artifacts predate the staged unit-vector columns —
     // this backend uploads raw lon/lat only and ignores `req.sunit` until
-    // the artifacts are regenerated with the 8-input signature.
+    // the artifacts are regenerated with the 8-input signature. Warn once,
+    // loudly: anyone benchmarking this path is measuring the degraded
+    // per-pair-haversine kernel, not the chord-dot one the native backend
+    // runs (docs/architecture.md, "PJRT sunit limitation").
+    {
+        static SUNIT_IGNORED: std::sync::Once = std::sync::Once::new();
+        if !req.sunit.is_empty() {
+            SUNIT_IGNORED.call_once(|| {
+                crate::log_warn!(
+                    "pjrt backend ignores the staged unit-vector columns ({} floats/dispatch): \
+                     the 7-input AOT artifacts predate them — regenerate with \
+                     `python python/compile/aot.py` to benchmark the chord-dot kernel",
+                    req.sunit.len()
+                );
+            });
+        }
+    }
     // Shape validation up front — shape bugs become errors, not UB.
     if req.cell_lon.len() != info.m
         || req.cell_lat.len() != info.m

@@ -1,4 +1,5 @@
-//! Small shared utilities: error type, PRNG, statistics, CRC32, thread helpers.
+//! Small shared utilities: error type, PRNG, statistics, CRC32, thread
+//! helpers, NUMA topology + first-touch placement.
 //!
 //! These exist because the offline crate set vendors only the `xla` closure —
 //! no `rand`, no `thiserror`, no `rayon` — so HEGrid ships its own minimal,
@@ -6,6 +7,7 @@
 
 pub mod crc32;
 pub mod error;
+pub mod numa;
 pub mod prng;
 pub mod stats;
 pub mod threads;

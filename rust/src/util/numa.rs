@@ -1,0 +1,342 @@
+//! NUMA topology detection and best-effort first-touch memory placement —
+//! the memory half of the executor's core pinning (`--affinity`).
+//!
+//! Thread pinning alone is not enough on multi-socket nodes: Linux places a
+//! page on the NUMA node of the thread that **first writes** it
+//! (first-touch), so a value matrix zeroed by the coordinating thread lands
+//! entirely on that thread's node and every worker pinned to the other
+//! socket pays remote-memory latency for the whole run. This module closes
+//! that gap without new crates or `mbind`:
+//!
+//! * [`NumaTopology::detect`] reads `/sys/devices/system/node/node*/cpulist`
+//!   (Linux; a single synthetic node everywhere else) once per process
+//!   ([`topology`]).
+//! * [`NumaTopology::cpu_for`] is the NUMA-aware worker→CPU map behind
+//!   `--affinity compact|spread`: `compact` fills node 0's CPUs before
+//!   spilling to node 1 (shared-cache locality), `spread` round-robins
+//!   workers across nodes first and strides within a node second (memory
+//!   bandwidth). [`NumaTopology::worker_nodes`] is the per-worker node map
+//!   the reports print.
+//! * [`first_touch_zeroed`] faults a freshly allocated buffer's pages from
+//!   the executor's pinned workers (page-granular sweep, claim block 1), so
+//!   pages interleave across the nodes the consumers run on instead of all
+//!   landing on the allocating thread's node. Best effort by design: with
+//!   dynamic block claiming the exact page→node assignment is not
+//!   deterministic, but the *distribution* across nodes is what buys the
+//!   bandwidth. A no-op on single-node hosts or with `--affinity none`
+//!   ([`placement_active`]), so UMA laptops and CI pay nothing.
+//!
+//! Buffers that already receive a **parallel first write** on the executor
+//! (the SoA unit columns in `SharedComponent::build`, the lane-padded value
+//! matrix — whose fill claims ~page-sized row blocks when
+//! [`placement_active`]) don't need the explicit sweep: the fill itself is
+//! the first-touch pass. [`first_touch_zeroed`] is for buffers with a
+//! *serial* fill but parallel consumers (e.g. the f32 staging planes of
+//! `SharedComponent::staged_unit_f32`); `PipelineExecutor::init` warms the
+//! per-worker scratch arenas. All placement writes are zeros over
+//! logically-zero buffers, so placement can never change results.
+
+use std::sync::OnceLock;
+
+use crate::util::threads::{
+    default_parallelism, parallel_items_scoped, AffinityMode, DisjointWriter,
+};
+
+/// CPU ids grouped by NUMA node. Always has at least one node; node 0 holds
+/// every CPU when detection is unavailable (non-Linux, masked sysfs).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NumaTopology {
+    /// CPU ids per node, in sysfs node order.
+    nodes: Vec<Vec<usize>>,
+}
+
+impl NumaTopology {
+    /// Detect the host topology (sysfs on Linux, single node elsewhere).
+    pub fn detect() -> NumaTopology {
+        #[cfg(target_os = "linux")]
+        if let Some(t) = Self::from_sysfs(std::path::Path::new("/sys/devices/system/node")) {
+            return t;
+        }
+        Self::single_node()
+    }
+
+    /// Every CPU on one node — the UMA / detection-unavailable fallback.
+    pub fn single_node() -> NumaTopology {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        NumaTopology { nodes: vec![(0..n).collect()] }
+    }
+
+    /// Build from explicit per-node CPU lists (tests, canned topologies).
+    /// Empty nodes are dropped; an empty list degrades to
+    /// [`NumaTopology::single_node`].
+    pub fn from_nodes(nodes: Vec<Vec<usize>>) -> NumaTopology {
+        let nodes: Vec<Vec<usize>> = nodes.into_iter().filter(|c| !c.is_empty()).collect();
+        if nodes.is_empty() {
+            return Self::single_node();
+        }
+        NumaTopology { nodes }
+    }
+
+    #[cfg(target_os = "linux")]
+    fn from_sysfs(dir: &std::path::Path) -> Option<NumaTopology> {
+        let mut found: Vec<(usize, Vec<usize>)> = Vec::new();
+        for entry in std::fs::read_dir(dir).ok()? {
+            let entry = entry.ok()?;
+            let name = entry.file_name();
+            let Some(idx) = name.to_str().and_then(|n| n.strip_prefix("node")) else {
+                continue;
+            };
+            let Ok(idx) = idx.parse::<usize>() else { continue };
+            let Ok(list) = std::fs::read_to_string(entry.path().join("cpulist")) else {
+                continue;
+            };
+            let cpus = parse_cpulist(&list);
+            if !cpus.is_empty() {
+                found.push((idx, cpus));
+            }
+        }
+        if found.is_empty() {
+            return None;
+        }
+        found.sort_by_key(|(i, _)| *i);
+        Some(NumaTopology { nodes: found.into_iter().map(|(_, c)| c).collect() })
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_multi_node(&self) -> bool {
+        self.nodes.len() > 1
+    }
+
+    /// CPU ids of `node`.
+    pub fn cpus(&self, node: usize) -> &[usize] {
+        &self.nodes[node]
+    }
+
+    /// Total CPUs across all nodes.
+    pub fn n_cpus(&self) -> usize {
+        self.nodes.iter().map(|c| c.len()).sum()
+    }
+
+    /// Node owning `cpu` (0 when the CPU is not listed).
+    pub fn node_of_cpu(&self, cpu: usize) -> usize {
+        self.nodes.iter().position(|c| c.contains(&cpu)).unwrap_or(0)
+    }
+
+    /// The CPU pool worker `worker` (of `pool_workers`) pins to under
+    /// `mode` — the NUMA-aware extension of the affinity policies:
+    ///
+    /// * `compact` — fill nodes in order: node 0's CPUs first, then node
+    ///   1's, … (wraps past the last CPU). Maximises shared-cache locality;
+    ///   on a single node this is the historical `worker % n_cpus`.
+    /// * `spread` — round-robin workers across nodes first (worker *i* →
+    ///   node *i* mod nodes), then stride within the node for cache
+    ///   spacing. Maximises aggregate memory bandwidth; on a single node
+    ///   this is the historical strided placement.
+    ///
+    /// `None` pins nothing.
+    pub fn cpu_for(&self, worker: usize, pool_workers: usize, mode: AffinityMode) -> Option<usize> {
+        match mode {
+            AffinityMode::None => None,
+            AffinityMode::Compact => {
+                let total = self.n_cpus().max(1);
+                let mut k = worker % total;
+                for cpus in &self.nodes {
+                    if k < cpus.len() {
+                        return Some(cpus[k]);
+                    }
+                    k -= cpus.len();
+                }
+                None
+            }
+            AffinityMode::Spread => {
+                let cpus = &self.nodes[worker % self.nodes.len()];
+                let per_node = pool_workers.div_ceil(self.nodes.len()).max(1);
+                let idx = worker / self.nodes.len();
+                let stride = (cpus.len() / per_node).max(1);
+                Some(cpus[(idx * stride) % cpus.len()])
+            }
+        }
+    }
+
+    /// Per-worker NUMA node map for a pool of `pool_workers` under `mode`
+    /// (node 0 for unpinned workers) — what reports print next to the
+    /// affinity policy.
+    pub fn worker_nodes(&self, pool_workers: usize, mode: AffinityMode) -> Vec<usize> {
+        (0..pool_workers)
+            .map(|w| {
+                self.cpu_for(w, pool_workers, mode)
+                    .map(|c| self.node_of_cpu(c))
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}
+
+/// The process-wide detected topology (detection runs once, then cached —
+/// `sysfs` reads sit on the engine-construction path).
+pub fn topology() -> &'static NumaTopology {
+    static TOPO: OnceLock<NumaTopology> = OnceLock::new();
+    TOPO.get_or_init(NumaTopology::detect)
+}
+
+/// Parse a sysfs cpulist (`"0-3,8,10-11"`) into CPU ids. Malformed parts
+/// are skipped (sysfs is trusted but this also takes test input).
+pub fn parse_cpulist(s: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    for part in s.trim().split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if let Some((a, b)) = part.split_once('-') {
+            if let (Ok(a), Ok(b)) = (a.trim().parse::<usize>(), b.trim().parse::<usize>()) {
+                if a <= b && b - a < 4096 {
+                    out.extend(a..=b);
+                }
+            }
+        } else if let Ok(v) = part.parse::<usize>() {
+            out.push(v);
+        }
+    }
+    out
+}
+
+/// First-touch placement pays only when there is more than one node to
+/// place on **and** the executor's workers are actually pinned somewhere
+/// (`--affinity compact|spread`) — unpinned workers migrate, so the node a
+/// page lands on is noise anyway.
+pub fn placement_active() -> bool {
+    crate::util::threads::executor_affinity() != AffinityMode::None && topology().is_multi_node()
+}
+
+/// Fault `buf`'s pages from the executor's (pinned) workers so they spread
+/// across NUMA nodes, instead of all landing on the allocating thread's
+/// node. Page-granular sweep with claim block 1: consecutive pages go to
+/// whichever pinned worker claims them next, which interleaves pages across
+/// the nodes the workers are pinned to (best-effort — the goal is the
+/// cross-node *distribution*, not a deterministic page→node map).
+///
+/// Writes zeros, so callers must hand freshly allocated, still-logically-
+/// zero buffers (`vec![0; n]`, [`crate::grid::simd::AlignedF32::zeroed`]);
+/// both allocate lazily mapped zero pages, so this sweep really is the
+/// first write. No-op unless [`placement_active`].
+pub fn first_touch_zeroed<T: Copy + Default + Send>(buf: &mut [T]) {
+    if !placement_active() || buf.is_empty() {
+        return;
+    }
+    touch_pages(buf);
+}
+
+/// The touch sweep itself (separated so tests can exercise it on UMA CI
+/// hosts where [`placement_active`] is false).
+fn touch_pages<T: Copy + Default + Send>(buf: &mut [T]) {
+    const PAGE_BYTES: usize = 4096;
+    let per_page = (PAGE_BYTES / std::mem::size_of::<T>().max(1)).max(1);
+    let n_pages = buf.len().div_ceil(per_page);
+    let len = buf.len();
+    let w = DisjointWriter::new(buf);
+    parallel_items_scoped(n_pages, default_parallelism(), 1, || (), |_, p| {
+        let start = p * per_page;
+        let chunk = unsafe { w.slice(start, per_page.min(len - start)) };
+        chunk.fill(T::default());
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_nodes() -> NumaTopology {
+        NumaTopology::from_nodes(vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7]])
+    }
+
+    #[test]
+    fn parse_cpulist_formats() {
+        assert_eq!(parse_cpulist("0-3"), vec![0, 1, 2, 3]);
+        assert_eq!(parse_cpulist("0-1,8,10-11\n"), vec![0, 1, 8, 10, 11]);
+        assert_eq!(parse_cpulist(" 5 "), vec![5]);
+        assert_eq!(parse_cpulist(""), Vec::<usize>::new());
+        // Malformed parts are skipped, huge ranges refused.
+        assert_eq!(parse_cpulist("x,3-1,2"), vec![2]);
+        assert_eq!(parse_cpulist("0-999999"), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn single_node_fallback_is_sane() {
+        let t = NumaTopology::single_node();
+        assert_eq!(t.n_nodes(), 1);
+        assert!(!t.is_multi_node());
+        assert!(t.n_cpus() >= 1);
+        assert_eq!(t.node_of_cpu(0), 0);
+        // from_nodes with nothing usable degrades to the same shape.
+        let empty = NumaTopology::from_nodes(vec![vec![], vec![]]);
+        assert_eq!(empty.n_nodes(), 1);
+    }
+
+    #[test]
+    fn node_of_cpu_reverse_map() {
+        let t = two_nodes();
+        assert_eq!(t.n_nodes(), 2);
+        assert!(t.is_multi_node());
+        assert_eq!(t.n_cpus(), 8);
+        assert_eq!(t.node_of_cpu(2), 0);
+        assert_eq!(t.node_of_cpu(5), 1);
+        assert_eq!(t.node_of_cpu(99), 0, "unknown CPUs fold to node 0");
+        assert_eq!(t.cpus(1), &[4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn compact_fills_nodes_in_order() {
+        let t = two_nodes();
+        let cpus: Vec<usize> =
+            (0..8).map(|w| t.cpu_for(w, 8, AffinityMode::Compact).unwrap()).collect();
+        assert_eq!(cpus, vec![0, 1, 2, 3, 4, 5, 6, 7]);
+        // Wraps past the last CPU.
+        assert_eq!(t.cpu_for(9, 8, AffinityMode::Compact), Some(1));
+        // None mode pins nothing.
+        assert_eq!(t.cpu_for(0, 8, AffinityMode::None), None);
+    }
+
+    #[test]
+    fn spread_round_robins_nodes_then_strides() {
+        let t = two_nodes();
+        // 4 workers across 2×4 CPUs: alternate nodes, stride 2 within.
+        let cpus: Vec<usize> =
+            (0..4).map(|w| t.cpu_for(w, 4, AffinityMode::Spread).unwrap()).collect();
+        assert_eq!(cpus, vec![0, 4, 2, 6]);
+        assert_eq!(t.worker_nodes(4, AffinityMode::Spread), vec![0, 1, 0, 1]);
+        // Compact on the same pool leans on node 0 first.
+        assert_eq!(t.worker_nodes(4, AffinityMode::Compact), vec![0, 0, 0, 0]);
+        // Single node: spread preserves the historical strided placement.
+        let uma = NumaTopology::from_nodes(vec![(0..8).collect()]);
+        let cpus: Vec<usize> =
+            (0..4).map(|w| uma.cpu_for(w, 4, AffinityMode::Spread).unwrap()).collect();
+        assert_eq!(cpus, vec![0, 2, 4, 6]);
+    }
+
+    #[test]
+    fn touch_pages_covers_buffer_and_leaves_zeros() {
+        // ~3.5 pages of f64 + a tail that is not page-aligned.
+        let mut buf = vec![0.0f64; 4096 / 8 * 3 + 17];
+        touch_pages(&mut buf);
+        assert!(buf.iter().all(|&v| v == 0.0));
+        // Degenerate sizes are fine.
+        let mut tiny = vec![0u8; 3];
+        touch_pages(&mut tiny);
+        assert_eq!(tiny, vec![0, 0, 0]);
+        let mut empty: Vec<f32> = Vec::new();
+        first_touch_zeroed(&mut empty);
+    }
+
+    #[test]
+    fn detected_topology_is_cached_and_nonempty() {
+        let a = topology();
+        let b = topology();
+        assert!(std::ptr::eq(a, b));
+        assert!(a.n_nodes() >= 1);
+        assert!(a.n_cpus() >= 1);
+    }
+}

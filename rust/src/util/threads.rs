@@ -3,10 +3,37 @@
 //! for `rayon` (not vendored). Used by pre-processing (parallel pixel_idx
 //! computation / radix sort), the CPU baselines, and the coordinator's
 //! channel-group pipelines.
+//!
+//! The helpers all run as **sweeps** on the process-wide executor: the
+//! calling thread participates (so a busy pool degrades, never deadlocks)
+//! and each participant gets per-sweep scratch from `init()` — the vehicle
+//! for the hot loops' worker-local buffers, and (under `--affinity` on
+//! multi-node hosts) for NUMA-local scratch placement via first-touch
+//! (see [`crate::util::numa`]).
+//!
+//! ```
+//! use hegrid::util::threads::{adaptive_claim_block, parallel_items_scoped};
+//! use std::sync::atomic::{AtomicUsize, Ordering};
+//!
+//! let n = 1000;
+//! let sum = AtomicUsize::new(0);
+//! parallel_items_scoped(
+//!     n,
+//!     4,                            // at most 4 participants (caller included)
+//!     adaptive_claim_block(n, 4),   // items claimed per cursor fetch_add
+//!     || 0usize,                    // per-worker scratch, built once per sweep
+//!     |scratch, i| {
+//!         *scratch += 1; // worker-local: no synchronisation needed
+//!         sum.fetch_add(i, Ordering::Relaxed);
+//!     },
+//! );
+//! assert_eq!(sum.load(Ordering::Relaxed), n * (n - 1) / 2);
+//! ```
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 use std::thread;
+use std::time::{Duration, Instant};
 
 /// Number of worker threads to use by default (logical cores, capped).
 /// Queried from the OS once and cached — this sits on per-call paths
@@ -100,6 +127,11 @@ pub fn executor_affinity() -> AffinityMode {
 /// set stays dependency-free) behind the default-on `affinity` feature;
 /// a no-op elsewhere. Best effort: failures are ignored — pinning is a
 /// performance hint, never a correctness requirement.
+///
+/// The worker→CPU map is NUMA-aware (`NumaTopology::cpu_for` in
+/// [`crate::util::numa`]): `compact` fills node 0's CPUs before spilling to
+/// node 1, `spread` round-robins workers across nodes first. On single-node
+/// hosts both collapse to the historical modulo/stride placement.
 #[cfg(all(target_os = "linux", feature = "affinity"))]
 fn apply_affinity(worker: usize, pool_workers: usize, mode: AffinityMode) {
     const SET_BITS: usize = 1024;
@@ -111,23 +143,17 @@ fn apply_affinity(worker: usize, pool_workers: usize, mode: AffinityMode) {
         // pid 0 = the calling thread.
         fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const CpuSet) -> i32;
     }
-    let n_cpus = thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(SET_BITS);
     let mut set = CpuSet { bits: [0; SET_BITS / 64] };
-    match mode {
-        AffinityMode::None => {
+    match crate::util::numa::topology().cpu_for(worker, pool_workers, mode) {
+        None => {
             // Reset to every CPU we can name; the kernel intersects with the
             // online set.
             set.bits = [u64::MAX; SET_BITS / 64];
         }
-        AffinityMode::Compact => {
-            let cpu = worker % n_cpus;
+        Some(cpu) if cpu < SET_BITS => {
             set.bits[cpu / 64] |= 1 << (cpu % 64);
         }
-        AffinityMode::Spread => {
-            let stride = (n_cpus / pool_workers.max(1)).max(1);
-            let cpu = (worker * stride) % n_cpus;
-            set.bits[cpu / 64] |= 1 << (cpu % 64);
-        }
+        Some(_) => return, // CPU id beyond the fixed mask: skip pinning
     }
     unsafe {
         let _ = sched_setaffinity(0, std::mem::size_of::<CpuSet>(), &set);
@@ -362,6 +388,51 @@ impl PipelineExecutor {
     /// Pool worker threads (excludes the participating caller).
     pub fn workers(&self) -> usize {
         self.handles.len()
+    }
+
+    /// Warm the pool for a run: apply the currently requested affinity to
+    /// every parked worker **now** (instead of lazily on the next sweep each
+    /// one happens to join) and first-touch a page of per-worker scratch, so
+    /// each worker's thread-local allocator arena is resident on its own
+    /// NUMA node before the first real sweep allocates `init()` scratch from
+    /// it (see [`crate::util::numa`]).
+    ///
+    /// Best effort: a busy pool degrades to warming fewer workers (the
+    /// caller soaks up unclaimed slots), and on single-node hosts the whole
+    /// pass is an idempotent re-pin plus a few µs of page faults. Called by
+    /// `HegridEngine::new` when an affinity policy is configured.
+    pub fn init(&self) {
+        let participants = self.handles.len() + 1;
+        let joined = AtomicUsize::new(0);
+        self.run(
+            participants,
+            participants,
+            1,
+            || {
+                joined.fetch_add(1, Ordering::Relaxed);
+                // One page of worker-local scratch: faulting it here — after
+                // the lazy re-pin at sweep join — places it on the worker's
+                // node under first-touch.
+                (vec![0u8; 4096], false)
+            },
+            |state: &mut (Vec<u8>, bool), i| {
+                let (page, waited) = state;
+                page[i % page.len()] = 1;
+                std::hint::black_box(&page[..]);
+                if !*waited {
+                    *waited = true;
+                    // Give every parked worker a beat to join so the warm-up
+                    // reaches the whole pool, not just the caller. Bounded:
+                    // a busy pool simply gets warmed later, lazily.
+                    let t0 = Instant::now();
+                    while joined.load(Ordering::Relaxed) < participants
+                        && t0.elapsed() < Duration::from_millis(2)
+                    {
+                        thread::yield_now();
+                    }
+                }
+            },
+        );
     }
 
     pub fn stats(&self) -> ExecutorStats {
@@ -809,6 +880,20 @@ mod tests {
             });
         });
         assert_eq!(total.load(Ordering::Relaxed), 800);
+    }
+
+    #[test]
+    fn executor_init_warms_pool_and_stays_usable() {
+        let ex = PipelineExecutor::new("warm-exec", 2);
+        ex.init();
+        // Normal sweeps still run after the warm-up pass.
+        let sum = AtomicU64::new(0);
+        ex.run(100, 3, 8, || (), |_, i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 99 * 100 / 2);
+        // init() is idempotent.
+        ex.init();
     }
 
     #[test]

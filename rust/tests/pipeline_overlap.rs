@@ -2,11 +2,12 @@
 //! scheduling only, never numerics, and the persistent executor must be
 //! reusable across sweeps.
 //!
-//! * widths 1/2/4 produce **bit-identical** maps vs the sequential
-//!   coordinator (width 1), on both the in-memory and streaming ingest
-//!   paths;
+//! * widths 1/2/4 **and the adaptive controller** (`pipeline_width auto`)
+//!   produce **bit-identical** maps vs the sequential coordinator (width
+//!   1), on both the in-memory and streaming ingest paths;
 //! * a run at width ≥ 2 records per-stage spans (the occupancy/overlap
-//!   instrumentation the benches report);
+//!   instrumentation the benches report), and an auto run records its
+//!   width trace (bounded by `pipeline_width_max`);
 //! * one executor runs two sweeps with per-sweep scratch (reset between
 //!   sweeps, dropped at sweep exit).
 
@@ -115,6 +116,67 @@ fn streaming_pipeline_width_is_bit_identical() {
             Some(r) => assert_bit_identical(&maps, r, &format!("streaming width {width}")),
         }
     }
+}
+
+#[test]
+fn auto_width_is_bit_identical_and_traced() {
+    if !have_backend() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let (sequential, _) = grid_at_width(1);
+    let dataset = SimConfig::quick_preset().generate();
+    let mut cfg = base_config();
+    cfg.pipeline_width_auto = true;
+    cfg.pipeline_width_max = 4;
+    let job = GriddingJob::for_dataset(&dataset, &cfg).unwrap();
+    let engine = HegridEngine::new(cfg).unwrap();
+    let (maps, rep) = engine.grid(&dataset, &job).unwrap();
+    assert!(rep.width_auto);
+    assert!(rep.numa_nodes >= 1);
+    // The trace always opens with the initial width at t = 0 and every
+    // entry stays inside [1, pipeline_width_max].
+    assert!(!rep.width_trace.is_empty());
+    assert_eq!(rep.width_trace[0].0, 0.0);
+    for &(t, w) in &rep.width_trace {
+        assert!(t >= 0.0);
+        assert!((1..=4).contains(&w), "width {w} escaped [1, max]");
+    }
+    // Whatever schedule the controller chose, the maps are bit-identical
+    // to the sequential coordinator.
+    assert_bit_identical(&maps, &sequential, "auto width vs sequential");
+}
+
+#[test]
+fn streaming_auto_width_is_bit_identical() {
+    if !have_backend() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let dataset = SimConfig::quick_preset().generate();
+    let dir = std::env::temp_dir().join("hegrid_pipeline_overlap_auto");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("quick.hgd");
+    dataset.save(&path).unwrap();
+
+    let mut cfg_seq = base_config();
+    cfg_seq.pipeline_width = 1;
+    let eng_seq = HegridEngine::new(cfg_seq).unwrap();
+    let src = HgdStreamSource::open(&path).unwrap();
+    let job = GriddingJob::for_source(&src, &eng_seq.config).unwrap();
+    let (reference, _) = eng_seq.grid_source(&src, &job).unwrap();
+
+    let mut cfg = base_config();
+    cfg.pipeline_width_auto = true;
+    let eng = HegridEngine::new(cfg).unwrap();
+    let src = HgdStreamSource::open(&path).unwrap();
+    let (maps, rep) = eng.grid_source(&src, &job).unwrap();
+    assert!(rep.width_auto && !rep.width_trace.is_empty());
+    // Trace times are monotonically non-decreasing on the run clock.
+    for pair in rep.width_trace.windows(2) {
+        assert!(pair[0].0 <= pair[1].0, "trace times regressed: {pair:?}");
+    }
+    assert_bit_identical(&maps, &reference, "streaming auto width");
 }
 
 #[test]
