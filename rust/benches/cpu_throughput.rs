@@ -322,6 +322,35 @@ fn main() {
         auto_report.numa_nodes
     );
 
+    // ---- tiled output path (survey stress leg) ---------------------------
+    // The survey workload gridded end to end through the tiled output path
+    // (bounded-memory row bands + spill-to-disk reduce, `--tile-rows`):
+    // bit-identity against the untiled engine is asserted before anything
+    // is recorded. The `tile` object is additive, so pre-tiling baselines
+    // stay comparable under the regression gate.
+    let survey_tile_rows = 16usize;
+    let untiled_engine = engine(bench_config());
+    let mut tiled_cfg = bench_config();
+    tiled_cfg.output_tile_rows = survey_tile_rows;
+    let tiled_engine = engine(tiled_cfg);
+    let survey_job = GriddingJob::for_dataset(&dataset, &untiled_engine.config).expect("job");
+    let (ut_maps, ut_rep) = untiled_engine.grid(&dataset, &survey_job).expect("untiled survey");
+    let (ti_maps, ti_rep) = tiled_engine.grid(&dataset, &survey_job).expect("tiled survey");
+    for (ma, mb) in ut_maps.iter().zip(&ti_maps) {
+        for (va, vb) in ma.values().iter().zip(mb.values()) {
+            assert_eq!(va.to_bits(), vb.to_bits(), "tiled path diverged from untiled bitwise");
+        }
+    }
+    let (ut_wall_s, ti_wall_s) = (ut_rep.wall.as_secs_f64(), ti_rep.wall.as_secs_f64());
+    eprintln!(
+        "tiled survey: {} bands × {} rows, {:.1} MB spilled, merge {:.4}s; \
+         wall {ti_wall_s:.3}s vs untiled {ut_wall_s:.3}s",
+        ti_rep.tile_bands,
+        ti_rep.tile_rows,
+        ti_rep.tile_spill_bytes as f64 / 1e6,
+        ti_rep.tile_merge_s,
+    );
+
     let speedup_1t = speedup(reference_1t_s, blocked_1t_s);
     let speedup_nt = speedup(reference_nt_s, blocked_nt_s);
     println!(
@@ -400,6 +429,18 @@ fn main() {
         ("numa_nodes", Json::num(auto_report.numa_nodes as f64)),
         ("width_trace", Json::Arr(width_trace)),
         ("width_final", Json::num(width_final as f64)),
+        // Tiled output path (survey stress leg above) — additive object.
+        (
+            "tile",
+            Json::obj(vec![
+                ("rows", Json::num(ti_rep.tile_rows as f64)),
+                ("bands", Json::num(ti_rep.tile_bands as f64)),
+                ("spill_bytes", Json::num(ti_rep.tile_spill_bytes as f64)),
+                ("merge_s", Json::num(ti_rep.tile_merge_s)),
+                ("wall_s", Json::num(ti_wall_s)),
+                ("untiled_wall_s", Json::num(ut_wall_s)),
+            ]),
+        ),
         ("measurements", bench.to_json()),
     ]);
     write_bench_json("cpu_gridding", &payload);

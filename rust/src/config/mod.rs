@@ -124,6 +124,33 @@ pub struct HegridConfig {
     /// I/O worker threads feeding the prefetcher. 0 = auto
     /// (min(2, prefetch_depth)).
     pub io_workers: usize,
+    /// Output-tile height in grid rows (CLI `--tile-rows`). 0 = untiled
+    /// legacy path (the whole map is one accumulator). With `R > 0` the
+    /// engine reduces each channel group band by band into tile-sized
+    /// accumulators and streams finished bands into an on-disk output cube,
+    /// bounding peak memory by `O(tile × pipeline_width)` instead of
+    /// `O(map × channels)`. Results are bit-identical for every value.
+    pub output_tile_rows: usize,
+    /// Checkpoint directory for tiled runs (CLI `--checkpoint`). Empty =
+    /// spill to an anonymous temp cube that is deleted on completion. When
+    /// set, the tiled reducer writes the output cube plus a CRC'd manifest
+    /// there after every finished channel group, which `resume` picks up.
+    pub checkpoint_dir: String,
+    /// Resume a tiled run from `checkpoint_dir` (CLI `--resume`): verify the
+    /// manifest, skip channel groups it records as finished, and grid only
+    /// the rest — producing a cube bit-identical to an uninterrupted run.
+    /// Requires a non-empty `checkpoint_dir`.
+    pub resume: bool,
+    /// Width governor: a stage counts as saturating its backing resource
+    /// when its occupancy reaches `resource_count × width_saturation`
+    /// (shrink trigger for both stream-bound T3 and starved-T0 detection).
+    pub width_saturation: f64,
+    /// Width governor: grow only while the mean per-pipeline busy fraction
+    /// is at least this (pipelines are actually loaded, not idling).
+    pub width_busy_grow: f64,
+    /// Width governor: a starved-T0 shrink additionally requires the mean
+    /// per-pipeline busy fraction at or below this bound.
+    pub width_idle_shrink: f64,
     /// Convolution kernel type: gauss1d | gauss2d | tapered_sinc.
     pub kernel_type: String,
     /// Exact artifact variant name to use, bypassing selection (benches,
@@ -157,6 +184,12 @@ impl Default for HegridConfig {
             executor_affinity: "none".into(),
             prefetch_depth: 2,
             io_workers: 0,
+            output_tile_rows: 0,
+            checkpoint_dir: String::new(),
+            resume: false,
+            width_saturation: 0.85,
+            width_busy_grow: 0.75,
+            width_idle_shrink: 0.35,
             kernel_type: "gauss1d".into(),
             variant_override: String::new(),
             kernel_sigma_beam: 0.5,
@@ -271,6 +304,20 @@ impl HegridConfig {
                 self.cpu_channel_block
             )));
         }
+        if self.resume && self.checkpoint_dir.is_empty() {
+            return Err(HegridError::Config(
+                "resume requires a checkpoint_dir (--checkpoint <dir> --resume)".into(),
+            ));
+        }
+        for (name, v) in [
+            ("width_saturation", self.width_saturation),
+            ("width_busy_grow", self.width_busy_grow),
+            ("width_idle_shrink", self.width_idle_shrink),
+        ] {
+            if !(v > 0.0 && v <= 1.0) {
+                return Err(HegridError::Config(format!("{name} {v} out of range (0, 1]")));
+            }
+        }
         crate::grid::simd::SimdIsa::from_name(&self.simd_isa)?;
         crate::util::threads::AffinityMode::from_name(&self.executor_affinity)?;
         if !(self.kernel_sigma_beam > 0.0) || !(self.support_sigma > 0.0) || !(self.oversample > 0.0)
@@ -297,6 +344,12 @@ impl HegridConfig {
             ("executor_affinity", Json::str(self.executor_affinity.clone())),
             ("prefetch_depth", Json::num(self.prefetch_depth as f64)),
             ("io_workers", Json::num(self.io_workers as f64)),
+            ("output_tile_rows", Json::num(self.output_tile_rows as f64)),
+            ("checkpoint_dir", Json::str(self.checkpoint_dir.clone())),
+            ("resume", Json::Bool(self.resume)),
+            ("width_saturation", Json::num(self.width_saturation)),
+            ("width_busy_grow", Json::num(self.width_busy_grow)),
+            ("width_idle_shrink", Json::num(self.width_idle_shrink)),
             ("kernel_type", Json::str(self.kernel_type.clone())),
             ("variant_override", Json::str(self.variant_override.clone())),
             ("kernel_sigma_beam", Json::num(self.kernel_sigma_beam)),
@@ -358,6 +411,16 @@ impl HegridConfig {
                 .to_string(),
             prefetch_depth: get_usize("prefetch_depth", d.prefetch_depth)?,
             io_workers: get_usize("io_workers", d.io_workers)?,
+            output_tile_rows: get_usize("output_tile_rows", d.output_tile_rows)?,
+            checkpoint_dir: v
+                .get("checkpoint_dir")
+                .and_then(|x| x.as_str())
+                .unwrap_or(&d.checkpoint_dir)
+                .to_string(),
+            resume: v.get("resume").and_then(|x| x.as_bool()).unwrap_or(d.resume),
+            width_saturation: get_f64("width_saturation", d.width_saturation)?,
+            width_busy_grow: get_f64("width_busy_grow", d.width_busy_grow)?,
+            width_idle_shrink: get_f64("width_idle_shrink", d.width_idle_shrink)?,
             kernel_type: v
                 .get("kernel_type")
                 .and_then(|x| x.as_str())
@@ -447,6 +510,12 @@ mod tests {
         c.executor_affinity = "compact".into();
         c.profile = DeviceProfile::ServerM;
         c.kernel_type = "gauss2d".into();
+        c.output_tile_rows = 48;
+        c.checkpoint_dir = "/tmp/hegrid_ckpt".into();
+        c.resume = true;
+        c.width_saturation = 0.9;
+        c.width_busy_grow = 0.6;
+        c.width_idle_shrink = 0.25;
         let j = c.to_json().to_pretty();
         let back = HegridConfig::from_json(&crate::json::parse(&j).unwrap()).unwrap();
         assert_eq!(back, c);
@@ -476,6 +545,27 @@ mod tests {
         assert!(HegridConfig::from_json(&v).is_err());
         let v = crate::json::parse(r#"{"executor_affinity": "scatter"}"#).unwrap();
         assert!(HegridConfig::from_json(&v).is_err());
+        let v = crate::json::parse(r#"{"width_saturation": 0.0}"#).unwrap();
+        assert!(HegridConfig::from_json(&v).is_err());
+        let v = crate::json::parse(r#"{"width_busy_grow": 1.5}"#).unwrap();
+        assert!(HegridConfig::from_json(&v).is_err());
+        let v = crate::json::parse(r#"{"resume": true}"#).unwrap();
+        assert!(HegridConfig::from_json(&v).is_err(), "resume without checkpoint_dir");
+    }
+
+    #[test]
+    fn tiled_and_governor_fields_default_sanely() {
+        let c = HegridConfig::default();
+        assert_eq!(c.output_tile_rows, 0, "untiled by default");
+        assert!(c.checkpoint_dir.is_empty() && !c.resume);
+        assert_eq!(
+            (c.width_saturation, c.width_busy_grow, c.width_idle_shrink),
+            (0.85, 0.75, 0.35)
+        );
+        let mut c = HegridConfig::default();
+        c.resume = true;
+        c.checkpoint_dir = "ckpt".into();
+        c.validate().unwrap();
     }
 
     #[test]

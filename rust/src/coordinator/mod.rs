@@ -48,6 +48,7 @@
 
 pub mod plan;
 pub mod simulator;
+mod tiled;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Receiver;
@@ -61,7 +62,7 @@ use crate::grid::occupancy::{decide_width, StageOccupancy, WidthDecision, WidthP
 use crate::logging::StageTimes;
 use crate::runtime::prefetch::{overlap_seconds, GroupBatch, Prefetcher};
 use crate::runtime::{
-    ExecuteRequest, ExecuteResponse, Manifest, MemoryPool, StreamPool, VariantQuery,
+    ExecuteRequest, ExecuteResponse, Manifest, MemoryPool, StreamPool, VariantInfo, VariantQuery,
 };
 use crate::sky::{GridSpec, SkyMap};
 use crate::util::error::{HegridError, Result};
@@ -201,6 +202,17 @@ pub struct PipelineReport {
     /// NUMA nodes detected on the host (1 = UMA or detection unavailable);
     /// see [`crate::util::numa`].
     pub numa_nodes: usize,
+    /// Rows per output band on the tiled path (`0` = untiled run).
+    pub tile_rows: usize,
+    /// Row bands the output map was split into (`0` = untiled run).
+    pub tile_bands: usize,
+    /// Bytes streamed into the on-disk output cube (tiled path).
+    pub tile_spill_bytes: u64,
+    /// Wall seconds pipelines spent merging finished bands into the cube.
+    pub tile_merge_s: f64,
+    /// Channel groups skipped on `--resume` (already whole in the
+    /// checkpoint and CRC-verified against the cube).
+    pub groups_skipped: usize,
 }
 
 impl PipelineReport {
@@ -409,6 +421,16 @@ impl WidthGovernor {
     }
 }
 
+/// Output of [`HegridEngine::prepare_run`]: the state both output paths
+/// share before any pipeline spins up.
+struct RunSetup {
+    variant: VariantInfo,
+    report: PipelineReport,
+    /// Pre-seeded with the shared build's `prep+nbr` time.
+    stages: StageTimes,
+    shared_plan: Option<Arc<DispatchPlan>>,
+}
+
 /// The engine: config + manifest + stream pool. Reusable across jobs.
 pub struct HegridEngine {
     pub config: HegridConfig,
@@ -489,12 +511,33 @@ impl HegridEngine {
     /// `config.io_workers` T0 threads read `config.prefetch_depth` channel
     /// groups ahead of the pipelines through a bounded ring, so only the
     /// in-flight window is ever resident and disk reads overlap compute.
+    ///
+    /// With `output_tile_rows > 0` or a `checkpoint_dir` configured the run
+    /// takes the tiled output path (bounded accumulator memory,
+    /// spill-to-disk reduce, resumable checkpoints — see
+    /// [`HegridEngine::grid_source_to_cube`]) and reads the maps back from
+    /// the spilled cube; the result is bit-identical to the untiled path.
     pub fn grid_source(
         &self,
         source: &dyn ChannelSource,
         job: &GriddingJob,
     ) -> Result<(Vec<SkyMap>, PipelineReport)> {
-        let wall0 = Instant::now();
+        if self.config.output_tile_rows == 0 && self.config.checkpoint_dir.is_empty() {
+            return self.grid_source_full(source, job);
+        }
+        let (cube, mut report) = self.grid_source_to_cube(source, job)?;
+        let t4 = Instant::now();
+        let maps = cube.read_all_maps()?;
+        report.stages.add("normalize", t4.elapsed());
+        report.wall += t4.elapsed();
+        Ok((maps, report))
+    }
+
+    /// Shared run setup for both output paths: validation, variant
+    /// selection (+ stream warm-up), the report skeleton, and the one-off
+    /// shared-component build — extracted so the untiled and tiled paths
+    /// cannot drift apart.
+    fn prepare_run(&self, source: &dyn ChannelSource, job: &GriddingJob) -> Result<RunSetup> {
         let n_ch = source.n_channels();
         let n_samples = source.n_samples();
         if n_ch == 0 {
@@ -545,9 +588,6 @@ impl HegridEngine {
         report.variant = variant.name.clone();
         self.streams.warm(&variant.name)?;
 
-        let groups = ChannelGroups::new(n_ch, variant.c);
-        report.n_groups = groups.len();
-
         // The shared coordinate table is the only payload a streaming run
         // keeps resident for its whole duration (borrowed — no copy).
         let (lons, lats) = source.coords()?;
@@ -575,12 +615,105 @@ impl HegridEngine {
         } else {
             None
         };
+        Ok(RunSetup { variant, report, stages, shared_plan })
+    }
+
+    /// The untiled output path: full in-memory `[n_channels][n_cells]`
+    /// accumulators, every pipeline reducing straight into them.
+    fn grid_source_full(
+        &self,
+        source: &dyn ChannelSource,
+        job: &GriddingJob,
+    ) -> Result<(Vec<SkyMap>, PipelineReport)> {
+        let wall0 = Instant::now();
+        let RunSetup { variant, mut report, stages, shared_plan } = self.prepare_run(source, job)?;
+        let n_ch = source.n_channels();
+        let groups = ChannelGroups::new(n_ch, variant.c);
+        report.n_groups = groups.len();
+        let (lons, lats) = source.coords()?;
 
         // ---- global accumulators -------------------------------------------
         let n_cells = job.spec.n_cells();
         let mut acc = vec![0.0f64; n_ch * n_cells];
         let mut wsum = vec![0.0f64; n_cells];
+        let acc_ptr = SyncPtr(acc.as_mut_ptr());
+        let wsum_ptr = SyncPtr(wsum.as_mut_ptr());
+        let shared_builds = AtomicU64::new(report.shared_builds as u64);
+        let overflow = AtomicU64::new(0);
+        let dispatches = AtomicU64::new(0);
+        let plan_ref = shared_plan.as_deref();
 
+        self.drive_pipelines(
+            source,
+            &groups,
+            variant.c,
+            &mut report,
+            stages,
+            |batch, local_stages, local_spans, pf| {
+                self.run_pipeline(
+                    lons,
+                    lats,
+                    job,
+                    &variant,
+                    batch,
+                    plan_ref,
+                    local_stages,
+                    local_spans,
+                    pf,
+                    &shared_builds,
+                    &overflow,
+                    &dispatches,
+                    n_cells,
+                    &acc_ptr,
+                    &wsum_ptr,
+                )
+            },
+        )?;
+
+        report.shared_builds = shared_builds.into_inner() as usize;
+        report.dispatches = dispatches.into_inner() as usize;
+        if let Some(plan) = &shared_plan {
+            report.n_tiles = plan.n_tiles();
+            report.n_shards = plan.shards.len();
+            report.overflow_groups = plan.overflow_groups();
+            report.adjacent_reuse = plan.adjacent_reuse();
+        } else {
+            report.overflow_groups = overflow.into_inner() as usize;
+        }
+
+        // ---- normalise ------------------------------------------------------
+        let t4 = Instant::now();
+        let maps = (0..n_ch)
+            .map(|c| {
+                SkyMap::from_accumulators(
+                    job.spec.clone(),
+                    &acc[c * n_cells..(c + 1) * n_cells],
+                    &wsum,
+                )
+            })
+            .collect::<Result<Vec<_>>>()?;
+        report.stages.add("normalize", t4.elapsed());
+        report.wall = wall0.elapsed();
+        Ok((maps, report))
+    }
+
+    /// The multi-pipeline driver shared by both output paths: spawn the T0
+    /// ingest workers, run `process` (a pipeline's per-group T1–T4 body) on
+    /// one prefetched batch per admitted slot until the run drains — width
+    /// governed — then fold the I/O, occupancy, width-trace, and pool
+    /// accounting into `report`.
+    fn drive_pipelines<F>(
+        &self,
+        source: &dyn ChannelSource,
+        groups: &ChannelGroups,
+        channels_per_group: usize,
+        report: &mut PipelineReport,
+        stages: StageTimes,
+        process: F,
+    ) -> Result<()>
+    where
+        F: Fn(&GroupBatch, &mut StageTimes, &mut Vec<StageSpan>, &Prefetcher) -> Result<()> + Sync,
+    {
         // ---- T0 ingest ring + pipelines --------------------------------------
         // The prefetcher replaces the old eager FIFO of group indices: I/O
         // workers read channel groups ahead of the pipelines into pooled
@@ -609,25 +742,23 @@ impl HegridEngine {
         // governor's starved-T0 rule scales with this, not the configured
         // count — with fewer spawned workers the saturation bar must drop.
         let n_io = report.io_workers.min(groups.len().max(1));
-        let governor = WidthGovernor::new(
-            initial_width,
-            n_pipe,
-            auto,
-            WidthPolicy::for_run(self.streams.n_streams(), n_io),
-        );
+        // Governor thresholds come from the config (`width_saturation`,
+        // `width_busy_grow`, `width_idle_shrink`; defaults match the old
+        // hardcoded policy) — `for_run` contributes the stream/io scaling.
+        let mut policy = WidthPolicy::for_run(self.streams.n_streams(), n_io);
+        policy.saturation = self.config.width_saturation;
+        policy.busy_grow = self.config.width_busy_grow;
+        policy.idle_shrink = self.config.width_idle_shrink;
+        let governor = WidthGovernor::new(initial_width, n_pipe, auto, policy);
         // Buffers in circulation: the ring window plus one batch held by each
         // pipeline while it stages — size the free list for all of them so a
         // full steady state recycles instead of reallocating.
-        let io_pool = MemoryPool::with_limit((self.config.prefetch_depth + n_pipe) * variant.c + 4);
+        let io_pool =
+            MemoryPool::with_limit((self.config.prefetch_depth + n_pipe) * channels_per_group + 4);
 
-        let shared_builds = AtomicU64::new(report.shared_builds as u64);
-        let overflow = AtomicU64::new(0);
         let stage_sink: Mutex<StageTimes> = Mutex::new(stages);
-        let dispatches = AtomicU64::new(0);
         let compute_spans: Mutex<Vec<(f64, f64)>> = Mutex::new(Vec::new());
         let span_sink: Mutex<Vec<StageSpan>> = Mutex::new(Vec::new());
-        let acc_ptr = SyncPtr(acc.as_mut_ptr());
-        let wsum_ptr = SyncPtr(wsum.as_mut_ptr());
         let first_error: Mutex<Option<HegridError>> = Mutex::new(None);
 
         // One pipeline slot: pull admitted batches until the run drains.
@@ -666,23 +797,7 @@ impl HegridEngine {
                 };
                 let t_start = prefetcher.now_s();
                 let span_base = local_spans.len();
-                let out = self.run_pipeline(
-                    lons,
-                    lats,
-                    job,
-                    &variant,
-                    &batch,
-                    shared_plan.as_deref(),
-                    &mut local_stages,
-                    &mut local_spans,
-                    &prefetcher,
-                    &shared_builds,
-                    &overflow,
-                    &dispatches,
-                    n_cells,
-                    &acc_ptr,
-                    &wsum_ptr,
-                );
+                let out = process(&batch, &mut local_stages, &mut local_spans, &prefetcher);
                 batch_spans.push((t_start, prefetcher.now_s()));
                 if let Err(e) = out {
                     let mut slot = first_error.lock().unwrap();
@@ -718,7 +833,6 @@ impl HegridEngine {
         std::thread::scope(|scope| {
             for _ in 0..n_io {
                 let prefetcher = &prefetcher;
-                let groups = &groups;
                 let io_pool = &io_pool;
                 scope.spawn(move || prefetcher.run_worker(source, groups, io_pool));
             }
@@ -771,34 +885,10 @@ impl HegridEngine {
         }
         report.stages = stage_sink.into_inner().unwrap();
         report.stages.add("T0 ingest(io)", Duration::from_secs_f64(io.io_busy_s));
-        report.shared_builds = shared_builds.into_inner() as usize;
-        report.dispatches = dispatches.into_inner() as usize;
-        if let Some(plan) = &shared_plan {
-            report.n_tiles = plan.n_tiles();
-            report.n_shards = plan.shards.len();
-            report.overflow_groups = plan.overflow_groups();
-            report.adjacent_reuse = plan.adjacent_reuse();
-        } else {
-            report.overflow_groups = overflow.into_inner() as usize;
-        }
         let (pa, pr) = self.mem.stats();
         report.pool_alloc = pa;
         report.pool_reused = pr;
-
-        // ---- normalise ------------------------------------------------------
-        let t4 = Instant::now();
-        let maps = (0..n_ch)
-            .map(|c| {
-                SkyMap::from_accumulators(
-                    job.spec.clone(),
-                    &acc[c * n_cells..(c + 1) * n_cells],
-                    &wsum,
-                )
-            })
-            .collect::<Result<Vec<_>>>()?;
-        report.stages.add("normalize", t4.elapsed());
-        report.wall = wall0.elapsed();
-        Ok((maps, report))
+        Ok(())
     }
 
     /// One pipeline: process one prefetched channel group end to end.

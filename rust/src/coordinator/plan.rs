@@ -36,6 +36,15 @@ impl ChannelGroups {
         ChannelGroups { groups }
     }
 
+    /// Build groups from explicit member lists — the resume path's pending
+    /// subset of a full partition, remapped to dense indices `0..len` (the
+    /// prefetcher and pipelines address groups densely; callers keep their
+    /// own dense→original map for checkpoint records and `wsum` ownership).
+    pub fn from_members(groups: Vec<Vec<usize>>) -> ChannelGroups {
+        assert!(groups.iter().all(|g| !g.is_empty()), "empty channel group");
+        ChannelGroups { groups }
+    }
+
     pub fn len(&self) -> usize {
         self.groups.len()
     }
@@ -285,6 +294,11 @@ mod tests {
         assert_eq!(all, (0..23).collect::<Vec<_>>());
         assert_eq!(g.members(2).len(), 3);
         assert!(ChannelGroups::new(0, 4).is_empty());
+        // Resume subset: dense indices over an explicit member list.
+        let sub = ChannelGroups::from_members(vec![g.members(2).to_vec(), g.members(0).to_vec()]);
+        assert_eq!(sub.len(), 2);
+        assert_eq!(sub.members(0), g.members(2));
+        assert_eq!(sub.members(1), g.members(0));
     }
 
     #[test]

@@ -1,0 +1,472 @@
+//! Tiled output gridding: bounded-memory row-band tiles, spill-to-disk
+//! reduce, and resumable channel-group checkpoints.
+//!
+//! The untiled coordinator holds the whole `[n_channels][n_cells]` f64
+//! accumulator cube in memory — the output side dominates peak RSS once
+//! maps are large (the input side is already streaming-bounded by the T0
+//! prefetch ring). The tiled path replaces it with a **band-major** reduce:
+//! the target map is split into contiguous row bands of
+//! `output_tile_rows` rows, and each pipeline processes its channel group
+//! band by band, reducing kernel responses into a band-local accumulator
+//! and streaming every finished band into an on-disk
+//! [`CubeFile`] — peak accumulator memory becomes
+//! `O(band_cells × channels_per_group × pipeline_width)` instead of
+//! `O(n_cells × n_channels)`.
+//!
+//! **Bit-identity** with the untiled path is structural, not approximate:
+//! every output cell receives its contributions in the same order (shards
+//! ascending; exactly one dispatch tile covers a given cell per shard),
+//! kernel execution is deterministic per `(shard, tile)` — re-dispatching
+//! a tile that straddles a band boundary reproduces identical f32
+//! responses — and only the band-overlapping cell range of each response
+//! is reduced, so the per-cell f64 sums are bitwise the untiled ones.
+//! `rust/tests/tiled_equivalence.rs` pins this across band heights,
+//! pipeline widths, and forced SIMD ISAs.
+//!
+//! With a `checkpoint_dir` configured the cube lives there alongside a
+//! CRC'd [`CheckpointManifest`]; after every finished channel group the
+//! manifest is atomically rewritten, so `--resume` restarts a crashed run
+//! by verifying the finished groups' cube bytes and re-gridding only the
+//! pending ones — the final cube is bit-identical to an uninterrupted run.
+
+use std::path::{Path, PathBuf};
+
+use super::*;
+use crate::data::checkpoint::{
+    anonymous_cube_path, CheckpointManifest, CubeFile, CubeHandle, CUBE_FILE,
+};
+use crate::util::crc32::Crc32;
+
+/// Immutable per-run context shared by every tiled pipeline.
+struct TiledCtx<'a> {
+    job: &'a GriddingJob,
+    variant: &'a VariantInfo,
+    lons: &'a [f64],
+    lats: &'a [f64],
+    shared_plan: Option<&'a DispatchPlan>,
+    /// Dense (resume-remapped) group index → original group index.
+    dense_to_orig: &'a [usize],
+    n_cells: usize,
+    nlon: usize,
+    nlat: usize,
+    rows_per_band: usize,
+    cube: &'a CubeFile,
+    /// Checkpoint directory + manifest; `None` for anonymous spill runs.
+    ckpt: Option<(&'a Path, &'a Mutex<CheckpointManifest>)>,
+    shared_builds: &'a AtomicU64,
+    overflow: &'a AtomicU64,
+    dispatches: &'a AtomicU64,
+}
+
+impl HegridEngine {
+    /// Grid every channel of `source` through the tiled output path and
+    /// leave the result as an on-disk accumulator cube, returned as a
+    /// [`CubeHandle`] for per-channel (bounded-memory) map reads.
+    ///
+    /// `output_tile_rows = 0` still runs this path with one full-map band —
+    /// useful for checkpointed runs that only want group-level resume. With
+    /// an empty `checkpoint_dir` the cube is an anonymous temp file,
+    /// deleted when the handle drops.
+    pub fn grid_source_to_cube(
+        &self,
+        source: &dyn ChannelSource,
+        job: &GriddingJob,
+    ) -> Result<(CubeHandle, PipelineReport)> {
+        let wall0 = Instant::now();
+        let RunSetup { variant, mut report, stages, shared_plan } = self.prepare_run(source, job)?;
+        let n_ch = source.n_channels();
+        let (lons, lats) = source.coords()?;
+        let n_cells = job.spec.n_cells();
+        let (nlon, nlat) = (job.spec.nlon, job.spec.nlat);
+        let rows_per_band = if self.config.output_tile_rows == 0 {
+            nlat
+        } else {
+            self.config.output_tile_rows.min(nlat)
+        };
+        report.tile_rows = rows_per_band;
+        report.tile_bands = nlat.div_ceil(rows_per_band);
+
+        let full_groups = ChannelGroups::new(n_ch, variant.c);
+        let identity = job_identity(job, &variant, n_ch, source.n_samples(), rows_per_band);
+
+        // ---- cube + manifest ------------------------------------------------
+        let (cube, manifest, cleanup) = if self.config.checkpoint_dir.is_empty() {
+            (CubeFile::create(&anonymous_cube_path(), n_ch, n_cells)?, None, true)
+        } else {
+            let dir = PathBuf::from(&self.config.checkpoint_dir);
+            std::fs::create_dir_all(&dir).map_err(HegridError::io(dir.display().to_string()))?;
+            let cube_path = dir.join(CUBE_FILE);
+            if self.config.resume {
+                let m = CheckpointManifest::load(&dir)?;
+                if m.job != identity {
+                    return Err(HegridError::Config(format!(
+                        "--resume checkpoint at {} was written by a different job\n  \
+                         checkpoint: {}\n  this run:   {identity}",
+                        dir.display(),
+                        m.job
+                    )));
+                }
+                let cube = CubeFile::open(&cube_path, n_ch, n_cells)?;
+                // Re-verify every finished group's cube bytes against its
+                // recorded CRC before trusting them (band by band, so even
+                // verification stays memory-bounded).
+                for &(g, crc) in &m.groups_done {
+                    if g >= full_groups.len() {
+                        return Err(HegridError::Corrupt(format!(
+                            "checkpoint records group {g} but the job has only {} groups",
+                            full_groups.len()
+                        )));
+                    }
+                    let members = full_groups.members(g);
+                    verify_group(&cube, g, members, nlon, nlat, rows_per_band, crc)?;
+                }
+                (cube, Some(m), false)
+            } else {
+                let cube = CubeFile::create(&cube_path, n_ch, n_cells)?;
+                let m = CheckpointManifest::new(identity.clone());
+                m.save(&dir)?;
+                (cube, Some(m), false)
+            }
+        };
+
+        // ---- resume filtering: dense groups = the pending subset ------------
+        let pending: Vec<usize> = match &manifest {
+            Some(m) => (0..full_groups.len()).filter(|&g| !m.is_done(g)).collect(),
+            None => (0..full_groups.len()).collect(),
+        };
+        report.groups_skipped = full_groups.len() - pending.len();
+        report.n_groups = pending.len();
+        let dense_groups = ChannelGroups::from_members(
+            pending.iter().map(|&g| full_groups.members(g).to_vec()).collect(),
+        );
+
+        let shared_builds = AtomicU64::new(report.shared_builds as u64);
+        let overflow = AtomicU64::new(0);
+        let dispatches = AtomicU64::new(0);
+        let ckpt_dir = PathBuf::from(&self.config.checkpoint_dir);
+        let manifest = manifest.map(Mutex::new);
+        let ctx = TiledCtx {
+            job,
+            variant: &variant,
+            lons,
+            lats,
+            shared_plan: shared_plan.as_deref(),
+            dense_to_orig: &pending,
+            n_cells,
+            nlon,
+            nlat,
+            rows_per_band,
+            cube: &cube,
+            ckpt: manifest.as_ref().map(|m| (ckpt_dir.as_path(), m)),
+            shared_builds: &shared_builds,
+            overflow: &overflow,
+            dispatches: &dispatches,
+        };
+
+        self.drive_pipelines(
+            source,
+            &dense_groups,
+            variant.c,
+            &mut report,
+            stages,
+            |batch, local_stages, local_spans, pf| {
+                self.run_pipeline_tiled(&ctx, batch, local_stages, local_spans, pf)
+            },
+        )?;
+
+        report.shared_builds = shared_builds.into_inner() as usize;
+        report.dispatches = dispatches.into_inner() as usize;
+        if let Some(plan) = &shared_plan {
+            report.n_tiles = plan.n_tiles();
+            report.n_shards = plan.shards.len();
+            report.overflow_groups = plan.overflow_groups();
+            report.adjacent_reuse = plan.adjacent_reuse();
+        } else {
+            report.overflow_groups = overflow.into_inner() as usize;
+        }
+        report.tile_spill_bytes = cube.spill_bytes();
+        report.tile_merge_s = report.stage_s("T4 merge(cube)");
+        report.wall = wall0.elapsed();
+        Ok((CubeHandle::new(cube, job.spec.clone(), cleanup), report))
+    }
+
+    /// One tiled pipeline: process one channel group end to end, band-major.
+    /// T1 permutes every shard once up front (the staged Arcs are held for
+    /// the whole group — `O(samples × c)`, the same order as the batch's
+    /// input values — so straddle re-dispatches never re-permute); then for
+    /// each row band every shard's overlapping dispatch tiles are submitted
+    /// (T2), drained (T3), and clip-reduced into a band-local accumulator
+    /// (T4), whose finished bands stream into the cube.
+    fn run_pipeline_tiled(
+        &self,
+        ctx: &TiledCtx<'_>,
+        batch: &GroupBatch,
+        stages: &mut StageTimes,
+        spans: &mut Vec<StageSpan>,
+        pf: &Prefetcher,
+    ) -> Result<()> {
+        let variant = ctx.variant;
+        // Without sharing, every pipeline rebuilds the whole pre-processing
+        // stack (the redundancy the paper eliminates) — same as untiled.
+        let local_plan;
+        let plan: &DispatchPlan = match ctx.shared_plan {
+            Some(p) => p,
+            None => {
+                let t0 = Instant::now();
+                let s0 = pf.now_s();
+                local_plan = DispatchPlan::build(
+                    ctx.lons,
+                    ctx.lats,
+                    ctx.job,
+                    variant,
+                    self.epoch_counter.fetch_add(plan::EPOCHS_PER_PLAN, Ordering::Relaxed),
+                    1, // a lone pipeline gets no extra build parallelism
+                )?;
+                stages.add("prep+nbr", t0.elapsed());
+                spans.push(StageSpan { stage: PipeStage::Prep, start: s0, end: pf.now_s() });
+                ctx.shared_builds.fetch_add(1, Ordering::Relaxed);
+                ctx.overflow.store(local_plan.overflow_groups() as u64, Ordering::Relaxed);
+                &local_plan
+            }
+        };
+
+        let g_orig = ctx.dense_to_orig[batch.group];
+        // `wsum` is identical across groups, so only the group that was
+        // *originally* group 0 writes it; if that group is already complete
+        // in a resumed checkpoint, its wsum bytes are already in the cube.
+        let owns_wsum = g_orig == 0;
+        let members = &batch.channels;
+        let stream = batch.group % self.streams.n_streams();
+        let kparam = ctx.job.kernel.kparam();
+        let group_values: Vec<&[f32]> = batch.values.iter().map(|v| v.as_slice()).collect();
+
+        // T1: permute + pad this group's channel values into [c, n], once
+        // per shard, up front.
+        let t1 = Instant::now();
+        let s1 = pf.now_s();
+        let mut svals = Vec::with_capacity(plan.shards.len());
+        for shard in &plan.shards {
+            let mut staged = self.mem.take(variant.c * variant.n);
+            shard.permute_group_into(&group_values, variant.n, &mut staged)?;
+            // Pad missing channels (last group) with zeros.
+            staged.resize(variant.c * variant.n, 0.0);
+            svals.push(Arc::new(staged.into_inner()));
+        }
+        stages.add("T1 permute", t1.elapsed());
+        spans.push(StageSpan { stage: PipeStage::T1Permute, start: s1, end: pf.now_s() });
+
+        // Streaming digest over exactly the bytes this group writes, in
+        // write order (bands ascending; per band the member channels in
+        // order, then wsum if owned) — the manifest's per-group CRC.
+        let mut digest = Crc32::new();
+        let mut band_acc: Vec<f64> = Vec::new();
+        let mut band_wsum: Vec<f64> = Vec::new();
+
+        let mut r0 = 0usize;
+        while r0 < ctx.nlat {
+            let r1 = (r0 + ctx.rows_per_band).min(ctx.nlat);
+            let cell0 = r0 * ctx.nlon;
+            let cell1 = r1 * ctx.nlon;
+            let band_cells = cell1 - cell0;
+            // Dispatch tiles overlapping this band — tiles partition the
+            // cell range, so one division per band edge routes the claim
+            // block (no per-cell or per-sample search).
+            let t_lo = cell0 / variant.m;
+            let t_hi = (cell1 - 1) / variant.m;
+
+            band_acc.clear();
+            band_acc.resize(members.len() * band_cells, 0.0);
+            if owns_wsum {
+                band_wsum.clear();
+                band_wsum.resize(band_cells, 0.0);
+            }
+
+            for (shard_idx, shard) in plan.shards.iter().enumerate() {
+                // T2: submit this shard's overlapping tiles to our stream.
+                let t2 = Instant::now();
+                let s2 = pf.now_s();
+                let mut pending: Vec<(usize, Receiver<Result<ExecuteResponse>>)> = Vec::new();
+                for t in t_lo..=t_hi {
+                    let tile = shard.tile(t);
+                    let req = ExecuteRequest {
+                        variant: variant.name.clone(),
+                        epoch: plan.epoch_for_shard(shard_idx),
+                        group: batch.group as u64,
+                        cell_lon: Arc::clone(&tile.cell_lon),
+                        cell_lat: Arc::clone(&tile.cell_lat),
+                        nbr: Arc::clone(&tile.nbr),
+                        slon: Arc::clone(&shard.slon),
+                        slat: Arc::clone(&shard.slat),
+                        sunit: Arc::clone(&shard.sunit),
+                        sval: Arc::clone(&svals[shard_idx]),
+                        kparam,
+                    };
+                    pending.push((t, self.streams.submit(stream, req)));
+                    ctx.dispatches.fetch_add(1, Ordering::Relaxed);
+                }
+                stages.add("T2 submit", t2.elapsed());
+                spans.push(StageSpan { stage: PipeStage::T2Submit, start: s2, end: pf.now_s() });
+
+                // T3: drain.
+                let t_drain = Instant::now();
+                let s3 = pf.now_s();
+                let mut t3_total = Duration::ZERO;
+                let mut h2d_total = Duration::ZERO;
+                let mut d2h_total = Duration::ZERO;
+                let mut responses: Vec<(usize, ExecuteResponse)> = Vec::new();
+                for (t, rx) in pending {
+                    let resp = self.streams.wait(rx)?;
+                    t3_total += resp.t_exec;
+                    h2d_total += resp.t_h2d;
+                    d2h_total += resp.t_d2h;
+                    responses.push((t, resp));
+                }
+                stages.add("T3 kernel(+wait)", t_drain.elapsed());
+                spans.push(StageSpan { stage: PipeStage::T3Kernel, start: s3, end: pf.now_s() });
+                stages.add("T2 H2D(device)", h2d_total);
+                stages.add("T3 kernel(device)", t3_total);
+                stages.add("T4 D2H(device)", d2h_total);
+
+                // T4: reduce the band-overlapping cell range of every
+                // response into the band accumulator — the same per-cell
+                // addition order as the untiled path (shards ascending, one
+                // covering tile per cell per shard).
+                let t4 = Instant::now();
+                let s4 = pf.now_s();
+                for (t, resp) in responses {
+                    let tc0 = t * variant.m;
+                    let valid = ctx.n_cells.saturating_sub(tc0).min(variant.m);
+                    let lo = cell0.max(tc0);
+                    let hi = cell1.min(tc0 + valid);
+                    if lo >= hi {
+                        continue;
+                    }
+                    for ci in 0..members.len() {
+                        let sa = ci * variant.m;
+                        let src = &resp.acc[sa + (lo - tc0)..sa + (hi - tc0)];
+                        let da = ci * band_cells;
+                        let dst = &mut band_acc[da + (lo - cell0)..da + (hi - cell0)];
+                        for (d, &v) in dst.iter_mut().zip(src) {
+                            *d += v as f64;
+                        }
+                    }
+                    if owns_wsum {
+                        let src = &resp.wsum[lo - tc0..hi - tc0];
+                        let dst = &mut band_wsum[lo - cell0..hi - cell0];
+                        for (d, &v) in dst.iter_mut().zip(src) {
+                            *d += v as f64;
+                        }
+                    }
+                }
+                stages.add("T4 reduce", t4.elapsed());
+                spans.push(StageSpan { stage: PipeStage::T4Reduce, start: s4, end: pf.now_s() });
+            }
+
+            // Merge: stream the finished band into the cube (+ digest).
+            let tm = Instant::now();
+            let sm = pf.now_s();
+            for (ci, &ch) in members.iter().enumerate() {
+                ctx.cube.write_channel_band(
+                    ch,
+                    cell0,
+                    &band_acc[ci * band_cells..(ci + 1) * band_cells],
+                    Some(&mut digest),
+                )?;
+            }
+            if owns_wsum {
+                ctx.cube.write_wsum_band(cell0, &band_wsum, Some(&mut digest))?;
+            }
+            stages.add("T4 merge(cube)", tm.elapsed());
+            spans.push(StageSpan { stage: PipeStage::T4Reduce, start: sm, end: pf.now_s() });
+
+            r0 = r1;
+        }
+
+        // Group complete: record it in the manifest (atomic tmp + rename),
+        // so a crash after this point resumes past this group.
+        if let Some((dir, manifest)) = ctx.ckpt {
+            let mut m = manifest.lock().unwrap();
+            m.record(g_orig, digest.finalize());
+            m.save(dir)?;
+        }
+        Ok(())
+    }
+}
+
+/// Canonical job-identity string for checkpoint manifests: everything that
+/// must match for finished groups to be reusable — grid geometry, kernel
+/// parameters (bit-exact), sample/channel counts, the dispatch variant
+/// (its `m`/`k`/`c` shape the numerics), and the band height (it fixes the
+/// per-group digest's write order).
+fn job_identity(
+    job: &GriddingJob,
+    variant: &VariantInfo,
+    n_channels: usize,
+    n_samples: usize,
+    rows_per_band: usize,
+) -> String {
+    let spec = &job.spec;
+    let k = &job.kernel;
+    let kp = k.kparam();
+    format!(
+        "grid:{}x{} step:{:016x} center:{:016x},{:016x} kernel:{} \
+         kparam:{:08x},{:08x},{:08x},{:08x} support:{:016x} samples:{n_samples} \
+         channels:{n_channels} variant:{} tile_rows:{rows_per_band}",
+        spec.nlon,
+        spec.nlat,
+        spec.step.to_bits(),
+        spec.lon_c.to_bits(),
+        spec.lat_c.to_bits(),
+        k.type_name(),
+        kp[0].to_bits(),
+        kp[1].to_bits(),
+        kp[2].to_bits(),
+        kp[3].to_bits(),
+        k.support.to_bits(),
+        variant.name,
+    )
+}
+
+/// Re-verify one finished group against the cube: recompute the streaming
+/// CRC over its bytes in write order (band by band — bounded memory) and
+/// compare with the manifest's record.
+fn verify_group(
+    cube: &CubeFile,
+    group: usize,
+    members: &[usize],
+    nlon: usize,
+    nlat: usize,
+    rows_per_band: usize,
+    expect: u32,
+) -> Result<()> {
+    let mut crc = Crc32::new();
+    let mut buf = Vec::new();
+    let mut r0 = 0usize;
+    while r0 < nlat {
+        let r1 = (r0 + rows_per_band).min(nlat);
+        let cell0 = r0 * nlon;
+        let band_cells = (r1 - r0) * nlon;
+        for &ch in members {
+            cube.read_channel_band(ch, cell0, band_cells, &mut buf)?;
+            for v in &buf {
+                crc.update(&v.to_le_bytes());
+            }
+        }
+        if group == 0 {
+            cube.read_wsum_band(cell0, band_cells, &mut buf)?;
+            for v in &buf {
+                crc.update(&v.to_le_bytes());
+            }
+        }
+        r0 = r1;
+    }
+    let got = crc.finalize();
+    if got != expect {
+        return Err(HegridError::Corrupt(format!(
+            "checkpoint cube bytes for finished group {group} fail their CRC \
+             (computed {got:#010x}, manifest {expect:#010x}); the spill was modified or torn — \
+             delete the checkpoint directory to re-grid from scratch"
+        )));
+    }
+    Ok(())
+}

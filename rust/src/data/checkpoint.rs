@@ -1,0 +1,495 @@
+//! Spill + checkpoint I/O for the tiled output path.
+//!
+//! A tiled run reduces each channel group band by band and streams finished
+//! bands into an on-disk **output cube** ([`CubeFile`]): raw f64 LE
+//! accumulators, `[n_channels][n_cells]` of `acc` followed by `[n_cells]`
+//! of `wsum`, exactly the buffers the untiled coordinator holds in memory —
+//! so normalising a cube row reproduces the untiled map bit for bit.
+//!
+//! When a checkpoint directory is configured, the cube lives there as
+//! `cube.bin` next to a [`CheckpointManifest`] (`manifest.json`): a CRC'd
+//! record of the job identity and, per finished channel group, a streaming
+//! CRC-32 over exactly the bytes that group wrote, in write order. A
+//! `--resume` run reloads the manifest, fails with a typed
+//! [`HegridError::Corrupt`] if its CRC does not match (never silently
+//! re-grids), skips the groups it records, and re-verifies their cube bytes
+//! band by band before trusting them.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::json::Json;
+use crate::sky::{GridSpec, SkyMap};
+use crate::util::crc32::{crc32, Crc32};
+use crate::util::error::{HegridError, Result};
+
+/// Manifest schema version.
+const MANIFEST_VERSION: usize = 1;
+
+/// File name of the spill cube inside a checkpoint directory.
+pub const CUBE_FILE: &str = "cube.bin";
+
+/// File name of the manifest inside a checkpoint directory.
+pub const MANIFEST_FILE: &str = "manifest.json";
+
+fn f64s_to_le(vals: &[f64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(vals.len() * 8);
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+fn le_to_f64s(bytes: &[u8], out: &mut Vec<f64>) {
+    out.clear();
+    out.reserve(bytes.len() / 8);
+    for ch in bytes.chunks_exact(8) {
+        out.push(f64::from_le_bytes(ch.try_into().expect("8-byte chunk")));
+    }
+}
+
+/// The on-disk output cube: `[n_channels][n_cells]` f64 `acc` rows followed
+/// by one `[n_cells]` f64 `wsum` row, all little-endian. Band writes from
+/// concurrent pipelines target disjoint byte ranges (each group owns its
+/// channels; `wsum` is written by the group that owns it), serialised
+/// through one seek+write handle.
+pub struct CubeFile {
+    file: Mutex<File>,
+    path: PathBuf,
+    n_channels: usize,
+    n_cells: usize,
+    spill_bytes: AtomicU64,
+}
+
+impl CubeFile {
+    /// Total cube size in bytes for a given shape.
+    pub fn total_bytes(n_channels: usize, n_cells: usize) -> u64 {
+        ((n_channels + 1) as u64) * (n_cells as u64) * 8
+    }
+
+    /// Create (or truncate) a cube of the given shape, preallocated to its
+    /// final size so every later write is in-place.
+    pub fn create(path: &Path, n_channels: usize, n_cells: usize) -> Result<CubeFile> {
+        let ctx = path.display().to_string();
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)
+            .map_err(HegridError::io(ctx))?;
+        file.set_len(Self::total_bytes(n_channels, n_cells))
+            .map_err(HegridError::io(path.display().to_string()))?;
+        Ok(CubeFile {
+            file: Mutex::new(file),
+            path: path.to_path_buf(),
+            n_channels,
+            n_cells,
+            spill_bytes: AtomicU64::new(0),
+        })
+    }
+
+    /// Open an existing cube (resume path), verifying its size matches the
+    /// expected shape.
+    pub fn open(path: &Path, n_channels: usize, n_cells: usize) -> Result<CubeFile> {
+        let ctx = path.display().to_string();
+        let file =
+            OpenOptions::new().read(true).write(true).open(path).map_err(HegridError::io(ctx))?;
+        let expected = Self::total_bytes(n_channels, n_cells);
+        let actual = file.metadata().map_err(HegridError::io(path.display().to_string()))?.len();
+        if actual != expected {
+            return Err(HegridError::Corrupt(format!(
+                "{}: checkpoint cube is {actual} bytes, expected {expected}",
+                path.display()
+            )));
+        }
+        Ok(CubeFile {
+            file: Mutex::new(file),
+            path: path.to_path_buf(),
+            n_channels,
+            n_cells,
+            spill_bytes: AtomicU64::new(0),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn n_channels(&self) -> usize {
+        self.n_channels
+    }
+
+    pub fn n_cells(&self) -> usize {
+        self.n_cells
+    }
+
+    /// Bytes spilled through this handle so far (bench accounting).
+    pub fn spill_bytes(&self) -> u64 {
+        self.spill_bytes.load(Ordering::Relaxed)
+    }
+
+    fn acc_offset(&self, ch: usize, cell0: usize) -> u64 {
+        debug_assert!(ch < self.n_channels && cell0 <= self.n_cells);
+        ((ch * self.n_cells + cell0) as u64) * 8
+    }
+
+    fn wsum_offset(&self, cell0: usize) -> u64 {
+        debug_assert!(cell0 <= self.n_cells);
+        ((self.n_channels * self.n_cells + cell0) as u64) * 8
+    }
+
+    fn write_at(&self, offset: u64, vals: &[f64], digest: Option<&mut Crc32>) -> Result<()> {
+        let bytes = f64s_to_le(vals);
+        if let Some(d) = digest {
+            d.update(&bytes);
+        }
+        let mut f = self.file.lock().unwrap();
+        f.seek(SeekFrom::Start(offset)).map_err(HegridError::io(self.path.display().to_string()))?;
+        f.write_all(&bytes).map_err(HegridError::io(self.path.display().to_string()))?;
+        self.spill_bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn read_at(&self, offset: u64, len: usize, out: &mut Vec<f64>) -> Result<()> {
+        let mut bytes = vec![0u8; len * 8];
+        {
+            let mut f = self.file.lock().unwrap();
+            f.seek(SeekFrom::Start(offset))
+                .map_err(HegridError::io(self.path.display().to_string()))?;
+            f.read_exact(&mut bytes).map_err(HegridError::io(self.path.display().to_string()))?;
+        }
+        le_to_f64s(&bytes, out);
+        Ok(())
+    }
+
+    /// Write a band `[cell0, cell0 + vals.len())` of channel `ch`'s
+    /// accumulator row, feeding the written bytes into `digest` when given.
+    pub fn write_channel_band(
+        &self,
+        ch: usize,
+        cell0: usize,
+        vals: &[f64],
+        digest: Option<&mut Crc32>,
+    ) -> Result<()> {
+        assert!(cell0 + vals.len() <= self.n_cells, "band past the cube");
+        self.write_at(self.acc_offset(ch, cell0), vals, digest)
+    }
+
+    /// Write a band of the weight-sum row.
+    pub fn write_wsum_band(
+        &self,
+        cell0: usize,
+        vals: &[f64],
+        digest: Option<&mut Crc32>,
+    ) -> Result<()> {
+        assert!(cell0 + vals.len() <= self.n_cells, "band past the cube");
+        self.write_at(self.wsum_offset(cell0), vals, digest)
+    }
+
+    /// Read `len` cells of channel `ch`'s accumulator row from `cell0`.
+    pub fn read_channel_band(
+        &self,
+        ch: usize,
+        cell0: usize,
+        len: usize,
+        out: &mut Vec<f64>,
+    ) -> Result<()> {
+        assert!(cell0 + len <= self.n_cells, "band past the cube");
+        self.read_at(self.acc_offset(ch, cell0), len, out)
+    }
+
+    /// Read `len` cells of the weight-sum row from `cell0`.
+    pub fn read_wsum_band(&self, cell0: usize, len: usize, out: &mut Vec<f64>) -> Result<()> {
+        assert!(cell0 + len <= self.n_cells, "band past the cube");
+        self.read_at(self.wsum_offset(cell0), len, out)
+    }
+}
+
+/// CRC'd record of a tiled run's progress: the job identity plus one
+/// `(group, crc)` entry per finished channel group. Atomic persistence:
+/// written to a temp file and renamed over `manifest.json` after every
+/// finished group, so a crash leaves either the old or the new manifest,
+/// never a torn one.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CheckpointManifest {
+    /// Canonical job-identity string (grid geometry, kernel parameters,
+    /// sample/channel counts, variant, tile height). Resume refuses to mix
+    /// checkpoints across different identities.
+    pub job: String,
+    /// `(original group index, streaming CRC-32 of that group's cube bytes
+    /// in write order)`, sorted by group.
+    pub groups_done: Vec<(usize, u32)>,
+}
+
+impl CheckpointManifest {
+    pub fn new(job: impl Into<String>) -> Self {
+        CheckpointManifest { job: job.into(), groups_done: Vec::new() }
+    }
+
+    pub fn job_crc(&self) -> u32 {
+        crc32(self.job.as_bytes())
+    }
+
+    /// CRC of the finished-group's cube bytes, if the group is recorded.
+    pub fn done_crc(&self, group: usize) -> Option<u32> {
+        self.groups_done.iter().find(|(g, _)| *g == group).map(|&(_, c)| c)
+    }
+
+    pub fn is_done(&self, group: usize) -> bool {
+        self.done_crc(group).is_some()
+    }
+
+    /// Record a finished group (idempotent; keeps the list sorted).
+    pub fn record(&mut self, group: usize, crc: u32) {
+        match self.groups_done.binary_search_by_key(&group, |&(g, _)| g) {
+            Ok(i) => self.groups_done[i] = (group, crc),
+            Err(i) => self.groups_done.insert(i, (group, crc)),
+        }
+    }
+
+    /// Canonical digest the manifest CRC covers: independent of JSON
+    /// formatting, so a load + save round trip can never drift.
+    fn digest(&self) -> u32 {
+        let mut s = format!("hegrid-checkpoint-v{MANIFEST_VERSION}|{:08x}|", self.job_crc());
+        for &(g, c) in &self.groups_done {
+            s.push_str(&format!("g{g}:{c:08x}|"));
+        }
+        crc32(s.as_bytes())
+    }
+
+    fn to_json(&self) -> Json {
+        let groups: Vec<Json> = self
+            .groups_done
+            .iter()
+            .map(|&(g, c)| {
+                Json::obj(vec![("group", Json::num(g as f64)), ("crc", Json::num(c as f64))])
+            })
+            .collect();
+        Json::obj(vec![
+            ("version", Json::num(MANIFEST_VERSION as f64)),
+            ("job", Json::str(self.job.clone())),
+            ("job_crc", Json::num(self.job_crc() as f64)),
+            ("groups_done", Json::Arr(groups)),
+            ("crc", Json::num(self.digest() as f64)),
+        ])
+    }
+
+    /// Atomically persist to `dir/manifest.json` (temp file + rename).
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        let path = dir.join(MANIFEST_FILE);
+        let tmp = dir.join(format!("{MANIFEST_FILE}.tmp"));
+        let ctx = tmp.display().to_string();
+        {
+            let mut f = File::create(&tmp).map_err(HegridError::io(ctx.clone()))?;
+            f.write_all(self.to_json().to_pretty().as_bytes())
+                .map_err(HegridError::io(ctx.clone()))?;
+            f.sync_all().map_err(HegridError::io(ctx.clone()))?;
+        }
+        std::fs::rename(&tmp, &path).map_err(HegridError::io(path.display().to_string()))
+    }
+
+    /// Load and CRC-verify `dir/manifest.json`. A digest mismatch is a typed
+    /// [`HegridError::Corrupt`]: resume fails loudly instead of silently
+    /// re-gridding (or trusting) a damaged checkpoint.
+    pub fn load(dir: &Path) -> Result<CheckpointManifest> {
+        let path = dir.join(MANIFEST_FILE);
+        let ctx = path.display().to_string();
+        let text = std::fs::read_to_string(&path).map_err(HegridError::io(ctx.clone()))?;
+        let v = crate::json::parse(&text)?;
+        let version = v.req_usize("version")?;
+        if version != MANIFEST_VERSION {
+            return Err(HegridError::Format(format!(
+                "{ctx}: unsupported checkpoint manifest version {version}"
+            )));
+        }
+        let job = v.req_str("job")?.to_string();
+        let mut groups_done = Vec::new();
+        for e in v.req_arr("groups_done")? {
+            let g = e.req_usize("group")?;
+            let c = e.req_usize("crc")? as u32;
+            groups_done.push((g, c));
+        }
+        groups_done.sort_unstable_by_key(|&(g, _)| g);
+        let manifest = CheckpointManifest { job, groups_done };
+        let stored = v.req_usize("crc")? as u32;
+        if stored != manifest.digest() {
+            return Err(HegridError::Corrupt(format!(
+                "{ctx}: checkpoint manifest CRC mismatch (stored {stored:#010x}, computed {:#010x})",
+                manifest.digest()
+            )));
+        }
+        let stored_job = v.req_usize("job_crc")? as u32;
+        if stored_job != manifest.job_crc() {
+            return Err(HegridError::Corrupt(format!(
+                "{ctx}: checkpoint manifest job CRC mismatch"
+            )));
+        }
+        Ok(manifest)
+    }
+}
+
+/// Monotonic counter for anonymous spill-cube names (no clock, no RNG).
+static ANON_CUBES: AtomicU64 = AtomicU64::new(0);
+
+/// Path for an anonymous (non-checkpointed) spill cube, unique per process.
+pub fn anonymous_cube_path() -> PathBuf {
+    let n = ANON_CUBES.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("hegrid_cube_{}_{n}.bin", std::process::id()))
+}
+
+/// A finished tiled run's output cube, ready to be normalised into
+/// [`SkyMap`]s one channel at a time (bounded memory: one acc row + the
+/// wsum row resident per read). Anonymous cubes are deleted on drop;
+/// checkpointed cubes are kept.
+pub struct CubeHandle {
+    cube: CubeFile,
+    spec: GridSpec,
+    cleanup: bool,
+}
+
+impl CubeHandle {
+    pub fn new(cube: CubeFile, spec: GridSpec, cleanup: bool) -> CubeHandle {
+        debug_assert_eq!(cube.n_cells(), spec.n_cells());
+        CubeHandle { cube, spec, cleanup }
+    }
+
+    pub fn path(&self) -> &Path {
+        self.cube.path()
+    }
+
+    pub fn spec(&self) -> &GridSpec {
+        &self.spec
+    }
+
+    pub fn n_channels(&self) -> usize {
+        self.cube.n_channels()
+    }
+
+    /// Bytes spilled into the cube by the run that produced this handle.
+    pub fn spill_bytes(&self) -> u64 {
+        self.cube.spill_bytes()
+    }
+
+    /// Normalise channel `ch` into a map — the same
+    /// [`SkyMap::from_accumulators`] arithmetic as the untiled path, so the
+    /// result is bit-identical to it.
+    pub fn read_map(&self, ch: usize) -> Result<SkyMap> {
+        let n = self.cube.n_cells();
+        let mut acc = Vec::new();
+        let mut wsum = Vec::new();
+        self.cube.read_channel_band(ch, 0, n, &mut acc)?;
+        self.cube.read_wsum_band(0, n, &mut wsum)?;
+        SkyMap::from_accumulators(self.spec.clone(), &acc, &wsum)
+    }
+
+    /// All channels as maps (materialises the full output — callers that
+    /// only need per-channel access should iterate [`CubeHandle::read_map`]).
+    pub fn read_all_maps(&self) -> Result<Vec<SkyMap>> {
+        (0..self.n_channels()).map(|c| self.read_map(c)).collect()
+    }
+
+    /// Keep the cube on disk (disarm anonymous cleanup) and return its path.
+    pub fn keep(mut self) -> PathBuf {
+        self.cleanup = false;
+        self.cube.path().to_path_buf()
+    }
+}
+
+impl Drop for CubeHandle {
+    fn drop(&mut self) {
+        if self.cleanup {
+            let _ = std::fs::remove_file(self.cube.path());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("hegrid_checkpoint_test").join(name);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn cube_bands_round_trip() {
+        let dir = tmp_dir("cube");
+        let path = dir.join(CUBE_FILE);
+        let cube = CubeFile::create(&path, 2, 10).unwrap();
+        assert_eq!(CubeFile::total_bytes(2, 10), 3 * 10 * 8);
+        let mut digest = Crc32::new();
+        cube.write_channel_band(0, 0, &[1.0, 2.0, 3.0], Some(&mut digest)).unwrap();
+        cube.write_channel_band(1, 4, &[4.0, 5.0], None).unwrap();
+        cube.write_wsum_band(8, &[0.5, 0.25], None).unwrap();
+        let mut out = Vec::new();
+        cube.read_channel_band(0, 0, 4, &mut out).unwrap();
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 0.0]);
+        cube.read_channel_band(1, 4, 2, &mut out).unwrap();
+        assert_eq!(out, vec![4.0, 5.0]);
+        cube.read_wsum_band(7, 3, &mut out).unwrap();
+        assert_eq!(out, vec![0.0, 0.5, 0.25]);
+        assert_eq!(cube.spill_bytes(), (3 + 2 + 2) * 8);
+        // The digest saw exactly the written bytes.
+        assert_eq!(digest.finalize(), crc32(&f64s_to_le(&[1.0, 2.0, 3.0])));
+        // Reopen with the right/wrong shape.
+        drop(cube);
+        CubeFile::open(&path, 2, 10).unwrap();
+        match CubeFile::open(&path, 3, 10) {
+            Err(HegridError::Corrupt(m)) => assert!(m.contains("expected")),
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn manifest_round_trip_and_corruption() {
+        let dir = tmp_dir("manifest");
+        let mut m = CheckpointManifest::new("job-identity-v1");
+        m.record(2, 0xDEAD_BEEF);
+        m.record(0, 17);
+        m.record(2, 0xBEEF_DEAD); // overwrite keeps one entry
+        assert_eq!(m.groups_done, vec![(0, 17), (2, 0xBEEF_DEAD)]);
+        assert!(m.is_done(0) && !m.is_done(1));
+        m.save(&dir).unwrap();
+        let back = CheckpointManifest::load(&dir).unwrap();
+        assert_eq!(back, m);
+
+        // Flip a byte inside the stored CRC value: typed Corrupt.
+        let path = dir.join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let bad = text.replacen("\"job\": \"job-identity-v1\"", "\"job\": \"job-identity-v2\"", 1);
+        assert_ne!(text, bad, "substitution must hit");
+        std::fs::write(&path, bad).unwrap();
+        match CheckpointManifest::load(&dir) {
+            Err(HegridError::Corrupt(msg)) => assert!(msg.contains("CRC"), "{msg}"),
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cube_handle_cleanup_and_keep() {
+        let spec = GridSpec::centered(30.0, 41.0, 4, 3, 0.25);
+        let path = anonymous_cube_path();
+        let cube = CubeFile::create(&path, 1, spec.n_cells()).unwrap();
+        cube.write_channel_band(0, 0, &[2.0; 12], None).unwrap();
+        cube.write_wsum_band(0, &[2.0; 12], None).unwrap();
+        let handle = CubeHandle::new(cube, spec.clone(), true);
+        let map = handle.read_map(0).unwrap();
+        assert!(map.values().iter().all(|&v| v == 1.0));
+        drop(handle);
+        assert!(!path.exists(), "anonymous cube removed on drop");
+
+        let path2 = anonymous_cube_path();
+        assert_ne!(path, path2, "anonymous paths are unique");
+        let cube = CubeFile::create(&path2, 1, spec.n_cells()).unwrap();
+        let handle = CubeHandle::new(cube, spec, true);
+        let kept = handle.keep();
+        assert!(kept.exists(), "kept cube survives drop");
+        std::fs::remove_file(kept).unwrap();
+    }
+}

@@ -143,6 +143,21 @@ pub struct HgdReader {
 
 impl HgdReader {
     pub fn open(path: &Path) -> Result<HgdReader> {
+        Self::open_inner(path, true)
+    }
+
+    /// Reopen a path that an earlier [`HgdReader::open`] already
+    /// length-validated, skipping the file-length stat. This is the pooled
+    /// reader-miss path of [`crate::data::HgdStreamSource`]: without it a
+    /// resumed many-group run re-stats the dataset once per pool miss (up
+    /// to once per channel group). Every block read still verifies its CRC,
+    /// so a file truncated *after* the validated open surfaces as a typed
+    /// read/CRC error instead of going unnoticed.
+    pub(crate) fn reopen_validated(path: &Path) -> Result<HgdReader> {
+        Self::open_inner(path, false)
+    }
+
+    fn open_inner(path: &Path, check_len: bool) -> Result<HgdReader> {
         let ctx = path.display().to_string();
         let file = File::open(path).map_err(HegridError::io(ctx.clone()))?;
         let mut file = BufReader::new(file);
@@ -172,18 +187,22 @@ impl HgdReader {
         // so a short file can be diagnosed now instead of as a read error
         // mid-stream. Widened arithmetic: n_samples/n_channels come straight
         // from the (possibly hostile) header, so the product must not wrap.
-        let expected = coords_offset as u128
-            + (n_samples as u128 * 16 + 4)
-            + n_channels as u128 * (n_samples as u128 * 4 + 4);
-        let actual = file
-            .get_ref()
-            .metadata()
-            .map_err(HegridError::io(ctx.clone()))?
-            .len();
-        if (actual as u128) < expected {
-            return Err(HegridError::Corrupt(format!(
-                "{ctx}: truncated HGD file ({actual} bytes, header declares {expected})"
-            )));
+        // Validated re-opens (`reopen_validated`) skip the stat — the first
+        // open of the path already ran it.
+        if check_len {
+            let expected = coords_offset as u128
+                + (n_samples as u128 * 16 + 4)
+                + n_channels as u128 * (n_samples as u128 * 4 + 4);
+            let actual = file
+                .get_ref()
+                .metadata()
+                .map_err(HegridError::io(ctx.clone()))?
+                .len();
+            if (actual as u128) < expected {
+                return Err(HegridError::Corrupt(format!(
+                    "{ctx}: truncated HGD file ({actual} bytes, header declares {expected})"
+                )));
+            }
         }
         Ok(HgdReader {
             file,

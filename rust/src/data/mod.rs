@@ -8,9 +8,11 @@
 //! each CRC-32 protected, channel blocks independently seekable so pipelines
 //! can stream one channel at a time (the T1 "load" stage of Fig 8).
 
+pub mod checkpoint;
 pub mod hgd;
 pub mod source;
 
+pub use checkpoint::{CheckpointManifest, CubeFile, CubeHandle};
 pub use hgd::{HgdReader, HgdWriter};
 pub use source::{ChannelSource, HgdStreamSource, InMemorySource};
 

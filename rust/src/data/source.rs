@@ -139,7 +139,10 @@ impl HgdStreamSource {
         if let Some(r) = self.readers.lock().unwrap().pop() {
             return Ok(r);
         }
-        HgdReader::open(&self.path)
+        // Pool miss: `open` already length-validated this path, so the
+        // fresh handle skips the per-open truncation stat (a resumed
+        // many-group run would otherwise re-stat once per group).
+        HgdReader::reopen_validated(&self.path)
     }
 
     fn checkin(&self, reader: HgdReader) {

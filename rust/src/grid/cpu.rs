@@ -68,6 +68,16 @@ pub struct CpuGridder {
     pub channel_block: usize,
     /// SIMD ISA request (default: the process-wide dispatched backend).
     pub simd: SimdIsa,
+    /// Output-tile height in grid rows (0 = one full-map tile). With `R`
+    /// rows per tile the sweep runs band by band: each band's sorted-sample
+    /// span is resolved with one ring-band probe + binary search
+    /// ([`crate::healpix::Healpix::ring_pix_span`]), only that span's value
+    /// matrix is materialised, and the band accumulator is freed once the
+    /// band is normalised — so peak working memory is
+    /// `O(band span · channels)` instead of `O(n_samples · channels)`.
+    /// Results are bit-identical for every tile height (the untiled path is
+    /// literally the one-band case).
+    pub tile_rows: usize,
 }
 
 /// Per-worker scratch reused across cells — the former per-cell heap
@@ -90,6 +100,7 @@ impl CpuGridder {
             workers: crate::util::threads::default_parallelism(),
             channel_block: 0,
             simd: SimdIsa::Auto,
+            tile_rows: 0,
         }
     }
 
@@ -106,6 +117,12 @@ impl CpuGridder {
     /// Force a SIMD backend (forced-ISA equivalence tests, `--simd`).
     pub fn with_simd(mut self, isa: SimdIsa) -> Self {
         self.simd = isa;
+        self
+    }
+
+    /// Grid in row-band tiles of `rows` grid rows (0 = one full-map tile).
+    pub fn with_tile_rows(mut self, rows: usize) -> Self {
+        self.tile_rows = rows;
         self
     }
 
@@ -133,113 +150,164 @@ impl CpuGridder {
         let n_ch = channels.len();
         let backend: &'static dyn SimdBackend = self.simd.resolve();
         let lanes = backend.lanes();
-
-        // Permute + transpose once into the lane-padded sample-major matrix
-        // (vals.row(j)[c] = channels[c][perm[j]]).
-        let vals: ValueMatrix = shared.value_matrix(channels, lanes, self.workers);
-        let stride = vals.stride;
-        let block = self.effective_channel_block(stride, lanes);
+        let rows_per_band = if self.tile_rows == 0 {
+            self.spec.nlat
+        } else {
+            self.tile_rows.min(self.spec.nlat)
+        };
 
         // Separable per-row/per-column cell trig (satellite of the SIMD
         // overhaul: nlat + nlon sin_cos calls instead of nlat·nlon).
         let trig: CellTrig = self.spec.trig();
+        // Prefilter radius in squared-chord space, padded so rounding at
+        // the boundary always defers to the exact d² cut inside
+        // `ConvKernel::weight` (see `chord2_prefilter_bound`).
+        let chord2_max = chord2_prefilter_bound(self.kernel.support);
 
-        // acc[ch][cell], wsum[cell]; written by disjoint cells in parallel.
-        let mut acc = vec![0.0f64; n_ch * n_cells];
-        let mut wsum = vec![0.0f64; n_cells];
-        {
-            let acc_w = DisjointWriter::new(&mut acc);
-            let wsum_w = DisjointWriter::new(&mut wsum);
-            let vals = &vals;
-            let trig = &trig;
-            // Prefilter radius in squared-chord space, padded so rounding at
-            // the boundary always defers to the exact d² cut inside
-            // `ConvKernel::weight` (see `chord2_prefilter_bound`).
-            let chord2_max = chord2_prefilter_bound(self.kernel.support);
-            parallel_items_scoped(
-                n_cells,
-                self.workers,
-                adaptive_claim_block(n_cells, self.workers),
-                || CellScratch {
-                    ranges: Vec::new(),
-                    cand: Vec::new(),
-                    contrib: Vec::new(),
-                    local: vec![0.0f64; block],
-                },
-                |scratch, cell| {
-                    let (clon, clat) = trig.lonlat(cell);
-                    shared.healpix.query_disc_rings_into(
-                        FRAC_PI_2 - clat,
-                        clon,
-                        self.kernel.support,
-                        &mut scratch.ranges,
-                    );
-                    let cu = trig.unit(cell);
-                    let clat_cos = trig.cos_lat(cell);
-                    // ① batched chord² prefilter with compare-mask
-                    // compaction into the candidate list.
-                    scratch.cand.clear();
-                    for r in &scratch.ranges {
-                        let (a, b) = shared.samples_in_pix_range(r.lo, r.hi);
-                        backend.chord2_filter(
-                            &shared.unit_x[a..b],
-                            &shared.unit_y[a..b],
-                            &shared.unit_z[a..b],
-                            &cu,
-                            chord2_max,
-                            a as u32,
-                            &mut scratch.cand,
-                        );
-                    }
-                    // ② exact weight per candidate (one `asin` per accept).
-                    let mut w_tot = 0.0f64;
-                    scratch.contrib.clear();
-                    for &(c2, j) in &scratch.cand {
-                        let d = chord2_to_arc(c2);
-                        let j = j as usize;
-                        let w = self.kernel.weight(
-                            d * d,
-                            (shared.slon64[j] - clon) * clat_cos,
-                            shared.slat64[j] - clat,
-                        );
-                        if w != 0.0 {
-                            w_tot += w;
-                            scratch.contrib.push((w, j as u32));
-                        }
-                    }
-                    unsafe { wsum_w.write(cell, w_tot) };
-                    // ③ blocked lane-per-channel accumulation: B accumulators
-                    // swept over the contributor list, unit-stride in the
-                    // lane-padded rows — no tail handling (pad lanes
-                    // accumulate exact zeros that are never written out).
-                    let mut c0 = 0;
-                    while c0 < n_ch {
-                        let wb = block.min(stride - c0);
-                        let local = &mut scratch.local[..wb];
-                        local.fill(0.0);
-                        backend.accumulate_contribs(
-                            local,
-                            &scratch.contrib,
-                            vals.as_slice(),
-                            stride,
-                            c0,
-                        );
-                        for (k, &sum) in local.iter().enumerate().take(n_ch - c0) {
-                            unsafe { acc_w.write((c0 + k) * n_cells + cell, sum) };
-                        }
-                        c0 += wb;
-                    }
-                },
+        // Final normalised outputs, filled band by band; only the current
+        // band's accumulator and sample-span value matrix are live at once.
+        let mut values: Vec<Vec<f64>> = (0..n_ch).map(|_| vec![f64::NAN; n_cells]).collect();
+        let mut weights = vec![0.0f64; n_cells];
+        let mut band_acc: Vec<f64> = Vec::new();
+        let mut band_wsum: Vec<f64> = Vec::new();
+
+        let mut r0 = 0usize;
+        while r0 < self.spec.nlat {
+            let r1 = (r0 + rows_per_band).min(self.spec.nlat);
+            let cell0 = r0 * self.spec.nlon;
+            let band_cells = (r1 - r0) * self.spec.nlon;
+            // Route the band to its sorted-sample slice: rows are
+            // iso-latitude and pixel ids are ring-major in colatitude, so
+            // one padded ring-band probe + one binary search bounds every
+            // sample any cell of the band can touch (`ring_pix_span` is a
+            // superset of the per-cell disc queries below by construction).
+            let lat_s = self.spec.cell_center(r0, 0).1;
+            let lat_n = self.spec.cell_center(r1 - 1, 0).1;
+            let (pix_lo, pix_hi) = shared.healpix.ring_pix_span(
+                FRAC_PI_2 - lat_n,
+                FRAC_PI_2 - lat_s,
+                self.kernel.support,
             );
+            let (span_a, span_b) = shared.samples_in_pix_range(pix_lo, pix_hi);
+
+            // Permute + transpose the span into the lane-padded sample-major
+            // matrix (vals.row(j - span_a)[c] = channels[c][perm[j]]).
+            let vals: ValueMatrix =
+                shared.value_matrix_range(channels, lanes, self.workers, span_a, span_b);
+            let stride = vals.stride;
+            let block = self.effective_channel_block(stride, lanes);
+
+            // acc[ch][band cell], wsum[band cell]; disjoint cells in parallel.
+            band_acc.clear();
+            band_acc.resize(n_ch * band_cells, 0.0);
+            band_wsum.clear();
+            band_wsum.resize(band_cells, 0.0);
+            {
+                let acc_w = DisjointWriter::new(&mut band_acc);
+                let wsum_w = DisjointWriter::new(&mut band_wsum);
+                let vals = &vals;
+                let trig = &trig;
+                parallel_items_scoped(
+                    band_cells,
+                    self.workers,
+                    adaptive_claim_block(band_cells, self.workers),
+                    || CellScratch {
+                        ranges: Vec::new(),
+                        cand: Vec::new(),
+                        contrib: Vec::new(),
+                        local: vec![0.0f64; block],
+                    },
+                    |scratch, bc| {
+                        let cell = cell0 + bc;
+                        let (clon, clat) = trig.lonlat(cell);
+                        shared.healpix.query_disc_rings_into(
+                            FRAC_PI_2 - clat,
+                            clon,
+                            self.kernel.support,
+                            &mut scratch.ranges,
+                        );
+                        let cu = trig.unit(cell);
+                        let clat_cos = trig.cos_lat(cell);
+                        // ① batched chord² prefilter with compare-mask
+                        // compaction into the candidate list.
+                        scratch.cand.clear();
+                        for r in &scratch.ranges {
+                            let (a, b) = shared.samples_in_pix_range(r.lo, r.hi);
+                            backend.chord2_filter(
+                                &shared.unit_x[a..b],
+                                &shared.unit_y[a..b],
+                                &shared.unit_z[a..b],
+                                &cu,
+                                chord2_max,
+                                a as u32,
+                                &mut scratch.cand,
+                            );
+                        }
+                        // ② exact weight per candidate (one `asin` per accept).
+                        let mut w_tot = 0.0f64;
+                        scratch.contrib.clear();
+                        for &(c2, j) in &scratch.cand {
+                            let d = chord2_to_arc(c2);
+                            let j = j as usize;
+                            let w = self.kernel.weight(
+                                d * d,
+                                (shared.slon64[j] - clon) * clat_cos,
+                                shared.slat64[j] - clat,
+                            );
+                            if w != 0.0 {
+                                w_tot += w;
+                                debug_assert!(
+                                    (span_a..span_b).contains(&j),
+                                    "contributor {j} outside band span [{span_a}, {span_b})"
+                                );
+                                scratch.contrib.push((w, (j - span_a) as u32));
+                            }
+                        }
+                        unsafe { wsum_w.write(bc, w_tot) };
+                        // ③ blocked lane-per-channel accumulation: B
+                        // accumulators swept over the contributor list,
+                        // unit-stride in the lane-padded rows — no tail
+                        // handling (pad lanes accumulate exact zeros that
+                        // are never written out).
+                        let mut c0 = 0;
+                        while c0 < n_ch {
+                            let wb = block.min(stride - c0);
+                            let local = &mut scratch.local[..wb];
+                            local.fill(0.0);
+                            backend.accumulate_contribs(
+                                local,
+                                &scratch.contrib,
+                                vals.as_slice(),
+                                stride,
+                                c0,
+                            );
+                            for (k, &sum) in local.iter().enumerate().take(n_ch - c0) {
+                                unsafe { acc_w.write((c0 + k) * band_cells + bc, sum) };
+                            }
+                            c0 += wb;
+                        }
+                    },
+                );
+            }
+            // Normalise the finished band straight into the output maps
+            // (same `acc / wsum` arithmetic as `SkyMap::from_accumulators`).
+            for (c, out_ch) in values.iter_mut().enumerate() {
+                let row = &band_acc[c * band_cells..(c + 1) * band_cells];
+                let out = &mut out_ch[cell0..cell0 + band_cells];
+                for ((o, &a), &w) in out.iter_mut().zip(row).zip(&band_wsum) {
+                    if w > 0.0 {
+                        *o = a / w;
+                    }
+                }
+            }
+            weights[cell0..cell0 + band_cells].copy_from_slice(&band_wsum);
+            r0 = r1;
         }
-        (0..n_ch)
-            .map(|c| {
-                SkyMap::from_accumulators(
-                    self.spec.clone(),
-                    &acc[c * n_cells..(c + 1) * n_cells],
-                    &wsum,
-                )
-                .expect("accumulator sizes consistent")
+        values
+            .into_iter()
+            .map(|v| {
+                SkyMap::from_parts(self.spec.clone(), v, weights.clone())
+                    .expect("accumulator sizes consistent")
             })
             .collect()
     }
@@ -348,6 +416,31 @@ mod tests {
             for (ma, mb) in base.iter().zip(&m) {
                 for (va, vb) in ma.values().iter().zip(mb.values()) {
                     assert_eq!(va.to_bits(), vb.to_bits(), "block {block}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tile_rows_do_not_change_results() {
+        let (spec, kernel) = small_setup();
+        let d = SimConfig::quick_preset().generate();
+        let shared = SharedComponent::for_kernel(&d.lons, &d.lats, &kernel).unwrap();
+        let base =
+            CpuGridder::new(spec.clone(), kernel.clone()).grid_with_shared(&shared, &d.channels);
+        for rows in [1usize, 2, 5, spec.nlat, spec.nlat * 3] {
+            let m = CpuGridder::new(spec.clone(), kernel.clone())
+                .with_tile_rows(rows)
+                .grid_with_shared(&shared, &d.channels);
+            for (ma, mb) in base.iter().zip(&m) {
+                for (va, vb) in ma.values().iter().zip(mb.values()) {
+                    assert!(
+                        (va.is_nan() && vb.is_nan()) || va.to_bits() == vb.to_bits(),
+                        "tile_rows {rows}: {va} != {vb}"
+                    );
+                }
+                for (wa, wb) in ma.weights().iter().zip(mb.weights()) {
+                    assert_eq!(wa.to_bits(), wb.to_bits(), "tile_rows {rows}");
                 }
             }
         }

@@ -266,14 +266,33 @@ impl SharedComponent {
     /// allocation, so the SIMD accumulation loop needs no tail handling
     /// (pad lanes accumulate exact zeros that are never written out).
     pub fn value_matrix(&self, channels: &[Vec<f32>], lanes: usize, workers: usize) -> ValueMatrix {
-        let n = self.n_samples();
+        self.value_matrix_range(channels, lanes, workers, 0, self.n_samples())
+    }
+
+    /// Tile-local variant of [`SharedComponent::value_matrix`]: materialise
+    /// only the sorted-sample sub-range `[lo, hi)` — row `j` of the result
+    /// holds sorted sample `lo + j`. The row-band tiled gridder resolves a
+    /// band's sample span once ([`SharedComponent::samples_in_pix_range`])
+    /// and builds this span-sized matrix instead of the full `n_samples`
+    /// one, which is what bounds its value-matrix footprint. Row contents
+    /// are bit-identical to the same rows of the full matrix.
+    pub fn value_matrix_range(
+        &self,
+        channels: &[Vec<f32>],
+        lanes: usize,
+        workers: usize,
+        lo: usize,
+        hi: usize,
+    ) -> ValueMatrix {
+        assert!(lo <= hi && hi <= self.n_samples(), "bad sample range [{lo}, {hi})");
+        let n = hi - lo;
         let n_ch = channels.len();
         let lanes = lanes.max(1);
         let stride = if n_ch == 0 { 0 } else { n_ch.next_multiple_of(lanes) };
         let mut buf = crate::grid::simd::AlignedF32::zeroed(n * stride);
         if n_ch > 0 && n > 0 {
             let w = DisjointWriter::new(&mut buf[..]);
-            let perm = &self.perm;
+            let perm = &self.perm[lo..hi];
             let workers = workers.max(1);
             // This fill is the matrix's first write (`alloc_zeroed` maps
             // pages lazily), so the claim granularity doubles as the NUMA
@@ -470,6 +489,23 @@ mod tests {
         // Degenerate shapes.
         let empty = sc.value_matrix(&[], 4, 2);
         assert_eq!((empty.n_ch, empty.stride, empty.as_slice().len()), (0, 0, 0));
+    }
+
+    #[test]
+    fn value_matrix_range_matches_full_matrix_rows() {
+        let (lons, lats) = random_coords(300, 41);
+        let sc = SharedComponent::build(&lons, &lats, 0.02, 2).unwrap();
+        let channels: Vec<Vec<f32>> =
+            (0..3).map(|c| (0..300).map(|i| (c * 1000 + i) as f32).collect()).collect();
+        let full = sc.value_matrix(&channels, 4, 2);
+        for (lo, hi) in [(0usize, 300usize), (17, 203), (100, 100), (299, 300)] {
+            let sub = sc.value_matrix_range(&channels, 4, 2, lo, hi);
+            assert_eq!(sub.stride, full.stride);
+            assert_eq!(sub.as_slice().len(), (hi - lo) * full.stride);
+            for j in lo..hi {
+                assert_eq!(sub.row(j - lo), full.row(j), "row {j} of [{lo}, {hi})");
+            }
+        }
     }
 
     #[test]

@@ -304,6 +304,34 @@ impl Healpix {
         }
     }
 
+    /// Inclusive global-pixel span `[lo, hi]` that contains every range
+    /// [`Self::query_disc_rings`] can emit for a disc of `radius` centred at
+    /// any colatitude in `[theta_lo, theta_hi]` (any φ). Rings are emitted in
+    /// ascending pixel-id order and a ring's pixels are contiguous, so the
+    /// span is the first pixel of the highest candidate ring through the
+    /// last pixel of the lowest — computed with the same padded ring-band
+    /// algebra as the disc query itself. One such probe routes a whole
+    /// row-band tile of output cells to its sorted-sample slice (the tiled
+    /// gridder's per-band binary search).
+    pub fn ring_pix_span(&self, theta_lo: f64, theta_hi: f64, radius: f64) -> (u64, u64) {
+        debug_assert!(theta_lo <= theta_hi);
+        let r = radius + self.max_pixrad_bound();
+        if r >= PI {
+            return (0, self.npix - 1);
+        }
+        let t_lo = (theta_lo - r).max(0.0);
+        let t_hi = (theta_hi + r).min(PI);
+        let ring_lo = self.ring_above(t_lo.cos()).max(1);
+        let ring_hi = self.ring_below(t_hi.cos()).min(self.n_rings());
+        if ring_lo > ring_hi {
+            // Degenerate padded band; stay conservative.
+            return (0, self.npix - 1);
+        }
+        let lo = self.ring_info(ring_lo).start;
+        let hi_info = self.ring_info(ring_hi);
+        (lo, hi_info.start + hi_info.count - 1)
+    }
+
     /// Append the global-id range(s) of pixels on `ring` whose centers lie in
     /// `φ0 ± Δφ` (padded by one pixel on each side).
     fn push_ring_phi_range(&self, info: &RingInfo, phi0: f64, dphi: f64, out: &mut Vec<PixRange>) {

@@ -14,7 +14,15 @@
 //! --channels-per-dispatch C --gamma G --block B --cpu-block B
 //! --simd auto|scalar|avx2|neon --affinity none|compact|spread
 //! --kernel gauss1d|gauss2d|tapered_sinc --profile v|m --oversample F
-//! --no-share --artifacts DIR --prefetch-depth D --io-workers N`.
+//! --no-share --artifacts DIR --prefetch-depth D --io-workers N
+//! --tile-rows R --checkpoint DIR --resume`.
+//!
+//! `--tile-rows R` turns on the bounded-memory tiled reducer: the output is
+//! accumulated in R-row bands that stream into an on-disk cube (0 = legacy
+//! untiled path; results are bit-identical either way). `--checkpoint DIR`
+//! makes the tiled run persist the cube + a CRC'd manifest per finished
+//! channel group; `--resume` (with the same `--checkpoint DIR`) skips the
+//! groups the manifest records and completes the remaining ones.
 //!
 //! `--pipeline-width auto` turns on the occupancy-driven width controller
 //! (see docs/tuning.md): the coordinator starts at width 2 and shrinks/grows
@@ -42,7 +50,7 @@ const VALUE_OPTS: &[&str] = &[
     "streams", "pipelines", "pipeline-width", "pipeline-width-max", "channels-per-dispatch",
     "gamma", "block", "cpu-block", "simd", "affinity", "kernel", "profile", "oversample",
     "artifacts", "threads", "variant", "prefetch-depth", "io-workers", "baseline", "current",
-    "threshold",
+    "threshold", "tile-rows", "checkpoint",
 ];
 
 fn main() -> ExitCode {
@@ -112,6 +120,7 @@ fn engine_config(args: &cli::Args) -> Result<HegridConfig> {
             false,
         ),
     };
+    let d = HegridConfig::default();
     let mut cfg = HegridConfig {
         artifacts_dir: args.get_or("artifacts", "artifacts").to_string(),
         streams: args.get_usize("streams", 0)?,
@@ -128,6 +137,12 @@ fn engine_config(args: &cli::Args) -> Result<HegridConfig> {
         executor_affinity: args.get_or("affinity", "none").to_string(),
         prefetch_depth: args.get_usize("prefetch-depth", 2)?,
         io_workers: args.get_usize("io-workers", 0)?,
+        output_tile_rows: args.get_usize("tile-rows", 0)?,
+        checkpoint_dir: args.get_or("checkpoint", "").to_string(),
+        resume: args.flag("resume"),
+        width_saturation: d.width_saturation,
+        width_busy_grow: d.width_busy_grow,
+        width_idle_shrink: d.width_idle_shrink,
         kernel_type: args.get_or("kernel", "gauss1d").to_string(),
         variant_override: args.get_or("variant", "").to_string(),
         kernel_sigma_beam: 0.5,
@@ -246,6 +261,16 @@ fn cmd_grid(args: &cli::Args) -> Result<()> {
         report.io_busy_s,
         report.io_overlap_s
     );
+    if report.tile_rows > 0 {
+        println!(
+            "  tiled: rows={} bands={} spill={:.1}MB merge={:.3}s skipped_groups={}",
+            report.tile_rows,
+            report.tile_bands,
+            report.tile_spill_bytes as f64 / 1e6,
+            report.tile_merge_s,
+            report.groups_skipped
+        );
+    }
     {
         use hegrid::coordinator::PipeStage;
         let occ: Vec<String> = PipeStage::ALL

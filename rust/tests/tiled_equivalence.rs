@@ -1,0 +1,228 @@
+//! Tiled-vs-untiled equivalence: the tiled output path (row-band tiles,
+//! spill-to-disk reduce, checkpoints) must produce maps **bit-identical**
+//! to the untiled coordinator for every tile height and pipeline width —
+//! including a mid-run crash resumed from the checkpoint manifest. The CI
+//! forced-ISA legs re-run this whole suite under `HEGRID_SIMD=scalar`/
+//! `avx2`, extending the matrix across kernel backends; the memory-bounded
+//! CI leg re-runs it under `ulimit -v` with `HEGRID_STRESS=1` to unlock the
+//! stress workload whose *untiled* accumulators would not fit the limit.
+
+use std::path::PathBuf;
+
+use hegrid::config::HegridConfig;
+use hegrid::coordinator::{GriddingJob, HegridEngine};
+use hegrid::data::{CheckpointManifest, CubeFile, InMemorySource};
+use hegrid::sim::SimConfig;
+use hegrid::sky::SkyMap;
+use hegrid::util::error::HegridError;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("hegrid_tiled_it").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn engine_config() -> Option<HegridConfig> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if hegrid::runtime::backend_name() == "pjrt" && !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: the PJRT backend needs `make artifacts`");
+        return None;
+    }
+    let mut cfg = HegridConfig::default();
+    cfg.artifacts_dir = dir.display().to_string();
+    cfg.streams = 2;
+    cfg.pipelines = 2;
+    cfg.channels_per_dispatch = 4;
+    Some(cfg)
+}
+
+fn assert_bit_identical(a: &[SkyMap], b: &[SkyMap], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: map count");
+    for (c, (ma, mb)) in a.iter().zip(b).enumerate() {
+        for (i, (va, vb)) in ma.values().iter().zip(mb.values()).enumerate() {
+            assert_eq!(va.to_bits(), vb.to_bits(), "{what}: channel {c} cell {i}: {va} vs {vb}");
+        }
+    }
+}
+
+/// Tile heights {1 row, a prime, the full map, over-tall (clamped)} ×
+/// widths {fixed 1, adaptive} all reproduce the untiled maps bit for bit,
+/// and an anonymous tiled run spills exactly one cube worth of bytes.
+#[test]
+fn tiled_maps_bit_identical_to_untiled() {
+    let Some(base) = engine_config() else { return };
+    let d = SimConfig::quick_preset().with_channels(10).generate();
+    let job = GriddingJob::for_dataset(&d, &base).unwrap();
+    let (nlat, n_cells) = (job.spec.nlat, job.spec.n_cells());
+    let engine = HegridEngine::new(base.clone()).unwrap();
+    let (untiled, rep0) = engine.grid(&d, &job).unwrap();
+    assert_eq!(rep0.tile_rows, 0, "untiled run must not report tiling");
+
+    for tile_rows in [1usize, 7, nlat, nlat + 100] {
+        for auto in [false, true] {
+            let mut cfg = base.clone();
+            cfg.output_tile_rows = tile_rows;
+            if auto {
+                cfg.pipeline_width_auto = true;
+            } else {
+                cfg.pipeline_width = 1;
+            }
+            let tiled_engine = HegridEngine::new(cfg).unwrap();
+            let (tiled, rep) = tiled_engine.grid(&d, &job).unwrap();
+            let what = format!("tile_rows={tile_rows} auto={auto}");
+            assert_bit_identical(&untiled, &tiled, &what);
+            let clamped = tile_rows.min(nlat);
+            assert_eq!(rep.tile_rows, clamped, "{what}");
+            assert_eq!(rep.tile_bands, nlat.div_ceil(clamped), "{what}");
+            // Every channel row and the wsum row hit the cube exactly once.
+            assert_eq!(rep.tile_spill_bytes, CubeFile::total_bytes(10, n_cells), "{what}");
+        }
+    }
+}
+
+/// A checkpointed run that "crashes" after its first channel group (the
+/// manifest records only group 0; the other groups' cube bytes are torn)
+/// resumes to maps bit-identical to untiled, skipping the finished group.
+#[test]
+fn crash_resume_is_bit_identical_and_skips_finished_groups() {
+    let Some(base) = engine_config() else { return };
+    let dir = tmp_dir("crash_resume");
+    let d = SimConfig::quick_preset().with_channels(10).generate();
+    let job = GriddingJob::for_dataset(&d, &base).unwrap();
+    let n_cells = job.spec.n_cells();
+
+    let engine = HegridEngine::new(base.clone()).unwrap();
+    let (untiled, _) = engine.grid(&d, &job).unwrap();
+
+    let mut cfg = base.clone();
+    cfg.output_tile_rows = 4;
+    cfg.checkpoint_dir = dir.display().to_string();
+    let (full, rep) = HegridEngine::new(cfg.clone()).unwrap().grid(&d, &job).unwrap();
+    assert_bit_identical(&untiled, &full, "checkpointed tiled run");
+    assert_eq!(rep.groups_skipped, 0);
+    let n_groups = rep.n_groups;
+    assert!(n_groups >= 3, "need several groups to make resume meaningful, got {n_groups}");
+
+    // Simulate the crash: keep only group 0 in the manifest and tear the
+    // cube bytes of a channel belonging to a group past the crash point.
+    let mut m = CheckpointManifest::load(&dir).unwrap();
+    assert_eq!(m.groups_done.len(), n_groups, "full run records every group");
+    m.groups_done.truncate(1);
+    assert!(m.is_done(0) && !m.is_done(1));
+    m.save(&dir).unwrap();
+    let cube = CubeFile::open(&dir.join("cube.bin"), 10, n_cells).unwrap();
+    cube.write_channel_band(9, 0, &vec![1234.5; n_cells.min(64)], None).unwrap();
+    drop(cube);
+
+    let mut resume_cfg = cfg.clone();
+    resume_cfg.resume = true;
+    let (resumed, rep) = HegridEngine::new(resume_cfg.clone()).unwrap().grid(&d, &job).unwrap();
+    assert_bit_identical(&untiled, &resumed, "resumed run");
+    assert_eq!(rep.groups_skipped, 1, "the recorded group is skipped");
+    assert_eq!(rep.n_groups, n_groups - 1, "only pending groups are gridded");
+
+    // Resuming a finished checkpoint grids nothing and still reads back
+    // bit-identical maps.
+    let (again, rep) = HegridEngine::new(resume_cfg).unwrap().grid(&d, &job).unwrap();
+    assert_bit_identical(&untiled, &again, "all-done resume");
+    assert_eq!(rep.groups_skipped, n_groups);
+    assert_eq!(rep.n_groups, 0);
+}
+
+/// Resume re-verifies finished groups against the cube: torn bytes under a
+/// *recorded* group surface as a typed `Corrupt`, never silent reuse.
+#[test]
+fn resume_rejects_torn_cube_bytes_of_a_finished_group() {
+    let Some(base) = engine_config() else { return };
+    let dir = tmp_dir("torn_cube");
+    let d = SimConfig::quick_preset().with_channels(10).generate();
+    let job = GriddingJob::for_dataset(&d, &base).unwrap();
+
+    let mut cfg = base.clone();
+    cfg.output_tile_rows = 4;
+    cfg.checkpoint_dir = dir.display().to_string();
+    HegridEngine::new(cfg.clone()).unwrap().grid(&d, &job).unwrap();
+
+    let cube = CubeFile::open(&dir.join("cube.bin"), 10, job.spec.n_cells()).unwrap();
+    cube.write_channel_band(0, 0, &[1234.5; 8], None).unwrap();
+    drop(cube);
+
+    cfg.resume = true;
+    match HegridEngine::new(cfg).unwrap().grid(&d, &job) {
+        Err(HegridError::Corrupt(msg)) => assert!(msg.contains("CRC"), "{msg}"),
+        Err(other) => panic!("expected Corrupt, got {other}"),
+        Ok(_) => panic!("resume accepted a torn checkpoint cube"),
+    }
+}
+
+/// A checkpoint written with one tile height cannot be resumed with
+/// another: the band geometry is part of the job identity (it fixes each
+/// group's digest write order), so the mismatch is a typed config error.
+#[test]
+fn resume_rejects_mismatched_tile_rows() {
+    let Some(base) = engine_config() else { return };
+    let dir = tmp_dir("job_mismatch");
+    let d = SimConfig::quick_preset().with_channels(10).generate();
+    let job = GriddingJob::for_dataset(&d, &base).unwrap();
+
+    let mut cfg = base.clone();
+    cfg.output_tile_rows = 4;
+    cfg.checkpoint_dir = dir.display().to_string();
+    HegridEngine::new(cfg.clone()).unwrap().grid(&d, &job).unwrap();
+
+    cfg.output_tile_rows = 8;
+    cfg.resume = true;
+    match HegridEngine::new(cfg).unwrap().grid(&d, &job) {
+        Err(HegridError::Config(msg)) => assert!(msg.contains("different job"), "{msg}"),
+        Err(other) => panic!("expected Config, got {other}"),
+        Ok(_) => panic!("resume accepted a checkpoint with another tile height"),
+    }
+}
+
+/// The `ulimit -v` budget of the memory-bounded CI leg, in bytes. The
+/// stress workload is sized so its *untiled* accumulators alone
+/// (`(n_channels + 1) × n_cells × 8`) exceed this budget — the tiled run
+/// completing under it is the bounded-memory guarantee, not a timing.
+const STRESS_ULIMIT_BYTES: u64 = 1_258_291_200; // 1.2 GiB, = `ulimit -v 1228800`
+
+/// Memory-bounded stress run (set `HEGRID_STRESS=1`; the CI leg runs it
+/// under `ulimit -v`). Uses the cube API directly: materialising every map
+/// at once would itself be an untiled-sized allocation.
+#[test]
+fn stress_tiled_run_fits_bounded_memory() {
+    if std::env::var("HEGRID_STRESS").as_deref() != Ok("1") {
+        eprintln!("SKIP: set HEGRID_STRESS=1 to run the bounded-memory stress workload");
+        return;
+    }
+    let Some(mut cfg) = engine_config() else { return };
+    cfg.output_tile_rows = 32;
+
+    let mut sim = SimConfig::quick_preset().with_channels(640);
+    sim.extent_deg = (24.0, 24.0);
+    sim.points = 16_000;
+    let d = sim.generate();
+    let job = GriddingJob::for_dataset(&d, &cfg).unwrap();
+    let n_cells = job.spec.n_cells();
+    let untiled_bytes = CubeFile::total_bytes(d.n_channels(), n_cells);
+    eprintln!(
+        "stress grid: {}x{} cells, {} channels; untiled accumulators {:.2} GiB, limit {:.2} GiB",
+        job.spec.nlon,
+        job.spec.nlat,
+        d.n_channels(),
+        untiled_bytes as f64 / (1u64 << 30) as f64,
+        STRESS_ULIMIT_BYTES as f64 / (1u64 << 30) as f64,
+    );
+    assert!(
+        untiled_bytes > STRESS_ULIMIT_BYTES,
+        "stress workload no longer exceeds the CI ulimit budget — grow it"
+    );
+
+    let engine = HegridEngine::new(cfg).unwrap();
+    let (cube, rep) = engine.grid_source_to_cube(&InMemorySource::new(&d), &job).unwrap();
+    assert_eq!(rep.tile_spill_bytes, untiled_bytes, "one full cube spilled");
+    assert!(rep.tile_bands > 1);
+    // Bounded read-back: one channel at a time.
+    let map = cube.read_map(0).unwrap();
+    assert_eq!(map.values().len(), n_cells);
+}
