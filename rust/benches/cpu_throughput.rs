@@ -441,6 +441,27 @@ fn main() {
                 ("untiled_wall_s", Json::num(ut_wall_s)),
             ]),
         ),
+        // Fault-injection accounting — all zero in a normal run. Nonzero
+        // counters mark the payload as measured under injected faults; the
+        // regression gate treats such payloads as incomparable (pass).
+        (
+            "faults",
+            Json::obj(vec![
+                ("injected", Json::num(hegrid::util::faults::injected_total() as f64)),
+                (
+                    "retried",
+                    Json::num((ut_rep.degradation.retries + ti_rep.degradation.retries) as f64),
+                ),
+                (
+                    "quarantined",
+                    Json::num(
+                        (ut_rep.degradation.quarantined_groups.len()
+                            + ti_rep.degradation.quarantined_groups.len())
+                            as f64,
+                    ),
+                ),
+            ]),
+        ),
         ("measurements", bench.to_json()),
     ]);
     write_bench_json("cpu_gridding", &payload);

@@ -156,6 +156,23 @@ pub fn compare(baseline: &Json, current: &Json, threshold: f64) -> GateReport {
         }
     }
 
+    // A payload recorded with fault injection active measured a degraded run
+    // (retry sleeps, zeroed planes), not the machine's real throughput.
+    // Either side contaminated → incomparable pass; the next clean merge
+    // re-baselines. Absent `faults` block = pre-robustness payload, fine.
+    for (side, p) in [("baseline", baseline), ("current", current)] {
+        let injected = num_at(p, &["faults", "injected"]).unwrap_or(0.0);
+        let retried = num_at(p, &["faults", "retried"]).unwrap_or(0.0);
+        let quarantined = num_at(p, &["faults", "quarantined"]).unwrap_or(0.0);
+        if injected > 0.0 || retried > 0.0 || quarantined > 0.0 {
+            report.incomparable = Some(format!(
+                "{side} payload was recorded under fault injection \
+                 (injected={injected}, retried={retried}, quarantined={quarantined})"
+            ));
+            return report;
+        }
+    }
+
     for &metric in THROUGHPUT_METRICS {
         let b = num_at(baseline, &["throughput", metric]);
         let c = num_at(current, &["throughput", metric]);
@@ -346,6 +363,41 @@ mod tests {
         assert!(r.incomparable.is_none(), "{:?}", r.incomparable);
         assert!(!r.failed(), "{:?}", r.findings);
         assert_eq!(r.findings.len(), 3, "same metric set as without the new fields");
+    }
+
+    #[test]
+    fn faulted_payload_is_incomparable_pass_not_regression() {
+        let add_faults = |mut p: Json, injected: f64| {
+            if let Json::Obj(fields) = &mut p {
+                fields.insert(
+                    "faults".into(),
+                    Json::obj(vec![
+                        ("injected", Json::num(injected)),
+                        ("retried", Json::num(0.0)),
+                        ("quarantined", Json::num(0.0)),
+                    ]),
+                );
+            }
+            p
+        };
+        // A fault-injected baseline measured a degraded run: even a 5x-slower
+        // current must not fail the gate against it.
+        let base = add_faults(payload(1.0e6, 2.5e5, 0.8), 3.0);
+        let cur = add_faults(payload(0.2e6, 0.5e5, 4.0), 0.0);
+        let r = compare(&base, &cur, DEFAULT_THRESHOLD);
+        assert!(r.incomparable.is_some(), "{:?}", r.findings);
+        assert!(!r.failed());
+        // A contaminated *current* is incomparable too.
+        let r = compare(&cur, &base, DEFAULT_THRESHOLD);
+        assert!(r.incomparable.is_some());
+        // All-zero fault counters (the normal case) still gate normally.
+        let clean_base = add_faults(payload(1.0e6, 2.5e5, 0.8), 0.0);
+        let r = compare(&clean_base, &cur, DEFAULT_THRESHOLD);
+        assert!(r.incomparable.is_none());
+        assert!(r.failed(), "real regression still caught");
+        // Pre-robustness payloads (no faults block) stay comparable.
+        let r = compare(&payload(1.0e6, 2.5e5, 0.8), &payload(0.9e6, 2.4e5, 0.9), DEFAULT_THRESHOLD);
+        assert!(r.incomparable.is_none());
     }
 
     #[test]

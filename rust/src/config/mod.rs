@@ -141,6 +141,26 @@ pub struct HegridConfig {
     /// the rest — producing a cube bit-identical to an uninterrupted run.
     /// Requires a non-empty `checkpoint_dir`.
     pub resume: bool,
+    /// Abort the run on the first unrecoverable per-group failure (today's
+    /// semantics; the default). `false` (CLI `--degrade`) quarantines the
+    /// failing channel group instead: its output planes are zeroed, it is
+    /// recorded in `DegradationReport` (and as `failed` in the checkpoint
+    /// manifest, so `--resume` retries exactly the quarantined groups), and
+    /// the run completes with every surviving group bit-identical.
+    pub fail_fast: bool,
+    /// Retries after a failed channel read before the error is terminal
+    /// (transient I/O and CRC errors only; format errors never retry).
+    /// 0 = no retry. Applies in both fail-fast and degrade modes.
+    pub retry_io: usize,
+    /// Base backoff in milliseconds between channel-read retries, doubled
+    /// on each attempt (10 → 10 ms, 20 ms, 40 ms, ...). 0 = retry
+    /// immediately.
+    pub retry_io_backoff_ms: usize,
+    /// Fault-injection spec (`<seed>:<site>@<target>[x<count>][%<prob>]`,
+    /// comma-separated; see `util::faults`). Empty = no injection (the
+    /// `HEGRID_FAULTS` env var is consulted instead). Non-empty specs are
+    /// rejected unless the crate was built with `--features fault-injection`.
+    pub faults: String,
     /// Width governor: a stage counts as saturating its backing resource
     /// when its occupancy reaches `resource_count × width_saturation`
     /// (shrink trigger for both stream-bound T3 and starved-T0 detection).
@@ -187,6 +207,10 @@ impl Default for HegridConfig {
             output_tile_rows: 0,
             checkpoint_dir: String::new(),
             resume: false,
+            fail_fast: true,
+            retry_io: 2,
+            retry_io_backoff_ms: 10,
+            faults: String::new(),
             width_saturation: 0.85,
             width_busy_grow: 0.75,
             width_idle_shrink: 0.35,
@@ -309,6 +333,30 @@ impl HegridConfig {
                 "resume requires a checkpoint_dir (--checkpoint <dir> --resume)".into(),
             ));
         }
+        if self.retry_io > 16 {
+            return Err(HegridError::Config(format!(
+                "retry_io {} out of range 0..=16",
+                self.retry_io
+            )));
+        }
+        if self.retry_io_backoff_ms > 60_000 {
+            return Err(HegridError::Config(format!(
+                "retry_io_backoff_ms {} out of range 0..=60000",
+                self.retry_io_backoff_ms
+            )));
+        }
+        #[cfg(feature = "fault-injection")]
+        if !self.faults.is_empty() {
+            crate::util::faults::FaultPlan::parse(&self.faults)?;
+        }
+        #[cfg(not(feature = "fault-injection"))]
+        if !self.faults.is_empty() {
+            return Err(HegridError::Config(
+                "a fault spec is set but this build has no fault injection \
+                 (rebuild with --features fault-injection)"
+                    .into(),
+            ));
+        }
         for (name, v) in [
             ("width_saturation", self.width_saturation),
             ("width_busy_grow", self.width_busy_grow),
@@ -347,6 +395,10 @@ impl HegridConfig {
             ("output_tile_rows", Json::num(self.output_tile_rows as f64)),
             ("checkpoint_dir", Json::str(self.checkpoint_dir.clone())),
             ("resume", Json::Bool(self.resume)),
+            ("fail_fast", Json::Bool(self.fail_fast)),
+            ("retry_io", Json::num(self.retry_io as f64)),
+            ("retry_io_backoff_ms", Json::num(self.retry_io_backoff_ms as f64)),
+            ("faults", Json::str(self.faults.clone())),
             ("width_saturation", Json::num(self.width_saturation)),
             ("width_busy_grow", Json::num(self.width_busy_grow)),
             ("width_idle_shrink", Json::num(self.width_idle_shrink)),
@@ -418,6 +470,10 @@ impl HegridConfig {
                 .unwrap_or(&d.checkpoint_dir)
                 .to_string(),
             resume: v.get("resume").and_then(|x| x.as_bool()).unwrap_or(d.resume),
+            fail_fast: v.get("fail_fast").and_then(|x| x.as_bool()).unwrap_or(d.fail_fast),
+            retry_io: get_usize("retry_io", d.retry_io)?,
+            retry_io_backoff_ms: get_usize("retry_io_backoff_ms", d.retry_io_backoff_ms)?,
+            faults: v.get("faults").and_then(|x| x.as_str()).unwrap_or(&d.faults).to_string(),
             width_saturation: get_f64("width_saturation", d.width_saturation)?,
             width_busy_grow: get_f64("width_busy_grow", d.width_busy_grow)?,
             width_idle_shrink: get_f64("width_idle_shrink", d.width_idle_shrink)?,
@@ -516,6 +572,14 @@ mod tests {
         c.width_saturation = 0.9;
         c.width_busy_grow = 0.6;
         c.width_idle_shrink = 0.25;
+        c.fail_fast = false;
+        c.retry_io = 5;
+        c.retry_io_backoff_ms = 3;
+        // A non-empty fault spec only validates on instrumented builds.
+        #[cfg(feature = "fault-injection")]
+        {
+            c.faults = "7:read-err@3x2,panic@1".into();
+        }
         let j = c.to_json().to_pretty();
         let back = HegridConfig::from_json(&crate::json::parse(&j).unwrap()).unwrap();
         assert_eq!(back, c);
@@ -551,6 +615,26 @@ mod tests {
         assert!(HegridConfig::from_json(&v).is_err());
         let v = crate::json::parse(r#"{"resume": true}"#).unwrap();
         assert!(HegridConfig::from_json(&v).is_err(), "resume without checkpoint_dir");
+        let v = crate::json::parse(r#"{"retry_io": 17}"#).unwrap();
+        assert!(HegridConfig::from_json(&v).is_err());
+        let v = crate::json::parse(r#"{"retry_io_backoff_ms": 60001}"#).unwrap();
+        assert!(HegridConfig::from_json(&v).is_err());
+        // Malformed fault spec rejected on every build; on builds without
+        // the feature any non-empty spec is rejected.
+        let v = crate::json::parse(r#"{"faults": "no-seed"}"#).unwrap();
+        assert!(HegridConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn robustness_fields_default_to_strict_mode() {
+        let c = HegridConfig::default();
+        assert!(c.fail_fast, "fail-fast is the default: semantics unchanged");
+        assert_eq!((c.retry_io, c.retry_io_backoff_ms), (2, 10));
+        assert!(c.faults.is_empty());
+        let mut c = HegridConfig::default();
+        c.fail_fast = false;
+        c.retry_io = 0;
+        c.validate().unwrap();
     }
 
     #[test]

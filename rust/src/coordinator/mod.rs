@@ -60,7 +60,7 @@ use crate::data::{ChannelSource, Dataset, DatasetMeta, InMemorySource};
 use crate::grid::kernels::ConvKernel;
 use crate::grid::occupancy::{decide_width, StageOccupancy, WidthDecision, WidthPolicy};
 use crate::logging::StageTimes;
-use crate::runtime::prefetch::{overlap_seconds, GroupBatch, Prefetcher};
+use crate::runtime::prefetch::{overlap_seconds, GroupBatch, Prefetcher, ReadPolicy};
 use crate::runtime::{
     ExecuteRequest, ExecuteResponse, Manifest, MemoryPool, StreamPool, VariantInfo, VariantQuery,
 };
@@ -213,6 +213,34 @@ pub struct PipelineReport {
     /// Channel groups skipped on `--resume` (already whole in the
     /// checkpoint and CRC-verified against the cube).
     pub groups_skipped: usize,
+    /// Degraded-run accounting: quarantined groups, retried reads, causes.
+    /// Empty (`!is_degraded()`) on every fault-free or fail-fast run.
+    pub degradation: DegradationReport,
+}
+
+/// What a degrade-mode run (`fail_fast = false`) survived: which channel
+/// groups were quarantined (their output planes zeroed, recorded `failed`
+/// in the checkpoint manifest so `--resume` retries exactly them), why, and
+/// how many channel-read retries the ingest performed. Carried on
+/// [`PipelineReport`]; all-zero on fault-free runs.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DegradationReport {
+    /// Original (job-order) indices of quarantined channel groups, sorted.
+    pub quarantined_groups: Vec<usize>,
+    /// Channel-read retries performed by the T0 workers (successful
+    /// recoveries included — nonzero retries with no quarantined groups
+    /// means transient faults were fully absorbed).
+    pub retries: usize,
+    /// Terminal cause of each quarantined group, parallel to
+    /// `quarantined_groups`.
+    pub causes: Vec<String>,
+}
+
+impl DegradationReport {
+    /// Did any group fail to grid?
+    pub fn is_degraded(&self) -> bool {
+        !self.quarantined_groups.is_empty()
+    }
 }
 
 impl PipelineReport {
@@ -443,6 +471,10 @@ pub struct HegridEngine {
 impl HegridEngine {
     pub fn new(config: HegridConfig) -> Result<HegridEngine> {
         config.validate()?;
+        // Install (or clear) the process-wide fault plan from `config.faults`
+        // / HEGRID_FAULTS. A no-op returning Ok(()) unless the crate is built
+        // with `--features fault-injection`.
+        crate::util::faults::install_from_spec(&config.faults)?;
         // Executor-worker core pinning (config `executor_affinity`): applied
         // lazily by each pool worker on its next sweep, so it also covers
         // the case where the global executor spawned before the engine.
@@ -681,6 +713,22 @@ impl HegridEngine {
             report.overflow_groups = overflow.into_inner() as usize;
         }
 
+        // ---- isolate quarantined groups -------------------------------------
+        // Degrade mode: a quarantined group's sweep may have torn mid-
+        // accumulation, so its channel planes are zeroed rather than left
+        // poisoned. Group 0 owns the weight-sum plane; losing it zeroes
+        // wsum too (every map of this run normalises to blanks) — honest
+        // rather than silently wrong. Untiled batch groups are already in
+        // job order, so no index remap is needed here.
+        for &g in &report.degradation.quarantined_groups {
+            for &ch in groups.members(g) {
+                acc[ch * n_cells..(ch + 1) * n_cells].fill(0.0);
+            }
+            if g == 0 {
+                wsum.fill(0.0);
+            }
+        }
+
         // ---- normalise ------------------------------------------------------
         let t4 = Instant::now();
         let maps = (0..n_ch)
@@ -718,7 +766,16 @@ impl HegridEngine {
         // The prefetcher replaces the old eager FIFO of group indices: I/O
         // workers read channel groups ahead of the pipelines into pooled
         // buffers, bounded at `prefetch_depth` groups (backpressure).
-        let prefetcher = Prefetcher::new(groups.len(), self.config.prefetch_depth);
+        // Transient read errors retry with exponential backoff; in degrade
+        // mode (`fail_fast = false`) a group whose read stays broken is
+        // quarantined instead of failing the stream.
+        let degrade = !self.config.fail_fast;
+        let prefetcher = Prefetcher::new(groups.len(), self.config.prefetch_depth)
+            .with_read_policy(ReadPolicy {
+                retries: self.config.retry_io,
+                backoff_ms: self.config.retry_io_backoff_ms as u64,
+                degrade,
+            });
         // Pipeline slots: capped at what can actually run — the group count
         // (extra pipelines would find the prefetcher already drained) and
         // the host's thread budget (the executor's pool workers + the
@@ -760,6 +817,11 @@ impl HegridEngine {
         let compute_spans: Mutex<Vec<(f64, f64)>> = Mutex::new(Vec::new());
         let span_sink: Mutex<Vec<StageSpan>> = Mutex::new(Vec::new());
         let first_error: Mutex<Option<HegridError>> = Mutex::new(None);
+        // Degrade mode: per-group failures (errors *and* caught sweep
+        // panics) land here instead of killing the run. Indices are the
+        // run's batch-group indices; callers remap to original job groups
+        // (they differ on a resume) and isolate the groups' output planes.
+        let quarantined: Mutex<Vec<(usize, String)>> = Mutex::new(Vec::new());
 
         // One pipeline slot: pull admitted batches until the run drains.
         // Shared by both execution paths below.
@@ -797,9 +859,34 @@ impl HegridEngine {
                 };
                 let t_start = prefetcher.now_s();
                 let span_base = local_spans.len();
-                let out = process(&batch, &mut local_stages, &mut local_spans, &prefetcher);
+                // The group sweep runs under catch_unwind so a panicking
+                // worker (the executor re-raises helper panics on the
+                // sweep's caller — this slot) is a per-group failure, not a
+                // process abort. Unwind safety: on a caught panic the
+                // batch's partial output is discarded (degrade zeroes the
+                // group's planes; fail-fast aborts the run), and the
+                // slot-local accounting (`local_stages`/`local_spans`) is
+                // at worst missing the torn batch's spans.
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    process(&batch, &mut local_stages, &mut local_spans, &prefetcher)
+                }));
                 batch_spans.push((t_start, prefetcher.now_s()));
-                if let Err(e) = out {
+                let failure = match out {
+                    Ok(Ok(())) => None,
+                    Ok(Err(e)) => Some(e),
+                    Err(payload) => Some(HegridError::Runtime(format!(
+                        "worker panicked while gridding channel group {}: {}",
+                        batch.group,
+                        crate::util::threads::panic_message(payload.as_ref())
+                    ))),
+                };
+                if let Some(e) = failure {
+                    if degrade {
+                        // Quarantine the group and keep pulling: the caller
+                        // zeroes its output planes and records it failed.
+                        quarantined.lock().unwrap().push((batch.group, format!("{e}")));
+                        continue;
+                    }
                     let mut slot = first_error.lock().unwrap();
                     if slot.is_none() {
                         *slot = Some(e);
@@ -869,6 +956,16 @@ impl HegridEngine {
         }
 
         let io = prefetcher.stats();
+        // Fold both quarantine sources — sweeps that failed or panicked,
+        // and groups the ingest skipped after post-retry read failures —
+        // into one sorted DegradationReport (batch-group indices; callers
+        // remap to original job groups and isolate the output planes).
+        report.degradation.retries = io.retries;
+        let mut entries = quarantined.into_inner().unwrap();
+        entries.extend(io.failed_groups.iter().cloned());
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+        report.degradation.quarantined_groups = entries.iter().map(|e| e.0).collect();
+        report.degradation.causes = entries.into_iter().map(|e| e.1).collect();
         let spans = compute_spans.into_inner().unwrap();
         report.io_busy_s = io.io_busy_s;
         report.io_overlap_s = overlap_seconds(&io.read_intervals, &spans);
@@ -911,6 +1008,9 @@ impl HegridEngine {
         acc_ptr: &SyncPtr,
         wsum_ptr: &SyncPtr,
     ) -> Result<()> {
+        // Fault-injection `panic@<group>` site (no-op without the feature):
+        // exercises the pipeline-slot catch_unwind boundary.
+        crate::util::faults::sweep_panic_point(batch.group);
         // Without sharing, every pipeline rebuilds the whole pre-processing
         // stack (the redundancy the paper eliminates).
         let local_plan;

@@ -174,6 +174,44 @@ impl HegridEngine {
             },
         )?;
 
+        // ---- isolate quarantined groups -------------------------------------
+        // Degrade mode only (empty otherwise). The driver reports batch
+        // (dense) group indices; remap them to original job groups first —
+        // they differ on a resume.
+        for g in report.degradation.quarantined_groups.iter_mut() {
+            *g = pending[*g];
+        }
+        if report.degradation.is_degraded() {
+            // A quarantined sweep may have torn mid-write: zero the group's
+            // cube planes band by band (and wsum, owned by group 0) so the
+            // cube holds blanks, not poison, and record the group `failed`
+            // in the manifest so `--resume` retries exactly these groups.
+            let zeros = vec![0.0f64; (rows_per_band * nlon).min(n_cells).max(1)];
+            let mut zero_band = |write: &mut dyn FnMut(usize, &[f64]) -> Result<()>| -> Result<()> {
+                let mut c0 = 0usize;
+                while c0 < n_cells {
+                    let len = zeros.len().min(n_cells - c0);
+                    write(c0, &zeros[..len])?;
+                    c0 += len;
+                }
+                Ok(())
+            };
+            for (i, &g) in report.degradation.quarantined_groups.iter().enumerate() {
+                for &ch in full_groups.members(g) {
+                    zero_band(&mut |c0, z| cube.write_channel_band(ch, c0, z, None))?;
+                }
+                if g == 0 {
+                    zero_band(&mut |c0, z| cube.write_wsum_band(c0, z, None))?;
+                }
+                if let Some(m) = &manifest {
+                    m.lock().unwrap().record_failed(g, &report.degradation.causes[i]);
+                }
+            }
+            if let Some(m) = &manifest {
+                m.lock().unwrap().save(&ckpt_dir)?;
+            }
+        }
+
         report.shared_builds = shared_builds.into_inner() as usize;
         report.dispatches = dispatches.into_inner() as usize;
         if let Some(plan) = &shared_plan {
@@ -231,6 +269,9 @@ impl HegridEngine {
         };
 
         let g_orig = ctx.dense_to_orig[batch.group];
+        // Fault-injection `panic@<group>` site (no-op without the feature),
+        // keyed by the original job group so specs survive a resume remap.
+        crate::util::faults::sweep_panic_point(g_orig);
         // `wsum` is identical across groups, so only the group that was
         // *originally* group 0 writes it; if that group is already complete
         // in a resumed checkpoint, its wsum bytes are already in the cube.

@@ -47,7 +47,8 @@ fn le_to_f64s(bytes: &[u8], out: &mut Vec<f64>) {
     out.clear();
     out.reserve(bytes.len() / 8);
     for ch in bytes.chunks_exact(8) {
-        out.push(f64::from_le_bytes(ch.try_into().expect("8-byte chunk")));
+        // Invariant, not I/O: chunks_exact(8) yields exactly-8-byte slices.
+        out.push(f64::from_le_bytes(ch.try_into().expect("chunks_exact(8) yields 8-byte slices")));
     }
 }
 
@@ -147,7 +148,10 @@ impl CubeFile {
         if let Some(d) = digest {
             d.update(&bytes);
         }
-        let mut f = self.file.lock().unwrap();
+        // Poisoning-tolerant: every op re-seeks, so the inner File carries
+        // no state a panicked holder could have corrupted — and aborting a
+        // degrade-mode run over a poisoned lock would defeat quarantine.
+        let mut f = self.file.lock().unwrap_or_else(|p| p.into_inner());
         f.seek(SeekFrom::Start(offset)).map_err(HegridError::io(self.path.display().to_string()))?;
         f.write_all(&bytes).map_err(HegridError::io(self.path.display().to_string()))?;
         self.spill_bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
@@ -157,7 +161,7 @@ impl CubeFile {
     fn read_at(&self, offset: u64, len: usize, out: &mut Vec<f64>) -> Result<()> {
         let mut bytes = vec![0u8; len * 8];
         {
-            let mut f = self.file.lock().unwrap();
+            let mut f = self.file.lock().unwrap_or_else(|p| p.into_inner());
             f.seek(SeekFrom::Start(offset))
                 .map_err(HegridError::io(self.path.display().to_string()))?;
             f.read_exact(&mut bytes).map_err(HegridError::io(self.path.display().to_string()))?;
@@ -223,11 +227,15 @@ pub struct CheckpointManifest {
     /// `(original group index, streaming CRC-32 of that group's cube bytes
     /// in write order)`, sorted by group.
     pub groups_done: Vec<(usize, u32)>,
+    /// Quarantined groups of a degrade-mode run: `(original group index,
+    /// terminal cause)`, sorted by group. Their cube planes were zeroed;
+    /// `--resume` re-grids exactly these (plus any never-started groups).
+    pub groups_failed: Vec<(usize, String)>,
 }
 
 impl CheckpointManifest {
     pub fn new(job: impl Into<String>) -> Self {
-        CheckpointManifest { job: job.into(), groups_done: Vec::new() }
+        CheckpointManifest { job: job.into(), groups_done: Vec::new(), groups_failed: Vec::new() }
     }
 
     pub fn job_crc(&self) -> u32 {
@@ -243,20 +251,46 @@ impl CheckpointManifest {
         self.done_crc(group).is_some()
     }
 
-    /// Record a finished group (idempotent; keeps the list sorted).
+    /// Record a finished group (idempotent; keeps the list sorted). A group
+    /// that re-gridded successfully on resume stops being failed.
     pub fn record(&mut self, group: usize, crc: u32) {
+        self.groups_failed.retain(|(g, _)| *g != group);
         match self.groups_done.binary_search_by_key(&group, |&(g, _)| g) {
             Ok(i) => self.groups_done[i] = (group, crc),
             Err(i) => self.groups_done.insert(i, (group, crc)),
         }
     }
 
+    /// Whether the group is quarantined (failed in a degrade-mode run).
+    pub fn is_failed(&self, group: usize) -> bool {
+        self.groups_failed.iter().any(|(g, _)| *g == group)
+    }
+
+    /// Record a quarantined group (idempotent; keeps the list sorted).
+    ///
+    /// Demotes the group from `groups_done` if present: a torn manifest save
+    /// *after* `record()` leaves the in-memory manifest claiming the group is
+    /// done while the failure path quarantines it — the failure wins, so the
+    /// next save (and `--resume`) re-grids the group instead of trusting it.
+    pub fn record_failed(&mut self, group: usize, cause: &str) {
+        self.groups_done.retain(|(g, _)| *g != group);
+        match self.groups_failed.binary_search_by_key(&group, |(g, _)| *g) {
+            Ok(i) => self.groups_failed[i] = (group, cause.to_string()),
+            Err(i) => self.groups_failed.insert(i, (group, cause.to_string())),
+        }
+    }
+
     /// Canonical digest the manifest CRC covers: independent of JSON
-    /// formatting, so a load + save round trip can never drift.
+    /// formatting, so a load + save round trip can never drift. Failed
+    /// entries only contribute when present, so a manifest without any (the
+    /// only kind older versions could write) keeps its old digest.
     fn digest(&self) -> u32 {
         let mut s = format!("hegrid-checkpoint-v{MANIFEST_VERSION}|{:08x}|", self.job_crc());
         for &(g, c) in &self.groups_done {
             s.push_str(&format!("g{g}:{c:08x}|"));
+        }
+        for (g, cause) in &self.groups_failed {
+            s.push_str(&format!("f{g}:{:08x}|", crc32(cause.as_bytes())));
         }
         crc32(s.as_bytes())
     }
@@ -269,11 +303,22 @@ impl CheckpointManifest {
                 Json::obj(vec![("group", Json::num(g as f64)), ("crc", Json::num(c as f64))])
             })
             .collect();
+        let failed: Vec<Json> = self
+            .groups_failed
+            .iter()
+            .map(|(g, cause)| {
+                Json::obj(vec![
+                    ("group", Json::num(*g as f64)),
+                    ("cause", Json::str(cause.clone())),
+                ])
+            })
+            .collect();
         Json::obj(vec![
             ("version", Json::num(MANIFEST_VERSION as f64)),
             ("job", Json::str(self.job.clone())),
             ("job_crc", Json::num(self.job_crc() as f64)),
             ("groups_done", Json::Arr(groups)),
+            ("groups_failed", Json::Arr(failed)),
             ("crc", Json::num(self.digest() as f64)),
         ])
     }
@@ -283,10 +328,21 @@ impl CheckpointManifest {
         let path = dir.join(MANIFEST_FILE);
         let tmp = dir.join(format!("{MANIFEST_FILE}.tmp"));
         let ctx = tmp.display().to_string();
+        let bytes = self.to_json().to_pretty().into_bytes();
+        if crate::util::faults::torn_checkpoint_write() {
+            // Simulate a crash mid-write: half the bytes land in the temp
+            // file and the rename never happens, so `manifest.json` keeps
+            // its previous (still-valid) contents.
+            let mut f = File::create(&tmp).map_err(HegridError::io(ctx.clone()))?;
+            let _ = f.write_all(&bytes[..bytes.len() / 2]);
+            return Err(HegridError::Io {
+                context: ctx,
+                source: std::io::Error::other("injected torn checkpoint write"),
+            });
+        }
         {
             let mut f = File::create(&tmp).map_err(HegridError::io(ctx.clone()))?;
-            f.write_all(self.to_json().to_pretty().as_bytes())
-                .map_err(HegridError::io(ctx.clone()))?;
+            f.write_all(&bytes).map_err(HegridError::io(ctx.clone()))?;
             f.sync_all().map_err(HegridError::io(ctx.clone()))?;
         }
         std::fs::rename(&tmp, &path).map_err(HegridError::io(path.display().to_string()))
@@ -314,7 +370,20 @@ impl CheckpointManifest {
             groups_done.push((g, c));
         }
         groups_done.sort_unstable_by_key(|&(g, _)| g);
-        let manifest = CheckpointManifest { job, groups_done };
+        // Optional for manifests written before quarantine support existed.
+        let mut groups_failed = Vec::new();
+        if let Some(arr) = v.get("groups_failed") {
+            let arr = arr
+                .as_arr()
+                .ok_or_else(|| HegridError::Format("field 'groups_failed' is not an array".into()))?;
+            for e in arr {
+                let g = e.req_usize("group")?;
+                let cause = e.req_str("cause")?.to_string();
+                groups_failed.push((g, cause));
+            }
+            groups_failed.sort_unstable_by(|a, b| a.0.cmp(&b.0));
+        }
+        let manifest = CheckpointManifest { job, groups_done, groups_failed };
         let stored = v.req_usize("crc")? as u32;
         if stored != manifest.digest() {
             return Err(HegridError::Corrupt(format!(
@@ -469,6 +538,44 @@ mod tests {
             Err(HegridError::Corrupt(msg)) => assert!(msg.contains("CRC"), "{msg}"),
             other => panic!("expected Corrupt, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn manifest_failed_groups_round_trip_and_demotion() {
+        let dir = tmp_dir("manifest_failed");
+        let mut m = CheckpointManifest::new("job-identity-v1");
+        m.record(0, 17);
+        m.record(1, 23);
+        m.record_failed(3, "injected transient read error");
+        m.record_failed(1, "worker panicked"); // demotes a done group
+        assert_eq!(m.groups_done, vec![(0, 17)]);
+        assert!(m.is_failed(1) && m.is_failed(3) && !m.is_failed(0));
+        m.save(&dir).unwrap();
+        let back = CheckpointManifest::load(&dir).unwrap();
+        assert_eq!(back, m);
+
+        // A successful re-grid clears the quarantine entry.
+        m.record(1, 42);
+        assert!(!m.is_failed(1) && m.is_done(1));
+        assert_eq!(m.groups_failed, vec![(3, "injected transient read error".to_string())]);
+    }
+
+    #[test]
+    fn manifest_without_failed_field_still_loads() {
+        // Manifests written before quarantine support carry no
+        // `groups_failed`; with none failed the digest is unchanged, so the
+        // old JSON (minus the field) must load verbatim.
+        let dir = tmp_dir("manifest_compat");
+        let mut m = CheckpointManifest::new("job-identity-v1");
+        m.record(5, 99);
+        m.save(&dir).unwrap();
+        let path = dir.join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let stripped = text.replacen(",\n  \"groups_failed\": []", "", 1);
+        assert_ne!(text, stripped, "substitution must hit");
+        std::fs::write(&path, stripped).unwrap();
+        let back = CheckpointManifest::load(&dir).unwrap();
+        assert_eq!(back, m);
     }
 
     #[test]

@@ -288,6 +288,9 @@ impl HgdReader {
     /// allocation on the streaming ingest path, and consecutive channels are
     /// read without an intervening seek.
     pub fn read_channel_into(&mut self, c: usize, out: &mut Vec<f32>) -> Result<()> {
+        if let Some(e) = crate::util::faults::channel_read_fault(c) {
+            return Err(e);
+        }
         if c >= self.n_channels {
             return Err(HegridError::Format(format!(
                 "channel {c} out of range ({} channels)",
@@ -311,7 +314,10 @@ impl HgdReader {
         }
         out.clear();
         out.reserve(self.n_samples);
-        out.extend(buf.chunks_exact(4).map(|b| f32::from_le_bytes(b.try_into().unwrap())));
+        out.extend(buf.chunks_exact(4).map(|b| {
+            // Invariant, not I/O: chunks_exact(4) yields exactly-4-byte slices.
+            f32::from_le_bytes(b.try_into().expect("chunks_exact(4) yields 4-byte slices"))
+        }));
         Ok(())
     }
 }
@@ -335,7 +341,10 @@ fn f32s_to_le_bytes(v: &[f32]) -> Vec<u8> {
 }
 
 fn le_bytes_to_f64s(b: &[u8]) -> Vec<f64> {
-    b.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect()
+    // Invariant, not I/O: chunks_exact(8) yields exactly-8-byte slices.
+    b.chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().expect("chunks_exact(8) yields 8-byte slices")))
+        .collect()
 }
 
 fn read_u32<R: Read>(r: &mut R, ctx: &str) -> Result<u32> {

@@ -219,6 +219,7 @@ impl CpuGridder {
                     },
                     |scratch, bc| {
                         let cell = cell0 + bc;
+                        crate::util::faults::sweep_panic_cell(cell);
                         let (clon, clat) = trig.lonlat(cell);
                         shared.healpix.query_disc_rings_into(
                             FRAC_PI_2 - clat,

@@ -377,7 +377,9 @@ impl<'a> Parser<'a> {
                     // Consume one UTF-8 code point.
                     let rest = std::str::from_utf8(&self.bytes[self.pos..])
                         .map_err(|_| self.err("invalid UTF-8 in string"))?;
-                    let ch = rest.chars().next().unwrap();
+                    // Invariant: `peek()` returned Some, so the remainder is
+                    // non-empty and holds at least one code point.
+                    let ch = rest.chars().next().expect("peeked byte implies a code point");
                     out.push(ch);
                     self.pos += ch.len_utf8();
                 }
@@ -408,7 +410,9 @@ impl<'a> Parser<'a> {
                 self.pos += 1;
             }
         }
-        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        // Invariant: the scanned slice contains only ASCII (`-0..9.eE+`).
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .expect("number slice is ASCII by construction");
         text.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("invalid number"))

@@ -32,6 +32,14 @@
 //! `grid --streaming` reads channels lazily from the HGD file through the
 //! T0 prefetcher (bounded memory; I/O overlaps compute) instead of loading
 //! the dataset up front.
+//!
+//! Robustness knobs (see docs/robustness.md): `--fail-fast` (default) aborts
+//! on the first error; `--degrade` retries transient channel-read errors
+//! (`--retry-io N --retry-backoff-ms MS`) and quarantines channel groups
+//! that still fail, reporting them and — with `--checkpoint` — recording
+//! them as failed so `--resume` re-grids exactly those. `--faults
+//! <seed>:<spec>` (or HEGRID_FAULTS) injects deterministic faults when the
+//! crate is built with `--features fault-injection`.
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
@@ -50,7 +58,7 @@ const VALUE_OPTS: &[&str] = &[
     "streams", "pipelines", "pipeline-width", "pipeline-width-max", "channels-per-dispatch",
     "gamma", "block", "cpu-block", "simd", "affinity", "kernel", "profile", "oversample",
     "artifacts", "threads", "variant", "prefetch-depth", "io-workers", "baseline", "current",
-    "threshold", "tile-rows", "checkpoint",
+    "threshold", "tile-rows", "checkpoint", "faults", "retry-io", "retry-backoff-ms",
 ];
 
 fn main() -> ExitCode {
@@ -140,6 +148,13 @@ fn engine_config(args: &cli::Args) -> Result<HegridConfig> {
         output_tile_rows: args.get_usize("tile-rows", 0)?,
         checkpoint_dir: args.get_or("checkpoint", "").to_string(),
         resume: args.flag("resume"),
+        // `--fail-fast` (the default) aborts on the first error; `--degrade`
+        // switches to retry + quarantine. Both flags are consumed so
+        // `check_unknown` accepts either spelling; --fail-fast wins a tie.
+        fail_fast: args.flag("fail-fast") || !args.flag("degrade"),
+        retry_io: args.get_usize("retry-io", d.retry_io)?,
+        retry_io_backoff_ms: args.get_usize("retry-backoff-ms", d.retry_io_backoff_ms)?,
+        faults: args.get_or("faults", "").to_string(),
         width_saturation: d.width_saturation,
         width_busy_grow: d.width_busy_grow,
         width_idle_shrink: d.width_idle_shrink,
@@ -293,6 +308,24 @@ fn cmd_grid(args: &cli::Args) -> Result<()> {
                 report.numa_nodes
             );
         }
+    }
+    if report.degradation.is_degraded() {
+        println!(
+            "  DEGRADED: {} channel group(s) quarantined, {} transient read retr{}",
+            report.degradation.quarantined_groups.len(),
+            report.degradation.retries,
+            if report.degradation.retries == 1 { "y" } else { "ies" }
+        );
+        for (g, cause) in
+            report.degradation.quarantined_groups.iter().zip(&report.degradation.causes)
+        {
+            println!("    group {g}: {cause}");
+        }
+    } else if report.degradation.retries > 0 {
+        println!(
+            "  recovered: {} transient read error(s) absorbed by retries",
+            report.degradation.retries
+        );
     }
     if let Some(prefix) = args.get("out-prefix") {
         if let Some(parent) = Path::new(prefix).parent() {

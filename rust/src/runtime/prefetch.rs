@@ -52,6 +52,32 @@ pub struct PrefetchStats {
     pub groups_read: usize,
     /// Largest observed in-flight window (reading + ready); ≤ depth always.
     pub peak_window: usize,
+    /// Channel-read retries performed (transient errors that were retried,
+    /// whether or not the retry eventually succeeded).
+    pub retries: usize,
+    /// Degrade mode only: groups skipped after their reads failed
+    /// post-retry, with the terminal cause. Empty in fail-fast mode.
+    pub failed_groups: Vec<(usize, String)>,
+}
+
+/// How the I/O workers respond to failed channel reads.
+#[derive(Clone, Copy, Debug)]
+pub struct ReadPolicy {
+    /// Retries after the first failure of a channel read (transient I/O and
+    /// corruption errors only). 0 = fail immediately.
+    pub retries: usize,
+    /// Base backoff between retries, doubled per attempt. 0 = no sleep.
+    pub backoff_ms: u64,
+    /// `true`: a group whose read fails post-retry is recorded in
+    /// `failed_groups` and skipped, and ingest continues with the next
+    /// group. `false` (default): the first terminal error fails the stream.
+    pub degrade: bool,
+}
+
+impl Default for ReadPolicy {
+    fn default() -> Self {
+        ReadPolicy { retries: 0, backoff_ms: 0, degrade: false }
+    }
 }
 
 struct State {
@@ -60,16 +86,22 @@ struct State {
     ready: VecDeque<GroupBatch>,
     error: Option<HegridError>,
     failed: bool,
+    /// Formatted terminal cause; `next()` synthesizes errors from it for
+    /// every caller after the first (HegridError is not Clone).
+    cause: Option<String>,
     io_busy: f64,
     intervals: Vec<(f64, f64)>,
     groups_read: usize,
     peak_window: usize,
+    retries: usize,
+    failed_groups: Vec<(usize, String)>,
 }
 
 /// Bounded read-ahead ring shared between I/O workers and pipelines.
 pub struct Prefetcher {
     n_groups: usize,
     depth: usize,
+    policy: ReadPolicy,
     state: Mutex<State>,
     cond: Condvar,
     t0: Instant,
@@ -82,20 +114,30 @@ impl Prefetcher {
         Prefetcher {
             n_groups,
             depth: depth.max(1),
+            policy: ReadPolicy::default(),
             state: Mutex::new(State {
                 next_group: 0,
                 reading: 0,
                 ready: VecDeque::new(),
                 error: None,
                 failed: false,
+                cause: None,
                 io_busy: 0.0,
                 intervals: Vec::new(),
                 groups_read: 0,
                 peak_window: 0,
+                retries: 0,
+                failed_groups: Vec::new(),
             }),
             cond: Condvar::new(),
             t0: Instant::now(),
         }
+    }
+
+    /// Set the retry/degrade policy of the I/O workers (builder style).
+    pub fn with_read_policy(mut self, policy: ReadPolicy) -> Prefetcher {
+        self.policy = policy;
+        self
     }
 
     pub fn depth(&self) -> usize {
@@ -138,13 +180,33 @@ impl Prefetcher {
             };
 
             // ---- read (no locks held) ------------------------------------
+            crate::util::faults::prefetch_stall(g);
             let channels: Vec<usize> = groups.members(g).to_vec();
             let start = self.now_s();
             let mut values = Vec::with_capacity(channels.len());
             let mut failure: Option<HegridError> = None;
+            let mut retries_here = 0usize;
             for &ch in &channels {
                 let mut buf = pool.take(n_samples);
-                if let Err(e) = source.read_channel_into(ch, &mut buf) {
+                let mut attempt = 0usize;
+                let outcome = loop {
+                    match source.read_channel_into(ch, &mut buf) {
+                        Ok(()) => break Ok(()),
+                        Err(e) if attempt < self.policy.retries && retryable(&e) => {
+                            attempt += 1;
+                            retries_here += 1;
+                            let ms = self
+                                .policy
+                                .backoff_ms
+                                .saturating_mul(1u64 << (attempt - 1).min(10));
+                            if ms > 0 {
+                                std::thread::sleep(std::time::Duration::from_millis(ms));
+                            }
+                        }
+                        Err(e) => break Err(e),
+                    }
+                };
+                if let Err(e) = outcome {
                     failure = Some(e);
                     break;
                 }
@@ -162,8 +224,19 @@ impl Prefetcher {
             // ---- publish -------------------------------------------------
             let mut st = self.state.lock().unwrap();
             st.reading -= 1;
+            st.retries += retries_here;
             match failure {
+                Some(e) if self.policy.degrade => {
+                    // Degrade: quarantine the group and keep ingesting. The
+                    // coordinator folds `failed_groups` into its
+                    // DegradationReport after the run.
+                    st.failed_groups.push((g, format!("{e}")));
+                    self.cond.notify_all();
+                }
                 Some(e) => {
+                    if st.cause.is_none() {
+                        st.cause = Some(format!("{e}"));
+                    }
                     if st.error.is_none() {
                         st.error = Some(e);
                     }
@@ -190,9 +263,12 @@ impl Prefetcher {
     }
 
     /// Pull the next prefetched group; blocks while the ring is empty.
-    /// `None` once every group has been delivered (or after a failure has
-    /// been reported). The first caller to observe a failure gets
-    /// `Some(Err(..))`; later callers get `None`.
+    /// `None` once every group has been delivered. After a failure the
+    /// terminal error is **sticky**: the first caller gets the original
+    /// error and every later caller gets a synthesized error naming the
+    /// same cause — never `None`, so no consumer can mistake an aborted
+    /// stream for a clean end-of-stream. Callers must stop pulling once
+    /// they observe `Some(Err(..))`.
     pub fn next(&self) -> Option<Result<GroupBatch>> {
         let mut st = self.state.lock().unwrap();
         loop {
@@ -202,7 +278,13 @@ impl Prefetcher {
                 return Some(Ok(batch));
             }
             if st.failed {
-                return st.error.take().map(Err);
+                if let Some(e) = st.error.take() {
+                    return Some(Err(e));
+                }
+                let cause = st.cause.as_deref().unwrap_or("no cause recorded");
+                return Some(Err(HegridError::Runtime(format!(
+                    "prefetcher terminated: {cause}"
+                ))));
             }
             if st.next_group >= self.n_groups && st.reading == 0 {
                 return None;
@@ -212,11 +294,15 @@ impl Prefetcher {
     }
 
     /// Stop the run early (consumer-side failure): workers stop claiming,
-    /// blocked parties wake, pending `next` calls drain to `None`. Any
-    /// batches already in the ring are dropped (their buffers recycle).
+    /// blocked parties wake, and every pending or future `next` call
+    /// observes a terminal error. Any batches already in the ring are
+    /// dropped (their buffers recycle).
     pub fn abort(&self) {
         let mut st = self.state.lock().unwrap();
         st.failed = true;
+        if st.cause.is_none() {
+            st.cause = Some("aborted by the coordinator after a pipeline failure".into());
+        }
         st.ready.clear();
         self.cond.notify_all();
     }
@@ -229,8 +315,17 @@ impl Prefetcher {
             read_intervals: st.intervals.clone(),
             groups_read: st.groups_read,
             peak_window: st.peak_window,
+            retries: st.retries,
+            failed_groups: st.failed_groups.clone(),
         }
     }
+}
+
+/// Errors worth retrying: transient I/O and corruption (a torn read can
+/// produce either). Format/config/internal errors are deterministic — a
+/// retry would just fail again.
+fn retryable(e: &HegridError) -> bool {
+    matches!(e, HegridError::Io { .. } | HegridError::Corrupt(_))
 }
 
 /// Merge possibly-overlapping intervals into a sorted disjoint set.
@@ -359,52 +454,174 @@ mod tests {
         assert_eq!(pf.stats().peak_window, 1);
     }
 
-    #[test]
-    fn source_failure_is_reported_once_then_ends() {
-        struct Failing;
-        impl ChannelSource for Failing {
-            fn meta(&self) -> &crate::data::DatasetMeta {
-                unreachable!("prefetcher never asks the source for metadata")
-            }
-            fn n_samples(&self) -> usize {
-                8
-            }
-            fn n_channels(&self) -> usize {
-                4
-            }
-            fn coords(&self) -> Result<(&[f64], &[f64])> {
-                unreachable!("prefetcher never asks the source for coords")
-            }
-            fn read_channel_into(&self, c: usize, out: &mut Vec<f32>) -> Result<()> {
-                if c >= 2 {
-                    return Err(HegridError::Corrupt(format!("channel {c} bad")));
-                }
-                out.clear();
-                out.resize(8, 1.0);
-                Ok(())
+    /// Fails every read of channels ≥ `bad_from`; earlier channels succeed.
+    /// With `transient_failures > 0`, *every* channel fails that many times
+    /// before succeeding (exercises retry).
+    struct Flaky {
+        bad_from: usize,
+        transient_failures: usize,
+        attempts: Mutex<std::collections::HashMap<usize, usize>>,
+    }
+
+    impl Flaky {
+        fn permanent(bad_from: usize) -> Flaky {
+            Flaky { bad_from, transient_failures: 0, attempts: Mutex::new(Default::default()) }
+        }
+        fn transient(failures: usize) -> Flaky {
+            Flaky {
+                bad_from: usize::MAX,
+                transient_failures: failures,
+                attempts: Mutex::new(Default::default()),
             }
         }
+    }
+
+    impl ChannelSource for Flaky {
+        fn meta(&self) -> &crate::data::DatasetMeta {
+            unreachable!("prefetcher never asks the source for metadata")
+        }
+        fn n_samples(&self) -> usize {
+            8
+        }
+        fn n_channels(&self) -> usize {
+            4
+        }
+        fn coords(&self) -> Result<(&[f64], &[f64])> {
+            unreachable!("prefetcher never asks the source for coords")
+        }
+        fn read_channel_into(&self, c: usize, out: &mut Vec<f32>) -> Result<()> {
+            if c >= self.bad_from {
+                return Err(HegridError::Corrupt(format!("channel {c} bad")));
+            }
+            let mut attempts = self.attempts.lock().unwrap();
+            let n = attempts.entry(c).or_insert(0);
+            *n += 1;
+            if *n <= self.transient_failures {
+                return Err(HegridError::Io {
+                    context: format!("channel {c}"),
+                    source: std::io::Error::other("transient"),
+                });
+            }
+            out.clear();
+            out.resize(8, c as f32);
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn source_failure_is_sticky_for_every_consumer() {
         let groups = ChannelGroups::new(4, 1);
         let pf = Prefetcher::new(groups.len(), 4);
         let pool = MemoryPool::new();
-        let (ok, errs, nones) = std::thread::scope(|s| {
-            s.spawn(|| pf.run_worker(&Failing, &groups, &pool));
-            let (mut ok, mut errs) = (0, 0);
-            while let Some(r) = pf.next() {
-                match r {
-                    Ok(_) => ok += 1,
-                    Err(e) => {
-                        assert!(matches!(e, HegridError::Corrupt(_)));
-                        errs += 1;
-                    }
+        let (ok, first_err) = std::thread::scope(|s| {
+            s.spawn(|| pf.run_worker(&Flaky::permanent(2), &groups, &pool));
+            let mut ok = 0;
+            let first_err = loop {
+                match pf.next() {
+                    Some(Ok(_)) => ok += 1,
+                    Some(Err(e)) => break e,
+                    None => panic!("stream must not end cleanly after a failure"),
                 }
-            }
-            // After the error, the stream is over.
-            let nones = usize::from(pf.next().is_none());
-            (ok, errs, nones)
+            };
+            (ok, first_err)
         });
         assert_eq!(ok, 2);
-        assert_eq!(errs, 1);
-        assert_eq!(nones, 1);
+        assert!(matches!(first_err, HegridError::Corrupt(_)), "{first_err}");
+        // Later callers keep observing the terminal error (never None): a
+        // coordinator slot arriving after the failure can't mistake the
+        // aborted stream for clean end-of-input.
+        for _ in 0..3 {
+            match pf.next() {
+                Some(Err(e)) => assert!(format!("{e}").contains("channel 2 bad"), "{e}"),
+                other => panic!("expected sticky error, got {:?}", other.map(|r| r.is_ok())),
+            }
+        }
+    }
+
+    #[test]
+    fn abort_is_sticky_and_drains_workers() {
+        let d = SimConfig::quick_preset().generate();
+        let source = InMemorySource::new(&d);
+        let groups = ChannelGroups::new(d.n_channels(), 1);
+        let pf = Prefetcher::new(groups.len(), 1);
+        let pool = MemoryPool::new();
+        std::thread::scope(|s| {
+            s.spawn(|| pf.run_worker(&source, &groups, &pool));
+            let first = pf.next().expect("at least one batch");
+            assert!(first.is_ok());
+            pf.abort();
+            // Workers return (scope would deadlock otherwise) and every
+            // subsequent pull reports the abort.
+            for _ in 0..2 {
+                match pf.next() {
+                    Some(Err(e)) => assert!(format!("{e}").contains("aborted"), "{e}"),
+                    other => panic!("expected abort error, got {:?}", other.map(|r| r.is_ok())),
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn transient_read_errors_are_retried() {
+        let groups = ChannelGroups::new(4, 2); // 2 groups of 2 channels
+        let source = Flaky::transient(2);
+        let pf = Prefetcher::new(groups.len(), 2)
+            .with_read_policy(ReadPolicy { retries: 2, backoff_ms: 0, degrade: false });
+        let pool = MemoryPool::new();
+        let batches = std::thread::scope(|s| {
+            s.spawn(|| pf.run_worker(&source, &groups, &pool));
+            let mut out = Vec::new();
+            while let Some(b) = pf.next() {
+                out.push(b.expect("retries absorb the transient failures"));
+            }
+            out
+        });
+        assert_eq!(batches.len(), 2);
+        let stats = pf.stats();
+        assert_eq!(stats.retries, 8, "2 retries x 4 channels");
+        assert!(stats.failed_groups.is_empty());
+    }
+
+    #[test]
+    fn insufficient_retries_still_fail() {
+        let groups = ChannelGroups::new(2, 2);
+        let source = Flaky::transient(3);
+        let pf = Prefetcher::new(groups.len(), 2)
+            .with_read_policy(ReadPolicy { retries: 2, backoff_ms: 0, degrade: false });
+        let pool = MemoryPool::new();
+        std::thread::scope(|s| {
+            s.spawn(|| pf.run_worker(&source, &groups, &pool));
+            match pf.next() {
+                Some(Err(HegridError::Io { .. })) => {}
+                other => panic!("expected Io error, got {:?}", other.map(|r| r.is_ok())),
+            }
+        });
+        assert_eq!(pf.stats().retries, 2);
+    }
+
+    #[test]
+    fn degrade_mode_skips_failed_groups_and_ends_cleanly() {
+        let groups = ChannelGroups::new(4, 1); // 4 groups of 1 channel
+        let pf = Prefetcher::new(groups.len(), 2)
+            .with_read_policy(ReadPolicy { retries: 1, backoff_ms: 0, degrade: true });
+        let pool = MemoryPool::new();
+        let batches = std::thread::scope(|s| {
+            s.spawn(|| pf.run_worker(&Flaky::permanent(2), &groups, &pool));
+            let mut out = Vec::new();
+            while let Some(b) = pf.next() {
+                out.push(b.expect("degrade mode never surfaces stream errors"));
+            }
+            out
+        });
+        let mut seen: Vec<usize> = batches.iter().map(|b| b.group).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1], "surviving groups delivered");
+        let stats = pf.stats();
+        let mut failed: Vec<usize> = stats.failed_groups.iter().map(|f| f.0).collect();
+        failed.sort_unstable();
+        assert_eq!(failed, vec![2, 3]);
+        for (_, cause) in &stats.failed_groups {
+            assert!(cause.contains("bad"), "{cause}");
+        }
     }
 }

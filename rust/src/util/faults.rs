@@ -1,0 +1,407 @@
+//! Deterministic fault injection (`--features fault-injection`).
+//!
+//! A [`FaultPlan`] is a seeded list of directives that make named sites in
+//! the pipeline fail on purpose, so the graceful-degradation machinery
+//! (retries, per-group quarantine, checkpoint `failed` records) can be
+//! exercised deterministically in tests and CI. With the `fault-injection`
+//! feature **off** (the default) every hook in this module compiles to an
+//! inlined no-op — production builds carry no fault-injection branches
+//! beyond one dead function call that the optimiser deletes.
+//!
+//! ## Spec grammar
+//!
+//! Configured by the `faults` config field / `--faults` CLI flag, or the
+//! `HEGRID_FAULTS` environment variable when the field is empty:
+//!
+//! ```text
+//! spec      := <seed> ':' directive (',' directive)*
+//! directive := site '@' target ['x' count] ['%' prob]
+//! site      := read-err | crc | stall | torn | panic | panic-cell
+//! target    := non-negative integer | '*'          (any target)
+//! count     := max firings of this directive        (default 1)
+//! prob      := firing probability in (0, 1], drawn from a per-directive
+//!              stream seeded by <seed> (omitted = always fire)
+//! ```
+//!
+//! | site         | target meaning      | effect at the site |
+//! |--------------|---------------------|--------------------|
+//! | `read-err`   | channel index       | `HgdReader::read_channel_into` returns an injected I/O error |
+//! | `crc`        | channel index       | `HgdReader::read_channel_into` returns an injected `Corrupt` |
+//! | `stall`      | channel-group index | the T0 worker sleeps 25 ms before reading the group |
+//! | `torn`       | manifest-save ordinal (0-based) | `CheckpointManifest::save` writes half the payload to the temp file and fails (rename never happens) |
+//! | `panic`      | original group index | the pipeline slot panics at the start of the group's sweep |
+//! | `panic-cell` | output cell index   | a gridding sweep worker panics while processing that cell |
+//!
+//! Example: `HEGRID_FAULTS=42:read-err@3x2,panic@1` — the first two reads
+//! of channel 3 fail with an I/O error (a retrying ingest recovers on the
+//! third attempt), and channel group 1's sweep panics once.
+//!
+//! Determinism: counts are exact, and probabilistic directives draw from a
+//! [`SplitMix64`] stream derived from the spec seed and the directive text,
+//! so the same spec injects the same faults on every run (modulo which
+//! concurrent worker reaches a shared `'*'` count first).
+
+#[cfg(feature = "fault-injection")]
+pub use imp::*;
+
+#[cfg(feature = "fault-injection")]
+mod imp {
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use std::sync::{Arc, Mutex, OnceLock};
+
+    use crate::util::crc32::crc32;
+    use crate::util::error::{HegridError, Result};
+    use crate::util::prng::SplitMix64;
+
+    /// Named injection site (see the module docs for the grammar).
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    pub enum FaultSite {
+        /// Injected I/O error on an HGD channel read.
+        ReadErr,
+        /// Injected CRC corruption on an HGD channel read.
+        ReadCrc,
+        /// Transient T0 ring stall before a group's read.
+        Stall,
+        /// Torn checkpoint-manifest write (partial temp file, no rename).
+        TornWrite,
+        /// Pipeline-slot panic at the start of a group's sweep.
+        SweepPanic,
+        /// Executor-worker panic inside a gridding sweep, per cell.
+        CellPanic,
+    }
+
+    struct Directive {
+        site: FaultSite,
+        /// `None` = `'*'` (any target).
+        target: Option<usize>,
+        remaining: AtomicUsize,
+        prob: Option<f64>,
+        rng: Mutex<SplitMix64>,
+    }
+
+    /// A parsed, seeded fault plan. Install with [`install`] /
+    /// [`install_from_spec`]; sites consult the installed plan through the
+    /// hook functions below.
+    pub struct FaultPlan {
+        directives: Vec<Directive>,
+        /// Total faults fired so far (bench `faults.injected`).
+        injected: AtomicUsize,
+        /// Manifest saves seen so far (the `torn` site's target ordinal).
+        saves: AtomicUsize,
+    }
+
+    impl FaultPlan {
+        /// Parse `<seed>:<directive>(,<directive>)*`.
+        pub fn parse(spec: &str) -> Result<FaultPlan> {
+            let bad = |m: String| HegridError::Config(format!("fault spec '{spec}': {m}"));
+            let (seed_s, rest) = spec
+                .split_once(':')
+                .ok_or_else(|| bad("expected '<seed>:<directives>'".into()))?;
+            let seed: u64 = seed_s
+                .trim()
+                .parse()
+                .map_err(|_| bad(format!("seed '{seed_s}' is not a non-negative integer")))?;
+            let mut directives = Vec::new();
+            for part in rest.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue;
+                }
+                let (site_s, tail) = part
+                    .split_once('@')
+                    .ok_or_else(|| bad(format!("directive '{part}' lacks '@target'")))?;
+                let site = match site_s {
+                    "read-err" => FaultSite::ReadErr,
+                    "crc" => FaultSite::ReadCrc,
+                    "stall" => FaultSite::Stall,
+                    "torn" => FaultSite::TornWrite,
+                    "panic" => FaultSite::SweepPanic,
+                    "panic-cell" => FaultSite::CellPanic,
+                    other => return Err(bad(format!("unknown site '{other}'"))),
+                };
+                let (tail, prob) = match tail.split_once('%') {
+                    Some((a, p)) => {
+                        let p: f64 = p
+                            .parse()
+                            .map_err(|_| bad(format!("probability '{p}' is not a number")))?;
+                        if !(p > 0.0 && p <= 1.0) {
+                            return Err(bad(format!("probability {p} out of range (0, 1]")));
+                        }
+                        (a, Some(p))
+                    }
+                    None => (tail, None),
+                };
+                let (target_s, count) = match tail.split_once('x') {
+                    Some((a, c)) => (
+                        a,
+                        c.parse::<usize>()
+                            .map_err(|_| bad(format!("count '{c}' is not an integer")))?,
+                    ),
+                    None => (tail, 1),
+                };
+                if count == 0 {
+                    return Err(bad("count must be >= 1".into()));
+                }
+                let target = if target_s == "*" {
+                    None
+                } else {
+                    Some(target_s.parse::<usize>().map_err(|_| {
+                        bad(format!("target '{target_s}' is not an integer or '*'"))
+                    })?)
+                };
+                // Per-directive stream: the spec seed mixed with the
+                // directive text, so adding a directive never shifts the
+                // draws of another.
+                let dseed = seed.wrapping_add(crc32(part.as_bytes()) as u64);
+                directives.push(Directive {
+                    site,
+                    target,
+                    remaining: AtomicUsize::new(count),
+                    prob,
+                    rng: Mutex::new(SplitMix64::new(dseed)),
+                });
+            }
+            if directives.is_empty() {
+                return Err(bad("no directives".into()));
+            }
+            Ok(FaultPlan {
+                directives,
+                injected: AtomicUsize::new(0),
+                saves: AtomicUsize::new(0),
+            })
+        }
+
+        /// Should a fault fire at `site` for `target`? Decrements the
+        /// matching directive's count on fire.
+        fn fire(&self, site: FaultSite, target: usize) -> bool {
+            for d in &self.directives {
+                if d.site != site || d.target.is_some_and(|t| t != target) {
+                    continue;
+                }
+                if let Some(p) = d.prob {
+                    if d.rng.lock().unwrap().next_f64() >= p {
+                        continue;
+                    }
+                }
+                if d.remaining
+                    .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1))
+                    .is_ok()
+                {
+                    self.injected.fetch_add(1, Ordering::Relaxed);
+                    return true;
+                }
+            }
+            false
+        }
+    }
+
+    /// Fast-path gate: hooks bail on one relaxed load when no plan is
+    /// installed, so per-cell sites stay cheap even in instrumented builds.
+    static ENABLED: AtomicBool = AtomicBool::new(false);
+
+    fn slot() -> &'static Mutex<Option<Arc<FaultPlan>>> {
+        static SLOT: OnceLock<Mutex<Option<Arc<FaultPlan>>>> = OnceLock::new();
+        SLOT.get_or_init(|| Mutex::new(None))
+    }
+
+    /// Install (or clear, with `None`) the process-wide fault plan.
+    pub fn install(plan: Option<FaultPlan>) {
+        let mut s = slot().lock().unwrap();
+        ENABLED.store(plan.is_some(), Ordering::Release);
+        *s = plan.map(Arc::new);
+    }
+
+    /// Install from a spec string; an empty spec falls back to the
+    /// `HEGRID_FAULTS` environment variable, and an empty result clears the
+    /// plan. Called by `HegridEngine::new` with the `faults` config field.
+    pub fn install_from_spec(spec: &str) -> Result<()> {
+        let from_env;
+        let spec = if spec.is_empty() {
+            from_env = std::env::var("HEGRID_FAULTS").unwrap_or_default();
+            from_env.as_str()
+        } else {
+            spec
+        };
+        if spec.is_empty() {
+            install(None);
+            return Ok(());
+        }
+        install(Some(FaultPlan::parse(spec)?));
+        Ok(())
+    }
+
+    fn active() -> Option<Arc<FaultPlan>> {
+        if !ENABLED.load(Ordering::Acquire) {
+            return None;
+        }
+        slot().lock().unwrap().clone()
+    }
+
+    /// Faults fired so far by the installed plan (bench `faults.injected`).
+    pub fn injected_total() -> usize {
+        active().map_or(0, |p| p.injected.load(Ordering::Relaxed))
+    }
+
+    /// `read-err` / `crc` site: called by `HgdReader::read_channel_into`.
+    pub fn channel_read_fault(ch: usize) -> Option<HegridError> {
+        let plan = active()?;
+        if plan.fire(FaultSite::ReadErr, ch) {
+            return Some(HegridError::Io {
+                context: format!("fault-injection: channel {ch}"),
+                source: std::io::Error::other("injected transient read error"),
+            });
+        }
+        if plan.fire(FaultSite::ReadCrc, ch) {
+            return Some(HegridError::Corrupt(format!(
+                "fault-injection: channel {ch} CRC corrupted"
+            )));
+        }
+        None
+    }
+
+    /// `stall` site: called by the T0 worker before reading group `g`.
+    pub fn prefetch_stall(g: usize) {
+        if let Some(plan) = active() {
+            if plan.fire(FaultSite::Stall, g) {
+                std::thread::sleep(std::time::Duration::from_millis(25));
+            }
+        }
+    }
+
+    /// `torn` site: called by `CheckpointManifest::save`; `true` = tear this
+    /// save (the ordinal of saves since install is the directive target).
+    pub fn torn_checkpoint_write() -> bool {
+        match active() {
+            Some(plan) => {
+                let k = plan.saves.fetch_add(1, Ordering::Relaxed);
+                plan.fire(FaultSite::TornWrite, k)
+            }
+            None => false,
+        }
+    }
+
+    /// `panic` site: called at the start of a group's pipeline sweep.
+    pub fn sweep_panic_point(group: usize) {
+        if let Some(plan) = active() {
+            if plan.fire(FaultSite::SweepPanic, group) {
+                panic!("fault-injection: forced worker panic in channel group {group}");
+            }
+        }
+    }
+
+    /// `panic-cell` site: called per output cell inside gridding sweeps.
+    pub fn sweep_panic_cell(cell: usize) {
+        if ENABLED.load(Ordering::Acquire) {
+            if let Some(plan) = active() {
+                if plan.fire(FaultSite::CellPanic, cell) {
+                    panic!("fault-injection: forced worker panic at cell {cell}");
+                }
+            }
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn parse_and_fire_counts() {
+            let p = FaultPlan::parse("7:read-err@3x2,crc@1,panic@0").unwrap();
+            assert!(p.fire(FaultSite::ReadErr, 3));
+            assert!(p.fire(FaultSite::ReadErr, 3));
+            assert!(!p.fire(FaultSite::ReadErr, 3), "count exhausted");
+            assert!(!p.fire(FaultSite::ReadErr, 4), "wrong target");
+            assert!(p.fire(FaultSite::ReadCrc, 1));
+            assert!(p.fire(FaultSite::SweepPanic, 0));
+            assert!(!p.fire(FaultSite::SweepPanic, 0));
+            assert_eq!(p.injected.load(Ordering::Relaxed), 4);
+        }
+
+        #[test]
+        fn wildcard_target_matches_everything() {
+            let p = FaultPlan::parse("1:stall@*x3").unwrap();
+            assert!(p.fire(FaultSite::Stall, 0));
+            assert!(p.fire(FaultSite::Stall, 17));
+            assert!(p.fire(FaultSite::Stall, 2));
+            assert!(!p.fire(FaultSite::Stall, 2), "shared count exhausted");
+        }
+
+        #[test]
+        fn probabilistic_directives_are_seed_deterministic() {
+            let draws = |seed: u64| -> Vec<bool> {
+                let p = FaultPlan::parse(&format!("{seed}:crc@*x1000000%0.5")).unwrap();
+                (0..64).map(|i| p.fire(FaultSite::ReadCrc, i)).collect()
+            };
+            assert_eq!(draws(11), draws(11), "same seed, same firing pattern");
+            assert_ne!(draws(11), draws(12), "different seed diverges");
+            let fired = draws(11).iter().filter(|&&b| b).count();
+            assert!((8..=56).contains(&fired), "p=0.5 fired {fired}/64");
+        }
+
+        #[test]
+        fn bad_specs_rejected() {
+            for bad in [
+                "", "7", "7:", "x:read-err@1", "7:read-err", "7:bogus@1", "7:read-err@q",
+                "7:read-err@1x0", "7:read-err@1%1.5", "7:read-err@1%x",
+            ] {
+                assert!(FaultPlan::parse(bad).is_err(), "spec '{bad}' should fail");
+            }
+            assert!(FaultPlan::parse("7:read-err@1x3%0.5,torn@0").is_ok());
+        }
+
+        #[test]
+        fn install_round_trip() {
+            install(Some(FaultPlan::parse("3:panic@5").unwrap()));
+            assert_eq!(injected_total(), 0);
+            let caught = std::panic::catch_unwind(|| sweep_panic_point(5));
+            assert!(caught.is_err(), "installed plan fires");
+            assert_eq!(injected_total(), 1);
+            sweep_panic_point(5); // exhausted: no second panic
+            install(None);
+            assert_eq!(injected_total(), 0);
+            sweep_panic_point(5); // cleared: inert
+        }
+    }
+}
+
+/// No-op stubs: the whole subsystem compiles away without the
+/// `fault-injection` feature. Signatures mirror the real hooks so call
+/// sites need no `cfg` of their own.
+#[cfg(not(feature = "fault-injection"))]
+mod stub {
+    use crate::util::error::{HegridError, Result};
+
+    /// Inert without the feature; a non-empty `faults` config field is
+    /// already rejected by `HegridConfig::validate` before this is reached.
+    #[inline(always)]
+    pub fn install_from_spec(_spec: &str) -> Result<()> {
+        Ok(())
+    }
+
+    #[inline(always)]
+    pub fn injected_total() -> usize {
+        0
+    }
+
+    #[inline(always)]
+    pub fn channel_read_fault(_ch: usize) -> Option<HegridError> {
+        None
+    }
+
+    #[inline(always)]
+    pub fn prefetch_stall(_g: usize) {}
+
+    #[inline(always)]
+    pub fn torn_checkpoint_write() -> bool {
+        false
+    }
+
+    #[inline(always)]
+    pub fn sweep_panic_point(_group: usize) {}
+
+    #[inline(always)]
+    pub fn sweep_panic_cell(_cell: usize) {}
+}
+
+#[cfg(not(feature = "fault-injection"))]
+pub use stub::*;

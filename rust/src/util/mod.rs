@@ -7,6 +7,7 @@
 
 pub mod crc32;
 pub mod error;
+pub mod faults;
 pub mod numa;
 pub mod prng;
 pub mod stats;

@@ -292,6 +292,10 @@ struct SweepEntry {
     /// cursor, so the body's claim loop can poll it and bail early instead
     /// of grinding through the remaining items; re-raised on the caller).
     panicked: *const AtomicBool,
+    /// First helper panic's payload message (submitter stack), so the
+    /// caller's re-raise names the real cause instead of a generic
+    /// "a helper worker panicked".
+    panic_note: *const Mutex<Option<String>>,
     /// Type- and lifetime-erased per-participant body (claims blocks until
     /// the cursor is exhausted). The `'static` bound here is a lie told to
     /// the type system — the join protocol guarantees no worker dereferences
@@ -338,7 +342,13 @@ fn exec_worker_main(inner: Arc<ExecInner>, index: usize, pool_workers: usize) {
         }
         let e = unsafe { &*entry };
         let body = unsafe { &*e.body };
-        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(body)).is_err() {
+        if let Err(payload) = std::panic::catch_unwind(std::panic::AssertUnwindSafe(body)) {
+            let note = unsafe { &*e.panic_note };
+            let mut note = note.lock().expect("executor panic note poisoned");
+            if note.is_none() {
+                *note = Some(panic_message(payload.as_ref()));
+            }
+            drop(note);
             unsafe { &*e.panicked }.store(true, Ordering::Release);
         }
         // Leaving: once `active` drops the submitter may free the sweep, so
@@ -469,6 +479,7 @@ impl PipelineExecutor {
         self.inner.sweeps.fetch_add(1, Ordering::Relaxed);
         let cursor = AtomicUsize::new(0);
         let panicked = AtomicBool::new(false);
+        let panic_note: Mutex<Option<String>> = Mutex::new(None);
         let body = || {
             let mut state = init();
             loop {
@@ -500,6 +511,7 @@ impl PipelineExecutor {
             max_participants,
             active: AtomicUsize::new(1),
             panicked: &panicked,
+            panic_note: &panic_note,
             body: body_ptr,
         };
         {
@@ -536,8 +548,25 @@ impl PipelineExecutor {
         }
         drop(leave);
         if panicked.load(Ordering::Acquire) {
-            panic!("PipelineExecutor: a helper worker panicked during the sweep");
+            let note = panic_note
+                .lock()
+                .expect("executor panic note poisoned")
+                .take()
+                .unwrap_or_else(|| "no panic message captured".into());
+            panic!("PipelineExecutor: a helper worker panicked during the sweep: {note}");
         }
+    }
+}
+
+/// Best-effort text of a panic payload (`&str` and `String` payloads cover
+/// every `panic!` in this crate; anything else gets a placeholder).
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 

@@ -1,0 +1,346 @@
+//! Fault-tolerance matrix (`--features fault-injection`): seeded injected
+//! faults — transient and permanent read errors, CRC corruption, forced
+//! worker panics, torn checkpoint writes — exercised end to end against the
+//! graceful-degradation machinery. Asserts that retries absorb transient
+//! faults bit-identically, degrade mode quarantines exactly the faulted
+//! channel groups (reported, recorded `failed` in the manifest, resumable),
+//! surviving groups stay bit-identical to a fault-free run, and `--fail-fast`
+//! (the default) still aborts on the first error.
+//!
+//! The CI fault matrix re-runs this suite across several `HEGRID_FAULT_SEED`
+//! values; every directive here uses explicit targets and counts, so the
+//! seed varies the spec plumbing (per-directive RNG streams) without making
+//! assertions flaky.
+#![cfg(feature = "fault-injection")]
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use hegrid::config::HegridConfig;
+use hegrid::coordinator::{GriddingJob, HegridEngine};
+use hegrid::data::{CheckpointManifest, Dataset, HgdStreamSource};
+use hegrid::grid::cpu::CpuGridder;
+use hegrid::grid::prep::SharedComponent;
+use hegrid::sim::SimConfig;
+use hegrid::sky::SkyMap;
+use hegrid::util::error::HegridError;
+
+/// The installed fault plan is process-global, so tests must not overlap.
+static PLAN_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    PLAN_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Seed for every spec in this file; the CI matrix sweeps it.
+fn seed() -> u64 {
+    std::env::var("HEGRID_FAULT_SEED").ok().and_then(|v| v.parse().ok()).unwrap_or(7)
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("hegrid_fault_it").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn base_config() -> HegridConfig {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let mut cfg = HegridConfig::default();
+    cfg.artifacts_dir = dir.display().to_string();
+    cfg.streams = 2;
+    cfg.pipelines = 2;
+    cfg.channels_per_dispatch = 4;
+    cfg
+}
+
+fn assert_bit_identical(a: &[SkyMap], b: &[SkyMap], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: map count");
+    for (c, (ma, mb)) in a.iter().zip(b).enumerate() {
+        for (i, (va, vb)) in ma.values().iter().zip(mb.values()).enumerate() {
+            assert_eq!(va.to_bits(), vb.to_bits(), "{what}: channel {c} cell {i}: {va} vs {vb}");
+        }
+    }
+}
+
+/// Channels of group `g` under the run's contiguous chunking (`n_groups`
+/// groups over `n_ch` channels).
+fn group_channels(g: usize, n_ch: usize, n_groups: usize) -> std::ops::Range<usize> {
+    let c = n_ch.div_ceil(n_groups);
+    g * c..((g + 1) * c).min(n_ch)
+}
+
+fn save_dataset(d: &Dataset, dir: &PathBuf) -> PathBuf {
+    let path = dir.join("input.hgd");
+    d.save(&path).unwrap();
+    path
+}
+
+/// Transient read errors under the retry budget are absorbed: the run
+/// completes bit-identically to fault-free, counts its retries, and
+/// quarantines nothing — in *both* strict and degrade mode.
+#[test]
+fn transient_read_errors_retry_to_bit_identical() {
+    let _g = lock();
+    let dir = tmp_dir("transient");
+    let d = SimConfig::quick_preset().with_channels(10).generate();
+    let hgd = save_dataset(&d, &dir);
+    let base = base_config();
+    let job = GriddingJob::for_dataset(&d, &base).unwrap();
+
+    let clean_engine = HegridEngine::new(base.clone()).unwrap();
+    let source = HgdStreamSource::open(&hgd).unwrap();
+    let (reference, rep0) = clean_engine.grid_source(&source, &job).unwrap();
+    assert_eq!(rep0.degradation.retries, 0);
+    assert!(!rep0.degradation.is_degraded());
+
+    for fail_fast in [true, false] {
+        // Channel 2's first two reads fail; the default retry budget
+        // (retry_io = 2) reaches the third, clean attempt.
+        let mut cfg = base.clone();
+        cfg.faults = format!("{}:read-err@2x2", seed());
+        cfg.retry_io_backoff_ms = 1;
+        cfg.fail_fast = fail_fast;
+        let engine = HegridEngine::new(cfg).unwrap();
+        let source = HgdStreamSource::open(&hgd).unwrap();
+        let (maps, rep) = engine.grid_source(&source, &job).unwrap();
+        let what = format!("transient fail_fast={fail_fast}");
+        assert_bit_identical(&reference, &maps, &what);
+        assert_eq!(rep.degradation.retries, 2, "{what}");
+        assert!(!rep.degradation.is_degraded(), "{what}: nothing quarantined");
+    }
+}
+
+/// A read error outliving the retry budget aborts the run in strict mode
+/// (the default) with the typed injected error.
+#[test]
+fn permanent_read_error_fails_fast_by_default() {
+    let _g = lock();
+    let dir = tmp_dir("fail_fast_read");
+    let d = SimConfig::quick_preset().with_channels(10).generate();
+    let hgd = save_dataset(&d, &dir);
+    let mut cfg = base_config();
+    cfg.faults = format!("{}:read-err@1x100", seed());
+    cfg.retry_io_backoff_ms = 1;
+    assert!(cfg.fail_fast, "strict mode is the default");
+    let job = GriddingJob::for_dataset(&d, &cfg).unwrap();
+    let engine = HegridEngine::new(cfg).unwrap();
+    let source = HgdStreamSource::open(&hgd).unwrap();
+    match engine.grid_source(&source, &job) {
+        Err(HegridError::Io { context, .. }) => {
+            assert!(context.contains("channel 1"), "{context}")
+        }
+        other => panic!("expected the injected Io error, got {other:?}"),
+    }
+}
+
+/// Degrade mode quarantines the group whose read stays broken — surviving
+/// groups bit-identical to fault-free, the failed group's planes zeroed.
+#[test]
+fn permanent_read_error_quarantines_in_degrade_mode() {
+    let _g = lock();
+    let dir = tmp_dir("degrade_read");
+    let d = SimConfig::quick_preset().with_channels(10).generate();
+    let hgd = save_dataset(&d, &dir);
+    let base = base_config();
+    let job = GriddingJob::for_dataset(&d, &base).unwrap();
+
+    let clean_engine = HegridEngine::new(base.clone()).unwrap();
+    let source = HgdStreamSource::open(&hgd).unwrap();
+    let (reference, _) = clean_engine.grid_source(&source, &job).unwrap();
+
+    // Channel 5 never reads; its group (not group 0, which owns wsum) is
+    // quarantined and every other group must be untouched.
+    let mut cfg = base.clone();
+    cfg.faults = format!("{}:read-err@5x1000", seed());
+    cfg.retry_io_backoff_ms = 1;
+    cfg.fail_fast = false;
+    let engine = HegridEngine::new(cfg).unwrap();
+    let source = HgdStreamSource::open(&hgd).unwrap();
+    let (maps, rep) = engine.grid_source(&source, &job).unwrap();
+    assert!(rep.degradation.is_degraded());
+    assert_eq!(rep.degradation.quarantined_groups.len(), 1);
+    let g = rep.degradation.quarantined_groups[0];
+    let bad = group_channels(g, d.n_channels(), rep.n_groups);
+    assert!(bad.contains(&5), "quarantined group {g} must own channel 5");
+    assert!(g != 0, "channel 5 is not in the wsum-owning group under c=4");
+    assert!(
+        rep.degradation.causes[0].contains("injected"),
+        "cause records the fault: {}",
+        rep.degradation.causes[0]
+    );
+    for c in 0..d.n_channels() {
+        if bad.contains(&c) {
+            continue; // quarantined plane: zeroed, not compared
+        }
+        assert_bit_identical(
+            &reference[c..c + 1],
+            &maps[c..c + 1],
+            &format!("surviving channel {c}"),
+        );
+    }
+}
+
+/// Injected CRC corruption on a group-0 channel: retried (it is retryable),
+/// still failing, quarantined — and losing group 0 zeroes the shared wsum
+/// plane (honest blanks) without erroring the run.
+#[test]
+fn crc_corruption_quarantines_wsum_owner() {
+    let _g = lock();
+    let dir = tmp_dir("degrade_crc");
+    let d = SimConfig::quick_preset().with_channels(10).generate();
+    let hgd = save_dataset(&d, &dir);
+    let mut cfg = base_config();
+    cfg.faults = format!("{}:crc@0x1000", seed());
+    cfg.retry_io = 1;
+    cfg.retry_io_backoff_ms = 1;
+    cfg.fail_fast = false;
+    let job = GriddingJob::for_dataset(&d, &cfg).unwrap();
+    let engine = HegridEngine::new(cfg).unwrap();
+    let source = HgdStreamSource::open(&hgd).unwrap();
+    let (_, rep) = engine.grid_source(&source, &job).unwrap();
+    assert_eq!(rep.degradation.quarantined_groups, vec![0]);
+    assert!(rep.degradation.retries >= 1, "Corrupt is retryable");
+    assert!(rep.degradation.causes[0].contains("CRC"), "{}", rep.degradation.causes[0]);
+}
+
+/// The acceptance-criteria scenario: a streaming tiled checkpointed run
+/// under seeded transient read errors plus one forced worker panic
+/// completes, reports the quarantined group in both the DegradationReport
+/// and the checkpoint manifest, and `--resume` (faults cleared) produces
+/// maps bit-identical to a fault-free run.
+#[test]
+fn panic_quarantine_then_resume_is_bit_identical() {
+    let _g = lock();
+    let dir = tmp_dir("panic_resume");
+    let ckpt = dir.join("ckpt");
+    let d = SimConfig::quick_preset().with_channels(10).generate();
+    let hgd = save_dataset(&d, &dir);
+    let base = base_config();
+    let job = GriddingJob::for_dataset(&d, &base).unwrap();
+
+    let clean_engine = HegridEngine::new(base.clone()).unwrap();
+    let source = HgdStreamSource::open(&hgd).unwrap();
+    let (reference, _) = clean_engine.grid_source(&source, &job).unwrap();
+
+    // Faulted leg: channel 0 reads transiently fail twice (absorbed by
+    // retries), group 1's sweep panics (quarantined).
+    let mut cfg = base.clone();
+    cfg.output_tile_rows = 4;
+    cfg.checkpoint_dir = ckpt.display().to_string();
+    cfg.faults = format!("{}:read-err@0x2,panic@1", seed());
+    cfg.retry_io_backoff_ms = 1;
+    cfg.fail_fast = false;
+    let engine = HegridEngine::new(cfg.clone()).unwrap();
+    let source = HgdStreamSource::open(&hgd).unwrap();
+    let (_, rep) = engine.grid_source(&source, &job).unwrap();
+    assert_eq!(rep.degradation.quarantined_groups, vec![1]);
+    assert_eq!(rep.degradation.retries, 2);
+    assert!(
+        rep.degradation.causes[0].contains("fault-injection"),
+        "{}",
+        rep.degradation.causes[0]
+    );
+    let n_groups = rep.n_groups;
+    assert!(n_groups >= 3);
+
+    // The manifest records the quarantined group as failed, the rest done.
+    let m = CheckpointManifest::load(&ckpt).unwrap();
+    assert!(m.is_failed(1) && !m.is_done(1));
+    assert_eq!(m.groups_done.len(), n_groups - 1);
+
+    // Resume with faults cleared: only the failed group re-grids, and the
+    // final maps match the fault-free reference bit for bit.
+    let mut resume_cfg = cfg.clone();
+    resume_cfg.faults = String::new();
+    resume_cfg.resume = true;
+    let engine = HegridEngine::new(resume_cfg).unwrap();
+    let source = HgdStreamSource::open(&hgd).unwrap();
+    let (resumed, rep) = engine.grid_source(&source, &job).unwrap();
+    assert_eq!(rep.groups_skipped, n_groups - 1);
+    assert_eq!(rep.n_groups, 1, "exactly the failed group re-grids");
+    assert!(!rep.degradation.is_degraded());
+    assert_bit_identical(&reference, &resumed, "resumed after quarantine");
+    let m = CheckpointManifest::load(&ckpt).unwrap();
+    assert!(!m.is_failed(1) && m.is_done(1), "re-grid clears the failed record");
+}
+
+/// In strict mode a forced sweep panic surfaces as a typed Runtime error
+/// naming the group — never a process abort, never a silent zeroed plane.
+#[test]
+fn fail_fast_turns_sweep_panic_into_typed_error() {
+    let _g = lock();
+    let d = SimConfig::quick_preset().with_channels(10).generate();
+    let mut cfg = base_config();
+    cfg.faults = format!("{}:panic@0", seed());
+    assert!(cfg.fail_fast);
+    let job = GriddingJob::for_dataset(&d, &cfg).unwrap();
+    let engine = HegridEngine::new(cfg).unwrap();
+    match engine.grid(&d, &job) {
+        Err(HegridError::Runtime(msg)) => {
+            assert!(msg.contains("panicked") && msg.contains("group 0"), "{msg}");
+            assert!(msg.contains("fault-injection"), "original cause preserved: {msg}");
+        }
+        other => panic!("expected Runtime, got {other:?}"),
+    }
+}
+
+/// A per-cell panic inside the executor's sweep workers is re-raised on the
+/// sweep caller with the original message preserved (the `panic_note`
+/// plumbing), so quarantine causes stay informative.
+#[test]
+fn cell_panic_preserves_message_through_executor() {
+    let _g = lock();
+    hegrid::util::faults::install_from_spec(&format!("{}:panic-cell@3", seed())).unwrap();
+    let d = SimConfig::quick_preset().generate();
+    let cfg = base_config();
+    let job = GriddingJob::for_dataset(&d, &cfg).unwrap();
+    let shared = SharedComponent::for_kernel(&d.lons, &d.lats, &job.kernel).unwrap();
+    let gridder = CpuGridder::new(job.spec.clone(), job.kernel.clone());
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        gridder.grid_with_shared(&shared, &d.channels)
+    }));
+    hegrid::util::faults::install_from_spec("").unwrap();
+    let payload = caught.expect_err("the injected cell panic must propagate");
+    let msg = hegrid::util::threads::panic_message(payload.as_ref());
+    assert!(msg.contains("fault-injection") && msg.contains("cell 3"), "{msg}");
+}
+
+/// A torn manifest write (partial temp file, no rename) in a degrade-mode
+/// checkpointed run quarantines the group whose save tore, demotes it from
+/// `groups_done`, and resume completes bit-identically.
+#[test]
+fn torn_checkpoint_write_quarantines_and_resumes() {
+    let _g = lock();
+    let dir = tmp_dir("torn_save");
+    let ckpt = dir.join("ckpt");
+    let d = SimConfig::quick_preset().with_channels(10).generate();
+    let base = base_config();
+    let job = GriddingJob::for_dataset(&d, &base).unwrap();
+    let (reference, _) = HegridEngine::new(base.clone()).unwrap().grid(&d, &job).unwrap();
+
+    // Save ordinal 0 is the manifest-creation save; ordinal 1 is the first
+    // group-completion save — tear it. Width 1 keeps the order exact.
+    let mut cfg = base.clone();
+    cfg.output_tile_rows = 4;
+    cfg.pipeline_width = 1;
+    cfg.checkpoint_dir = ckpt.display().to_string();
+    cfg.faults = format!("{}:torn@1", seed());
+    cfg.fail_fast = false;
+    let (_, rep) = HegridEngine::new(cfg.clone()).unwrap().grid(&d, &job).unwrap();
+    assert_eq!(rep.degradation.quarantined_groups.len(), 1);
+    assert!(rep.degradation.causes[0].contains("torn"), "{}", rep.degradation.causes[0]);
+    let torn_g = rep.degradation.quarantined_groups[0];
+
+    // The final manifest save (after the plan's one tear fired) recorded
+    // the demotion: the torn group is failed, not done.
+    let m = CheckpointManifest::load(&ckpt).unwrap();
+    assert!(m.is_failed(torn_g) && !m.is_done(torn_g));
+
+    let mut resume_cfg = cfg;
+    resume_cfg.faults = String::new();
+    resume_cfg.resume = true;
+    let (resumed, rep) = HegridEngine::new(resume_cfg).unwrap().grid(&d, &job).unwrap();
+    assert_eq!(rep.n_groups, 1);
+    assert_bit_identical(&reference, &resumed, "resumed after torn save");
+}
