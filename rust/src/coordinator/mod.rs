@@ -71,6 +71,19 @@ use crate::util::threads::PipelineExecutor;
 pub use plan::{ChannelGroups, DispatchPlan};
 pub use simulator::{simulate, SimParams, SimResult, StageCost};
 
+/// Process-global epoch allocator for [`DispatchPlan`] builds. Epoch IDs
+/// key per-plan device-buffer caches in the stream pools, so they must be
+/// unique across *every* engine in the process — the service runs one
+/// engine per job but shares plans through a [`crate::service::cache::PlanCache`],
+/// and a per-engine counter would let two engines mint colliding IDs for
+/// different plans.
+static EPOCH_COUNTER: AtomicU64 = AtomicU64::new(1);
+
+/// Reserve a fresh block of [`plan::EPOCHS_PER_PLAN`] epoch IDs.
+pub(crate) fn next_epoch_base() -> u64 {
+    EPOCH_COUNTER.fetch_add(plan::EPOCHS_PER_PLAN, Ordering::Relaxed)
+}
+
 /// Pipeline stages for span-level accounting (occupancy + inter-pipeline
 /// overlap — the Fig-8/9 instrumentation of the multi-pipeline design).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -120,6 +133,33 @@ pub struct StageSpan {
     pub end: f64,
 }
 
+/// Cooperative cancellation token for a gridding run, checked by every
+/// pipeline slot at channel-group boundaries (between groups, never inside
+/// a sweep). The default token is inert — `is_cancelled()` is always false
+/// and costs one branch per group — so one-shot CLI runs pay nothing. The
+/// service arms one per job and trips it on `DELETE /jobs/{id}`; the run
+/// then drains cleanly and returns [`HegridError::Cancelled`].
+#[derive(Clone, Debug, Default)]
+pub struct CancelFlag(Option<Arc<std::sync::atomic::AtomicBool>>);
+
+impl CancelFlag {
+    /// An armed token (cancellable). Clones share the flag.
+    pub fn armed() -> CancelFlag {
+        CancelFlag(Some(Arc::new(std::sync::atomic::AtomicBool::new(false))))
+    }
+
+    /// Request cancellation. No-op on an inert (default) token.
+    pub fn cancel(&self) {
+        if let Some(f) = &self.0 {
+            f.store(true, Ordering::SeqCst);
+        }
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.as_ref().is_some_and(|f| f.load(Ordering::SeqCst))
+    }
+}
+
 /// What to grid: a dataset onto a map with a kernel.
 #[derive(Clone, Debug)]
 pub struct GriddingJob {
@@ -128,6 +168,9 @@ pub struct GriddingJob {
     /// SIMD ISA request forwarded to the neighbour-table build (config
     /// `simd_isa` / CLI `--simd`).
     pub simd: crate::grid::simd::SimdIsa,
+    /// Cooperative cancellation token, checked at group boundaries by
+    /// [`HegridEngine::grid_source`]'s pipeline loop. Inert by default.
+    pub cancel: CancelFlag,
 }
 
 impl GriddingJob {
@@ -143,7 +186,13 @@ impl GriddingJob {
             cfg.oversample,
         );
         let kernel = ConvKernel::from_config(meta.beam_arcsec, cfg)?;
-        Ok(GriddingJob { spec, kernel, simd: cfg.simd() })
+        Ok(GriddingJob { spec, kernel, simd: cfg.simd(), cancel: CancelFlag::default() })
+    }
+
+    /// Attach a cancellation token (service jobs).
+    pub fn with_cancel(mut self, cancel: CancelFlag) -> GriddingJob {
+        self.cancel = cancel;
+        self
     }
 
     /// Derive map + kernel from dataset metadata and the engine config.
@@ -171,8 +220,13 @@ pub struct PipelineReport {
     pub n_tiles: usize,
     pub n_shards: usize,
     pub dispatches: usize,
-    /// Times the shared component was built (1 with sharing, ≥ groups without).
+    /// Times the shared component was built (1 with sharing, ≥ groups
+    /// without, 0 when a service [`crate::service::cache::PlanCache`] hit
+    /// supplied the plan).
     pub shared_builds: usize,
+    /// The shared component came out of a service plan cache instead of
+    /// being built by this run (always `false` outside `hegrid serve`).
+    pub plan_cache_hit: bool,
     /// Neighbour-table stats of the last build.
     pub overflow_groups: usize,
     pub adjacent_reuse: f64,
@@ -465,7 +519,9 @@ pub struct HegridEngine {
     manifest: Arc<Manifest>,
     streams: StreamPool,
     mem: MemoryPool,
-    epoch_counter: AtomicU64,
+    /// Service-attached shared plan cache ([`HegridEngine::with_plan_cache`]);
+    /// `None` (no cache, always build) for one-shot CLI engines.
+    plan_cache: Option<Arc<crate::service::cache::PlanCache>>,
 }
 
 impl HegridEngine {
@@ -504,13 +560,19 @@ impl HegridEngine {
         };
         let manifest = Arc::new(manifest);
         let streams = StreamPool::new(Arc::clone(&manifest), config.effective_streams())?;
-        Ok(HegridEngine {
-            config,
-            manifest,
-            streams,
-            mem: MemoryPool::new(),
-            epoch_counter: AtomicU64::new(1),
-        })
+        Ok(HegridEngine { config, manifest, streams, mem: MemoryPool::new(), plan_cache: None })
+    }
+
+    /// Attach a shared [`crate::service::cache::PlanCache`]: `prepare_run`
+    /// will consult it (when `share_preprocessing` is on) before building
+    /// the shared component, so concurrent service jobs with the same sky
+    /// setup reuse one `DispatchPlan` (NeighborTable, CellTrig, staged unit
+    /// vectors, permutation) instead of building it per job. Safe across
+    /// engines because epoch IDs are allocated process-globally
+    /// ([`next_epoch_base`]).
+    pub fn with_plan_cache(mut self, cache: Arc<crate::service::cache::PlanCache>) -> HegridEngine {
+        self.plan_cache = Some(cache);
+        self
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -633,17 +695,31 @@ impl HegridEngine {
             // any pipeline exists, so the pipeline-width knob must not
             // throttle it (that would contaminate width sweeps with prep
             // speed differences).
-            let plan = DispatchPlan::build(
-                lons,
-                lats,
-                job,
-                &variant,
-                self.epoch_counter.fetch_add(plan::EPOCHS_PER_PLAN, Ordering::Relaxed),
-                crate::util::threads::default_parallelism(),
-            )?;
+            let build = || {
+                DispatchPlan::build(
+                    lons,
+                    lats,
+                    job,
+                    &variant,
+                    next_epoch_base(),
+                    crate::util::threads::default_parallelism(),
+                )
+                .map(Arc::new)
+            };
+            // With a service plan cache attached, same-sky-setup jobs reuse
+            // one plan; a concurrent same-key miss waits for the in-flight
+            // build instead of duplicating it.
+            let (plan, cache_hit) = match &self.plan_cache {
+                Some(cache) => {
+                    let key = crate::service::cache::plan_key(lons, lats, job, &variant);
+                    cache.get_or_build(&key, build)?
+                }
+                None => (build()?, false),
+            };
             stages.add("prep+nbr", t0.elapsed());
-            report.shared_builds = 1;
-            Some(Arc::new(plan))
+            report.shared_builds = usize::from(!cache_hit);
+            report.plan_cache_hit = cache_hit;
+            Some(plan)
         } else {
             None
         };
@@ -681,6 +757,7 @@ impl HegridEngine {
             variant.c,
             &mut report,
             stages,
+            &job.cancel,
             |batch, local_stages, local_spans, pf| {
                 self.run_pipeline(
                     lons,
@@ -757,6 +834,7 @@ impl HegridEngine {
         channels_per_group: usize,
         report: &mut PipelineReport,
         stages: StageTimes,
+        cancel: &CancelFlag,
         process: F,
     ) -> Result<()>
     where
@@ -839,6 +917,21 @@ impl HegridEngine {
             let mut batch_spans: Vec<(f64, f64)> = Vec::new();
             loop {
                 if !governor.admit(pipe) {
+                    break;
+                }
+                // Cooperative cancellation (service `DELETE /jobs/{id}`):
+                // checked at the group boundary, before pulling another
+                // batch, so an in-flight group finishes or quarantines
+                // normally and no partial sweep is ever observed. Wins over
+                // degrade mode — a cancelled run stops even if every
+                // remaining group would have been quarantinable.
+                if cancel.is_cancelled() {
+                    let mut slot = first_error.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(HegridError::Cancelled);
+                    }
+                    prefetcher.abort();
+                    governor.finish();
                     break;
                 }
                 let batch = match prefetcher.next() {
@@ -1024,7 +1117,7 @@ impl HegridEngine {
                     lats,
                     job,
                     variant,
-                    self.epoch_counter.fetch_add(plan::EPOCHS_PER_PLAN, Ordering::Relaxed),
+                    next_epoch_base(),
                     1, // a lone pipeline gets no extra build parallelism
                 )?;
                 stages.add("prep+nbr", t0.elapsed());

@@ -169,6 +169,7 @@ impl HegridEngine {
             variant.c,
             &mut report,
             stages,
+            &job.cancel,
             |batch, local_stages, local_spans, pf| {
                 self.run_pipeline_tiled(&ctx, batch, local_stages, local_spans, pf)
             },
@@ -257,7 +258,7 @@ impl HegridEngine {
                     ctx.lats,
                     ctx.job,
                     variant,
-                    self.epoch_counter.fetch_add(plan::EPOCHS_PER_PLAN, Ordering::Relaxed),
+                    super::next_epoch_base(),
                     1, // a lone pipeline gets no extra build parallelism
                 )?;
                 stages.add("prep+nbr", t0.elapsed());

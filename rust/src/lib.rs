@@ -44,6 +44,7 @@ pub mod healpix;
 pub mod json;
 pub mod logging;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod sky;
 pub mod testkit;
@@ -56,6 +57,7 @@ pub mod prelude {
     pub use crate::data::{ChannelSource, Dataset, HgdStreamSource, InMemorySource};
     pub use crate::grid::kernels::ConvKernel;
     pub use crate::grid::prep::SharedComponent;
+    pub use crate::service::{ServiceConfig, ServiceHandle};
     pub use crate::sky::{GridSpec, SkyMap};
     pub use crate::util::error::{HegridError, Result};
 }

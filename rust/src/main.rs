@@ -7,6 +7,7 @@
 //! hegrid accuracy   --input data.hgd [--out-prefix out/acc]   (Fig-17 check)
 //! hegrid info       [--artifacts artifacts]                   (list variants)
 //! hegrid bench-gate --current BENCH_x.json [--baseline prev.json] [--threshold 0.15]
+//! hegrid serve      [--listen ADDR] [engine knobs]              (job server)
 //! ```
 //!
 //! Engine knobs (grid/accuracy): `--streams N --pipelines N
@@ -40,6 +41,14 @@
 //! them as failed so `--resume` re-grids exactly those. `--faults
 //! <seed>:<spec>` (or HEGRID_FAULTS) injects deterministic faults when the
 //! crate is built with `--features fault-injection`.
+//!
+//! `hegrid serve` runs the multi-tenant job server (docs/service.md): the
+//! engine knobs above become the server's *base* config, each `POST /jobs`
+//! may overlay a partial `config` object on it, and `--listen ADDR
+//! --queue-max N --service-workers N --cache-cap N --keep-results N
+//! --drain-timeout S` (or `HEGRID_SERVICE_*` env vars) set the service
+//! layer: admission control, job concurrency, cross-job plan-cache size,
+//! result retention, and the SIGTERM graceful-drain budget.
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
@@ -50,6 +59,7 @@ use hegrid::config::{DeviceProfile, HegridConfig};
 use hegrid::coordinator::{GriddingJob, HegridEngine, PipelineReport};
 use hegrid::data::{Dataset, HgdReader, HgdStreamSource};
 use hegrid::runtime::Manifest;
+use hegrid::service::ServiceConfig;
 use hegrid::sim::SimConfig;
 use hegrid::util::error::{HegridError, Result};
 
@@ -59,6 +69,7 @@ const VALUE_OPTS: &[&str] = &[
     "gamma", "block", "cpu-block", "simd", "affinity", "kernel", "profile", "oversample",
     "artifacts", "threads", "variant", "prefetch-depth", "io-workers", "baseline", "current",
     "threshold", "tile-rows", "checkpoint", "faults", "retry-io", "retry-backoff-ms",
+    "listen", "queue-max", "service-workers", "cache-cap", "keep-results", "drain-timeout",
 ];
 
 fn main() -> ExitCode {
@@ -85,6 +96,7 @@ fn run(argv: &[String]) -> Result<()> {
         Some("accuracy") => cmd_accuracy(&args)?,
         Some("info") => cmd_info(&args)?,
         Some("bench-gate") => cmd_bench_gate(&args)?,
+        Some("serve") => cmd_serve(&args)?,
         Some("help") | None => {
             print_help();
             return Ok(());
@@ -107,7 +119,8 @@ fn print_help() {
          \x20 inspect   print an HGD file's header\n\
          \x20 accuracy  compare HEGrid output against the Cygrid baseline (Fig 17)\n\
          \x20 info      list AOT artifact variants\n\
-         \x20 bench-gate  diff a fresh BENCH_*.json against a stored baseline (CI perf gate)\n\n\
+         \x20 bench-gate  diff a fresh BENCH_*.json against a stored baseline (CI perf gate)\n\
+         \x20 serve     run the multi-tenant HTTP job server (docs/service.md)\n\n\
          run `cargo doc --open` or see README.md for the full option list",
         hegrid::VERSION
     );
@@ -179,6 +192,26 @@ fn engine_config(args: &cli::Args) -> Result<HegridConfig> {
     }
     cfg.validate()?;
     Ok(cfg)
+}
+
+/// `hegrid serve`: the multi-tenant job server (docs/service.md). The
+/// engine knobs on the command line become the base config every job
+/// inherits (jobs may overlay a partial `config` object per POST);
+/// service-layer knobs resolve defaults → `HEGRID_SERVICE_*` env vars →
+/// CLI flags, strongest last. Runs until SIGTERM/SIGINT, then drains.
+fn cmd_serve(args: &cli::Args) -> Result<()> {
+    let base = engine_config(args)?;
+    let mut scfg = ServiceConfig::default();
+    scfg.apply_env()?;
+    if let Some(listen) = args.get("listen") {
+        scfg.service_listen = listen.to_string();
+    }
+    scfg.service_queue_max = args.get_usize("queue-max", scfg.service_queue_max)?;
+    scfg.service_workers = args.get_usize("service-workers", scfg.service_workers)?;
+    scfg.service_cache_cap = args.get_usize("cache-cap", scfg.service_cache_cap)?;
+    scfg.service_keep_results = args.get_usize("keep-results", scfg.service_keep_results)?;
+    scfg.service_drain_s = args.get_usize("drain-timeout", scfg.service_drain_s)?;
+    hegrid::service::serve(base, scfg)
 }
 
 fn cmd_simulate(args: &cli::Args) -> Result<()> {

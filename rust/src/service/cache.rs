@@ -1,0 +1,289 @@
+//! The cross-job plan cache: the service's one piece of shared mutable
+//! state beyond the queue.
+//!
+//! A [`crate::coordinator::DispatchPlan`] bundles everything expensive a
+//! sky setup needs built exactly once — the sorted-sample permutation,
+//! HEALPix neighbour table, cell trig, and staged unit-vector columns.
+//! Within one run the coordinator already shares it across pipelines
+//! (`share_preprocessing`); the service extends that sharing across *jobs*:
+//! engines constructed with
+//! [`crate::coordinator::HegridEngine::with_plan_cache`] look the plan up
+//! by [`plan_key`] before building. Plans are immutable after construction
+//! and epoch IDs are allocated process-globally, so a cached plan is safe
+//! to use from any engine and any number of concurrent jobs.
+//!
+//! Concurrency: a miss marks the key *in-flight* and builds outside the
+//! lock; a second job arriving on the same key waits on the build instead
+//! of duplicating it, then counts as a hit. That makes the canonical
+//! two-concurrent-identical-jobs case deterministic — one build, one hit —
+//! which `/metrics` exposes as `hegrid_plan_cache_{hits,misses}_total`.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::coordinator::{DispatchPlan, GriddingJob};
+use crate::runtime::VariantInfo;
+use crate::util::crc32::Crc32;
+use crate::util::error::Result;
+
+/// Counter snapshot for `/metrics` and tests.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub entries: usize,
+}
+
+struct Entry<T> {
+    value: Arc<T>,
+    last_used: u64,
+}
+
+struct State<T> {
+    entries: HashMap<String, Entry<T>>,
+    /// Keys with a build in progress (misses wait instead of re-building).
+    building: HashSet<String>,
+    /// LRU clock: bumped on every access, stamped into `last_used`.
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// A bounded LRU cache of `Arc<T>` keyed by canonical strings, with
+/// build-once semantics for concurrent misses. The service instantiates it
+/// as [`PlanCache`]; tests use small payload types.
+pub struct SharedCache<T> {
+    cap: usize,
+    state: Mutex<State<T>>,
+    cond: Condvar,
+}
+
+/// The service's plan cache (see module docs).
+pub type PlanCache = SharedCache<DispatchPlan>;
+
+impl<T> SharedCache<T> {
+    /// `cap` = retained entries (LRU eviction beyond it); 0 disables the
+    /// cache (every lookup builds, nothing is retained or counted).
+    pub fn new(cap: usize) -> SharedCache<T> {
+        SharedCache {
+            cap,
+            state: Mutex::new(State {
+                entries: HashMap::new(),
+                building: HashSet::new(),
+                tick: 0,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+            }),
+            cond: Condvar::new(),
+        }
+    }
+
+    /// Look `key` up; on a miss run `build` (outside the lock) and insert.
+    /// Returns the value and whether it was a cache hit. A concurrent
+    /// caller on an in-flight key waits for that build and scores a hit; if
+    /// the build fails, one waiter takes over building.
+    pub fn get_or_build(
+        &self,
+        key: &str,
+        build: impl FnOnce() -> Result<Arc<T>>,
+    ) -> Result<(Arc<T>, bool)> {
+        if self.cap == 0 {
+            return build().map(|v| (v, false));
+        }
+        {
+            let mut guard = self.state.lock().unwrap();
+            loop {
+                let st = &mut *guard;
+                if let Some(e) = st.entries.get_mut(key) {
+                    st.tick += 1;
+                    e.last_used = st.tick;
+                    st.hits += 1;
+                    return Ok((Arc::clone(&e.value), true));
+                }
+                if st.building.contains(key) {
+                    guard = self.cond.wait(guard).unwrap();
+                    continue;
+                }
+                st.misses += 1;
+                st.building.insert(key.to_string());
+                break;
+            }
+        }
+        // Build outside the lock — plan builds take real time and other
+        // keys must stay servable. The guard clears the in-flight mark if
+        // the build fails or unwinds, so waiters never deadlock; on success
+        // the insert and the clear happen under one lock, so a woken waiter
+        // always finds the entry (never a vanished in-flight mark that
+        // would make it rebuild).
+        let mut clear = ClearBuilding { cache: self, key, armed: true };
+        let value = match build() {
+            Ok(v) => v,
+            Err(e) => {
+                drop(clear); // clears in-flight + notifies waiters
+                return Err(e);
+            }
+        };
+        {
+            let mut guard = self.state.lock().unwrap();
+            let st = &mut *guard;
+            st.building.remove(key);
+            st.tick += 1;
+            let tick = st.tick;
+            st.entries
+                .insert(key.to_string(), Entry { value: Arc::clone(&value), last_used: tick });
+            while st.entries.len() > self.cap {
+                let victim = st
+                    .entries
+                    .iter()
+                    .min_by_key(|(_, e)| e.last_used)
+                    .map(|(k, _)| k.clone())
+                    .expect("non-empty cache over capacity");
+                st.entries.remove(&victim);
+                st.evictions += 1;
+            }
+        }
+        clear.armed = false;
+        self.cond.notify_all();
+        Ok((value, false))
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let st = self.state.lock().unwrap();
+        CacheStats {
+            hits: st.hits,
+            misses: st.misses,
+            evictions: st.evictions,
+            entries: st.entries.len(),
+        }
+    }
+}
+
+struct ClearBuilding<'a, T> {
+    cache: &'a SharedCache<T>,
+    key: &'a str,
+    armed: bool,
+}
+
+impl<T> Drop for ClearBuilding<'_, T> {
+    fn drop(&mut self) {
+        if self.armed {
+            let mut st = self.cache.state.lock().unwrap();
+            st.building.remove(self.key);
+            drop(st);
+            self.cache.cond.notify_all();
+        }
+    }
+}
+
+/// Canonical cache key of a sky setup: everything
+/// [`crate::coordinator::DispatchPlan::build`] depends on — the artifact
+/// variant, the job's grid geometry and kernel (exact `f64` bit patterns,
+/// so "equal" means bit-equal, never approximately equal), and the
+/// coordinate table (length + CRC32 of the raw bytes, cheap relative to a
+/// plan build). The SIMD ISA is deliberately excluded: every backend is
+/// bit-identical, so plans are shareable across it.
+pub fn plan_key(lons: &[f64], lats: &[f64], job: &GriddingJob, variant: &VariantInfo) -> String {
+    let mut key = String::with_capacity(192);
+    key.push_str(&variant.name);
+    key.push('|');
+    key.push_str(job.kernel.type_name());
+    for bits in [
+        job.kernel.sigma.to_bits(),
+        job.kernel.sigma2.to_bits(),
+        job.kernel.support.to_bits(),
+        job.spec.lon_c.to_bits(),
+        job.spec.lat_c.to_bits(),
+        job.spec.step.to_bits(),
+    ] {
+        key.push_str(&format!("|{bits:016x}"));
+    }
+    key.push_str(&format!("|{}x{}|n{}", job.spec.nlon, job.spec.nlat, lons.len()));
+    key.push_str(&format!("|{:08x}|{:08x}", crc_f64(lons), crc_f64(lats)));
+    key
+}
+
+fn crc_f64(values: &[f64]) -> u32 {
+    let mut crc = Crc32::new();
+    let mut buf = [0u8; 8 * 256];
+    for chunk in values.chunks(256) {
+        for (i, v) in chunk.iter().enumerate() {
+            buf[i * 8..i * 8 + 8].copy_from_slice(&v.to_le_bytes());
+        }
+        crc.update(&buf[..chunk.len() * 8]);
+    }
+    crc.finalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Barrier;
+
+    #[test]
+    fn hit_miss_and_lru_eviction() {
+        let cache: SharedCache<usize> = SharedCache::new(2);
+        let build = |v: usize| move || Ok(Arc::new(v));
+        assert_eq!(cache.get_or_build("a", build(1)).unwrap(), (Arc::new(1), false));
+        assert_eq!(cache.get_or_build("a", build(9)).unwrap(), (Arc::new(1), true));
+        cache.get_or_build("b", build(2)).unwrap();
+        // Touch "a" so "b" is the LRU victim when "c" lands.
+        cache.get_or_build("a", build(9)).unwrap();
+        cache.get_or_build("c", build(3)).unwrap();
+        let st = cache.stats();
+        assert_eq!((st.hits, st.misses, st.evictions, st.entries), (2, 3, 1, 2));
+        assert_eq!(cache.get_or_build("b", build(4)).unwrap(), (Arc::new(4), false));
+        assert_eq!(cache.get_or_build("a", build(9)).unwrap(), (Arc::new(1), true));
+    }
+
+    #[test]
+    fn zero_capacity_disables_caching() {
+        let cache: SharedCache<usize> = SharedCache::new(0);
+        assert_eq!(cache.get_or_build("a", || Ok(Arc::new(1))).unwrap(), (Arc::new(1), false));
+        assert_eq!(cache.get_or_build("a", || Ok(Arc::new(2))).unwrap(), (Arc::new(2), false));
+        assert_eq!(cache.stats(), CacheStats::default());
+    }
+
+    #[test]
+    fn concurrent_same_key_builds_once() {
+        let cache: SharedCache<usize> = SharedCache::new(4);
+        let builds = AtomicUsize::new(0);
+        let barrier = Barrier::new(4);
+        let hits = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    barrier.wait();
+                    let (v, hit) = cache
+                        .get_or_build("k", || {
+                            builds.fetch_add(1, Ordering::SeqCst);
+                            std::thread::sleep(std::time::Duration::from_millis(20));
+                            Ok(Arc::new(7))
+                        })
+                        .unwrap();
+                    assert_eq!(*v, 7);
+                    if hit {
+                        hits.fetch_add(1, Ordering::SeqCst);
+                    }
+                });
+            }
+        });
+        assert_eq!(builds.load(Ordering::SeqCst), 1);
+        assert_eq!(hits.load(Ordering::SeqCst), 3);
+        assert_eq!(cache.stats().hits, 3);
+    }
+
+    #[test]
+    fn failed_build_hands_over_to_a_waiter() {
+        let cache: SharedCache<usize> = SharedCache::new(4);
+        let err = cache.get_or_build("k", || {
+            Err(crate::util::error::HegridError::Internal("boom".into()))
+        });
+        assert!(err.is_err());
+        // The in-flight mark is cleared, so a retry builds normally.
+        assert_eq!(cache.get_or_build("k", || Ok(Arc::new(5))).unwrap(), (Arc::new(5), false));
+    }
+}

@@ -1,0 +1,277 @@
+//! Minimal HTTP/1.1 message parsing and serialisation over `std::io`.
+//!
+//! Just enough protocol for the job API: one request per connection
+//! (`Connection: close` on every response), `Content-Length` bodies only
+//! (no chunked transfer), bounded header and body sizes so a misbehaving
+//! client cannot balloon server memory. Anything outside those bounds is a
+//! parse error the server answers with 400.
+
+use std::io::{BufRead, Read, Write};
+
+use crate::json::Json;
+use crate::util::error::{HegridError, Result};
+
+/// Longest accepted request line or header line, bytes.
+const MAX_LINE: usize = 8 * 1024;
+/// Most accepted header lines.
+const MAX_HEADERS: usize = 64;
+/// Largest accepted request body, bytes (job specs are small JSON).
+const MAX_BODY: usize = 1024 * 1024;
+
+/// A parsed request: method, percent-decoded-free path (taken verbatim),
+/// lower-cased header names, raw body bytes.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Read one request from `r`. `Ok(None)` on a clean EOF before any
+    /// bytes (client closed an idle connection).
+    pub fn read_from(r: &mut impl BufRead) -> Result<Option<Request>> {
+        let line = match read_line(r)? {
+            None => return Ok(None),
+            Some(l) => l,
+        };
+        let mut parts = line.split_whitespace();
+        let method = parts
+            .next()
+            .ok_or_else(|| HegridError::Format("empty request line".into()))?
+            .to_string();
+        let target = parts
+            .next()
+            .ok_or_else(|| HegridError::Format("request line missing target".into()))?;
+        let version = parts
+            .next()
+            .ok_or_else(|| HegridError::Format("request line missing HTTP version".into()))?;
+        if !version.starts_with("HTTP/1.") {
+            return Err(HegridError::Format(format!("unsupported HTTP version '{version}'")));
+        }
+        // Strip any query string: the job API routes on the path alone.
+        let path = target.split('?').next().unwrap_or(target).to_string();
+
+        let mut headers = Vec::new();
+        loop {
+            let line = read_line(r)?
+                .ok_or_else(|| HegridError::Format("EOF inside request headers".into()))?;
+            if line.is_empty() {
+                break;
+            }
+            if headers.len() >= MAX_HEADERS {
+                return Err(HegridError::Format("too many request headers".into()));
+            }
+            let (name, value) = line
+                .split_once(':')
+                .ok_or_else(|| HegridError::Format(format!("malformed header line '{line}'")))?;
+            headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+        }
+
+        let content_length = match headers.iter().find(|(n, _)| n == "content-length") {
+            None => 0,
+            Some((_, v)) => v
+                .parse::<usize>()
+                .map_err(|_| HegridError::Format(format!("bad Content-Length '{v}'")))?,
+        };
+        if content_length > MAX_BODY {
+            return Err(HegridError::Format(format!(
+                "request body of {content_length} bytes exceeds the {MAX_BODY}-byte limit"
+            )));
+        }
+        let mut body = vec![0u8; content_length];
+        r.read_exact(&mut body).map_err(HegridError::io("reading request body"))?;
+        Ok(Some(Request { method, path, headers, body }))
+    }
+
+    /// First value of header `name` (lower-case), if present.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Path segments with the leading slash stripped: `/jobs/3/result` →
+    /// `["jobs", "3", "result"]`.
+    pub fn segments(&self) -> Vec<&str> {
+        self.path.split('/').filter(|s| !s.is_empty()).collect()
+    }
+
+    /// Parse the body as JSON.
+    pub fn json(&self) -> Result<Json> {
+        let text = std::str::from_utf8(&self.body)
+            .map_err(|_| HegridError::Format("request body is not UTF-8".into()))?;
+        crate::json::parse(text)
+    }
+}
+
+/// Read one CRLF- (or LF-) terminated line, without the terminator.
+/// `Ok(None)` on EOF before any byte.
+fn read_line(r: &mut impl BufRead) -> Result<Option<String>> {
+    let mut buf = Vec::new();
+    loop {
+        let mut byte = [0u8; 1];
+        match r.read(&mut byte) {
+            Ok(0) => {
+                if buf.is_empty() {
+                    return Ok(None);
+                }
+                return Err(HegridError::Format("EOF inside an HTTP line".into()));
+            }
+            Ok(_) => {}
+            Err(e) => return Err(HegridError::io("reading HTTP line")(e)),
+        }
+        if byte[0] == b'\n' {
+            if buf.last() == Some(&b'\r') {
+                buf.pop();
+            }
+            let line = String::from_utf8(buf)
+                .map_err(|_| HegridError::Format("HTTP line is not UTF-8".into()))?;
+            return Ok(Some(line));
+        }
+        if buf.len() >= MAX_LINE {
+            return Err(HegridError::Format("HTTP line exceeds the length limit".into()));
+        }
+        buf.push(byte[0]);
+    }
+}
+
+/// A response under construction; always sent `Connection: close`.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    content_type: &'static str,
+    extra_headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, value: &Json) -> Response {
+        // `to_pretty` is newline-terminated already.
+        let body = value.to_pretty().into_bytes();
+        Response { status, content_type: "application/json", extra_headers: Vec::new(), body }
+    }
+
+    /// A JSON error envelope: `{"error": "<message>"}`.
+    pub fn error(status: u16, message: impl Into<String>) -> Response {
+        Response::json(status, &Json::obj(vec![("error", Json::str(message))]))
+    }
+
+    pub fn text(status: u16, body: impl Into<String>) -> Response {
+        Response {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            extra_headers: Vec::new(),
+            body: body.into().into_bytes(),
+        }
+    }
+
+    /// Prometheus text exposition (`GET /metrics`).
+    pub fn metrics(body: String) -> Response {
+        Response {
+            status: 200,
+            content_type: "text/plain; version=0.0.4; charset=utf-8",
+            extra_headers: Vec::new(),
+            body: body.into_bytes(),
+        }
+    }
+
+    pub fn bytes(status: u16, body: Vec<u8>) -> Response {
+        let content_type = "application/octet-stream";
+        Response { status, content_type, extra_headers: Vec::new(), body }
+    }
+
+    pub fn with_header(mut self, name: impl Into<String>, value: impl Into<String>) -> Response {
+        self.extra_headers.push((name.into(), value.into()));
+        self
+    }
+
+    pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+        write!(
+            w,
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n",
+            self.status,
+            reason(self.status),
+            self.content_type,
+            self.body.len()
+        )?;
+        for (name, value) in &self.extra_headers {
+            write!(w, "{name}: {value}\r\n")?;
+        }
+        w.write_all(b"\r\n")?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+/// Reason phrase for the status codes the job API uses.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        201 => "Created",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn parse(raw: &[u8]) -> Result<Option<Request>> {
+        Request::read_from(&mut BufReader::new(raw))
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let raw = b"POST /jobs HTTP/1.1\r\nHost: x\r\nContent-Length: 13\r\n\r\n{\"input\":\"a\"}";
+        let req = parse(raw).unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/jobs");
+        assert_eq!(req.segments(), vec!["jobs"]);
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.json().unwrap().req_str("input").unwrap(), "a");
+    }
+
+    #[test]
+    fn parses_get_without_body_and_strips_query() {
+        let raw = b"GET /jobs/3/result?x=1 HTTP/1.1\r\n\r\n";
+        let req = parse(raw).unwrap().unwrap();
+        assert_eq!(req.segments(), vec!["jobs", "3", "result"]);
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn clean_eof_is_none_and_garbage_is_an_error() {
+        assert!(parse(b"").unwrap().is_none());
+        assert!(parse(b"NOT-HTTP\r\n\r\n").is_err());
+        assert!(parse(b"GET / HTTP/1.1\r\nContent-Length: nope\r\n\r\n").is_err());
+    }
+
+    #[test]
+    fn oversized_body_is_rejected() {
+        let raw = format!("POST /jobs HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY + 1);
+        assert!(parse(raw.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn response_wire_format() {
+        let mut out = Vec::new();
+        Response::error(429, "queue full")
+            .with_header("Retry-After", "1")
+            .write_to(&mut out)
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(text.contains("Retry-After: 1\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+        assert!(text.ends_with("{\n  \"error\": \"queue full\"\n}\n"));
+    }
+}

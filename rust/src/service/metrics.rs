@@ -1,0 +1,237 @@
+//! Prometheus text-format metrics for `GET /metrics`.
+//!
+//! Exposition format 0.0.4: `# HELP` / `# TYPE` comment pairs followed by
+//! `name[{labels}] value` sample lines. Everything here is either a
+//! process-lifetime counter (job outcomes, retries, quarantines — atomics
+//! bumped by the worker threads) or a gauge snapshotted at scrape time
+//! (queue depth, cache occupancy, and the last finished run's pipeline
+//! telemetry: per-stage occupancy, peak adaptive width, NUMA node count).
+//! The full width trace and span list stay in the job's status JSON
+//! (`GET /jobs/{id}` → `report`) — a scrape wants current scalars, not
+//! per-run series.
+
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::coordinator::{PipeStage, PipelineReport};
+use crate::service::cache::CacheStats;
+
+/// Pipeline telemetry of the most recently finished job (gauges).
+#[derive(Clone, Debug, Default)]
+struct LastRun {
+    /// `(stage name, mean concurrent pipelines in the stage)`.
+    occupancy: Vec<(&'static str, f64)>,
+    width_peak: usize,
+    width_changes: usize,
+    numa_nodes: usize,
+    wall_s: f64,
+}
+
+/// Counters + last-run gauges, shared by workers and the scrape handler.
+#[derive(Debug, Default)]
+pub struct ServiceMetrics {
+    pub jobs_submitted: AtomicU64,
+    pub jobs_rejected: AtomicU64,
+    pub jobs_completed: AtomicU64,
+    pub jobs_degraded: AtomicU64,
+    pub jobs_failed: AtomicU64,
+    pub jobs_cancelled: AtomicU64,
+    pub retries: AtomicU64,
+    pub quarantined_groups: AtomicU64,
+    last: Mutex<LastRun>,
+}
+
+impl ServiceMetrics {
+    pub fn new() -> ServiceMetrics {
+        ServiceMetrics::default()
+    }
+
+    /// Fold a finished run's report into the counters and last-run gauges.
+    pub fn record_report(&self, report: &PipelineReport) {
+        self.retries.fetch_add(report.degradation.retries as u64, Ordering::Relaxed);
+        self.quarantined_groups
+            .fetch_add(report.degradation.quarantined_groups.len() as u64, Ordering::Relaxed);
+        let occupancy = PipeStage::ALL
+            .iter()
+            .map(|&s| (s.name(), report.stage_occupancy(s)))
+            .collect();
+        *self.last.lock().unwrap() = LastRun {
+            occupancy,
+            width_peak: report.width_trace.iter().map(|&(_, w)| w).max().unwrap_or(0),
+            width_changes: report.width_trace.len().saturating_sub(1),
+            numa_nodes: report.numa_nodes,
+            wall_s: report.wall.as_secs_f64(),
+        };
+    }
+
+    /// Render the full exposition. `queued`/`running` come from the queue,
+    /// `cache` from the plan cache, `uptime_s` from the server clock.
+    pub fn encode(
+        &self,
+        queued: usize,
+        running: usize,
+        cache: &CacheStats,
+        uptime_s: f64,
+    ) -> String {
+        let mut out = String::with_capacity(2048);
+        gauge(&mut out, "hegrid_uptime_seconds", "Seconds since the server started.", uptime_s);
+        gauge(&mut out, "hegrid_queue_depth", "Jobs queued and not yet running.", queued as f64);
+        gauge(&mut out, "hegrid_jobs_running", "Jobs currently running.", running as f64);
+        for (name, help, counter) in [
+            ("hegrid_jobs_submitted_total", "Jobs accepted by POST /jobs.", &self.jobs_submitted),
+            (
+                "hegrid_jobs_rejected_total",
+                "Jobs rejected by admission control (HTTP 429).",
+                &self.jobs_rejected,
+            ),
+            ("hegrid_jobs_completed_total", "Jobs finished done.", &self.jobs_completed),
+            (
+                "hegrid_jobs_degraded_total",
+                "Jobs finished degraded (quarantined channel groups).",
+                &self.jobs_degraded,
+            ),
+            ("hegrid_jobs_failed_total", "Jobs finished failed.", &self.jobs_failed),
+            (
+                "hegrid_jobs_cancelled_total",
+                "Jobs cancelled by DELETE /jobs/{id}.",
+                &self.jobs_cancelled,
+            ),
+            (
+                "hegrid_retries_total",
+                "Transient channel-read retries across all runs.",
+                &self.retries,
+            ),
+            (
+                "hegrid_quarantined_groups_total",
+                "Channel groups quarantined across all degrade-mode runs.",
+                &self.quarantined_groups,
+            ),
+        ] {
+            counter_line(&mut out, name, help, counter.load(Ordering::Relaxed));
+        }
+        for (name, help, value) in [
+            ("hegrid_plan_cache_hits_total", "Plan-cache hits.", cache.hits),
+            ("hegrid_plan_cache_misses_total", "Plan-cache misses (builds).", cache.misses),
+            ("hegrid_plan_cache_evictions_total", "Plan-cache LRU evictions.", cache.evictions),
+        ] {
+            counter_line(&mut out, name, help, value);
+        }
+        gauge(
+            &mut out,
+            "hegrid_plan_cache_entries",
+            "DispatchPlans currently cached.",
+            cache.entries as f64,
+        );
+
+        let last = self.last.lock().unwrap().clone();
+        header(
+            &mut out,
+            "hegrid_stage_occupancy",
+            "Last run: mean concurrent pipelines per stage (T0..T4 + prep).",
+            "gauge",
+        );
+        for (stage, occ) in &last.occupancy {
+            let _ = writeln!(out, "hegrid_stage_occupancy{{stage=\"{stage}\"}} {}", fmt(*occ));
+        }
+        gauge(
+            &mut out,
+            "hegrid_pipeline_width_peak",
+            "Last run: peak admitted pipeline width.",
+            last.width_peak as f64,
+        );
+        gauge(
+            &mut out,
+            "hegrid_pipeline_width_changes",
+            "Last run: adaptive width changes (0 for fixed width).",
+            last.width_changes as f64,
+        );
+        gauge(
+            &mut out,
+            "hegrid_numa_nodes",
+            "Last run: NUMA nodes detected on the host.",
+            last.numa_nodes as f64,
+        );
+        gauge(
+            &mut out,
+            "hegrid_last_run_wall_seconds",
+            "Last run: end-to-end wall time.",
+            last.wall_s,
+        );
+        out
+    }
+}
+
+fn header(out: &mut String, name: &str, help: &str, kind: &str) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+}
+
+fn gauge(out: &mut String, name: &str, help: &str, value: f64) {
+    header(out, name, help, "gauge");
+    let _ = writeln!(out, "{name} {}", fmt(value));
+}
+
+fn counter_line(out: &mut String, name: &str, help: &str, value: u64) {
+    header(out, name, help, "counter");
+    let _ = writeln!(out, "{name} {value}");
+}
+
+/// Finite decimal rendering (Rust's `f64` Display never emits exponents;
+/// NaN/Inf cannot occur — occupancies and wall times are finite).
+fn fmt(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9.0e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every non-comment line must be `name[{labels}] value` — the
+    /// well-formedness the CI smoke job also asserts with awk.
+    fn assert_well_formed(text: &str) {
+        for line in text.lines() {
+            if line.starts_with("# HELP ") || line.starts_with("# TYPE ") {
+                continue;
+            }
+            let (name, value) = line.rsplit_once(' ').expect("sample line has a value");
+            assert!(!name.is_empty() && !value.is_empty(), "malformed: {line}");
+            let bare = name.split('{').next().unwrap();
+            assert!(
+                bare.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+                "bad metric name: {line}"
+            );
+            value.parse::<f64>().unwrap_or_else(|_| panic!("bad value in: {line}"));
+        }
+    }
+
+    #[test]
+    fn encode_is_well_formed_and_carries_counters() {
+        let m = ServiceMetrics::new();
+        m.jobs_submitted.store(3, Ordering::Relaxed);
+        m.jobs_completed.store(2, Ordering::Relaxed);
+        let report = PipelineReport {
+            numa_nodes: 1,
+            width_trace: vec![(0.0, 2), (0.5, 3)],
+            wall: std::time::Duration::from_millis(1234),
+            ..Default::default()
+        };
+        m.record_report(&report);
+        let cache = CacheStats { hits: 1, misses: 2, evictions: 0, entries: 2 };
+        let text = m.encode(4, 1, &cache, 12.5);
+        assert_well_formed(&text);
+        assert!(text.contains("hegrid_jobs_submitted_total 3\n"));
+        assert!(text.contains("hegrid_queue_depth 4\n"));
+        assert!(text.contains("hegrid_jobs_running 1\n"));
+        assert!(text.contains("hegrid_plan_cache_hits_total 1\n"));
+        assert!(text.contains("hegrid_plan_cache_entries 2\n"));
+        assert!(text.contains("hegrid_pipeline_width_peak 3\n"));
+        assert!(text.contains("hegrid_pipeline_width_changes 1\n"));
+        assert!(text.contains("hegrid_stage_occupancy{stage=\"T3\"} "));
+        assert!(text.contains("hegrid_uptime_seconds 12.5\n"));
+    }
+}

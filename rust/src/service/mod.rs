@@ -1,0 +1,165 @@
+//! Gridding-as-a-service: a long-lived multi-tenant job server over the
+//! engine (`hegrid serve`).
+//!
+//! The paper's multi-pipeline concurrency (§4.2, Fig 8) keeps one machine
+//! saturated across the channel groups of *one* run; this module points the
+//! same machinery at many concurrent *jobs*. A hand-rolled HTTP/1.1 server
+//! ([`server`], `std::net` only — no new dependencies) fronts a bounded
+//! job queue with admission control ([`queue`]): `POST /jobs` enqueues a
+//! JSON job spec, `service_workers` worker threads run the jobs on
+//! per-job [`crate::coordinator::HegridEngine`]s, and every job's sweeps
+//! schedule onto the one process-global persistent
+//! [`crate::util::threads::PipelineExecutor`] — so a job is byte-identical
+//! to the equivalent one-shot CLI run, while concurrent jobs time-share
+//! the same parked worker pool.
+//!
+//! Cross-job reuse comes from the [`cache::PlanCache`]: the expensive
+//! per-sky-setup shared component (`DispatchPlan` — sorted samples,
+//! neighbour table, cell trig, staged unit-vector columns, permutation) is
+//! keyed by a canonical hash of the sky setup ([`cache::plan_key`]) and
+//! reused across jobs, with hit/miss/eviction counters exported at
+//! `GET /metrics` (Prometheus text, [`metrics`]).
+//!
+//! Job lifecycle: `queued → running → done | degraded | failed |
+//! cancelled` ([`queue::JobState`]). `DELETE /jobs/{id}` trips the job's
+//! [`crate::coordinator::CancelFlag`], which the pipeline loop checks at
+//! channel-group boundaries. A degrade-mode job whose run quarantined
+//! groups finishes `degraded` (not `done`), and `GET /jobs/{id}` surfaces
+//! the `DegradationReport` (skipped groups + causes). See docs/service.md
+//! for the full API reference and operations runbook.
+
+pub mod cache;
+pub mod http;
+pub mod metrics;
+pub mod queue;
+pub mod server;
+
+pub use cache::{CacheStats, PlanCache};
+pub use queue::{JobQueue, JobSpec, JobState};
+pub use server::{serve, ServiceHandle};
+
+use crate::util::error::{HegridError, Result};
+
+/// Service-layer knobs (`hegrid serve`), separate from the per-job
+/// [`crate::config::HegridConfig`]. Defaults → `HEGRID_SERVICE_*`
+/// environment overrides ([`ServiceConfig::apply_env`]) → CLI flags, the
+/// strongest last. Documented in docs/config-reference.md; the CI docs
+/// gate greps this struct's fields against that table.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Listen address (`host:port`); port 0 binds an ephemeral port
+    /// (loopback integration tests).
+    pub service_listen: String,
+    /// Admission control: maximum *queued* (not yet running) jobs; a
+    /// `POST /jobs` beyond it is rejected with HTTP 429.
+    pub service_queue_max: usize,
+    /// Worker threads running jobs — the job-level concurrency. Each
+    /// worker drives one engine run at a time; all of them share the one
+    /// persistent executor.
+    pub service_workers: usize,
+    /// Plan-cache capacity in retained `DispatchPlan`s (LRU eviction
+    /// beyond it). 0 disables cross-job plan sharing.
+    pub service_cache_cap: usize,
+    /// Finished jobs (results + reports) retained for `GET /jobs/{id}`;
+    /// older finished jobs are evicted and return 404.
+    pub service_keep_results: usize,
+    /// Graceful-drain budget in seconds after SIGTERM/SIGINT: stop
+    /// accepting, finish queued + running jobs, then cancel whatever is
+    /// still running once the budget is spent. The process exits 0 either
+    /// way.
+    pub service_drain_s: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            service_listen: "127.0.0.1:8780".to_string(),
+            service_queue_max: 16,
+            service_workers: 2,
+            service_cache_cap: 4,
+            service_keep_results: 8,
+            service_drain_s: 30,
+        }
+    }
+}
+
+impl ServiceConfig {
+    /// Overlay `HEGRID_SERVICE_*` environment variables (unset ones keep
+    /// the current value). Called before CLI flags so flags win.
+    pub fn apply_env(&mut self) -> Result<()> {
+        if let Ok(v) = std::env::var("HEGRID_SERVICE_LISTEN") {
+            self.service_listen = v;
+        }
+        for (var, field) in [
+            ("HEGRID_SERVICE_QUEUE_MAX", &mut self.service_queue_max),
+            ("HEGRID_SERVICE_WORKERS", &mut self.service_workers),
+            ("HEGRID_SERVICE_CACHE_CAP", &mut self.service_cache_cap),
+            ("HEGRID_SERVICE_KEEP_RESULTS", &mut self.service_keep_results),
+            ("HEGRID_SERVICE_DRAIN_S", &mut self.service_drain_s),
+        ] {
+            if let Ok(v) = std::env::var(var) {
+                *field = v.parse().map_err(|_| {
+                    HegridError::Config(format!("{var} must be a non-negative integer, got '{v}'"))
+                })?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.service_listen.is_empty() {
+            return Err(HegridError::Config("service_listen must not be empty".into()));
+        }
+        if self.service_queue_max == 0 || self.service_queue_max > 4096 {
+            return Err(HegridError::Config(format!(
+                "service_queue_max must be in 1..=4096, got {}",
+                self.service_queue_max
+            )));
+        }
+        if self.service_workers == 0 || self.service_workers > 64 {
+            return Err(HegridError::Config(format!(
+                "service_workers must be in 1..=64, got {}",
+                self.service_workers
+            )));
+        }
+        if self.service_cache_cap > 1024 {
+            return Err(HegridError::Config(format!(
+                "service_cache_cap must be at most 1024, got {}",
+                self.service_cache_cap
+            )));
+        }
+        if self.service_keep_results == 0 || self.service_keep_results > 4096 {
+            return Err(HegridError::Config(format!(
+                "service_keep_results must be in 1..=4096, got {}",
+                self.service_keep_results
+            )));
+        }
+        if self.service_drain_s > 3600 {
+            return Err(HegridError::Config(format!(
+                "service_drain_s must be at most 3600, got {}",
+                self.service_drain_s
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        ServiceConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_out_of_range() {
+        let c = ServiceConfig { service_queue_max: 0, ..ServiceConfig::default() };
+        assert!(c.validate().is_err());
+        let c = ServiceConfig { service_workers: 65, ..ServiceConfig::default() };
+        assert!(c.validate().is_err());
+        let c = ServiceConfig { service_listen: String::new(), ..ServiceConfig::default() };
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,540 @@
+//! The bounded job queue and registry: admission control, the job state
+//! machine, and cancellation.
+//!
+//! ```text
+//!                    DELETE (queued)
+//!            ┌──────────────────────────────► cancelled
+//!            │                                    ▲
+//!  POST ─► queued ──claim──► running ─────────────┤ DELETE (running,
+//!   │                          │                  │  at the next group
+//!   429 (queue full)           ├───► done         │  boundary)
+//!                              ├───► degraded ────┘
+//!                              └───► failed
+//! ```
+//!
+//! `queued → running` is a worker claiming the head of the FIFO;
+//! everything after `running` is terminal. Admission control rejects a
+//! submit once `service_queue_max` jobs are already queued (running jobs
+//! don't count — the queue bounds *waiting* work, worker count bounds
+//! running work). Terminal jobs are retained newest-first up to
+//! `service_keep_results`, then evicted entirely (their id returns 404).
+//!
+//! All times are f64 seconds on the server's monotonic clock, passed in by
+//! the caller so tests can drive the clock.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::coordinator::CancelFlag;
+use crate::json::Json;
+use crate::util::error::{HegridError, Result};
+
+/// The job state machine. Terminal states: `Done`, `Degraded`, `Failed`,
+/// `Cancelled`. `Degraded` is a *successful* run that quarantined channel
+/// groups — the result cube exists (quarantined planes zeroed) and the
+/// status JSON carries the `DegradationReport`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+    Degraded,
+    Failed,
+    Cancelled,
+}
+
+impl JobState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Degraded => "degraded",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        !matches!(self, JobState::Queued | JobState::Running)
+    }
+}
+
+/// A validated `POST /jobs` body.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    /// Path to the input HGD file, as visible to the server process.
+    pub input: String,
+    /// Streaming (prefetched, bounded-memory) ingest vs eager load.
+    pub streaming: bool,
+    /// Free-form client label, echoed in status responses.
+    pub tag: String,
+    /// Partial `HegridConfig` JSON merged over the server's base config.
+    pub overrides: Option<Json>,
+}
+
+/// Config fields a job may not override: `faults` installs a
+/// process-global fault plan (it would cross-contaminate concurrent
+/// tenants), and checkpoint/resume bind a run to an on-disk directory two
+/// concurrent jobs would corrupt. Tiled output still works per job via
+/// `output_tile_rows` (anonymous spill).
+const FORBIDDEN_OVERRIDES: [&str; 3] = ["faults", "checkpoint_dir", "resume"];
+
+impl JobSpec {
+    pub fn from_json(v: &Json) -> Result<JobSpec> {
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| HegridError::Config("job spec must be a JSON object".into()))?;
+        for key in obj.keys() {
+            if !matches!(key.as_str(), "input" | "streaming" | "tag" | "config") {
+                return Err(HegridError::Config(format!("unknown job-spec field '{key}'")));
+            }
+        }
+        let input = v.req_str("input")?.to_string();
+        if input.is_empty() {
+            return Err(HegridError::Config("job-spec 'input' must not be empty".into()));
+        }
+        let streaming = match v.get("streaming") {
+            None => true,
+            Some(b) => b
+                .as_bool()
+                .ok_or_else(|| HegridError::Config("job-spec 'streaming' must be a bool".into()))?,
+        };
+        let tag = match v.get("tag") {
+            None => String::new(),
+            Some(t) => t
+                .as_str()
+                .ok_or_else(|| HegridError::Config("job-spec 'tag' must be a string".into()))?
+                .to_string(),
+        };
+        let overrides = match v.get("config") {
+            None => None,
+            Some(c) => {
+                let fields = c.as_obj().ok_or_else(|| {
+                    HegridError::Config("job-spec 'config' must be an object".into())
+                })?;
+                for banned in FORBIDDEN_OVERRIDES {
+                    if fields.contains_key(banned) {
+                        return Err(HegridError::Config(format!(
+                            "config field '{banned}' cannot be set per job (see docs/service.md)"
+                        )));
+                    }
+                }
+                Some(c.clone())
+            }
+        };
+        Ok(JobSpec { input, streaming, tag, overrides })
+    }
+}
+
+/// A finished job's output cube: per-channel map values, row-major
+/// `[n_channels][nlat][nlon]` f64 little-endian — byte-identical to the
+/// maps the one-shot CLI produces for the same config.
+#[derive(Debug)]
+pub struct JobResult {
+    pub n_channels: usize,
+    pub nlon: usize,
+    pub nlat: usize,
+    pub bytes: Vec<u8>,
+}
+
+/// How a worker reports a finished run back to the queue.
+#[derive(Debug)]
+pub enum JobOutcome {
+    Done { result: JobResult, report: Json },
+    /// Run completed with quarantined groups (degrade mode); the report
+    /// JSON carries the `DegradationReport` fields.
+    Degraded { result: JobResult, report: Json },
+    Failed { error: String },
+    Cancelled,
+}
+
+struct JobRecord {
+    id: u64,
+    spec: JobSpec,
+    state: JobState,
+    cancel: CancelFlag,
+    error: Option<String>,
+    result: Option<Arc<JobResult>>,
+    report: Option<Json>,
+    queued_s: f64,
+    started_s: Option<f64>,
+    finished_s: Option<f64>,
+}
+
+struct QueueState {
+    next_id: u64,
+    jobs: BTreeMap<u64, JobRecord>,
+    pending: VecDeque<u64>,
+    running: usize,
+    /// Terminal job ids, oldest first — the eviction order.
+    finished: VecDeque<u64>,
+    shutdown: bool,
+}
+
+/// What `submit` decided.
+#[derive(Debug)]
+pub enum Submitted {
+    Accepted(u64),
+    /// Admission control: `depth` jobs already queued of `max` allowed.
+    QueueFull { depth: usize, max: usize },
+}
+
+/// What `cancel` did.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Cancelled {
+    NotFound,
+    /// The job was still queued: removed outright, now terminal.
+    Dequeued,
+    /// The job is running: its flag is tripped; it goes terminal at the
+    /// next channel-group boundary.
+    Signalled,
+    AlreadyTerminal,
+}
+
+/// The service's job registry + FIFO. All methods take `now_s` (seconds on
+/// the server clock) instead of reading a clock themselves.
+pub struct JobQueue {
+    queue_max: usize,
+    keep_results: usize,
+    state: Mutex<QueueState>,
+    cond: Condvar,
+}
+
+impl JobQueue {
+    pub fn new(queue_max: usize, keep_results: usize) -> JobQueue {
+        JobQueue {
+            queue_max,
+            keep_results,
+            state: Mutex::new(QueueState {
+                next_id: 1,
+                jobs: BTreeMap::new(),
+                pending: VecDeque::new(),
+                running: 0,
+                finished: VecDeque::new(),
+                shutdown: false,
+            }),
+            cond: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a job, or reject it when the queue is full (HTTP 429) or
+    /// the server is draining (HTTP 503 via `Err`).
+    pub fn submit(&self, spec: JobSpec, now_s: f64) -> Result<Submitted> {
+        let mut st = self.state.lock().unwrap();
+        if st.shutdown {
+            return Err(HegridError::Runtime("server is draining".into()));
+        }
+        if st.pending.len() >= self.queue_max {
+            return Ok(Submitted::QueueFull { depth: st.pending.len(), max: self.queue_max });
+        }
+        let id = st.next_id;
+        st.next_id += 1;
+        st.jobs.insert(
+            id,
+            JobRecord {
+                id,
+                spec,
+                state: JobState::Queued,
+                cancel: CancelFlag::armed(),
+                error: None,
+                result: None,
+                report: None,
+                queued_s: now_s,
+                started_s: None,
+                finished_s: None,
+            },
+        );
+        st.pending.push_back(id);
+        drop(st);
+        self.cond.notify_one();
+        Ok(Submitted::Accepted(id))
+    }
+
+    /// Block until a job is claimable; `None` once the queue is shut down
+    /// *and* drained (workers exit on it). During a drain, still-queued
+    /// jobs keep being claimed — that is what "graceful" means here.
+    pub fn claim(&self, now_s: f64) -> Option<(u64, JobSpec, CancelFlag)> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(id) = st.pending.pop_front() {
+                let record = st.jobs.get_mut(&id).expect("pending id has a record");
+                record.state = JobState::Running;
+                record.started_s = Some(now_s);
+                let claim = (id, record.spec.clone(), record.cancel.clone());
+                st.running += 1;
+                return Some(claim);
+            }
+            if st.shutdown {
+                return None;
+            }
+            st = self.cond.wait(st).unwrap();
+        }
+    }
+
+    /// Record a claimed job's outcome and make it terminal.
+    pub fn finish(&self, id: u64, outcome: JobOutcome, now_s: f64) {
+        let mut st = self.state.lock().unwrap();
+        st.running = st.running.saturating_sub(1);
+        if let Some(record) = st.jobs.get_mut(&id) {
+            record.finished_s = Some(now_s);
+            match outcome {
+                JobOutcome::Done { result, report } => {
+                    record.state = JobState::Done;
+                    record.result = Some(Arc::new(result));
+                    record.report = Some(report);
+                }
+                JobOutcome::Degraded { result, report } => {
+                    record.state = JobState::Degraded;
+                    record.result = Some(Arc::new(result));
+                    record.report = Some(report);
+                }
+                JobOutcome::Failed { error } => {
+                    record.state = JobState::Failed;
+                    record.error = Some(error);
+                }
+                JobOutcome::Cancelled => record.state = JobState::Cancelled,
+            }
+            st.finished.push_back(id);
+            while st.finished.len() > self.keep_results {
+                if let Some(old) = st.finished.pop_front() {
+                    st.jobs.remove(&old);
+                }
+            }
+        }
+        drop(st);
+        // A drain waits on "no queued, no running" — wake its poll loop and
+        // any worker blocked in claim().
+        self.cond.notify_all();
+    }
+
+    /// `DELETE /jobs/{id}`.
+    pub fn cancel(&self, id: u64, now_s: f64) -> Cancelled {
+        let mut st = self.state.lock().unwrap();
+        let Some(record) = st.jobs.get_mut(&id) else {
+            return Cancelled::NotFound;
+        };
+        match record.state {
+            JobState::Queued => {
+                record.state = JobState::Cancelled;
+                record.finished_s = Some(now_s);
+                st.pending.retain(|&p| p != id);
+                st.finished.push_back(id);
+                while st.finished.len() > self.keep_results {
+                    if let Some(old) = st.finished.pop_front() {
+                        st.jobs.remove(&old);
+                    }
+                }
+                Cancelled::Dequeued
+            }
+            JobState::Running => {
+                record.cancel.cancel();
+                Cancelled::Signalled
+            }
+            _ => Cancelled::AlreadyTerminal,
+        }
+    }
+
+    /// Trip every live job's cancel flag (drain-timeout enforcement).
+    pub fn cancel_all(&self, now_s: f64) {
+        let ids: Vec<u64> = self.state.lock().unwrap().jobs.keys().copied().collect();
+        for id in ids {
+            self.cancel(id, now_s);
+        }
+    }
+
+    /// Stop accepting submits and let `claim` return `None` once drained.
+    pub fn shutdown(&self) {
+        self.state.lock().unwrap().shutdown = true;
+        self.cond.notify_all();
+    }
+
+    /// `(queued, running)` — the live-work gauge pair for `/metrics`.
+    pub fn counts(&self) -> (usize, usize) {
+        let st = self.state.lock().unwrap();
+        (st.pending.len(), st.running)
+    }
+
+    /// No queued and no running jobs (drain completion).
+    pub fn idle(&self) -> bool {
+        let st = self.state.lock().unwrap();
+        st.pending.is_empty() && st.running == 0
+    }
+
+    /// Status JSON for `GET /jobs/{id}`; `None` → 404.
+    pub fn status_json(&self, id: u64) -> Option<Json> {
+        let st = self.state.lock().unwrap();
+        st.jobs.get(&id).map(record_json)
+    }
+
+    /// Summary list for `GET /jobs` (no reports, newest last).
+    pub fn list_json(&self) -> Json {
+        let st = self.state.lock().unwrap();
+        let jobs: Vec<Json> = st
+            .jobs
+            .values()
+            .map(|r| {
+                Json::obj(vec![
+                    ("id", Json::num(r.id as f64)),
+                    ("state", Json::str(r.state.name())),
+                    ("tag", Json::str(r.spec.tag.clone())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![("jobs", Json::Arr(jobs))])
+    }
+
+    /// The result cube for `GET /jobs/{id}/result`; `Err` carries the
+    /// non-ready state's name (409) and `Ok(None)` is a 404.
+    pub fn result(&self, id: u64) -> std::result::Result<Option<Arc<JobResult>>, &'static str> {
+        let st = self.state.lock().unwrap();
+        match st.jobs.get(&id) {
+            None => Ok(None),
+            Some(r) => match (&r.result, r.state) {
+                (Some(res), _) => Ok(Some(Arc::clone(res))),
+                (None, state) => Err(state.name()),
+            },
+        }
+    }
+}
+
+fn record_json(r: &JobRecord) -> Json {
+    let opt_s = |v: Option<f64>| v.map(Json::num).unwrap_or(Json::Null);
+    Json::obj(vec![
+        ("id", Json::num(r.id as f64)),
+        ("state", Json::str(r.state.name())),
+        ("input", Json::str(r.spec.input.clone())),
+        ("streaming", Json::Bool(r.spec.streaming)),
+        ("tag", Json::str(r.spec.tag.clone())),
+        ("queued_s", Json::num(r.queued_s)),
+        ("started_s", opt_s(r.started_s)),
+        ("finished_s", opt_s(r.finished_s)),
+        ("error", r.error.clone().map(Json::str).unwrap_or(Json::Null)),
+        (
+            "result",
+            match &r.result {
+                None => Json::Null,
+                Some(res) => Json::obj(vec![
+                    ("channels", Json::num(res.n_channels as f64)),
+                    ("nlon", Json::num(res.nlon as f64)),
+                    ("nlat", Json::num(res.nlat as f64)),
+                    ("bytes", Json::num(res.bytes.len() as f64)),
+                ]),
+            },
+        ),
+        ("report", r.report.clone().unwrap_or(Json::Null)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(tag: &str) -> JobSpec {
+        JobSpec { input: "x.hgd".into(), streaming: true, tag: tag.into(), overrides: None }
+    }
+
+    fn done_outcome() -> JobOutcome {
+        JobOutcome::Done {
+            result: JobResult { n_channels: 1, nlon: 2, nlat: 2, bytes: vec![0u8; 32] },
+            report: Json::Null,
+        }
+    }
+
+    #[test]
+    fn admission_control_rejects_beyond_queue_max() {
+        let q = JobQueue::new(2, 8);
+        assert!(matches!(q.submit(spec("a"), 0.0).unwrap(), Submitted::Accepted(1)));
+        assert!(matches!(q.submit(spec("b"), 0.0).unwrap(), Submitted::Accepted(2)));
+        assert!(matches!(
+            q.submit(spec("c"), 0.0).unwrap(),
+            Submitted::QueueFull { depth: 2, max: 2 }
+        ));
+        // Claiming one (queued → running) frees a queue slot: admission
+        // bounds waiting work only.
+        let (id, _, _) = q.claim(0.1).unwrap();
+        assert_eq!(id, 1);
+        assert!(matches!(q.submit(spec("d"), 0.2).unwrap(), Submitted::Accepted(3)));
+    }
+
+    #[test]
+    fn lifecycle_and_status_json() {
+        let q = JobQueue::new(4, 8);
+        q.submit(spec("t"), 1.0).unwrap();
+        let (id, s, _) = q.claim(2.0).unwrap();
+        assert_eq!(s.tag, "t");
+        assert_eq!(q.counts(), (0, 1));
+        q.finish(id, done_outcome(), 3.0);
+        assert_eq!(q.counts(), (0, 0));
+        assert!(q.idle());
+        let status = q.status_json(id).unwrap();
+        assert_eq!(status.req_str("state").unwrap(), "done");
+        assert_eq!(status.req("result").unwrap().req_usize("bytes").unwrap(), 32);
+        assert!(q.result(id).unwrap().is_some());
+        assert!(q.status_json(99).is_none());
+    }
+
+    #[test]
+    fn cancel_queued_dequeues_and_running_signals() {
+        let q = JobQueue::new(4, 8);
+        q.submit(spec("a"), 0.0).unwrap();
+        q.submit(spec("b"), 0.0).unwrap();
+        let (a, _, flag_a) = q.claim(0.1).unwrap();
+        // b is queued: cancel removes it outright, and the next claim
+        // would block (nothing pending).
+        assert_eq!(q.cancel(2, 0.2), Cancelled::Dequeued);
+        assert_eq!(q.status_json(2).unwrap().req_str("state").unwrap(), "cancelled");
+        assert_eq!(q.counts(), (0, 1));
+        // a is running: cancel trips its flag; the worker reports back.
+        assert!(!flag_a.is_cancelled());
+        assert_eq!(q.cancel(a, 0.3), Cancelled::Signalled);
+        assert!(flag_a.is_cancelled());
+        q.finish(a, JobOutcome::Cancelled, 0.4);
+        assert_eq!(q.cancel(a, 0.5), Cancelled::AlreadyTerminal);
+        assert_eq!(q.cancel(99, 0.5), Cancelled::NotFound);
+    }
+
+    #[test]
+    fn keep_results_evicts_oldest_terminal_jobs() {
+        let q = JobQueue::new(8, 2);
+        for _ in 0..3 {
+            let Submitted::Accepted(_) = q.submit(spec(""), 0.0).unwrap() else { panic!() };
+            let (id, _, _) = q.claim(0.0).unwrap();
+            q.finish(id, done_outcome(), 0.0);
+        }
+        assert!(q.status_json(1).is_none(), "oldest finished job evicted");
+        assert!(q.status_json(2).is_some());
+        assert!(q.status_json(3).is_some());
+    }
+
+    #[test]
+    fn shutdown_drains_then_claim_returns_none() {
+        let q = JobQueue::new(8, 8);
+        q.submit(spec("a"), 0.0).unwrap();
+        q.shutdown();
+        assert!(q.submit(spec("b"), 0.0).is_err());
+        // The queued job is still claimable during the drain.
+        let (id, _, _) = q.claim(0.0).unwrap();
+        q.finish(id, done_outcome(), 0.0);
+        assert!(q.claim(0.0).is_none());
+    }
+
+    #[test]
+    fn job_spec_validation() {
+        let ok = crate::json::parse(r#"{"input": "d.hgd", "streaming": false, "tag": "x"}"#)
+            .unwrap();
+        let s = JobSpec::from_json(&ok).unwrap();
+        assert!(!s.streaming);
+        for bad in [
+            r#"{}"#,
+            r#"{"input": ""}"#,
+            r#"{"input": "d.hgd", "bogus": 1}"#,
+            r#"{"input": "d.hgd", "config": {"faults": "1:panic@0"}}"#,
+            r#"{"input": "d.hgd", "config": {"checkpoint_dir": "/tmp/x"}}"#,
+            r#"{"input": "d.hgd", "config": 5}"#,
+        ] {
+            let v = crate::json::parse(bad).unwrap();
+            assert!(JobSpec::from_json(&v).is_err(), "accepted: {bad}");
+        }
+    }
+}

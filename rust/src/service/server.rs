@@ -1,0 +1,497 @@
+//! The HTTP server: accept loop, request routing, worker threads, and the
+//! graceful-drain lifecycle.
+//!
+//! Thread model: one accept loop (non-blocking, polling the shutdown
+//! flags), one short-lived thread per connection (the API is one request
+//! per connection), and `service_workers` long-lived worker threads that
+//! claim jobs from the [`JobQueue`] and run them on per-job
+//! [`HegridEngine`]s. Every job's pipeline sweeps land on the one
+//! process-global persistent executor, so job-level concurrency
+//! time-shares the same parked worker pool a single CLI run uses — and a
+//! job's output is byte-identical to the equivalent one-shot run, because
+//! it *is* the same code path (`grid_source` / `grid`) under a per-job
+//! config and engine.
+//!
+//! Shutdown: SIGTERM/SIGINT (or [`ServiceHandle::join`] in-process) stops
+//! the accept loop, marks the queue draining (submits 503, queued jobs
+//! still run), waits up to `service_drain_s` for the queue to go idle,
+//! then trips every remaining job's cancel flag and joins the workers.
+//! The process exits 0 on a drained *or* a timed-out-and-cancelled stop —
+//! an operator's `systemctl stop` is not an error.
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::HegridConfig;
+use crate::coordinator::{CancelFlag, GriddingJob, HegridEngine, PipeStage, PipelineReport};
+use crate::data::{Dataset, HgdStreamSource};
+use crate::json::Json;
+use crate::service::cache::PlanCache;
+use crate::service::http::{Request, Response};
+use crate::service::metrics::ServiceMetrics;
+use crate::service::queue::{Cancelled, JobOutcome, JobQueue, JobResult, JobSpec, Submitted};
+use crate::service::ServiceConfig;
+use crate::sky::SkyMap;
+use crate::util::error::{HegridError, Result};
+
+/// Everything the connection handlers and workers share.
+struct ServiceState {
+    base: HegridConfig,
+    scfg: ServiceConfig,
+    queue: JobQueue,
+    cache: Arc<PlanCache>,
+    metrics: ServiceMetrics,
+    started: Instant,
+    /// In-process stop request ([`ServiceHandle`]); SIGTERM sets the
+    /// process-global flag instead.
+    shutdown: AtomicBool,
+}
+
+impl ServiceState {
+    fn new(base: HegridConfig, scfg: ServiceConfig) -> ServiceState {
+        ServiceState {
+            queue: JobQueue::new(scfg.service_queue_max, scfg.service_keep_results),
+            cache: Arc::new(PlanCache::new(scfg.service_cache_cap)),
+            metrics: ServiceMetrics::new(),
+            started: Instant::now(),
+            shutdown: AtomicBool::new(false),
+            base,
+            scfg,
+        }
+    }
+
+    /// Seconds on the server clock (job timestamps, uptime).
+    fn now_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    fn draining(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst) || GLOBAL_SHUTDOWN.load(Ordering::SeqCst)
+    }
+}
+
+/// SIGTERM/SIGINT land here; the accept loop polls it.
+static GLOBAL_SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+/// Install the termination handlers. Raw C-library `signal` declared
+/// directly (the same no-libc-crate pattern as `util::threads`'
+/// `sched_setaffinity`): the handler only stores to an atomic, which is
+/// async-signal-safe.
+#[cfg(unix)]
+fn install_signal_handlers() {
+    extern "C" fn on_signal(_sig: i32) {
+        GLOBAL_SHUTDOWN.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGTERM, on_signal);
+        signal(SIGINT, on_signal);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_signal_handlers() {}
+
+/// Run the server on the current thread until SIGTERM/SIGINT, then drain
+/// (`hegrid serve`). Exits `Ok` after a graceful drain *or* a
+/// drain-timeout cancellation.
+pub fn serve(base: HegridConfig, scfg: ServiceConfig) -> Result<()> {
+    let (state, listener) = setup(base, scfg)?;
+    install_signal_handlers();
+    let addr = listener.local_addr().map_err(HegridError::io("reading listen address"))?;
+    println!(
+        "hegrid serve: listening on {addr} (workers={}, queue_max={}, cache_cap={})",
+        state.scfg.service_workers, state.scfg.service_queue_max, state.scfg.service_cache_cap
+    );
+    run(state, listener)
+}
+
+/// Shared construction + policy checks for [`serve`] and [`ServiceHandle::spawn`].
+fn setup(base: HegridConfig, scfg: ServiceConfig) -> Result<(Arc<ServiceState>, TcpListener)> {
+    scfg.validate()?;
+    base.validate()?;
+    if !base.faults.is_empty() {
+        return Err(HegridError::Config(
+            "`faults` is process-global and cannot be enabled on a multi-tenant server".into(),
+        ));
+    }
+    let listener = TcpListener::bind(&scfg.service_listen)
+        .map_err(HegridError::io(format!("binding {}", scfg.service_listen)))?;
+    Ok((Arc::new(ServiceState::new(base, scfg)), listener))
+}
+
+/// An in-process server for integration tests: bound (use port 0 for an
+/// ephemeral port), accept loop + workers on background threads.
+pub struct ServiceHandle {
+    addr: SocketAddr,
+    state: Arc<ServiceState>,
+    thread: Option<std::thread::JoinHandle<Result<()>>>,
+}
+
+impl ServiceHandle {
+    /// Bind and start serving in the background. No signal handlers are
+    /// installed — stop it with [`ServiceHandle::join`] (or drop).
+    pub fn spawn(base: HegridConfig, scfg: ServiceConfig) -> Result<ServiceHandle> {
+        let (state, listener) = setup(base, scfg)?;
+        let addr = listener.local_addr().map_err(HegridError::io("reading listen address"))?;
+        let run_state = Arc::clone(&state);
+        let thread = std::thread::spawn(move || run(run_state, listener));
+        Ok(ServiceHandle { addr, state, thread: Some(thread) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Request the drain (the accept loop notices within one poll tick).
+    pub fn begin_shutdown(&self) {
+        self.state.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// Drain and stop the server, returning its exit result.
+    pub fn join(mut self) -> Result<()> {
+        self.begin_shutdown();
+        match self.thread.take().expect("join called once").join() {
+            Ok(r) => r,
+            Err(_) => Err(HegridError::Internal("server thread panicked".into())),
+        }
+    }
+}
+
+impl Drop for ServiceHandle {
+    fn drop(&mut self) {
+        if let Some(thread) = self.thread.take() {
+            self.begin_shutdown();
+            let _ = thread.join();
+        }
+    }
+}
+
+/// Accept loop + workers + drain. The server's main body.
+fn run(state: Arc<ServiceState>, listener: TcpListener) -> Result<()> {
+    listener
+        .set_nonblocking(true)
+        .map_err(HegridError::io("setting the listener non-blocking"))?;
+    let mut workers = Vec::with_capacity(state.scfg.service_workers);
+    for _ in 0..state.scfg.service_workers {
+        let st = Arc::clone(&state);
+        workers.push(std::thread::spawn(move || worker_loop(&st)));
+    }
+    while !state.draining() {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let st = Arc::clone(&state);
+                std::thread::spawn(move || handle_conn(&st, stream));
+            }
+            // WouldBlock is the idle case; transient accept errors (e.g.
+            // ECONNABORTED) just mean that connection is gone.
+            Err(_) => std::thread::sleep(Duration::from_millis(25)),
+        }
+    }
+    // ---- graceful drain --------------------------------------------------
+    state.queue.shutdown();
+    let deadline = Instant::now() + Duration::from_secs(state.scfg.service_drain_s as u64);
+    while !state.queue.idle() && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    if !state.queue.idle() {
+        // Budget spent: cancel what is left. Running jobs stop at their
+        // next group boundary; queued ones go terminal immediately.
+        state.queue.cancel_all(state.now_s());
+    }
+    for worker in workers {
+        let _ = worker.join();
+    }
+    Ok(())
+}
+
+/// One worker: claim → run → report, until the queue drains on shutdown.
+/// `run_job` runs under `catch_unwind`: the coordinator already catches
+/// per-group sweep panics, but a panic in job *setup* (engine or source
+/// construction) must fail that one job, not kill the worker thread and
+/// strand the job in `running`.
+fn worker_loop(state: &ServiceState) {
+    while let Some((id, spec, cancel)) = state.queue.claim(state.now_s()) {
+        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_job(state, &spec, &cancel)
+        }))
+        .unwrap_or_else(|payload| {
+            Err(HegridError::Runtime(format!(
+                "job panicked: {}",
+                crate::util::threads::panic_message(payload.as_ref())
+            )))
+        });
+        let outcome = match run {
+            Ok((result, report)) => {
+                state.metrics.record_report(&report);
+                let report_json = report_json(&report);
+                if report.degradation.is_degraded() {
+                    state.metrics.jobs_degraded.fetch_add(1, Ordering::Relaxed);
+                    JobOutcome::Degraded { result, report: report_json }
+                } else {
+                    state.metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
+                    JobOutcome::Done { result, report: report_json }
+                }
+            }
+            Err(HegridError::Cancelled) => {
+                state.metrics.jobs_cancelled.fetch_add(1, Ordering::Relaxed);
+                JobOutcome::Cancelled
+            }
+            Err(e) => {
+                state.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                JobOutcome::Failed { error: e.to_string() }
+            }
+        };
+        state.queue.finish(id, outcome, state.now_s());
+    }
+}
+
+/// Run one job exactly the way the one-shot CLI would: a fresh engine from
+/// the merged config, the same ingest path, the same `GriddingJob`
+/// derivation — plus the job's cancel flag and (optionally) the shared
+/// plan cache, neither of which changes a single output byte.
+fn run_job(
+    state: &ServiceState,
+    spec: &JobSpec,
+    cancel: &CancelFlag,
+) -> Result<(JobResult, PipelineReport)> {
+    let cfg = merged_config(&state.base, spec.overrides.as_ref())?;
+    let mut engine = HegridEngine::new(cfg)?;
+    if state.scfg.service_cache_cap > 0 {
+        engine = engine.with_plan_cache(Arc::clone(&state.cache));
+    }
+    let (maps, report) = if spec.streaming {
+        let source = HgdStreamSource::open(Path::new(&spec.input))?;
+        let job = GriddingJob::for_source(&source, &engine.config)?.with_cancel(cancel.clone());
+        engine.grid_source(&source, &job)?
+    } else {
+        let dataset = Dataset::load(Path::new(&spec.input))?;
+        let job = GriddingJob::for_dataset(&dataset, &engine.config)?.with_cancel(cancel.clone());
+        engine.grid(&dataset, &job)?
+    };
+    Ok((encode_result(&maps), report))
+}
+
+/// Overlay a job's partial config JSON on the server's base config.
+/// Unknown fields are ignored (the same semantics as config files); the
+/// merged result is fully re-validated.
+fn merged_config(base: &HegridConfig, overrides: Option<&Json>) -> Result<HegridConfig> {
+    let Some(over) = overrides else {
+        return Ok(base.clone());
+    };
+    let mut obj = match base.to_json() {
+        Json::Obj(map) => map,
+        _ => return Err(HegridError::Internal("config JSON is not an object".into())),
+    };
+    let fields = over
+        .as_obj()
+        .ok_or_else(|| HegridError::Config("job 'config' must be an object".into()))?;
+    for (key, value) in fields {
+        obj.insert(key.clone(), value.clone());
+    }
+    let cfg = HegridConfig::from_json(&Json::Obj(obj))?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Serialise the output maps: `[n_channels][nlat][nlon]` f64 LE map
+/// values, byte-identical to the CLI's maps for the same config.
+fn encode_result(maps: &[SkyMap]) -> JobResult {
+    let (nlon, nlat) = maps
+        .first()
+        .map(|m| (m.spec.nlon, m.spec.nlat))
+        .unwrap_or((0, 0));
+    let mut bytes = Vec::with_capacity(maps.len() * nlon * nlat * 8);
+    for map in maps {
+        for v in map.values() {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    JobResult { n_channels: maps.len(), nlon, nlat, bytes }
+}
+
+/// The report summary carried in `GET /jobs/{id}`: run shape, cache
+/// reuse, adaptive-width trace, per-stage occupancy, and the full
+/// degradation accounting (the DEGRADED state's evidence).
+fn report_json(r: &PipelineReport) -> Json {
+    let width_trace: Vec<Json> = r
+        .width_trace
+        .iter()
+        .map(|&(t, w)| Json::Arr(vec![Json::num(t), Json::num(w as f64)]))
+        .collect();
+    let occupancy: Vec<(&str, Json)> = PipeStage::ALL
+        .iter()
+        .map(|&s| (s.name(), Json::num(r.stage_occupancy(s))))
+        .collect();
+    Json::obj(vec![
+        ("wall_s", Json::num(r.wall.as_secs_f64())),
+        ("variant", Json::str(r.variant.clone())),
+        ("n_groups", Json::num(r.n_groups as f64)),
+        ("n_pipelines", Json::num(r.n_pipelines as f64)),
+        ("n_streams", Json::num(r.n_streams as f64)),
+        ("shared_builds", Json::num(r.shared_builds as f64)),
+        ("plan_cache_hit", Json::Bool(r.plan_cache_hit)),
+        ("width_auto", Json::Bool(r.width_auto)),
+        ("width_trace", Json::Arr(width_trace)),
+        ("numa_nodes", Json::num(r.numa_nodes as f64)),
+        ("stage_occupancy", Json::obj(occupancy)),
+        (
+            "degradation",
+            Json::obj(vec![
+                ("degraded", Json::Bool(r.degradation.is_degraded())),
+                (
+                    "groups_skipped",
+                    Json::num(r.degradation.quarantined_groups.len() as f64),
+                ),
+                (
+                    "quarantined_groups",
+                    Json::Arr(
+                        r.degradation
+                            .quarantined_groups
+                            .iter()
+                            .map(|&g| Json::num(g as f64))
+                            .collect(),
+                    ),
+                ),
+                ("retries", Json::num(r.degradation.retries as f64)),
+                (
+                    "causes",
+                    Json::Arr(
+                        r.degradation.causes.iter().map(|c| Json::str(c.clone())).collect(),
+                    ),
+                ),
+            ]),
+        ),
+    ])
+}
+
+/// One connection: read one request, route it, answer, close.
+fn handle_conn(state: &ServiceState, stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    let _ = stream.set_nodelay(true);
+    let read_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(read_half);
+    let response = match Request::read_from(&mut reader) {
+        Ok(None) => return,
+        Ok(Some(req)) => route(state, &req),
+        Err(e) => Response::error(400, e.to_string()),
+    };
+    let mut writer = stream;
+    let _ = response.write_to(&mut writer);
+}
+
+fn route(state: &ServiceState, req: &Request) -> Response {
+    let segments = req.segments();
+    match (req.method.as_str(), segments.as_slice()) {
+        ("GET", ["healthz"]) => Response::text(200, "ok\n"),
+        ("GET", ["metrics"]) => {
+            let (queued, running) = state.queue.counts();
+            Response::metrics(state.metrics.encode(
+                queued,
+                running,
+                &state.cache.stats(),
+                state.now_s(),
+            ))
+        }
+        ("POST", ["jobs"]) => post_job(state, req),
+        ("GET", ["jobs"]) => Response::json(200, &state.queue.list_json()),
+        ("GET", ["jobs", id]) => match parse_id(id) {
+            None => Response::error(400, "job id must be an integer"),
+            Some(id) => match state.queue.status_json(id) {
+                Some(status) => Response::json(200, &status),
+                None => Response::error(404, format!("no job {id}")),
+            },
+        },
+        ("GET", ["jobs", id, "result"]) => match parse_id(id) {
+            None => Response::error(400, "job id must be an integer"),
+            Some(id) => get_result(state, id),
+        },
+        ("DELETE", ["jobs", id]) => match parse_id(id) {
+            None => Response::error(400, "job id must be an integer"),
+            Some(id) => delete_job(state, id),
+        },
+        (_, ["healthz" | "metrics"]) | (_, ["jobs", ..]) => {
+            Response::error(405, format!("method {} not allowed here", req.method))
+        }
+        _ => Response::error(404, format!("no such endpoint: {}", req.path)),
+    }
+}
+
+fn parse_id(raw: &str) -> Option<u64> {
+    raw.parse().ok()
+}
+
+fn post_job(state: &ServiceState, req: &Request) -> Response {
+    if state.draining() {
+        return Response::error(503, "server is draining");
+    }
+    let spec = match req.json().and_then(|v| JobSpec::from_json(&v)) {
+        Ok(s) => s,
+        Err(e) => return Response::error(400, e.to_string()),
+    };
+    // Pre-validate the merged config so a bad override is a 400 at submit
+    // time, not a failed job later.
+    if let Err(e) = merged_config(&state.base, spec.overrides.as_ref()) {
+        return Response::error(400, e.to_string());
+    }
+    match state.queue.submit(spec, state.now_s()) {
+        Ok(Submitted::Accepted(id)) => {
+            state.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+            Response::json(
+                201,
+                &Json::obj(vec![
+                    ("id", Json::num(id as f64)),
+                    ("state", Json::str("queued")),
+                ]),
+            )
+        }
+        Ok(Submitted::QueueFull { depth, max }) => {
+            state.metrics.jobs_rejected.fetch_add(1, Ordering::Relaxed);
+            Response::error(429, format!("queue full: {depth} of {max} slots taken"))
+                .with_header("Retry-After", "1")
+        }
+        Err(e) => Response::error(503, e.to_string()),
+    }
+}
+
+fn get_result(state: &ServiceState, id: u64) -> Response {
+    match state.queue.result(id) {
+        Ok(None) => Response::error(404, format!("no job {id}")),
+        Err(status) => Response::error(
+            409,
+            format!("job {id} is {status}; no result cube is available"),
+        ),
+        Ok(Some(res)) => Response::bytes(200, res.bytes.clone())
+            .with_header("X-Hegrid-Channels", res.n_channels.to_string())
+            .with_header("X-Hegrid-Nlon", res.nlon.to_string())
+            .with_header("X-Hegrid-Nlat", res.nlat.to_string()),
+    }
+}
+
+fn delete_job(state: &ServiceState, id: u64) -> Response {
+    match state.queue.cancel(id, state.now_s()) {
+        Cancelled::NotFound => Response::error(404, format!("no job {id}")),
+        Cancelled::Dequeued => Response::json(
+            200,
+            &Json::obj(vec![("id", Json::num(id as f64)), ("state", Json::str("cancelled"))]),
+        ),
+        Cancelled::Signalled => Response::json(
+            202,
+            &Json::obj(vec![("id", Json::num(id as f64)), ("state", Json::str("cancelling"))]),
+        ),
+        Cancelled::AlreadyTerminal => {
+            Response::error(409, format!("job {id} already finished"))
+        }
+    }
+}

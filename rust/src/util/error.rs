@@ -20,6 +20,10 @@ pub enum HegridError {
     Runtime(String),
     /// Internal invariant violation — a bug in HEGrid.
     Internal(String),
+    /// The run was cancelled cooperatively (service `DELETE /jobs/{id}`).
+    /// Checked at channel-group boundaries, so partial work is discarded
+    /// cleanly and the pipeline slots are released.
+    Cancelled,
 }
 
 impl fmt::Display for HegridError {
@@ -34,6 +38,7 @@ impl fmt::Display for HegridError {
             HegridError::Corrupt(m) => write!(f, "data corruption: {m}"),
             HegridError::Runtime(m) => write!(f, "runtime error: {m}"),
             HegridError::Internal(m) => write!(f, "internal error: {m}"),
+            HegridError::Cancelled => write!(f, "cancelled: job cancelled at a group boundary"),
         }
     }
 }
@@ -76,6 +81,7 @@ mod tests {
         assert!(e.to_string().contains("byte 12"));
         let e = HegridError::Corrupt("channel 3 CRC mismatch".into());
         assert!(e.to_string().contains("corruption"));
+        assert!(HegridError::Cancelled.to_string().contains("cancelled"));
     }
 
     #[test]

@@ -1,0 +1,362 @@
+//! Loopback integration tests for `hegrid serve` (rust/src/service):
+//! in-process [`ServiceHandle`] servers on ephemeral ports driven through a
+//! plain `TcpStream` HTTP client. Covers the PR's acceptance criteria:
+//! two concurrent same-config jobs share one cached `DispatchPlan` (one
+//! miss + at least one hit in `/metrics`) and both cubes are bit-identical
+//! to a direct engine run; cancellation frees the worker slot (queued jobs
+//! dequeue, running jobs stop at a group boundary, the next job runs);
+//! admission control answers 429 once `service_queue_max` jobs wait; a
+//! degrade-mode job with a corrupted channel finishes `degraded` with the
+//! quarantine evidence in its report while still serving the partial cube;
+//! and malformed requests get typed 400/404/405/409 answers.
+
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use hegrid::config::HegridConfig;
+use hegrid::coordinator::{GriddingJob, HegridEngine};
+use hegrid::data::HgdStreamSource;
+use hegrid::json::Json;
+use hegrid::service::{ServiceConfig, ServiceHandle};
+use hegrid::sim::SimConfig;
+use hegrid::sky::SkyMap;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("hegrid_service_it").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn base_config() -> HegridConfig {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    HegridConfig {
+        artifacts_dir: dir.display().to_string(),
+        streams: 2,
+        pipelines: 2,
+        channels_per_dispatch: 4,
+        share_preprocessing: true,
+        ..HegridConfig::default()
+    }
+}
+
+fn service_config(workers: usize, queue_max: usize) -> ServiceConfig {
+    ServiceConfig {
+        service_listen: "127.0.0.1:0".to_string(),
+        service_queue_max: queue_max,
+        service_workers: workers,
+        service_cache_cap: 4,
+        service_keep_results: 16,
+        service_drain_s: 5,
+    }
+}
+
+/// One request over a fresh connection (the API is one request per
+/// connection). Returns `(status, raw headers, body bytes)`.
+fn http(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, String, Vec<u8>) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let body = body.unwrap_or("");
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).unwrap();
+    let split = raw.windows(4).position(|w| w == b"\r\n\r\n").expect("header/body separator");
+    let head = String::from_utf8(raw[..split].to_vec()).unwrap();
+    let status: u16 = head.split_whitespace().nth(1).unwrap().parse().unwrap();
+    (status, head, raw[split + 4..].to_vec())
+}
+
+fn http_json(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, Json) {
+    let (status, _, body) = http(addr, method, path, body);
+    (status, hegrid::json::parse(std::str::from_utf8(&body).unwrap()).unwrap())
+}
+
+fn submit(addr: SocketAddr, spec: &str) -> u64 {
+    let (status, v) = http_json(addr, "POST", "/jobs", Some(spec));
+    assert_eq!(status, 201, "submit failed: {v:?}");
+    assert_eq!(v.req_str("state").unwrap(), "queued");
+    v.req_usize("id").unwrap() as u64
+}
+
+/// Poll `GET /jobs/{id}` until the state predicate holds; panics after 120s.
+fn poll_state(addr: SocketAddr, id: u64, pred: impl Fn(&str) -> bool) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let (status, v) = http_json(addr, "GET", &format!("/jobs/{id}"), None);
+        assert_eq!(status, 200, "status poll: {v:?}");
+        let state = v.req_str("state").unwrap();
+        if pred(state) {
+            return v;
+        }
+        assert!(Instant::now() < deadline, "timed out waiting on job {id} (state {state})");
+        std::thread::sleep(Duration::from_millis(3));
+    }
+}
+
+fn poll_terminal(addr: SocketAddr, id: u64) -> Json {
+    poll_state(addr, id, |s| !matches!(s, "queued" | "running"))
+}
+
+fn scrape_metric(addr: SocketAddr, name: &str) -> f64 {
+    let (status, _, body) = http(addr, "GET", "/metrics", None);
+    assert_eq!(status, 200);
+    let text = String::from_utf8(body).unwrap();
+    text.lines()
+        .find_map(|l| l.strip_prefix(name).and_then(|r| r.strip_prefix(' ')))
+        .unwrap_or_else(|| panic!("metric {name} missing"))
+        .parse()
+        .unwrap()
+}
+
+/// The wire layout `GET /jobs/{id}/result` promises:
+/// `[n_channels][nlat][nlon]` f64 little-endian map values.
+fn maps_to_bytes(maps: &[SkyMap]) -> Vec<u8> {
+    let mut bytes = Vec::new();
+    for map in maps {
+        for v in map.values() {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    bytes
+}
+
+#[test]
+fn concurrent_same_config_jobs_share_one_plan_and_match_the_cli() {
+    let dir = tmp_dir("concurrent");
+    let d = SimConfig::quick_preset().with_channels(10).generate();
+    let hgd = dir.join("input.hgd");
+    d.save(&hgd).unwrap();
+    let base = base_config();
+
+    // The ground truth: a direct engine run, the exact code path the CLI
+    // takes for `grid --streaming`.
+    let engine = HegridEngine::new(base.clone()).unwrap();
+    let source = HgdStreamSource::open(&hgd).unwrap();
+    let job = GriddingJob::for_source(&source, &base).unwrap();
+    let (reference, _) = engine.grid_source(&source, &job).unwrap();
+    let reference_bytes = maps_to_bytes(&reference);
+
+    let handle = ServiceHandle::spawn(base, service_config(2, 8)).unwrap();
+    let addr = handle.addr();
+    let spec = format!(r#"{{"input": "{}", "tag": "twin"}}"#, hgd.display());
+    let a = submit(addr, &spec);
+    let b = submit(addr, &spec);
+    let status_a = poll_terminal(addr, a);
+    let status_b = poll_terminal(addr, b);
+    assert_eq!(status_a.req_str("state").unwrap(), "done", "{status_a:?}");
+    assert_eq!(status_b.req_str("state").unwrap(), "done", "{status_b:?}");
+
+    // Identical sky setup → one plan build, every other lookup a hit —
+    // whether the jobs overlapped (in-flight wait) or serialised.
+    assert_eq!(scrape_metric(addr, "hegrid_plan_cache_misses_total"), 1.0);
+    assert!(scrape_metric(addr, "hegrid_plan_cache_hits_total") >= 1.0);
+    assert_eq!(scrape_metric(addr, "hegrid_jobs_completed_total"), 2.0);
+    assert_eq!(scrape_metric(addr, "hegrid_queue_depth"), 0.0);
+
+    // Exactly one of the two run reports built the plan itself.
+    let hits = [&status_a, &status_b]
+        .iter()
+        .filter(|s| s.req("report").unwrap().req("plan_cache_hit").unwrap() == &Json::Bool(true))
+        .count();
+    assert!(hits >= 1, "at least one job must have reused the cached plan");
+
+    for id in [a, b] {
+        let (status, head, bytes) = http(addr, "GET", &format!("/jobs/{id}/result"), None);
+        assert_eq!(status, 200);
+        assert!(head.contains("X-Hegrid-Channels: 10"), "{head}");
+        assert_eq!(bytes, reference_bytes, "job {id} cube differs from the direct run");
+    }
+    handle.join().unwrap();
+}
+
+/// A job spec with enough channel-group boundaries (one channel per
+/// dispatch) that a cancel lands mid-run deterministically.
+fn slow_spec(hgd: &std::path::Path) -> String {
+    format!(
+        r#"{{"input": "{}", "config": {{"channels_per_dispatch": 1, "pipeline_width": 1}}}}"#,
+        hgd.display()
+    )
+}
+
+#[test]
+fn cancellation_dequeues_queued_jobs_stops_running_ones_and_frees_the_slot() {
+    let dir = tmp_dir("cancel");
+    let d = SimConfig::quick_preset().with_channels(120).generate();
+    let hgd = dir.join("input.hgd");
+    d.save(&hgd).unwrap();
+
+    let handle = ServiceHandle::spawn(base_config(), service_config(1, 8)).unwrap();
+    let addr = handle.addr();
+
+    let a = submit(addr, &slow_spec(&hgd));
+    poll_state(addr, a, |s| s == "running");
+    let b = submit(addr, &slow_spec(&hgd));
+
+    // B never ran: DELETE removes it outright (200, terminal now).
+    let (status, v) = http_json(addr, "DELETE", &format!("/jobs/{b}"), None);
+    assert_eq!(status, 200, "{v:?}");
+    assert_eq!(v.req_str("state").unwrap(), "cancelled");
+
+    // A is mid-run: DELETE trips its flag (202); the pipeline loop notices
+    // at the next channel-group boundary and the job goes terminal.
+    let (status, v) = http_json(addr, "DELETE", &format!("/jobs/{a}"), None);
+    assert_eq!(status, 202, "{v:?}");
+    assert_eq!(v.req_str("state").unwrap(), "cancelling");
+    let status_a = poll_terminal(addr, a);
+    assert_eq!(status_a.req_str("state").unwrap(), "cancelled");
+    let (status, _, _) = http(addr, "GET", &format!("/jobs/{a}/result"), None);
+    assert_eq!(status, 409, "a cancelled job has no result cube");
+
+    // The worker slot is free again: a fresh job runs to completion.
+    let c = submit(addr, &format!(r#"{{"input": "{}"}}"#, hgd.display()));
+    assert_eq!(poll_terminal(addr, c).req_str("state").unwrap(), "done");
+    // Only A's run was cancelled by a worker; B was dequeued before one.
+    assert_eq!(scrape_metric(addr, "hegrid_jobs_cancelled_total"), 1.0);
+    handle.join().unwrap();
+}
+
+#[test]
+fn admission_control_answers_429_when_the_queue_is_full() {
+    let dir = tmp_dir("admission");
+    let d = SimConfig::quick_preset().with_channels(120).generate();
+    let hgd = dir.join("input.hgd");
+    d.save(&hgd).unwrap();
+
+    let handle = ServiceHandle::spawn(base_config(), service_config(1, 1)).unwrap();
+    let addr = handle.addr();
+
+    // A claims the one worker; B fills the one queue slot; C is rejected.
+    let a = submit(addr, &slow_spec(&hgd));
+    poll_state(addr, a, |s| s == "running");
+    let b = submit(addr, &slow_spec(&hgd));
+    let (status, head, body) = http(addr, "POST", "/jobs", Some(&slow_spec(&hgd)));
+    assert_eq!(status, 429, "{}", String::from_utf8_lossy(&body));
+    assert!(head.contains("Retry-After:"), "{head}");
+    assert_eq!(scrape_metric(addr, "hegrid_jobs_rejected_total"), 1.0);
+    assert_eq!(scrape_metric(addr, "hegrid_queue_depth"), 1.0);
+
+    http(addr, "DELETE", &format!("/jobs/{b}"), None);
+    http(addr, "DELETE", &format!("/jobs/{a}"), None);
+    poll_terminal(addr, a);
+    handle.join().unwrap();
+}
+
+#[test]
+fn degraded_job_reports_quarantine_and_serves_the_partial_cube() {
+    let dir = tmp_dir("degraded");
+    let d = SimConfig::quick_preset().with_channels(10).generate();
+    let hgd = dir.join("input.hgd");
+    d.save(&hgd).unwrap();
+
+    // Corrupt the last channel's payload in place. HGD layout has no
+    // trailer: the file ends with that channel's `f32[n]` values + CRC, so
+    // flipping a byte 8 bytes into the final `4n + 4` breaks its CRC on
+    // every read. Under `channels_per_dispatch = 4` channel 9 lives in
+    // group 2 — not group 0, which owns the shared wsum plane.
+    let n = d.n_samples() as u64;
+    let pos = std::fs::metadata(&hgd).unwrap().len() - (4 * n + 4) + 8;
+    let mut f = std::fs::OpenOptions::new().read(true).write(true).open(&hgd).unwrap();
+    let mut byte = [0u8; 1];
+    f.seek(SeekFrom::Start(pos)).unwrap();
+    f.read_exact(&mut byte).unwrap();
+    f.seek(SeekFrom::Start(pos)).unwrap();
+    f.write_all(&[byte[0] ^ 0xff]).unwrap();
+    drop(f);
+
+    let base = base_config();
+    // The ground truth: the CLI-equivalent degrade run on the same file.
+    let mut degrade_cfg = base.clone();
+    degrade_cfg.fail_fast = false;
+    degrade_cfg.retry_io = 0;
+    let engine = HegridEngine::new(degrade_cfg).unwrap();
+    let source = HgdStreamSource::open(&hgd).unwrap();
+    let job = GriddingJob::for_source(&source, &engine.config).unwrap();
+    let (reference, ref_report) = engine.grid_source(&source, &job).unwrap();
+    assert!(ref_report.degradation.is_degraded(), "corruption must quarantine a group");
+
+    let handle = ServiceHandle::spawn(base, service_config(1, 4)).unwrap();
+    let addr = handle.addr();
+    let spec = format!(
+        r#"{{"input": "{}", "config": {{"fail_fast": false, "retry_io": 0}}}}"#,
+        hgd.display()
+    );
+    let id = submit(addr, &spec);
+    let status = poll_terminal(addr, id);
+    assert_eq!(status.req_str("state").unwrap(), "degraded", "{status:?}");
+    let degradation = status.req("report").unwrap().req("degradation").unwrap();
+    assert_eq!(degradation.req("degraded").unwrap(), &Json::Bool(true));
+    assert_eq!(degradation.req_usize("groups_skipped").unwrap(), 1);
+    let causes = degradation.req("causes").unwrap().as_arr().unwrap();
+    assert!(!causes.is_empty() && causes[0].as_str().is_some(), "{degradation:?}");
+
+    // DEGRADED still serves the cube — quarantined planes zeroed, the rest
+    // bit-identical to the direct degrade run.
+    let (code, _, bytes) = http(addr, "GET", &format!("/jobs/{id}/result"), None);
+    assert_eq!(code, 200);
+    assert_eq!(bytes, maps_to_bytes(&reference));
+    assert_eq!(scrape_metric(addr, "hegrid_jobs_degraded_total"), 1.0);
+    assert_eq!(scrape_metric(addr, "hegrid_quarantined_groups_total"), 1.0);
+    // A degraded run is not a completed one in the outcome counters.
+    assert_eq!(scrape_metric(addr, "hegrid_jobs_completed_total"), 0.0);
+    handle.join().unwrap();
+}
+
+#[test]
+fn malformed_and_missing_requests_get_typed_errors() {
+    let handle = ServiceHandle::spawn(base_config(), service_config(1, 4)).unwrap();
+    let addr = handle.addr();
+
+    let (status, _, body) = http(addr, "GET", "/healthz", None);
+    assert_eq!((status, body.as_slice()), (200, b"ok\n".as_slice()));
+
+    let (status, _) = http_json(addr, "GET", "/nope", None);
+    assert_eq!(status, 404);
+    let (status, _) = http_json(addr, "PUT", "/jobs", None);
+    assert_eq!(status, 405);
+    let (status, _) = http_json(addr, "POST", "/jobs", Some("not json"));
+    assert_eq!(status, 400);
+    let (status, v) = http_json(addr, "POST", "/jobs", Some(r#"{"input": ""}"#));
+    assert_eq!(status, 400, "{v:?}");
+    // Forbidden per-job override: `faults` is process-global.
+    let (status, v) = http_json(
+        addr,
+        "POST",
+        "/jobs",
+        Some(r#"{"input": "x.hgd", "config": {"faults": "7:panic@0"}}"#),
+    );
+    assert_eq!(status, 400, "{v:?}");
+    assert!(v.req_str("error").unwrap().contains("faults"));
+    // A bad merged config is caught at submit time, not as a failed job.
+    let (status, v) = http_json(
+        addr,
+        "POST",
+        "/jobs",
+        Some(r#"{"input": "x.hgd", "config": {"simd_isa": "quantum"}}"#),
+    );
+    assert_eq!(status, 400, "{v:?}");
+
+    let (status, _) = http_json(addr, "GET", "/jobs/999", None);
+    assert_eq!(status, 404);
+    let (status, _) = http_json(addr, "GET", "/jobs/abc", None);
+    assert_eq!(status, 400);
+    let (status, _) = http_json(addr, "DELETE", "/jobs/999", None);
+    assert_eq!(status, 404);
+
+    // A job whose input does not exist fails; its result is a 409 carrying
+    // the state name, and the status JSON carries the error message.
+    let id = submit(addr, r#"{"input": "/nonexistent/void.hgd"}"#);
+    let status_json = poll_terminal(addr, id);
+    assert_eq!(status_json.req_str("state").unwrap(), "failed");
+    assert!(!status_json.req_str("error").unwrap().is_empty());
+    let (code, v) = http_json(addr, "GET", &format!("/jobs/{id}/result"), None);
+    assert_eq!(code, 409, "{v:?}");
+    assert!(v.req_str("error").unwrap().contains("failed"));
+    assert_eq!(scrape_metric(addr, "hegrid_jobs_failed_total"), 1.0);
+    handle.join().unwrap();
+}
