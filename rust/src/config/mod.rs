@@ -156,6 +156,28 @@ pub struct HegridConfig {
     /// on each attempt (10 → 10 ms, 20 ms, 40 ms, ...). 0 = retry
     /// immediately.
     pub retry_io_backoff_ms: usize,
+    /// Supervised multi-process sharding (CLI `--shard-procs`): partition
+    /// the output map into this many contiguous row ranges and grid each in
+    /// a child worker process (`hegrid shard-worker`, a re-exec of this
+    /// binary) under the parent's supervisor loop — heartbeats, liveness
+    /// timeout, bounded restart, deterministic shard-ascending merge.
+    /// 0 = off (single-process, today's semantics). Requires a non-empty
+    /// `checkpoint_dir` (shard checkpoints + the merged cube live there).
+    pub shard_procs: usize,
+    /// Restarts granted to each shard worker before the shard is given up
+    /// on: quarantined like a degraded channel group (planes zeroed, cause
+    /// recorded in `DegradationReport`) under `--degrade`, a fatal error
+    /// under `--fail-fast`.
+    pub shard_max_restarts: usize,
+    /// Liveness timeout in seconds: a worker that emits no heartbeat frame
+    /// for this long is declared hung, SIGKILLed, and restarted (counting
+    /// against `shard_max_restarts`). 0 = no liveness timeout (exit-status
+    /// supervision only).
+    pub shard_heartbeat_timeout_s: usize,
+    /// Base backoff in milliseconds before restarting a dead shard worker,
+    /// doubled on each successive restart of the same shard (exponential,
+    /// capped at 30 s). 0 = restart immediately.
+    pub shard_restart_backoff_ms: usize,
     /// Fault-injection spec (`<seed>:<site>@<target>[x<count>][%<prob>]`,
     /// comma-separated; see `util::faults`). Empty = no injection (the
     /// `HEGRID_FAULTS` env var is consulted instead). Non-empty specs are
@@ -210,6 +232,10 @@ impl Default for HegridConfig {
             fail_fast: true,
             retry_io: 2,
             retry_io_backoff_ms: 10,
+            shard_procs: 0,
+            shard_max_restarts: 2,
+            shard_heartbeat_timeout_s: 30,
+            shard_restart_backoff_ms: 200,
             faults: String::new(),
             width_saturation: 0.85,
             width_busy_grow: 0.75,
@@ -345,6 +371,36 @@ impl HegridConfig {
                 self.retry_io_backoff_ms
             )));
         }
+        if self.shard_procs > 64 {
+            return Err(HegridError::Config(format!(
+                "shard_procs {} out of range 0..=64",
+                self.shard_procs
+            )));
+        }
+        if self.shard_procs > 0 && self.checkpoint_dir.is_empty() {
+            return Err(HegridError::Config(
+                "shard_procs requires a checkpoint_dir (--shard-procs N --checkpoint <dir>)"
+                    .into(),
+            ));
+        }
+        if self.shard_max_restarts > 16 {
+            return Err(HegridError::Config(format!(
+                "shard_max_restarts {} out of range 0..=16",
+                self.shard_max_restarts
+            )));
+        }
+        if self.shard_heartbeat_timeout_s > 3600 {
+            return Err(HegridError::Config(format!(
+                "shard_heartbeat_timeout_s {} out of range 0..=3600",
+                self.shard_heartbeat_timeout_s
+            )));
+        }
+        if self.shard_restart_backoff_ms > 60_000 {
+            return Err(HegridError::Config(format!(
+                "shard_restart_backoff_ms {} out of range 0..=60000",
+                self.shard_restart_backoff_ms
+            )));
+        }
         #[cfg(feature = "fault-injection")]
         if !self.faults.is_empty() {
             crate::util::faults::FaultPlan::parse(&self.faults)?;
@@ -398,6 +454,10 @@ impl HegridConfig {
             ("fail_fast", Json::Bool(self.fail_fast)),
             ("retry_io", Json::num(self.retry_io as f64)),
             ("retry_io_backoff_ms", Json::num(self.retry_io_backoff_ms as f64)),
+            ("shard_procs", Json::num(self.shard_procs as f64)),
+            ("shard_max_restarts", Json::num(self.shard_max_restarts as f64)),
+            ("shard_heartbeat_timeout_s", Json::num(self.shard_heartbeat_timeout_s as f64)),
+            ("shard_restart_backoff_ms", Json::num(self.shard_restart_backoff_ms as f64)),
             ("faults", Json::str(self.faults.clone())),
             ("width_saturation", Json::num(self.width_saturation)),
             ("width_busy_grow", Json::num(self.width_busy_grow)),
@@ -473,6 +533,16 @@ impl HegridConfig {
             fail_fast: v.get("fail_fast").and_then(|x| x.as_bool()).unwrap_or(d.fail_fast),
             retry_io: get_usize("retry_io", d.retry_io)?,
             retry_io_backoff_ms: get_usize("retry_io_backoff_ms", d.retry_io_backoff_ms)?,
+            shard_procs: get_usize("shard_procs", d.shard_procs)?,
+            shard_max_restarts: get_usize("shard_max_restarts", d.shard_max_restarts)?,
+            shard_heartbeat_timeout_s: get_usize(
+                "shard_heartbeat_timeout_s",
+                d.shard_heartbeat_timeout_s,
+            )?,
+            shard_restart_backoff_ms: get_usize(
+                "shard_restart_backoff_ms",
+                d.shard_restart_backoff_ms,
+            )?,
             faults: v.get("faults").and_then(|x| x.as_str()).unwrap_or(&d.faults).to_string(),
             width_saturation: get_f64("width_saturation", d.width_saturation)?,
             width_busy_grow: get_f64("width_busy_grow", d.width_busy_grow)?,
@@ -575,6 +645,10 @@ mod tests {
         c.fail_fast = false;
         c.retry_io = 5;
         c.retry_io_backoff_ms = 3;
+        c.shard_procs = 3;
+        c.shard_max_restarts = 4;
+        c.shard_heartbeat_timeout_s = 12;
+        c.shard_restart_backoff_ms = 50;
         // A non-empty fault spec only validates on instrumented builds.
         #[cfg(feature = "fault-injection")]
         {
@@ -619,6 +693,16 @@ mod tests {
         assert!(HegridConfig::from_json(&v).is_err());
         let v = crate::json::parse(r#"{"retry_io_backoff_ms": 60001}"#).unwrap();
         assert!(HegridConfig::from_json(&v).is_err());
+        let v = crate::json::parse(r#"{"shard_procs": 65, "checkpoint_dir": "c"}"#).unwrap();
+        assert!(HegridConfig::from_json(&v).is_err());
+        let v = crate::json::parse(r#"{"shard_procs": 2}"#).unwrap();
+        assert!(HegridConfig::from_json(&v).is_err(), "shard_procs without checkpoint_dir");
+        let v = crate::json::parse(r#"{"shard_max_restarts": 17}"#).unwrap();
+        assert!(HegridConfig::from_json(&v).is_err());
+        let v = crate::json::parse(r#"{"shard_heartbeat_timeout_s": 3601}"#).unwrap();
+        assert!(HegridConfig::from_json(&v).is_err());
+        let v = crate::json::parse(r#"{"shard_restart_backoff_ms": 60001}"#).unwrap();
+        assert!(HegridConfig::from_json(&v).is_err());
         // Malformed fault spec rejected on every build; on builds without
         // the feature any non-empty spec is rejected.
         let v = crate::json::parse(r#"{"faults": "no-seed"}"#).unwrap();
@@ -649,6 +733,20 @@ mod tests {
         let mut c = HegridConfig::default();
         c.resume = true;
         c.checkpoint_dir = "ckpt".into();
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn shard_fields_default_off_and_validate() {
+        let c = HegridConfig::default();
+        assert_eq!(c.shard_procs, 0, "single-process by default");
+        assert_eq!(c.shard_max_restarts, 2);
+        assert_eq!(c.shard_heartbeat_timeout_s, 30);
+        assert_eq!(c.shard_restart_backoff_ms, 200);
+        let mut c = HegridConfig::default();
+        c.shard_procs = 4;
+        assert!(c.validate().is_err(), "sharding needs a checkpoint_dir");
+        c.checkpoint_dir = "/tmp/ckpt".into();
         c.validate().unwrap();
     }
 

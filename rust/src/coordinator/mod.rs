@@ -68,7 +68,7 @@ use crate::sky::{GridSpec, SkyMap};
 use crate::util::error::{HegridError, Result};
 use crate::util::threads::PipelineExecutor;
 
-pub use plan::{ChannelGroups, DispatchPlan};
+pub use plan::{ChannelGroups, DispatchPlan, SkyPartition};
 pub use simulator::{simulate, SimParams, SimResult, StageCost};
 
 /// Process-global epoch allocator for [`DispatchPlan`] builds. Epoch IDs
@@ -288,12 +288,21 @@ pub struct DegradationReport {
     /// Terminal cause of each quarantined group, parallel to
     /// `quarantined_groups`.
     pub causes: Vec<String>,
+    /// Supervised runs: shard indices whose worker process exceeded
+    /// `shard_max_restarts` and was given up on (their output rows are
+    /// zeroed in the merged cube, mirroring group quarantine). Causes are
+    /// appended to `causes`, prefixed `shard N:`. Empty on single-process
+    /// runs.
+    pub quarantined_shards: Vec<usize>,
+    /// Supervised runs: total worker-process restarts the supervisor
+    /// performed (successful recoveries included).
+    pub worker_restarts: usize,
 }
 
 impl DegradationReport {
-    /// Did any group fail to grid?
+    /// Did any group or shard fail to grid?
     pub fn is_degraded(&self) -> bool {
-        !self.quarantined_groups.is_empty()
+        !self.quarantined_groups.is_empty() || !self.quarantined_shards.is_empty()
     }
 }
 

@@ -58,6 +58,57 @@ impl ChannelGroups {
     }
 }
 
+/// Contiguous output-map partition for supervised multi-process runs: the
+/// sky split into `n_parts` balanced, adjacent row ranges (HEALPix-style
+/// iso-latitude rings in this repo's CAR map layout — each grid row is one
+/// ring, so a row range is a contiguous ring range). Extends the
+/// sample-axis [`ShardPlan`] with an *output*-axis partition: every worker
+/// process grids **all** samples and channels but only accumulates the
+/// cells of its row range, so per-cell contribution order inside a range is
+/// identical to a single-process run and a shard-ascending concatenation of
+/// the ranges reproduces the full cube byte for byte.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SkyPartition {
+    /// `(row_lo, row_hi)` half-open row ranges, ascending and adjacent:
+    /// `parts[i].1 == parts[i+1].0`, covering `0..nlat` exactly.
+    parts: Vec<(usize, usize)>,
+}
+
+impl SkyPartition {
+    /// Split `nlat` grid rows into at most `n_parts` contiguous ranges.
+    /// Balanced to within one row (the first `nlat % n` ranges get the
+    /// extra row); `n_parts` is clamped to `nlat` so every range is
+    /// non-empty.
+    pub fn split(nlat: usize, n_parts: usize) -> SkyPartition {
+        assert!(nlat > 0 && n_parts > 0, "empty map or zero shards");
+        let n = n_parts.min(nlat);
+        let base = nlat / n;
+        let extra = nlat % n;
+        let mut parts = Vec::with_capacity(n);
+        let mut lo = 0;
+        for i in 0..n {
+            let hi = lo + base + usize::from(i < extra);
+            parts.push((lo, hi));
+            lo = hi;
+        }
+        debug_assert_eq!(lo, nlat);
+        SkyPartition { parts }
+    }
+
+    pub fn len(&self) -> usize {
+        self.parts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parts.is_empty()
+    }
+
+    /// Half-open row range `[lo, hi)` of shard `s`.
+    pub fn rows(&self, s: usize) -> (usize, usize) {
+        self.parts[s]
+    }
+}
+
 /// Device-shaped inputs for one tile (shared across channel groups).
 #[derive(Clone, Debug)]
 pub struct TileData {
@@ -299,6 +350,28 @@ mod tests {
         assert_eq!(sub.len(), 2);
         assert_eq!(sub.members(0), g.members(2));
         assert_eq!(sub.members(1), g.members(0));
+    }
+
+    #[test]
+    fn sky_partition_is_contiguous_balanced_and_total() {
+        for (nlat, n_parts) in [(10, 1), (10, 3), (10, 10), (7, 4), (100, 8), (3, 16)] {
+            let p = SkyPartition::split(nlat, n_parts);
+            assert_eq!(p.len(), n_parts.min(nlat), "clamped to the row count");
+            let (mut lo_prev, mut covered) = (0, 0);
+            let mut sizes = Vec::new();
+            for s in 0..p.len() {
+                let (lo, hi) = p.rows(s);
+                assert_eq!(lo, lo_prev, "ranges adjacent, ascending");
+                assert!(hi > lo, "every range non-empty");
+                sizes.push(hi - lo);
+                covered += hi - lo;
+                lo_prev = hi;
+            }
+            assert_eq!(lo_prev, nlat, "ranges end at the map");
+            assert_eq!(covered, nlat, "rows covered exactly once");
+            let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "balanced to within one row: {sizes:?}");
+        }
     }
 
     #[test]

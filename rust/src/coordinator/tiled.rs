@@ -48,7 +48,15 @@ struct TiledCtx<'a> {
     dense_to_orig: &'a [usize],
     n_cells: usize,
     nlon: usize,
-    nlat: usize,
+    /// Output row range this run accumulates, `[row_lo, row_hi)` — the full
+    /// map for ordinary runs, one [`SkyPartition`] range for a shard-worker
+    /// process. Tiles are dispatched globally either way; only the clip +
+    /// reduce window narrows.
+    row_lo: usize,
+    row_hi: usize,
+    /// First cube cell of the row range (`row_lo * nlon`): global cell
+    /// indices minus this are local cube offsets.
+    cell_base: usize,
     rows_per_band: usize,
     cube: &'a CubeFile,
     /// Checkpoint directory + manifest; `None` for anonymous spill runs.
@@ -72,26 +80,52 @@ impl HegridEngine {
         source: &dyn ChannelSource,
         job: &GriddingJob,
     ) -> Result<(CubeHandle, PipelineReport)> {
+        let (cube, report, cleanup) = self.grid_source_to_cube_rows(source, job, None)?;
+        Ok((CubeHandle::new(cube, job.spec.clone(), cleanup), report))
+    }
+
+    /// The row-restricted core of [`HegridEngine::grid_source_to_cube`]:
+    /// grid every channel, accumulating only the output rows `[lo, hi)` of
+    /// `rows` (the whole map when `None`) into a cube of exactly those rows.
+    /// This is what a `hegrid shard-worker` process runs for its
+    /// [`SkyPartition`] range — all samples, all channels, one row slice —
+    /// so per-cell contribution order matches a single-process run and the
+    /// supervisor's shard-ascending concatenation reproduces the full cube
+    /// byte for byte. Returns `(cube, report, cleanup)` rather than a
+    /// [`CubeHandle`]: a partial cube has fewer cells than the job's
+    /// `GridSpec` and must not be read as one.
+    pub(crate) fn grid_source_to_cube_rows(
+        &self,
+        source: &dyn ChannelSource,
+        job: &GriddingJob,
+        rows: Option<(usize, usize)>,
+    ) -> Result<(CubeFile, PipelineReport, bool)> {
         let wall0 = Instant::now();
         let RunSetup { variant, mut report, stages, shared_plan } = self.prepare_run(source, job)?;
         let n_ch = source.n_channels();
         let (lons, lats) = source.coords()?;
         let n_cells = job.spec.n_cells();
         let (nlon, nlat) = (job.spec.nlon, job.spec.nlat);
+        let (row_lo, row_hi) = rows.unwrap_or((0, nlat));
+        assert!(row_lo < row_hi && row_hi <= nlat, "bad output row range");
+        let n_rows = row_hi - row_lo;
+        let local_cells = n_rows * nlon;
+        let cell_base = row_lo * nlon;
         let rows_per_band = if self.config.output_tile_rows == 0 {
-            nlat
+            n_rows
         } else {
-            self.config.output_tile_rows.min(nlat)
+            self.config.output_tile_rows.min(n_rows)
         };
         report.tile_rows = rows_per_band;
-        report.tile_bands = nlat.div_ceil(rows_per_band);
+        report.tile_bands = n_rows.div_ceil(rows_per_band);
 
         let full_groups = ChannelGroups::new(n_ch, variant.c);
-        let identity = job_identity(job, &variant, n_ch, source.n_samples(), rows_per_band);
+        let identity =
+            job_identity(job, &variant, n_ch, source.n_samples(), rows_per_band, rows);
 
         // ---- cube + manifest ------------------------------------------------
         let (cube, manifest, cleanup) = if self.config.checkpoint_dir.is_empty() {
-            (CubeFile::create(&anonymous_cube_path(), n_ch, n_cells)?, None, true)
+            (CubeFile::create(&anonymous_cube_path(), n_ch, local_cells)?, None, true)
         } else {
             let dir = PathBuf::from(&self.config.checkpoint_dir);
             std::fs::create_dir_all(&dir).map_err(HegridError::io(dir.display().to_string()))?;
@@ -106,7 +140,7 @@ impl HegridEngine {
                         m.job
                     )));
                 }
-                let cube = CubeFile::open(&cube_path, n_ch, n_cells)?;
+                let cube = CubeFile::open(&cube_path, n_ch, local_cells)?;
                 // Re-verify every finished group's cube bytes against its
                 // recorded CRC before trusting them (band by band, so even
                 // verification stays memory-bounded).
@@ -118,11 +152,11 @@ impl HegridEngine {
                         )));
                     }
                     let members = full_groups.members(g);
-                    verify_group(&cube, g, members, nlon, nlat, rows_per_band, crc)?;
+                    verify_group(&cube, g, members, nlon, n_rows, rows_per_band, crc)?;
                 }
                 (cube, Some(m), false)
             } else {
-                let cube = CubeFile::create(&cube_path, n_ch, n_cells)?;
+                let cube = CubeFile::create(&cube_path, n_ch, local_cells)?;
                 let m = CheckpointManifest::new(identity.clone());
                 m.save(&dir)?;
                 (cube, Some(m), false)
@@ -154,7 +188,9 @@ impl HegridEngine {
             dense_to_orig: &pending,
             n_cells,
             nlon,
-            nlat,
+            row_lo,
+            row_hi,
+            cell_base,
             rows_per_band,
             cube: &cube,
             ckpt: manifest.as_ref().map(|m| (ckpt_dir.as_path(), m)),
@@ -187,11 +223,11 @@ impl HegridEngine {
             // cube planes band by band (and wsum, owned by group 0) so the
             // cube holds blanks, not poison, and record the group `failed`
             // in the manifest so `--resume` retries exactly these groups.
-            let zeros = vec![0.0f64; (rows_per_band * nlon).min(n_cells).max(1)];
+            let zeros = vec![0.0f64; (rows_per_band * nlon).min(local_cells).max(1)];
             let mut zero_band = |write: &mut dyn FnMut(usize, &[f64]) -> Result<()>| -> Result<()> {
                 let mut c0 = 0usize;
-                while c0 < n_cells {
-                    let len = zeros.len().min(n_cells - c0);
+                while c0 < local_cells {
+                    let len = zeros.len().min(local_cells - c0);
                     write(c0, &zeros[..len])?;
                     c0 += len;
                 }
@@ -226,7 +262,7 @@ impl HegridEngine {
         report.tile_spill_bytes = cube.spill_bytes();
         report.tile_merge_s = report.stage_s("T4 merge(cube)");
         report.wall = wall0.elapsed();
-        Ok((CubeHandle::new(cube, job.spec.clone(), cleanup), report))
+        Ok((cube, report, cleanup))
     }
 
     /// One tiled pipeline: process one channel group end to end, band-major.
@@ -304,9 +340,9 @@ impl HegridEngine {
         let mut band_acc: Vec<f64> = Vec::new();
         let mut band_wsum: Vec<f64> = Vec::new();
 
-        let mut r0 = 0usize;
-        while r0 < ctx.nlat {
-            let r1 = (r0 + ctx.rows_per_band).min(ctx.nlat);
+        let mut r0 = ctx.row_lo;
+        while r0 < ctx.row_hi {
+            let r1 = (r0 + ctx.rows_per_band).min(ctx.row_hi);
             let cell0 = r0 * ctx.nlon;
             let cell1 = r1 * ctx.nlon;
             let band_cells = cell1 - cell0;
@@ -410,13 +446,13 @@ impl HegridEngine {
             for (ci, &ch) in members.iter().enumerate() {
                 ctx.cube.write_channel_band(
                     ch,
-                    cell0,
+                    cell0 - ctx.cell_base,
                     &band_acc[ci * band_cells..(ci + 1) * band_cells],
                     Some(&mut digest),
                 )?;
             }
             if owns_wsum {
-                ctx.cube.write_wsum_band(cell0, &band_wsum, Some(&mut digest))?;
+                ctx.cube.write_wsum_band(cell0 - ctx.cell_base, &band_wsum, Some(&mut digest))?;
             }
             stages.add("T4 merge(cube)", tm.elapsed());
             spans.push(StageSpan { stage: PipeStage::T4Reduce, start: sm, end: pf.now_s() });
@@ -438,19 +474,23 @@ impl HegridEngine {
 /// Canonical job-identity string for checkpoint manifests: everything that
 /// must match for finished groups to be reusable — grid geometry, kernel
 /// parameters (bit-exact), sample/channel counts, the dispatch variant
-/// (its `m`/`k`/`c` shape the numerics), and the band height (it fixes the
-/// per-group digest's write order).
+/// (its `m`/`k`/`c` shape the numerics), the band height (it fixes the
+/// per-group digest's write order), and — for shard-worker row slices —
+/// the output row range (a shard checkpoint is only resumable by the same
+/// shard). Full-map runs carry no row suffix, so pre-sharding checkpoints
+/// stay loadable.
 fn job_identity(
     job: &GriddingJob,
     variant: &VariantInfo,
     n_channels: usize,
     n_samples: usize,
     rows_per_band: usize,
+    rows: Option<(usize, usize)>,
 ) -> String {
     let spec = &job.spec;
     let k = &job.kernel;
     let kp = k.kparam();
-    format!(
+    let mut id = format!(
         "grid:{}x{} step:{:016x} center:{:016x},{:016x} kernel:{} \
          kparam:{:08x},{:08x},{:08x},{:08x} support:{:016x} samples:{n_samples} \
          channels:{n_channels} variant:{} tile_rows:{rows_per_band}",
@@ -466,7 +506,11 @@ fn job_identity(
         kp[3].to_bits(),
         k.support.to_bits(),
         variant.name,
-    )
+    );
+    if let Some((lo, hi)) = rows {
+        id.push_str(&format!(" rows:{lo}:{hi}"));
+    }
+    id
 }
 
 /// Re-verify one finished group against the cube: recompute the streaming

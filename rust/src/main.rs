@@ -42,13 +42,22 @@
 //! <seed>:<spec>` (or HEGRID_FAULTS) injects deterministic faults when the
 //! crate is built with `--features fault-injection`.
 //!
+//! `--shard-procs N` (with `--checkpoint DIR`) takes the supervised
+//! multi-process path (docs/distributed.md): the sky is split into N
+//! contiguous row shards, each gridded by a re-exec'd `shard-worker` child
+//! with its own checkpoint; the parent watches heartbeats, restarts crashed
+//! or hung workers (`--shard-max-restarts --shard-heartbeat-timeout
+//! --shard-backoff-ms`), and deterministically merges the shard cubes —
+//! byte-identical to a single-process run.
+//!
 //! `hegrid serve` runs the multi-tenant job server (docs/service.md): the
 //! engine knobs above become the server's *base* config, each `POST /jobs`
 //! may overlay a partial `config` object on it, and `--listen ADDR
 //! --queue-max N --service-workers N --cache-cap N --keep-results N
-//! --drain-timeout S` (or `HEGRID_SERVICE_*` env vars) set the service
-//! layer: admission control, job concurrency, cross-job plan-cache size,
-//! result retention, and the SIGTERM graceful-drain budget.
+//! --drain-timeout S --job-timeout S` (or `HEGRID_SERVICE_*` env vars) set
+//! the service layer: admission control, job concurrency, cross-job
+//! plan-cache size, result retention, the SIGTERM graceful-drain budget,
+//! and the per-job runtime watchdog (terminal `timeout` state).
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
@@ -57,7 +66,7 @@ use hegrid::baselines::CygridBaseline;
 use hegrid::cli;
 use hegrid::config::{DeviceProfile, HegridConfig};
 use hegrid::coordinator::{GriddingJob, HegridEngine, PipelineReport};
-use hegrid::data::{Dataset, HgdReader, HgdStreamSource};
+use hegrid::data::{ChannelSource, Dataset, HgdReader, HgdStreamSource};
 use hegrid::runtime::Manifest;
 use hegrid::service::ServiceConfig;
 use hegrid::sim::SimConfig;
@@ -70,6 +79,8 @@ const VALUE_OPTS: &[&str] = &[
     "artifacts", "threads", "variant", "prefetch-depth", "io-workers", "baseline", "current",
     "threshold", "tile-rows", "checkpoint", "faults", "retry-io", "retry-backoff-ms",
     "listen", "queue-max", "service-workers", "cache-cap", "keep-results", "drain-timeout",
+    "job-timeout", "shard-procs", "shard-max-restarts", "shard-heartbeat-timeout",
+    "shard-backoff-ms", "config", "shard-index", "shard-rows", "shard-attempt",
 ];
 
 fn main() -> ExitCode {
@@ -97,6 +108,7 @@ fn run(argv: &[String]) -> Result<()> {
         Some("info") => cmd_info(&args)?,
         Some("bench-gate") => cmd_bench_gate(&args)?,
         Some("serve") => cmd_serve(&args)?,
+        Some("shard-worker") => cmd_shard_worker(&args)?,
         Some("help") | None => {
             print_help();
             return Ok(());
@@ -168,6 +180,11 @@ fn engine_config(args: &cli::Args) -> Result<HegridConfig> {
         retry_io: args.get_usize("retry-io", d.retry_io)?,
         retry_io_backoff_ms: args.get_usize("retry-backoff-ms", d.retry_io_backoff_ms)?,
         faults: args.get_or("faults", "").to_string(),
+        shard_procs: args.get_usize("shard-procs", d.shard_procs)?,
+        shard_max_restarts: args.get_usize("shard-max-restarts", d.shard_max_restarts)?,
+        shard_heartbeat_timeout_s: args
+            .get_usize("shard-heartbeat-timeout", d.shard_heartbeat_timeout_s)?,
+        shard_restart_backoff_ms: args.get_usize("shard-backoff-ms", d.shard_restart_backoff_ms)?,
         width_saturation: d.width_saturation,
         width_busy_grow: d.width_busy_grow,
         width_idle_shrink: d.width_idle_shrink,
@@ -211,6 +228,7 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
     scfg.service_cache_cap = args.get_usize("cache-cap", scfg.service_cache_cap)?;
     scfg.service_keep_results = args.get_usize("keep-results", scfg.service_keep_results)?;
     scfg.service_drain_s = args.get_usize("drain-timeout", scfg.service_drain_s)?;
+    scfg.service_job_timeout_s = args.get_usize("job-timeout", scfg.service_job_timeout_s)?;
     hegrid::service::serve(base, scfg)
 }
 
@@ -257,6 +275,9 @@ fn load_input(args: &cli::Args) -> Result<Dataset> {
 fn cmd_grid(args: &cli::Args) -> Result<()> {
     let streaming = args.flag("streaming");
     let cfg = engine_config(args)?;
+    if cfg.shard_procs > 0 {
+        return cmd_grid_supervised(args, &cfg);
+    }
     let engine = HegridEngine::new(cfg)?;
     let (maps, report, n_samples): (_, PipelineReport, usize) = if streaming {
         let input = args
@@ -372,6 +393,90 @@ fn cmd_grid(args: &cli::Args) -> Result<()> {
         println!("wrote {} PGM maps to {prefix}_chNNN.pgm", maps.len());
     }
     Ok(())
+}
+
+/// `hegrid grid --shard-procs N --checkpoint DIR`: the supervised
+/// multi-process path (docs/distributed.md). The parent never grids; it
+/// spawns `shard-worker` children over contiguous row ranges, restarts the
+/// ones that die or hang, and concatenates the per-shard cubes.
+fn cmd_grid_supervised(args: &cli::Args, cfg: &HegridConfig) -> Result<()> {
+    let input = args
+        .get("input")
+        .ok_or_else(|| HegridError::Config("--input <file.hgd> is required".into()))?;
+    let n_samples = HgdReader::open(Path::new(input))?.n_samples();
+    let cancel = hegrid::coordinator::CancelFlag::default();
+    let (cube, report) =
+        hegrid::runtime::supervisor::run_supervised(cfg, Path::new(input), &cancel)?;
+    let maps = cube.read_all_maps()?;
+    println!(
+        "gridded {} channels × {} samples onto {} cells in {:.3}s",
+        maps.len(),
+        n_samples,
+        maps[0].spec.n_cells(),
+        report.wall.as_secs_f64()
+    );
+    println!(
+        "  supervised: shard_procs={} groups={} worker_restarts={} quarantined_shards={}",
+        cfg.shard_procs,
+        report.n_groups,
+        report.degradation.worker_restarts,
+        report.degradation.quarantined_shards.len()
+    );
+    for (stage, d, count) in report.stages.stages() {
+        println!("  {stage:<22} {:>9.3}s  ×{count}", d.as_secs_f64());
+    }
+    if report.degradation.is_degraded() {
+        println!(
+            "  DEGRADED: {} channel group(s) quarantined, {} shard(s) quarantined",
+            report.degradation.quarantined_groups.len(),
+            report.degradation.quarantined_shards.len()
+        );
+        for cause in &report.degradation.causes {
+            println!("    {cause}");
+        }
+    }
+    if let Some(prefix) = args.get("out-prefix") {
+        if let Some(parent) = Path::new(prefix).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).map_err(HegridError::io(prefix.to_string()))?;
+            }
+        }
+        for (c, map) in maps.iter().enumerate() {
+            map.write_pgm(Path::new(&format!("{prefix}_ch{c:03}.pgm")))?;
+        }
+        println!("wrote {} PGM maps to {prefix}_chNNN.pgm", maps.len());
+    }
+    Ok(())
+}
+
+/// `hegrid shard-worker`: internal — the child process body spawned by the
+/// supervisor. Not part of the user-facing CLI surface; the flag spelling
+/// is owned by [`hegrid::runtime::supervisor::monitor`].
+fn cmd_shard_worker(args: &cli::Args) -> Result<()> {
+    let input = args
+        .get("input")
+        .ok_or_else(|| HegridError::Config("shard-worker: --input is required".into()))?
+        .to_string();
+    let config = args
+        .get("config")
+        .ok_or_else(|| HegridError::Config("shard-worker: --config is required".into()))?
+        .to_string();
+    let shard = args.get_usize("shard-index", usize::MAX)?;
+    let rows = args
+        .get("shard-rows")
+        .ok_or_else(|| HegridError::Config("shard-worker: --shard-rows lo:hi is required".into()))?;
+    let (lo, hi) = rows
+        .split_once(':')
+        .and_then(|(a, b)| Some((a.parse::<usize>().ok()?, b.parse::<usize>().ok()?)))
+        .ok_or_else(|| {
+            HegridError::Config(format!("shard-worker: bad --shard-rows '{rows}' (want lo:hi)"))
+        })?;
+    if shard == usize::MAX {
+        return Err(HegridError::Config("shard-worker: --shard-index is required".into()));
+    }
+    let attempt = args.get_usize("shard-attempt", 0)?;
+    let cfg = HegridConfig::load(Path::new(&config))?;
+    hegrid::runtime::supervisor::run_shard_worker(cfg, Path::new(&input), shard, (lo, hi), attempt)
 }
 
 fn cmd_inspect(args: &cli::Args) -> Result<()> {

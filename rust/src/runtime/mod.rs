@@ -10,6 +10,7 @@ pub mod manifest;
 pub mod pool;
 pub mod prefetch;
 pub mod stream;
+pub mod supervisor;
 
 pub use manifest::{Manifest, VariantInfo, VariantQuery};
 pub use pool::{MemoryPool, PooledBuf};

@@ -1,0 +1,57 @@
+//! Bounded exponential restart backoff for shard workers.
+//!
+//! A worker that dies instantly on every attempt (bad input, poisoned
+//! checkpoint, broken accelerator) must not be respawned in a tight loop:
+//! each restart re-reads the shard checkpoint and re-opens the dataset,
+//! and a fork bomb of doomed workers starves the healthy shards' I/O. The
+//! delay doubles per restart from `shard_restart_backoff_ms` and is capped
+//! at [`CAP_MS`]; `shard_max_restarts` bounds the total attempts, after
+//! which the shard is quarantined (see [`super::monitor`]).
+
+use std::time::Duration;
+
+/// Upper bound on a single restart delay. Mirrors the config doc for
+/// `shard_restart_backoff_ms` ("doubled per restart, capped at 30s").
+pub const CAP_MS: u64 = 30_000;
+
+/// Delay before restart number `restart` (0-based: the first restart after
+/// the initial attempt waits `base_ms`). `base_ms = 0` disables the wait —
+/// tests restart instantly.
+pub fn restart_delay(base_ms: usize, restart: usize) -> Duration {
+    if base_ms == 0 {
+        return Duration::ZERO;
+    }
+    // Shift saturates well past the cap; 1 << 63 would already overflow
+    // any sane base, so clamp the exponent first.
+    let shift = restart.min(20) as u32;
+    let ms = (base_ms as u64).saturating_mul(1u64 << shift).min(CAP_MS);
+    Duration::from_millis(ms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn doubles_then_caps() {
+        assert_eq!(restart_delay(200, 0), Duration::from_millis(200));
+        assert_eq!(restart_delay(200, 1), Duration::from_millis(400));
+        assert_eq!(restart_delay(200, 2), Duration::from_millis(800));
+        assert_eq!(restart_delay(200, 7), Duration::from_millis(25_600));
+        assert_eq!(restart_delay(200, 8), Duration::from_millis(CAP_MS));
+        assert_eq!(restart_delay(200, 63), Duration::from_millis(CAP_MS));
+    }
+
+    #[test]
+    fn zero_base_disables_backoff() {
+        for restart in [0, 1, 10] {
+            assert_eq!(restart_delay(0, restart), Duration::ZERO);
+        }
+    }
+
+    #[test]
+    fn huge_base_saturates_at_cap() {
+        assert_eq!(restart_delay(60_000, 0), Duration::from_millis(CAP_MS));
+        assert_eq!(restart_delay(usize::MAX, 3), Duration::from_millis(CAP_MS));
+    }
+}

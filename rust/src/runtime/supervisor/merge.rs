@@ -1,0 +1,148 @@
+//! Deterministic reduce of per-shard partial cubes into the final cube.
+//!
+//! Each shard's cube holds exactly its row range `[row_lo, row_hi)` of
+//! every channel plane plus the wsum plane, already fully accumulated (a
+//! worker grids all samples against its rows). The merge is therefore a
+//! pure **concatenation**, not an addition: shards ascending, channels
+//! ascending, offsets ascending, chunked reads so memory stays bounded.
+//! Every byte of the output is copied verbatim from exactly one shard
+//! cube, so the merged cube is byte-identical to a single-process run
+//! independent of shard count, tile height, or how often workers were
+//! killed and restarted.
+//!
+//! Quarantined shards are skipped: `CubeFile::create` zero-fills, so their
+//! rows read as honest blanks — the same semantics as a quarantined
+//! channel group's zeroed planes.
+
+use std::path::Path;
+
+use crate::coordinator::SkyPartition;
+use crate::data::checkpoint::{CubeFile, CUBE_FILE};
+use crate::util::error::Result;
+
+/// Cells copied per read/write call — 512 KiB of f64, small enough to be
+/// irrelevant next to the band accumulators, large enough to amortize the
+/// syscalls.
+const CHUNK_CELLS: usize = 1 << 16;
+
+/// Concatenate the shard cubes under `dir` (see [`super::shard_dir`]) into
+/// `dir/cube.bin`, shards ascending. Shards listed in `skip` (quarantined)
+/// contribute zeros. Returns the full-map cube.
+pub fn merge_shards(
+    dir: &Path,
+    partition: &SkyPartition,
+    skip: &[usize],
+    n_channels: usize,
+    nlon: usize,
+    nlat: usize,
+) -> Result<CubeFile> {
+    let full = CubeFile::create(&dir.join(CUBE_FILE), n_channels, nlon * nlat)?;
+    let mut buf: Vec<f64> = Vec::new();
+    for s in 0..partition.len() {
+        if skip.contains(&s) {
+            continue;
+        }
+        let (row_lo, row_hi) = partition.rows(s);
+        let local_cells = (row_hi - row_lo) * nlon;
+        let cell_base = row_lo * nlon;
+        let part =
+            CubeFile::open(&super::shard_dir(dir, s).join(CUBE_FILE), n_channels, local_cells)?;
+        for ch in 0..n_channels {
+            let mut c0 = 0usize;
+            while c0 < local_cells {
+                let len = CHUNK_CELLS.min(local_cells - c0);
+                part.read_channel_band(ch, c0, len, &mut buf)?;
+                full.write_channel_band(ch, cell_base + c0, &buf, None)?;
+                c0 += len;
+            }
+        }
+        let mut c0 = 0usize;
+        while c0 < local_cells {
+            let len = CHUNK_CELLS.min(local_cells - c0);
+            part.read_wsum_band(c0, len, &mut buf)?;
+            full.write_wsum_band(cell_base + c0, &buf, None)?;
+            c0 += len;
+        }
+    }
+    Ok(full)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("hegrid_merge_test").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// Distinct, position-dependent value so any mis-placed cell is caught.
+    fn val(ch: usize, cell: usize) -> f64 {
+        (ch * 100_000 + cell) as f64 + 0.25
+    }
+
+    /// Build the shard cubes by hand, merge, and compare against a
+    /// directly-written full cube — no engine involved, so this pins the
+    /// concatenation arithmetic (offsets, chunking, wsum) in isolation.
+    #[test]
+    fn concatenation_reproduces_the_full_cube() {
+        let dir = tmp("concat");
+        let (n_ch, nlon, nlat) = (3usize, 8usize, 11usize);
+        let partition = SkyPartition::split(nlat, 3); // 4 + 4 + 3 rows
+        for s in 0..partition.len() {
+            let (lo, hi) = partition.rows(s);
+            let local = (hi - lo) * nlon;
+            let sdir = crate::runtime::supervisor::shard_dir(&dir, s);
+            std::fs::create_dir_all(&sdir).unwrap();
+            let cube = CubeFile::create(&sdir.join(CUBE_FILE), n_ch, local).unwrap();
+            for ch in 0..n_ch {
+                let vals: Vec<f64> =
+                    (0..local).map(|c| val(ch, lo * nlon + c)).collect();
+                cube.write_channel_band(ch, 0, &vals, None).unwrap();
+            }
+            let wsum: Vec<f64> = (0..local).map(|c| val(99, lo * nlon + c)).collect();
+            cube.write_wsum_band(0, &wsum, None).unwrap();
+        }
+
+        let merged = merge_shards(&dir, &partition, &[], n_ch, nlon, nlat).unwrap();
+        let n_cells = nlon * nlat;
+        let mut buf = Vec::new();
+        for ch in 0..n_ch {
+            merged.read_channel_band(ch, 0, n_cells, &mut buf).unwrap();
+            for (c, &v) in buf.iter().enumerate() {
+                assert_eq!(v.to_bits(), val(ch, c).to_bits(), "ch {ch} cell {c}");
+            }
+        }
+        merged.read_wsum_band(0, n_cells, &mut buf).unwrap();
+        for (c, &v) in buf.iter().enumerate() {
+            assert_eq!(v.to_bits(), val(99, c).to_bits(), "wsum cell {c}");
+        }
+    }
+
+    /// A skipped (quarantined) shard's rows stay zero; the others are
+    /// copied untouched.
+    #[test]
+    fn skipped_shard_rows_are_zero() {
+        let dir = tmp("skip");
+        let (n_ch, nlon, nlat) = (1usize, 4usize, 6usize);
+        let partition = SkyPartition::split(nlat, 2); // rows 0..3, 3..6
+        for s in 0..2 {
+            let (lo, hi) = partition.rows(s);
+            let local = (hi - lo) * nlon;
+            let sdir = crate::runtime::supervisor::shard_dir(&dir, s);
+            std::fs::create_dir_all(&sdir).unwrap();
+            let cube = CubeFile::create(&sdir.join(CUBE_FILE), n_ch, local).unwrap();
+            cube.write_channel_band(0, 0, &vec![7.5; local], None).unwrap();
+            cube.write_wsum_band(0, &vec![1.5; local], None).unwrap();
+        }
+        let merged = merge_shards(&dir, &partition, &[0], n_ch, nlon, nlat).unwrap();
+        let mut buf = Vec::new();
+        merged.read_channel_band(0, 0, nlon * nlat, &mut buf).unwrap();
+        let half = 3 * nlon;
+        assert!(buf[..half].iter().all(|&v| v == 0.0), "quarantined rows zeroed");
+        assert!(buf[half..].iter().all(|&v| v == 7.5), "healthy rows copied");
+    }
+}

@@ -1,0 +1,80 @@
+//! Supervised multi-process shard gridding: crash-tolerant worker
+//! processes, heartbeats, bounded-backoff restart, and a deterministic
+//! merge (`hegrid grid --shard-procs N`).
+//!
+//! The in-process robustness layer (retries, group quarantine, checkpoints
+//! — docs/robustness.md) survives everything *except* the process dying:
+//! a SIGKILL, an OOM kill, or a wedged accelerator runtime takes the whole
+//! run with it. This module adds the process-level tier on top:
+//!
+//! * The sky is split into [`crate::coordinator::SkyPartition`] contiguous
+//!   row ranges, one per shard.
+//! * The parent re-execs itself as `hegrid shard-worker` once per shard
+//!   ([`worker`]). Each worker grids **all samples and all channels** but
+//!   accumulates only its output rows
+//!   ([`crate::coordinator::HegridEngine::grid_source_to_cube`]'s
+//!   row-restricted core), writing a per-shard partial cube + CRC'd
+//!   manifest in `checkpoint_dir/shard-NNN/` — the PR-6 checkpoint format
+//!   verbatim, so a restarted worker `--resume`s its own shard and never
+//!   re-grids a finished group.
+//! * Workers speak a line-frame heartbeat protocol over their stdout pipe
+//!   ([`proto`]); the parent's supervisor loop ([`monitor`]) tracks
+//!   liveness, restarts dead / hung / nonzero-exit workers under bounded
+//!   exponential backoff ([`backoff`]), and quarantines a shard that
+//!   exhausts `shard_max_restarts` exactly like a degraded channel group
+//!   (rows zeroed, cause recorded; `--fail-fast` aborts instead).
+//! * Finished partial cubes are concatenated shards-ascending ([`merge`])
+//!   into `checkpoint_dir/cube.bin`. Because per-cell contribution order
+//!   inside a worker is identical to a single-process run (tiles are
+//!   dispatched globally; only the clip window narrows), the merged cube
+//!   is **byte-identical** to an unsupervised run for every shard count,
+//!   tile height, and kill schedule — pinned by
+//!   `rust/tests/shard_supervision.rs`.
+//!
+//! See docs/distributed.md for the process model, the failure-mode table,
+//! and the on-disk layout.
+
+pub mod backoff;
+pub mod merge;
+pub mod monitor;
+pub mod proto;
+pub mod worker;
+
+use std::path::{Path, PathBuf};
+
+pub use monitor::run_supervised;
+pub use worker::run_shard_worker;
+
+/// Per-shard checkpoint directory under the supervised run's
+/// `checkpoint_dir`. Both sides (parent spawn/merge, worker checkpoint)
+/// derive it from the shard index through this one function so the layout
+/// cannot drift.
+pub fn shard_dir(checkpoint_dir: &Path, shard: usize) -> PathBuf {
+    checkpoint_dir.join(format!("shard-{shard:03}"))
+}
+
+/// File name of the serialized engine config the parent writes into
+/// `checkpoint_dir` and hands to every worker via `--config` — one file,
+/// re-read on every (re)spawn, instead of a fragile flag-by-flag re-encode
+/// of the whole [`crate::config::HegridConfig`].
+pub const WORKER_CONFIG_FILE: &str = "worker-config.json";
+
+/// Environment override for the worker executable. The supervisor normally
+/// re-execs `std::env::current_exe()` — correct for `hegrid grid` and
+/// `hegrid serve` — but a test harness or embedding library is *not* the
+/// `hegrid` binary; they point this at one.
+pub const WORKER_BIN_ENV: &str = "HEGRID_WORKER_BIN";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_dir_is_stable_and_sortable() {
+        let base = Path::new("/tmp/ckpt");
+        assert_eq!(shard_dir(base, 0), Path::new("/tmp/ckpt/shard-000"));
+        assert_eq!(shard_dir(base, 12), Path::new("/tmp/ckpt/shard-012"));
+        // Zero-padding keeps lexicographic listing = shard order.
+        assert!(shard_dir(base, 2) < shard_dir(base, 10));
+    }
+}

@@ -1,0 +1,391 @@
+//! The parent-side supervisor loop: spawn one worker process per shard,
+//! track liveness through the [`super::proto`] heartbeat stream, restart
+//! failures under bounded exponential backoff, quarantine shards that
+//! exhaust their restart budget, and finish with the deterministic
+//! [`super::merge`].
+//!
+//! Failure detection is two-pronged:
+//!
+//! * **Exit** — `try_wait` catches a worker that died (nonzero exit,
+//!   SIGKILL, panic-abort). The recorded cause prefers the worker's last
+//!   `FATAL` frame over the bare exit status.
+//! * **Hang** — a worker that is alive but silent (SIGSTOP, a wedged
+//!   accelerator call, an NFS stall) sends no heartbeats; after
+//!   `shard_heartbeat_timeout_s` without a frame the supervisor SIGKILLs
+//!   it and treats it like a death. `0` disables the liveness timeout.
+//!
+//! A restarted worker re-runs `hegrid shard-worker` with the *same* shard
+//! checkpoint directory; it auto-resumes the CRC'd manifest, so finished
+//! channel groups are never re-gridded. Restart attempt numbers are passed
+//! on the worker command line — they are also the cursor the
+//! `kill@shard` / `hang@shard` fault sites count against, which is what
+//! makes kill schedules deterministic across runs.
+
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::{Duration, Instant};
+
+use super::backoff::restart_delay;
+use super::proto::Frame;
+use super::{shard_dir, WORKER_BIN_ENV, WORKER_CONFIG_FILE};
+use crate::config::HegridConfig;
+use crate::coordinator::{CancelFlag, GriddingJob, PipelineReport, SkyPartition};
+use crate::data::checkpoint::CubeHandle;
+use crate::data::{ChannelSource, HgdStreamSource};
+use crate::util::error::{HegridError, Result};
+
+/// Supervisor poll period: frame-drain timeout and the granularity of
+/// exit / liveness / backoff checks.
+const POLL_MS: u64 = 100;
+
+/// Per-shard supervisor state.
+enum SlotState {
+    Running { child: Child, last_beat: Instant },
+    Backoff { until: Instant },
+    Done,
+    Quarantined,
+}
+
+struct Slot {
+    state: SlotState,
+    /// Restarts performed so far; the next spawn's `--shard-attempt`.
+    restarts: usize,
+    /// Channel groups announced done (deduplicated — a restarted worker's
+    /// ticker re-announces the groups it resumed past).
+    done_groups: std::collections::HashSet<usize>,
+    /// Last FATAL frame seen — a better cause than "exit status: 1".
+    last_fatal: Option<String>,
+    /// The DONE epilogue: `(groups, retries, worker-quarantined groups)`.
+    done_stats: Option<(usize, usize, Vec<usize>)>,
+}
+
+/// What [`fail_shard`] decided for a failed attempt.
+enum FailAction {
+    Restart,
+    Quarantine(String),
+    Abort(String),
+}
+
+/// Run a supervised multi-process gridding of `input` under `cfg`
+/// (`cfg.shard_procs` workers). Returns the merged full-map cube (left on
+/// disk at `checkpoint_dir/cube.bin`) and a report whose degradation
+/// section carries the shard-level accounting.
+pub fn run_supervised(
+    cfg: &HegridConfig,
+    input: &Path,
+    cancel: &CancelFlag,
+) -> Result<(CubeHandle, PipelineReport)> {
+    let wall0 = Instant::now();
+    if cfg.shard_procs == 0 {
+        return Err(HegridError::Config("run_supervised needs shard_procs > 0".into()));
+    }
+    if cfg.checkpoint_dir.is_empty() {
+        return Err(HegridError::Config(
+            "supervised sharding needs checkpoint_dir (per-shard partial cubes live there)".into(),
+        ));
+    }
+    // Geometry only: derive the job spec from the input's metadata, then
+    // drop the source — the parent never reads channel data.
+    let source = HgdStreamSource::open(input)?;
+    let n_channels = source.n_channels();
+    let job = GriddingJob::for_source(&source, cfg)?;
+    drop(source);
+    let spec = job.spec;
+    let partition = SkyPartition::split(spec.nlat, cfg.shard_procs);
+    let n_shards = partition.len();
+
+    let ckpt = PathBuf::from(&cfg.checkpoint_dir);
+    std::fs::create_dir_all(&ckpt).map_err(HegridError::io(ckpt.display().to_string()))?;
+    let cfg_path = ckpt.join(WORKER_CONFIG_FILE);
+    std::fs::write(&cfg_path, cfg.to_json().to_pretty())
+        .map_err(HegridError::io(cfg_path.display().to_string()))?;
+
+    let bin = worker_bin()?;
+    let (tx, rx) = channel::<(usize, Frame)>();
+    let mut report = PipelineReport {
+        variant: "supervised".to_string(),
+        n_pipelines: cfg.shard_procs,
+        ..Default::default()
+    };
+    let mut slots: Vec<Slot> = (0..n_shards)
+        .map(|_| Slot {
+            state: SlotState::Backoff { until: Instant::now() },
+            restarts: 0,
+            done_groups: std::collections::HashSet::new(),
+            last_fatal: None,
+            done_stats: None,
+        })
+        .collect();
+
+    let spawn = |shard: usize, attempt: usize, tx: &Sender<(usize, Frame)>| -> Result<Child> {
+        spawn_worker(&bin, &cfg_path, input, shard, partition.rows(shard), attempt, tx)
+    };
+
+    loop {
+        drain_frames(&rx, &mut slots, &mut report);
+        if cancel.is_cancelled() {
+            kill_all(&mut slots);
+            return Err(HegridError::Cancelled);
+        }
+        let now = Instant::now();
+        for s in 0..n_shards {
+            match &mut slots[s].state {
+                SlotState::Running { child, last_beat } => {
+                    match child.try_wait() {
+                        Ok(Some(status)) if status.success() => {
+                            slots[s].state = SlotState::Done;
+                        }
+                        Ok(Some(status)) => {
+                            let cause = slots[s]
+                                .last_fatal
+                                .take()
+                                .unwrap_or_else(|| format!("worker exited with {status}"));
+                            apply_failure(&mut slots, s, cause, cfg, &mut report)?;
+                        }
+                        Ok(None) => {
+                            let timeout = cfg.shard_heartbeat_timeout_s;
+                            if timeout > 0
+                                && last_beat.elapsed() > Duration::from_secs(timeout as u64)
+                            {
+                                // SIGKILL works on a stopped (SIGSTOP)
+                                // process too, which is how hung workers
+                                // frozen mid-syscall get reaped.
+                                let _ = child.kill();
+                                let _ = child.wait();
+                                let cause =
+                                    format!("no heartbeat for {timeout}s (hung worker killed)");
+                                apply_failure(&mut slots, s, cause, cfg, &mut report)?;
+                            }
+                        }
+                        Err(e) => {
+                            let cause = format!("waiting on worker failed: {e}");
+                            apply_failure(&mut slots, s, cause, cfg, &mut report)?;
+                        }
+                    }
+                }
+                SlotState::Backoff { until } if now >= *until => {
+                    let attempt = slots[s].restarts;
+                    match spawn(s, attempt, &tx) {
+                        Ok(child) => {
+                            slots[s].state =
+                                SlotState::Running { child, last_beat: Instant::now() };
+                        }
+                        Err(e) => {
+                            apply_failure(&mut slots, s, e.to_string(), cfg, &mut report)?;
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        let settled = slots
+            .iter()
+            .all(|sl| matches!(sl.state, SlotState::Done | SlotState::Quarantined));
+        if settled {
+            // One final drain: DONE/STAGE frames may still be in flight
+            // behind the exit we observed.
+            drain_frames(&rx, &mut slots, &mut report);
+            break;
+        }
+    }
+
+    fold_outcomes(&slots, &mut report);
+    let quarantined = report.degradation.quarantined_shards.clone();
+    let cube =
+        merge_cube(&ckpt, &partition, &quarantined, n_channels, spec.nlon, spec.nlat)?;
+    report.wall = wall0.elapsed();
+    Ok((CubeHandle::new(cube, spec, false), report))
+}
+
+/// The worker executable: [`WORKER_BIN_ENV`] override, else this binary.
+fn worker_bin() -> Result<PathBuf> {
+    if let Ok(p) = std::env::var(WORKER_BIN_ENV) {
+        return Ok(PathBuf::from(p));
+    }
+    std::env::current_exe().map_err(HegridError::io("locating the hegrid executable"))
+}
+
+/// Spawn one `hegrid shard-worker` with a piped stdout and a reader thread
+/// forwarding its parsed frames into the supervisor's channel. The reader
+/// exits on EOF (worker death closes the pipe) and detaches.
+fn spawn_worker(
+    bin: &Path,
+    cfg_path: &Path,
+    input: &Path,
+    shard: usize,
+    rows: (usize, usize),
+    attempt: usize,
+    tx: &Sender<(usize, Frame)>,
+) -> Result<Child> {
+    let mut child = Command::new(bin)
+        .arg("shard-worker")
+        .arg("--input")
+        .arg(input)
+        .arg("--config")
+        .arg(cfg_path)
+        .arg(format!("--shard-index={shard}"))
+        .arg(format!("--shard-rows={}:{}", rows.0, rows.1))
+        .arg(format!("--shard-attempt={attempt}"))
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .map_err(HegridError::io(format!("spawning shard {shard} worker")))?;
+    let stdout = child.stdout.take().expect("stdout was piped");
+    let tx = tx.clone();
+    std::thread::spawn(move || {
+        for line in BufReader::new(stdout).lines() {
+            let Ok(line) = line else { break };
+            if let Some(frame) = Frame::parse(&line) {
+                if tx.send((shard, frame)).is_err() {
+                    break;
+                }
+            }
+        }
+    });
+    Ok(child)
+}
+
+/// Pull every queued frame (waiting at most [`POLL_MS`] for the first) and
+/// fold it into the slot / report state. Any frame counts as a heartbeat.
+fn drain_frames(
+    rx: &Receiver<(usize, Frame)>,
+    slots: &mut [Slot],
+    report: &mut PipelineReport,
+) {
+    // Timeout and Disconnected both mean "nothing to fold right now".
+    let mut next = rx.recv_timeout(Duration::from_millis(POLL_MS)).ok();
+    while let Some((shard, frame)) = next {
+        let slot = &mut slots[shard];
+        if let SlotState::Running { last_beat, .. } = &mut slot.state {
+            *last_beat = Instant::now();
+        }
+        match frame {
+            Frame::Ping { .. } => {}
+            Frame::Group { group, .. } => {
+                slot.done_groups.insert(group);
+            }
+            Frame::Stage { secs, name } => {
+                report.stages.add(&name, Duration::from_secs_f64(secs));
+            }
+            Frame::Done { groups, retries, quarantined } => {
+                slot.done_stats = Some((groups, retries, quarantined));
+            }
+            Frame::Fatal { message } => {
+                slot.last_fatal = Some(message);
+            }
+        }
+        next = rx.try_recv().ok();
+    }
+}
+
+/// A worker attempt for shard `s` failed with `cause`: restart it under
+/// backoff, or — once `shard_max_restarts` attempts have already been
+/// burned — quarantine the shard (degrade mode) / abort the run
+/// (fail-fast).
+fn apply_failure(
+    slots: &mut [Slot],
+    s: usize,
+    cause: String,
+    cfg: &HegridConfig,
+    report: &mut PipelineReport,
+) -> Result<()> {
+    match decide_failure(slots[s].restarts, cfg, &cause, s) {
+        FailAction::Restart => {
+            let delay = restart_delay(cfg.shard_restart_backoff_ms, slots[s].restarts);
+            slots[s].restarts += 1;
+            report.degradation.worker_restarts += 1;
+            crate::logging::log_at(
+                crate::logging::Level::Info,
+                format_args!(
+                    "supervisor: shard {s} failed ({cause}); restart {} of {} in {:?}",
+                    slots[s].restarts, cfg.shard_max_restarts, delay
+                ),
+            );
+            slots[s].state = SlotState::Backoff { until: Instant::now() + delay };
+            Ok(())
+        }
+        FailAction::Quarantine(cause) => {
+            slots[s].state = SlotState::Quarantined;
+            report.degradation.quarantined_shards.push(s);
+            report.degradation.causes.push(cause);
+            Ok(())
+        }
+        FailAction::Abort(msg) => {
+            kill_all(slots);
+            Err(HegridError::Runtime(msg))
+        }
+    }
+}
+
+fn decide_failure(restarts: usize, cfg: &HegridConfig, cause: &str, s: usize) -> FailAction {
+    if restarts < cfg.shard_max_restarts {
+        return FailAction::Restart;
+    }
+    let summary = format!(
+        "shard {s}: {cause} (gave up after {} restart{})",
+        restarts,
+        if restarts == 1 { "" } else { "s" }
+    );
+    if cfg.fail_fast {
+        FailAction::Abort(format!("{summary}; aborting (fail-fast)"))
+    } else {
+        FailAction::Quarantine(summary)
+    }
+}
+
+/// SIGKILL and reap every still-running worker (cancel / fail-fast exit).
+fn kill_all(slots: &mut [Slot]) {
+    for slot in slots {
+        if let SlotState::Running { child, .. } = &mut slot.state {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}
+
+/// Fold the per-shard DONE epilogues into the report: retries, group
+/// counts, and worker-level quarantined channel groups (kept parallel to
+/// their causes, shard-level causes appended after — the order
+/// [`crate::coordinator::DegradationReport`] documents).
+fn fold_outcomes(slots: &[Slot], report: &mut PipelineReport) {
+    let mut group_quarantine: Vec<(usize, String)> = Vec::new();
+    for (s, slot) in slots.iter().enumerate() {
+        if let Some((groups, retries, quarantined)) = &slot.done_stats {
+            report.degradation.retries += retries;
+            report.n_groups = report.n_groups.max(groups + quarantined.len());
+            for &g in quarantined {
+                if !group_quarantine.iter().any(|(gg, _)| *gg == g) {
+                    group_quarantine
+                        .push((g, format!("shard {s}: channel group quarantined in worker")));
+                }
+            }
+        }
+        report.n_groups = report.n_groups.max(slot.done_groups.len());
+    }
+    group_quarantine.sort_by_key(|&(g, _)| g);
+    // Group causes lead (parallel to quarantined_groups), shard causes —
+    // already pushed by apply_failure — follow.
+    let shard_causes = std::mem::take(&mut report.degradation.causes);
+    for (g, cause) in group_quarantine {
+        report.degradation.quarantined_groups.push(g);
+        report.degradation.causes.push(cause);
+    }
+    report.degradation.causes.extend(shard_causes);
+    report.degradation.quarantined_shards.sort_unstable();
+}
+
+/// The final deterministic reduce — thin wrapper so the orchestration
+/// above reads top-to-bottom.
+fn merge_cube(
+    ckpt: &Path,
+    partition: &SkyPartition,
+    quarantined: &[usize],
+    n_channels: usize,
+    nlon: usize,
+    nlat: usize,
+) -> Result<crate::data::checkpoint::CubeFile> {
+    super::merge::merge_shards(ckpt, partition, quarantined, n_channels, nlon, nlat)
+}

@@ -1,0 +1,194 @@
+//! The worker → supervisor heartbeat protocol: one text frame per line on
+//! the child's stdout pipe.
+//!
+//! Frames are prefixed `HEGRID-FRAME ` so anything else a worker (or a
+//! library it calls) prints is ignored rather than corrupting the stream.
+//! The format is deliberately line-oriented plain text: a torn final line
+//! from a SIGKILLed worker fails to parse and is dropped, which is exactly
+//! the right behaviour — progress is trusted only from the shard's CRC'd
+//! checkpoint manifest, never from the heartbeat stream.
+//!
+//! ```text
+//! HEGRID-FRAME PING <seq>
+//! HEGRID-FRAME GROUP <group> <crc-hex>
+//! HEGRID-FRAME STAGE <secs> <stage name...>
+//! HEGRID-FRAME DONE <groups_done> <retries> <quarantined csv | ->
+//! HEGRID-FRAME FATAL <message...>
+//! ```
+//!
+//! `PING` is pure liveness (every [`HEARTBEAT_MS`]); `GROUP` announces a
+//! channel group recorded done in the shard manifest (also counts as a
+//! heartbeat); `STAGE` carries the worker's per-stage wall seconds for the
+//! parent's merged report; `DONE` is the success epilogue; `FATAL` carries
+//! the error message ahead of a nonzero exit so the supervisor can record
+//! a cause better than "exit status 1".
+
+use std::fmt::Write as _;
+
+/// Worker heartbeat period in milliseconds. The liveness timeout
+/// (`shard_heartbeat_timeout_s`, seconds) is bounded well above this, so a
+/// healthy worker can never be mistaken for a hung one.
+pub const HEARTBEAT_MS: u64 = 200;
+
+/// Line prefix marking a protocol frame.
+pub const FRAME_PREFIX: &str = "HEGRID-FRAME ";
+
+/// One protocol frame. See the module docs for the wire format.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Liveness tick; `seq` increments monotonically per worker attempt.
+    Ping { seq: u64 },
+    /// Channel group `group` is recorded done in the shard manifest with
+    /// cube-byte CRC `crc`.
+    Group { group: usize, crc: u32 },
+    /// `secs` of wall time attributed to pipeline stage `name`.
+    Stage { secs: f64, name: String },
+    /// Success epilogue: groups done, T0 read retries absorbed, and the
+    /// channel groups this worker quarantined (degrade mode).
+    Done { groups: usize, retries: usize, quarantined: Vec<usize> },
+    /// Failure epilogue: the error message, emitted just before a nonzero
+    /// exit.
+    Fatal { message: String },
+}
+
+impl Frame {
+    /// Render the frame as one line (no trailing newline).
+    pub fn encode(&self) -> String {
+        let mut s = String::from(FRAME_PREFIX);
+        match self {
+            Frame::Ping { seq } => {
+                let _ = write!(s, "PING {seq}");
+            }
+            Frame::Group { group, crc } => {
+                let _ = write!(s, "GROUP {group} {crc:08x}");
+            }
+            Frame::Stage { secs, name } => {
+                // The stage name goes last: it may contain spaces
+                // ("T3 kernel(+wait)") and parses as rest-of-line.
+                let _ = write!(s, "STAGE {secs} {name}");
+            }
+            Frame::Done { groups, retries, quarantined } => {
+                let q = if quarantined.is_empty() {
+                    "-".to_string()
+                } else {
+                    quarantined
+                        .iter()
+                        .map(|g| g.to_string())
+                        .collect::<Vec<_>>()
+                        .join(",")
+                };
+                let _ = write!(s, "DONE {groups} {retries} {q}");
+            }
+            Frame::Fatal { message } => {
+                // Newlines would split the frame across lines; flatten them.
+                let _ = write!(s, "FATAL {}", message.replace('\n', " | "));
+            }
+        }
+        s
+    }
+
+    /// Parse one stdout line. `None` for non-frame lines *and* malformed
+    /// frames (e.g. a line torn mid-write by a SIGKILL) — both are
+    /// ignorable by design.
+    pub fn parse(line: &str) -> Option<Frame> {
+        let body = line.strip_prefix(FRAME_PREFIX)?;
+        let (kind, rest) = match body.split_once(' ') {
+            Some((k, r)) => (k, r),
+            None => (body, ""),
+        };
+        match kind {
+            "PING" => Some(Frame::Ping { seq: rest.trim().parse().ok()? }),
+            "GROUP" => {
+                let (g, crc) = rest.trim().split_once(' ')?;
+                Some(Frame::Group {
+                    group: g.parse().ok()?,
+                    crc: u32::from_str_radix(crc, 16).ok()?,
+                })
+            }
+            "STAGE" => {
+                let (secs, name) = rest.split_once(' ')?;
+                let secs: f64 = secs.parse().ok()?;
+                if !secs.is_finite() || name.is_empty() {
+                    return None;
+                }
+                Some(Frame::Stage { secs, name: name.to_string() })
+            }
+            "DONE" => {
+                let mut it = rest.trim().split(' ');
+                let groups = it.next()?.parse().ok()?;
+                let retries = it.next()?.parse().ok()?;
+                let q = it.next()?;
+                if it.next().is_some() {
+                    return None;
+                }
+                let quarantined = if q == "-" {
+                    Vec::new()
+                } else {
+                    q.split(',')
+                        .map(|g| g.parse::<usize>())
+                        .collect::<std::result::Result<Vec<_>, _>>()
+                        .ok()?
+                };
+                Some(Frame::Done { groups, retries, quarantined })
+            }
+            "FATAL" => Some(Frame::Fatal { message: rest.to_string() }),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips() {
+        let frames = [
+            Frame::Ping { seq: 0 },
+            Frame::Ping { seq: 12345 },
+            Frame::Group { group: 7, crc: 0xdead_beef },
+            Frame::Stage { secs: 0.125, name: "T3 kernel(+wait)".into() },
+            Frame::Done { groups: 5, retries: 2, quarantined: vec![] },
+            Frame::Done { groups: 5, retries: 0, quarantined: vec![1, 3] },
+            Frame::Fatal { message: "I/O error (channel 3): injected".into() },
+        ];
+        for f in frames {
+            let line = f.encode();
+            assert!(line.starts_with(FRAME_PREFIX), "{line}");
+            assert!(!line.contains('\n'), "{line}");
+            assert_eq!(Frame::parse(&line), Some(f.clone()), "{line}");
+        }
+    }
+
+    #[test]
+    fn fatal_flattens_newlines() {
+        let f = Frame::Fatal { message: "line one\nline two".into() };
+        let line = f.encode();
+        assert!(!line.contains('\n'));
+        match Frame::parse(&line).unwrap() {
+            Frame::Fatal { message } => assert_eq!(message, "line one | line two"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn torn_and_foreign_lines_are_ignored() {
+        for bad in [
+            "",
+            "not a frame",
+            "HEGRID-FRAME",
+            "HEGRID-FRAME PING",
+            "HEGRID-FRAME PING x",
+            "HEGRID-FRAME GROUP 3",
+            "HEGRID-FRAME GROUP 3 zz",
+            "HEGRID-FRAME DONE 5 2",
+            "HEGRID-FRAME DONE 5 2 1,x",
+            "HEGRID-FRAME STAGE nan T3",
+            "HEGRID-FRAME NOPE 1 2",
+            // A PING torn mid-write by SIGKILL:
+            "HEGRID-FRAME PI",
+        ] {
+            assert_eq!(Frame::parse(bad), None, "accepted: {bad:?}");
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! The `hegrid shard-worker` process body: grid one shard's row range to
+//! a per-shard checkpoint, heartbeating over stdout.
+//!
+//! A worker is intentionally just the in-process engine pointed at a
+//! narrowed output window: it opens the same dataset, builds the same
+//! dispatch plan, and runs the same tiled pipelines — only the accumulate
+//! / spill window is its [`crate::coordinator::SkyPartition`] row range.
+//! All crash-robustness it needs already exists in the checkpoint layer:
+//!
+//! * **Auto-resume** — if the shard directory holds a manifest, the worker
+//!   resumes it; finished groups are CRC-verified and skipped, so a
+//!   restarted worker re-grids only what its predecessor hadn't finished.
+//! * **Self-heal** — a torn or corrupt shard checkpoint (SIGKILL mid-save,
+//!   truncated cube) or one written by a different job fails the resume
+//!   *load*; the worker wipes the shard directory and re-grids it from
+//!   scratch instead of dying in a restart loop.
+//! * **Orphan exit** — heartbeats go to stdout, which is the supervisor's
+//!   pipe. If the parent died, the write fails (Rust leaves SIGPIPE
+//!   ignored, so it surfaces as `EPIPE`, not a kill) and the worker exits
+//!   with code [`ORPHAN_EXIT_CODE`] rather than gridding for nobody.
+//!
+//! The heartbeat ticker doubles as the progress reporter (it diffs the
+//! shard manifest and announces newly finished groups) and as the
+//! deterministic trigger point for the `kill@shard` / `hang@shard` fault
+//! sites ([`crate::util::faults::shard_fault_tick`]).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::proto::{Frame, HEARTBEAT_MS};
+use super::shard_dir;
+use crate::config::HegridConfig;
+use crate::coordinator::{GriddingJob, HegridEngine};
+use crate::data::checkpoint::{CheckpointManifest, MANIFEST_FILE};
+use crate::data::HgdStreamSource;
+use crate::util::error::{HegridError, Result};
+
+/// Exit code for "my supervisor is gone" (stdout pipe broke). Distinct
+/// from 1 (gridding error) so a supervisor that *is* alive but lost the
+/// pipe some other way can tell the two apart in logs.
+pub const ORPHAN_EXIT_CODE: i32 = 3;
+
+/// Write one frame line to the supervisor pipe; exit as an orphan if the
+/// pipe is gone.
+fn emit(frame: &Frame) {
+    use std::io::Write as _;
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    if writeln!(out, "{}", frame.encode()).and_then(|_| out.flush()).is_err() {
+        std::process::exit(ORPHAN_EXIT_CODE);
+    }
+}
+
+/// Run one shard worker to completion. `rows` is the shard's output row
+/// range `[lo, hi)`, `attempt` the supervisor's restart counter for this
+/// shard (the fault-site cursor). Returns `Ok` after the shard checkpoint
+/// is complete and the `DONE` epilogue is emitted; the caller exits 0.
+pub fn run_shard_worker(
+    mut cfg: HegridConfig,
+    input: &Path,
+    shard: usize,
+    rows: (usize, usize),
+    attempt: usize,
+) -> Result<()> {
+    if cfg.checkpoint_dir.is_empty() {
+        return Err(HegridError::Config(
+            "shard-worker needs a checkpoint_dir in its --config".into(),
+        ));
+    }
+    let sdir = shard_dir(Path::new(&cfg.checkpoint_dir), shard);
+    std::fs::create_dir_all(&sdir).map_err(HegridError::io(sdir.display().to_string()))?;
+    // The worker is a single-process run over the shard directory; the
+    // parent-level sharding knob must not recurse.
+    cfg.checkpoint_dir = sdir.display().to_string();
+    cfg.shard_procs = 0;
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let ticker = start_ticker(sdir.clone(), shard, attempt, Arc::clone(&stop));
+
+    let result = grid_with_self_heal(&cfg, input, &sdir, rows);
+
+    stop.store(true, Ordering::SeqCst);
+    let _ = ticker.join(); // final manifest sweep runs before it returns
+
+    match result {
+        Ok(report) => {
+            for (stage, d, _count) in report.stages.stages() {
+                emit(&Frame::Stage { secs: d.as_secs_f64(), name: stage.to_string() });
+            }
+            let groups = CheckpointManifest::load(&sdir)
+                .map(|m| m.groups_done.len())
+                .unwrap_or(0);
+            emit(&Frame::Done {
+                groups,
+                retries: report.degradation.retries,
+                quarantined: report.degradation.quarantined_groups.clone(),
+            });
+            Ok(())
+        }
+        Err(e) => {
+            emit(&Frame::Fatal { message: e.to_string() });
+            Err(e)
+        }
+    }
+}
+
+/// Grid the shard's rows, resuming an existing checkpoint when one is
+/// present. If the resume *load* fails — torn manifest, corrupt cube
+/// bytes, or a checkpoint from a different job — wipe the shard directory
+/// and re-grid from scratch (once; a second failure is real).
+fn grid_with_self_heal(
+    cfg: &HegridConfig,
+    input: &Path,
+    sdir: &Path,
+    rows: (usize, usize),
+) -> Result<crate::coordinator::PipelineReport> {
+    let mut resume = sdir.join(MANIFEST_FILE).exists();
+    loop {
+        let mut run_cfg = cfg.clone();
+        run_cfg.resume = resume;
+        let engine = HegridEngine::new(run_cfg)?;
+        let source = HgdStreamSource::open(input)?;
+        let job = GriddingJob::for_source(&source, &engine.config)?;
+        match engine.grid_source_to_cube_rows(&source, &job, Some(rows)) {
+            Ok((_cube, report, _cleanup)) => return Ok(report),
+            Err(e) if resume && resume_load_failed(&e) => {
+                crate::logging::log_at(
+                    crate::logging::Level::Warn,
+                    format_args!(
+                        "shard-worker: discarding unusable checkpoint at {} ({e}); re-gridding",
+                        sdir.display()
+                    ),
+                );
+                std::fs::remove_dir_all(sdir)
+                    .map_err(HegridError::io(sdir.display().to_string()))?;
+                std::fs::create_dir_all(sdir)
+                    .map_err(HegridError::io(sdir.display().to_string()))?;
+                resume = false;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Errors that mean "this checkpoint cannot be resumed" rather than "this
+/// run failed": manifest CRC / cube-byte corruption, a manifest torn
+/// mid-write (JSON parse failure), or an identity mismatch.
+fn resume_load_failed(e: &HegridError) -> bool {
+    match e {
+        HegridError::Corrupt(_) | HegridError::Json { .. } | HegridError::Format(_) => true,
+        HegridError::Config(msg) => msg.contains("--resume checkpoint"),
+        _ => false,
+    }
+}
+
+/// The heartbeat ticker thread: every [`HEARTBEAT_MS`] emit a `PING`,
+/// announce channel groups newly recorded in the shard manifest, and give
+/// the `kill@shard` / `hang@shard` fault sites their deterministic firing
+/// point. After `stop` is set it performs one final manifest sweep (so no
+/// finished group goes unannounced) and returns.
+fn start_ticker(
+    sdir: PathBuf,
+    shard: usize,
+    attempt: usize,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let mut seq = 0u64;
+        let mut announced = std::collections::HashSet::new();
+        loop {
+            let last = stop.load(Ordering::SeqCst);
+            emit(&Frame::Ping { seq });
+            seq += 1;
+            if let Ok(m) = CheckpointManifest::load(&sdir) {
+                for &(g, crc) in &m.groups_done {
+                    if announced.insert(g) {
+                        emit(&Frame::Group { group: g, crc });
+                    }
+                }
+                // Deterministic fault point: fires only mid-run (once at
+                // least one group is checkpointed) and only while this
+                // attempt number is below the site's count — see
+                // `util::faults`.
+                crate::util::faults::shard_fault_tick(shard, attempt, m.groups_done.len());
+            }
+            if last {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(HEARTBEAT_MS));
+        }
+    })
+}

@@ -10,6 +10,7 @@
 //! (`GET /jobs/{id}` → `report`) — a scrape wants current scalars, not
 //! per-run series.
 
+use std::collections::VecDeque;
 use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -28,6 +29,11 @@ struct LastRun {
     wall_s: f64,
 }
 
+/// Finished-job wall times kept for the 429 `Retry-After` estimate. Small
+/// and recent beats large and stale: the queue's drain rate tracks what
+/// the server is running *now*.
+const WALL_WINDOW: usize = 16;
+
 /// Counters + last-run gauges, shared by workers and the scrape handler.
 #[derive(Debug, Default)]
 pub struct ServiceMetrics {
@@ -37,9 +43,15 @@ pub struct ServiceMetrics {
     pub jobs_degraded: AtomicU64,
     pub jobs_failed: AtomicU64,
     pub jobs_cancelled: AtomicU64,
+    pub jobs_timeout: AtomicU64,
     pub retries: AtomicU64,
     pub quarantined_groups: AtomicU64,
+    pub shard_restarts: AtomicU64,
+    pub shard_quarantined: AtomicU64,
     last: Mutex<LastRun>,
+    /// Rolling window of recent finished-job wall seconds (see
+    /// [`ServiceMetrics::retry_after_s`]).
+    walls: Mutex<VecDeque<f64>>,
 }
 
 impl ServiceMetrics {
@@ -52,6 +64,17 @@ impl ServiceMetrics {
         self.retries.fetch_add(report.degradation.retries as u64, Ordering::Relaxed);
         self.quarantined_groups
             .fetch_add(report.degradation.quarantined_groups.len() as u64, Ordering::Relaxed);
+        self.shard_restarts
+            .fetch_add(report.degradation.worker_restarts as u64, Ordering::Relaxed);
+        self.shard_quarantined
+            .fetch_add(report.degradation.quarantined_shards.len() as u64, Ordering::Relaxed);
+        {
+            let mut walls = self.walls.lock().unwrap();
+            walls.push_back(report.wall.as_secs_f64());
+            while walls.len() > WALL_WINDOW {
+                walls.pop_front();
+            }
+        }
         let occupancy = PipeStage::ALL
             .iter()
             .map(|&s| (s.name(), report.stage_occupancy(s)))
@@ -63,6 +86,20 @@ impl ServiceMetrics {
             numa_nodes: report.numa_nodes,
             wall_s: report.wall.as_secs_f64(),
         };
+    }
+
+    /// The `Retry-After` seconds for a 429: queue depth × the mean wall
+    /// time of the recent finished jobs (default 1s before any job has
+    /// finished), clamped to `[1, 600]`. A client obeying it comes back
+    /// roughly when the backlog ahead of it has drained.
+    pub fn retry_after_s(&self, depth: usize) -> u64 {
+        let walls = self.walls.lock().unwrap();
+        let mean = if walls.is_empty() {
+            1.0
+        } else {
+            walls.iter().sum::<f64>() / walls.len() as f64
+        };
+        (depth as f64 * mean).ceil().clamp(1.0, 600.0) as u64
     }
 
     /// Render the full exposition. `queued`/`running` come from the queue,
@@ -103,9 +140,24 @@ impl ServiceMetrics {
                 &self.retries,
             ),
             (
+                "hegrid_jobs_timeout_total",
+                "Jobs stopped by the service_job_timeout_s watchdog.",
+                &self.jobs_timeout,
+            ),
+            (
                 "hegrid_quarantined_groups_total",
                 "Channel groups quarantined across all degrade-mode runs.",
                 &self.quarantined_groups,
+            ),
+            (
+                "hegrid_shard_restarts_total",
+                "Supervised shard workers restarted after a crash or hang.",
+                &self.shard_restarts,
+            ),
+            (
+                "hegrid_shard_quarantined_total",
+                "Supervised shards quarantined after exhausting restarts.",
+                &self.shard_quarantined,
             ),
         ] {
             counter_line(&mut out, name, help, counter.load(Ordering::Relaxed));
@@ -233,5 +285,46 @@ mod tests {
         assert!(text.contains("hegrid_pipeline_width_changes 1\n"));
         assert!(text.contains("hegrid_stage_occupancy{stage=\"T3\"} "));
         assert!(text.contains("hegrid_uptime_seconds 12.5\n"));
+        assert!(text.contains("hegrid_jobs_timeout_total 0\n"));
+        assert!(text.contains("hegrid_shard_restarts_total 0\n"));
+        assert!(text.contains("hegrid_shard_quarantined_total 0\n"));
+    }
+
+    #[test]
+    fn retry_after_scales_with_depth_and_recent_wall_times() {
+        let m = ServiceMetrics::new();
+        // No history: 1s per queued job.
+        assert_eq!(m.retry_after_s(0), 1);
+        assert_eq!(m.retry_after_s(3), 3);
+        // Three ~4s jobs: depth 3 → ceil(3 × 4) = 12.
+        for _ in 0..3 {
+            m.record_report(&PipelineReport {
+                wall: std::time::Duration::from_secs(4),
+                ..Default::default()
+            });
+        }
+        assert_eq!(m.retry_after_s(3), 12);
+        // Clamped at both ends.
+        assert_eq!(m.retry_after_s(0), 1);
+        assert_eq!(m.retry_after_s(100_000), 600);
+        // The window forgets old jobs: 20 fast runs push the slow ones out.
+        for _ in 0..20 {
+            m.record_report(&PipelineReport {
+                wall: std::time::Duration::from_millis(500),
+                ..Default::default()
+            });
+        }
+        assert_eq!(m.retry_after_s(4), 2);
+    }
+
+    #[test]
+    fn record_report_folds_shard_accounting() {
+        let m = ServiceMetrics::new();
+        let mut report = PipelineReport::default();
+        report.degradation.worker_restarts = 3;
+        report.degradation.quarantined_shards = vec![1, 4];
+        m.record_report(&report);
+        assert_eq!(m.shard_restarts.load(Ordering::Relaxed), 3);
+        assert_eq!(m.shard_quarantined.load(Ordering::Relaxed), 2);
     }
 }

@@ -68,6 +68,10 @@ pub struct ServiceConfig {
     /// still running once the budget is spent. The process exits 0 either
     /// way.
     pub service_drain_s: usize,
+    /// Per-job runtime bound in seconds: a job running longer has its
+    /// cancel flag tripped and finishes in the terminal `timeout` state
+    /// (counted by `jobs_timeout_total`). 0 = no bound.
+    pub service_job_timeout_s: usize,
 }
 
 impl Default for ServiceConfig {
@@ -79,6 +83,7 @@ impl Default for ServiceConfig {
             service_cache_cap: 4,
             service_keep_results: 8,
             service_drain_s: 30,
+            service_job_timeout_s: 0,
         }
     }
 }
@@ -96,6 +101,7 @@ impl ServiceConfig {
             ("HEGRID_SERVICE_CACHE_CAP", &mut self.service_cache_cap),
             ("HEGRID_SERVICE_KEEP_RESULTS", &mut self.service_keep_results),
             ("HEGRID_SERVICE_DRAIN_S", &mut self.service_drain_s),
+            ("HEGRID_SERVICE_JOB_TIMEOUT_S", &mut self.service_job_timeout_s),
         ] {
             if let Ok(v) = std::env::var(var) {
                 *field = v.parse().map_err(|_| {
@@ -140,6 +146,12 @@ impl ServiceConfig {
                 self.service_drain_s
             )));
         }
+        if self.service_job_timeout_s > 86_400 {
+            return Err(HegridError::Config(format!(
+                "service_job_timeout_s must be at most 86400, got {}",
+                self.service_job_timeout_s
+            )));
+        }
         Ok(())
     }
 }
@@ -161,5 +173,12 @@ mod tests {
         assert!(c.validate().is_err());
         let c = ServiceConfig { service_listen: String::new(), ..ServiceConfig::default() };
         assert!(c.validate().is_err());
+        let c = ServiceConfig { service_job_timeout_s: 86_401, ..ServiceConfig::default() };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn job_timeout_defaults_off() {
+        assert_eq!(ServiceConfig::default().service_job_timeout_s, 0);
     }
 }

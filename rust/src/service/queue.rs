@@ -9,7 +9,10 @@
 //!   │                          │                  │  at the next group
 //!   429 (queue full)           ├───► done         │  boundary)
 //!                              ├───► degraded ────┘
-//!                              └───► failed
+//!                              ├───► failed
+//!                              └───► timeout  (service_job_timeout_s
+//!                                              exceeded; same cancel-flag
+//!                                              mechanism, distinct state)
 //! ```
 //!
 //! `queued → running` is a worker claiming the head of the FIFO;
@@ -30,9 +33,12 @@ use crate::json::Json;
 use crate::util::error::{HegridError, Result};
 
 /// The job state machine. Terminal states: `Done`, `Degraded`, `Failed`,
-/// `Cancelled`. `Degraded` is a *successful* run that quarantined channel
-/// groups — the result cube exists (quarantined planes zeroed) and the
-/// status JSON carries the `DegradationReport`.
+/// `Cancelled`, `TimedOut`. `Degraded` is a *successful* run that
+/// quarantined channel groups — the result cube exists (quarantined planes
+/// zeroed) and the status JSON carries the `DegradationReport`. `TimedOut`
+/// is a cancellation the *server's* watchdog initiated because the run
+/// exceeded `service_job_timeout_s` — kept distinct from `Cancelled` so
+/// clients can tell "I asked for this" from "the server gave up on me".
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum JobState {
     Queued,
@@ -41,6 +47,7 @@ pub enum JobState {
     Degraded,
     Failed,
     Cancelled,
+    TimedOut,
 }
 
 impl JobState {
@@ -52,6 +59,7 @@ impl JobState {
             JobState::Degraded => "degraded",
             JobState::Failed => "failed",
             JobState::Cancelled => "cancelled",
+            JobState::TimedOut => "timeout",
         }
     }
 
@@ -147,6 +155,8 @@ pub enum JobOutcome {
     Degraded { result: JobResult, report: Json },
     Failed { error: String },
     Cancelled,
+    /// The run was stopped by the server's job-timeout watchdog.
+    TimedOut,
 }
 
 struct JobRecord {
@@ -160,6 +170,9 @@ struct JobRecord {
     queued_s: f64,
     started_s: Option<f64>,
     finished_s: Option<f64>,
+    /// Set by the timeout watchdog: tells the worker that the `Cancelled`
+    /// it is about to observe was really a timeout.
+    timed_out: bool,
 }
 
 struct QueueState {
@@ -243,6 +256,7 @@ impl JobQueue {
                 queued_s: now_s,
                 started_s: None,
                 finished_s: None,
+                timed_out: false,
             },
         );
         st.pending.push_back(id);
@@ -294,6 +308,7 @@ impl JobQueue {
                     record.error = Some(error);
                 }
                 JobOutcome::Cancelled => record.state = JobState::Cancelled,
+                JobOutcome::TimedOut => record.state = JobState::TimedOut,
             }
             st.finished.push_back(id);
             while st.finished.len() > self.keep_results {
@@ -333,6 +348,36 @@ impl JobQueue {
             }
             _ => Cancelled::AlreadyTerminal,
         }
+    }
+
+    /// The job-timeout watchdog: trip the cancel flag of every running job
+    /// whose wall time has exceeded `timeout_s`, marking it timed-out so
+    /// the worker reports [`JobOutcome::TimedOut`] instead of `Cancelled`.
+    /// `timeout_s == 0` disables the watchdog. Returns the ids newly
+    /// tripped this call (each job trips exactly once).
+    pub fn mark_timeouts(&self, timeout_s: usize, now_s: f64) -> Vec<u64> {
+        if timeout_s == 0 {
+            return Vec::new();
+        }
+        let mut st = self.state.lock().unwrap();
+        let mut tripped = Vec::new();
+        for record in st.jobs.values_mut() {
+            if record.state == JobState::Running && !record.timed_out {
+                let started = record.started_s.unwrap_or(now_s);
+                if now_s - started > timeout_s as f64 {
+                    record.timed_out = true;
+                    record.cancel.cancel();
+                    tripped.push(record.id);
+                }
+            }
+        }
+        tripped
+    }
+
+    /// Did the watchdog time this job out? (Workers call this when a run
+    /// returns `Cancelled` to pick the right terminal state.)
+    pub fn timed_out(&self, id: u64) -> bool {
+        self.state.lock().unwrap().jobs.get(&id).is_some_and(|r| r.timed_out)
     }
 
     /// Trip every live job's cancel flag (drain-timeout enforcement).
@@ -517,6 +562,30 @@ mod tests {
         let (id, _, _) = q.claim(0.0).unwrap();
         q.finish(id, done_outcome(), 0.0);
         assert!(q.claim(0.0).is_none());
+    }
+
+    #[test]
+    fn timeout_watchdog_trips_overdue_running_jobs_once() {
+        let q = JobQueue::new(8, 8);
+        q.submit(spec("slow"), 0.0).unwrap();
+        q.submit(spec("young"), 0.0).unwrap();
+        let (slow, _, slow_flag) = q.claim(1.0).unwrap();
+        let (young, _, young_flag) = q.claim(9.0).unwrap();
+        // Disabled watchdog never fires.
+        assert!(q.mark_timeouts(0, 100.0).is_empty());
+        // At t=12 only the job started at t=1 has exceeded 10s.
+        assert_eq!(q.mark_timeouts(10, 12.0), vec![slow]);
+        assert!(slow_flag.is_cancelled());
+        assert!(!young_flag.is_cancelled());
+        assert!(q.timed_out(slow));
+        assert!(!q.timed_out(young));
+        // Second sweep does not re-trip the same job.
+        assert!(q.mark_timeouts(10, 13.0).is_empty());
+        // The worker observes the cancellation and reports a timeout.
+        q.finish(slow, JobOutcome::TimedOut, 13.5);
+        assert_eq!(q.status_json(slow).unwrap().req_str("state").unwrap(), "timeout");
+        q.finish(young, done_outcome(), 14.0);
+        assert!(q.idle());
     }
 
     #[test]

@@ -186,6 +186,11 @@ fn run(state: Arc<ServiceState>, listener: TcpListener) -> Result<()> {
         workers.push(std::thread::spawn(move || worker_loop(&st)));
     }
     while !state.draining() {
+        // Job-timeout watchdog, piggybacked on the accept loop: the 25ms
+        // idle sleep bounds its granularity, far below the seconds-scale
+        // timeouts it enforces. Metric increments happen in the worker
+        // when the outcome lands (same as every other terminal counter).
+        state.queue.mark_timeouts(state.scfg.service_job_timeout_s, state.now_s());
         match listener.accept() {
             Ok((stream, _peer)) => {
                 let st = Arc::clone(&state);
@@ -221,7 +226,7 @@ fn run(state: Arc<ServiceState>, listener: TcpListener) -> Result<()> {
 fn worker_loop(state: &ServiceState) {
     while let Some((id, spec, cancel)) = state.queue.claim(state.now_s()) {
         let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            run_job(state, &spec, &cancel)
+            run_job(state, id, &spec, &cancel)
         }))
         .unwrap_or_else(|payload| {
             Err(HegridError::Runtime(format!(
@@ -240,6 +245,10 @@ fn worker_loop(state: &ServiceState) {
                     state.metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
                     JobOutcome::Done { result, report: report_json }
                 }
+            }
+            Err(HegridError::Cancelled) if state.queue.timed_out(id) => {
+                state.metrics.jobs_timeout.fetch_add(1, Ordering::Relaxed);
+                JobOutcome::TimedOut
             }
             Err(HegridError::Cancelled) => {
                 state.metrics.jobs_cancelled.fetch_add(1, Ordering::Relaxed);
@@ -260,10 +269,14 @@ fn worker_loop(state: &ServiceState) {
 /// plan cache, neither of which changes a single output byte.
 fn run_job(
     state: &ServiceState,
+    id: u64,
     spec: &JobSpec,
     cancel: &CancelFlag,
 ) -> Result<(JobResult, PipelineReport)> {
     let cfg = merged_config(&state.base, spec.overrides.as_ref())?;
+    if cfg.shard_procs > 0 {
+        return run_supervised_job(id, cfg, spec, cancel);
+    }
     let mut engine = HegridEngine::new(cfg)?;
     if state.scfg.service_cache_cap > 0 {
         engine = engine.with_plan_cache(Arc::clone(&state.cache));
@@ -277,6 +290,29 @@ fn run_job(
         let job = GriddingJob::for_dataset(&dataset, &engine.config)?.with_cancel(cancel.clone());
         engine.grid(&dataset, &job)?
     };
+    Ok((encode_result(&maps), report))
+}
+
+/// A job whose merged config selects supervised multi-process execution
+/// (`shard_procs > 0`, settable per job — the server's base config must
+/// carry the checkpoint root). Each job grids under its own
+/// `<checkpoint_dir>/job-{id}` subtree so concurrent supervised jobs never
+/// share shard state; the per-job `CancelFlag` maps onto the supervisor's
+/// kill-all path, so DELETE and the job-timeout watchdog both work.
+/// `streaming` is moot here — shard workers always stream their input.
+fn run_supervised_job(
+    id: u64,
+    mut cfg: HegridConfig,
+    spec: &JobSpec,
+    cancel: &CancelFlag,
+) -> Result<(JobResult, PipelineReport)> {
+    cfg.checkpoint_dir = Path::new(&cfg.checkpoint_dir)
+        .join(format!("job-{id}"))
+        .display()
+        .to_string();
+    let (cube, report) =
+        crate::runtime::supervisor::run_supervised(&cfg, Path::new(&spec.input), cancel)?;
+    let maps = cube.read_all_maps()?;
     Ok((encode_result(&maps), report))
 }
 
@@ -362,6 +398,20 @@ fn report_json(r: &PipelineReport) -> Json {
                     ),
                 ),
                 ("retries", Json::num(r.degradation.retries as f64)),
+                (
+                    "quarantined_shards",
+                    Json::Arr(
+                        r.degradation
+                            .quarantined_shards
+                            .iter()
+                            .map(|&s| Json::num(s as f64))
+                            .collect(),
+                    ),
+                ),
+                (
+                    "worker_restarts",
+                    Json::num(r.degradation.worker_restarts as f64),
+                ),
                 (
                     "causes",
                     Json::Arr(
@@ -458,8 +508,12 @@ fn post_job(state: &ServiceState, req: &Request) -> Response {
         }
         Ok(Submitted::QueueFull { depth, max }) => {
             state.metrics.jobs_rejected.fetch_add(1, Ordering::Relaxed);
+            // Scale the retry hint with how much work is already waiting:
+            // depth × the recent mean job wall time (see
+            // `ServiceMetrics::retry_after_s`), so clients back off harder
+            // on a deep queue of slow jobs than a deep queue of quick ones.
             Response::error(429, format!("queue full: {depth} of {max} slots taken"))
-                .with_header("Retry-After", "1")
+                .with_header("Retry-After", state.metrics.retry_after_s(depth).to_string())
         }
         Err(e) => Response::error(503, e.to_string()),
     }

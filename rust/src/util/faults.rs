@@ -16,7 +16,7 @@
 //! ```text
 //! spec      := <seed> ':' directive (',' directive)*
 //! directive := site '@' target ['x' count] ['%' prob]
-//! site      := read-err | crc | stall | torn | panic | panic-cell
+//! site      := read-err | crc | stall | torn | panic | panic-cell | kill | hang
 //! target    := non-negative integer | '*'          (any target)
 //! count     := max firings of this directive        (default 1)
 //! prob      := firing probability in (0, 1], drawn from a per-directive
@@ -31,6 +31,18 @@
 //! | `torn`       | manifest-save ordinal (0-based) | `CheckpointManifest::save` writes half the payload to the temp file and fails (rename never happens) |
 //! | `panic`      | original group index | the pipeline slot panics at the start of the group's sweep |
 //! | `panic-cell` | output cell index   | a gridding sweep worker panics while processing that cell |
+//! | `kill`       | shard index         | the chosen shard-worker *process* SIGKILLs itself after its first finished group (supervised runs) |
+//! | `hang`       | shard index         | the chosen shard-worker process SIGSTOPs itself (heartbeats cease; the supervisor's liveness timeout must reap it) |
+//!
+//! The process-level sites (`kill`, `hang`) count differently from the
+//! in-process ones: each worker re-installs the plan on exec, so a
+//! decrement-on-fire count would reset with every restart and kill the
+//! shard forever. Instead the directive's `count` is compared against the
+//! worker's restart *attempt* (passed on its command line): `kill@1x2`
+//! kills shard 1's worker on attempts 0 and 1, and attempt 2 runs clean —
+//! exactly `count` kills per run, no shared mutable state across
+//! processes. A count at or above `shard_max_restarts + 1` therefore
+//! drives the shard to quarantine. `%prob` is ignored for these sites.
 //!
 //! Example: `HEGRID_FAULTS=42:read-err@3x2,panic@1` — the first two reads
 //! of channel 3 fail with an I/O error (a retrying ingest recovers on the
@@ -68,6 +80,10 @@ mod imp {
         SweepPanic,
         /// Executor-worker panic inside a gridding sweep, per cell.
         CellPanic,
+        /// Shard-worker process SIGKILLs itself (supervised runs).
+        KillShard,
+        /// Shard-worker process SIGSTOPs itself (liveness-timeout path).
+        HangShard,
     }
 
     struct Directive {
@@ -117,6 +133,8 @@ mod imp {
                     "torn" => FaultSite::TornWrite,
                     "panic" => FaultSite::SweepPanic,
                     "panic-cell" => FaultSite::CellPanic,
+                    "kill" => FaultSite::KillShard,
+                    "hang" => FaultSite::HangShard,
                     other => return Err(bad(format!("unknown site '{other}'"))),
                 };
                 let (tail, prob) = match tail.split_once('%') {
@@ -300,6 +318,54 @@ mod imp {
         }
     }
 
+    impl FaultPlan {
+        /// Count of a process-level shard directive matching `(site, shard)`,
+        /// read without decrementing — the cross-process counting scheme the
+        /// module docs describe (the worker's restart attempt is the cursor,
+        /// not shared state).
+        fn shard_site_count(&self, site: FaultSite, shard: usize) -> Option<usize> {
+            self.directives
+                .iter()
+                .find(|d| d.site == site && !d.target.is_some_and(|t| t != shard))
+                .map(|d| d.remaining.load(Ordering::Relaxed))
+        }
+    }
+
+    /// `kill` / `hang` site: called by the shard worker after every finished
+    /// channel group. `attempt` is the worker's restart ordinal (0 = first
+    /// launch), `groups_done` the groups committed to its checkpoint so far.
+    /// A matching `kill` directive with `attempt < count` SIGKILLs the
+    /// process; a matching `hang` directive SIGSTOPs it (freezing the
+    /// heartbeat thread with it, so only the supervisor's liveness timeout
+    /// can reap the worker). Firing waits for `groups_done >= 1` so a
+    /// restart always has checkpointed progress to resume from.
+    pub fn shard_fault_tick(shard: usize, attempt: usize, groups_done: usize) {
+        let Some(plan) = active() else { return };
+        if groups_done == 0 {
+            return;
+        }
+        #[cfg(unix)]
+        {
+            extern "C" {
+                fn raise(sig: i32) -> i32;
+            }
+            const SIGKILL: i32 = 9;
+            const SIGSTOP: i32 = 19;
+            if plan.shard_site_count(FaultSite::KillShard, shard).is_some_and(|c| attempt < c) {
+                plan.injected.fetch_add(1, Ordering::Relaxed);
+                unsafe { raise(SIGKILL) };
+            }
+            if plan.shard_site_count(FaultSite::HangShard, shard).is_some_and(|c| attempt < c) {
+                plan.injected.fetch_add(1, Ordering::Relaxed);
+                unsafe { raise(SIGSTOP) };
+            }
+        }
+        #[cfg(not(unix))]
+        {
+            let _ = plan;
+        }
+    }
+
     #[cfg(test)]
     mod tests {
         use super::*;
@@ -347,6 +413,29 @@ mod imp {
                 assert!(FaultPlan::parse(bad).is_err(), "spec '{bad}' should fail");
             }
             assert!(FaultPlan::parse("7:read-err@1x3%0.5,torn@0").is_ok());
+        }
+
+        #[test]
+        fn shard_sites_parse_and_count_without_decrement() {
+            let p = FaultPlan::parse("7:kill@1x2,hang@0").unwrap();
+            // Reading the count must not consume it (attempt-based firing).
+            assert_eq!(p.shard_site_count(FaultSite::KillShard, 1), Some(2));
+            assert_eq!(p.shard_site_count(FaultSite::KillShard, 1), Some(2));
+            assert_eq!(p.shard_site_count(FaultSite::KillShard, 0), None);
+            assert_eq!(p.shard_site_count(FaultSite::HangShard, 0), Some(1));
+            let p = FaultPlan::parse("7:kill@*x3").unwrap();
+            assert_eq!(p.shard_site_count(FaultSite::KillShard, 9), Some(3));
+            // A tick on a shard no directive targets is a no-op.
+            install(Some(FaultPlan::parse("7:kill@1x2").unwrap()));
+            shard_fault_tick(0, 0, 5);
+            assert_eq!(injected_total(), 0);
+            // groups_done == 0 never fires, even on a matching shard.
+            shard_fault_tick(1, 5, 0);
+            assert_eq!(injected_total(), 0);
+            // attempt >= count runs clean.
+            shard_fault_tick(1, 2, 5);
+            assert_eq!(injected_total(), 0);
+            install(None);
         }
 
         #[test]
@@ -401,6 +490,9 @@ mod stub {
 
     #[inline(always)]
     pub fn sweep_panic_cell(_cell: usize) {}
+
+    #[inline(always)]
+    pub fn shard_fault_tick(_shard: usize, _attempt: usize, _groups_done: usize) {}
 }
 
 #[cfg(not(feature = "fault-injection"))]

@@ -1,0 +1,251 @@
+//! Supervised multi-process gridding, end to end against the real binary:
+//! the supervisor re-execs `hegrid shard-worker` children, so these tests
+//! spawn the actual `hegrid` executable (`CARGO_BIN_EXE_hegrid`) rather
+//! than calling the library — process death, pipe teardown, and re-exec
+//! semantics are exactly what is under test.
+//!
+//! Matrix:
+//! * merge determinism — every (shard count × tile height) produces a
+//!   `cube.bin` byte-identical to a single-process run;
+//! * a torn per-shard manifest is rejected on resume and the shard is
+//!   re-gridded from scratch, converging to the same bytes;
+//! * (with `--features fault-injection`) a seeded `kill@shard` /
+//!   `hang@shard` mid-run is restarted and still converges bit-identically,
+//!   and a shard whose restart budget is exhausted is quarantined in
+//!   degrade mode / aborts the run under fail-fast.
+//!
+//! Fault directives are passed per-run via `--faults`, so concurrent tests
+//! never share injection state (each child process installs its own plan).
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+use hegrid::data::checkpoint::{CUBE_FILE, MANIFEST_FILE};
+use hegrid::runtime::supervisor::shard_dir;
+use hegrid::sim::SimConfig;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("hegrid_shard_it").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Seed for the fault specs; the CI matrix sweeps it (kill/hang firing is
+/// count-based, so the seed only varies the spec plumbing).
+#[cfg(feature = "fault-injection")]
+fn seed() -> u64 {
+    std::env::var("HEGRID_FAULT_SEED").ok().and_then(|v| v.parse().ok()).unwrap_or(7)
+}
+
+fn save_quick_dataset(dir: &Path) -> PathBuf {
+    let d = SimConfig::quick_preset().with_channels(10).generate();
+    let path = dir.join("input.hgd");
+    d.save(&path).unwrap();
+    path
+}
+
+/// Run the real binary with `grid --input <hgd> --checkpoint <ckpt>` plus
+/// extra args. Small fixed engine shape so several channel groups exist
+/// (the shard fault sites only fire once a group is checkpointed).
+fn run_grid(hgd: &Path, ckpt: &Path, extra: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_hegrid"))
+        .arg("grid")
+        .args(["--input", &hgd.display().to_string()])
+        .args(["--checkpoint", &ckpt.display().to_string()])
+        .args(["--streams", "2", "--pipelines", "2", "--channels-per-dispatch", "4"])
+        .args(extra)
+        .env_remove("HEGRID_FAULTS")
+        .output()
+        .expect("spawning the hegrid binary")
+}
+
+fn assert_ok(out: &Output, what: &str) {
+    assert!(
+        out.status.success(),
+        "{what} failed ({}):\nstdout:\n{}\nstderr:\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+fn cube_bytes(ckpt: &Path) -> Vec<u8> {
+    std::fs::read(ckpt.join(CUBE_FILE)).expect("merged cube exists")
+}
+
+fn assert_same_cube(reference: &[u8], ckpt: &Path, what: &str) {
+    let got = cube_bytes(ckpt);
+    assert_eq!(reference.len(), got.len(), "{what}: cube size");
+    assert!(reference == got.as_slice(), "{what}: merged cube differs from single-process");
+}
+
+/// The single-process tiled reference cube for this dataset + engine shape.
+fn reference_cube(dir: &Path, hgd: &Path) -> Vec<u8> {
+    let ref_ckpt = dir.join("reference");
+    let out = run_grid(hgd, &ref_ckpt, &[]);
+    assert_ok(&out, "single-process reference run");
+    cube_bytes(&ref_ckpt)
+}
+
+/// Merge determinism: every (shard count × tile height) combination is
+/// byte-identical to the single-process run, including 1 shard (pure
+/// pass-through) and tile bands that do not divide the shard row ranges.
+#[test]
+fn supervised_cube_matches_single_process_across_shards_and_tiles() {
+    let dir = tmp_dir("matrix");
+    let hgd = save_quick_dataset(&dir);
+    let reference = reference_cube(&dir, &hgd);
+    for shards in [1usize, 2, 4] {
+        for tile_rows in [0usize, 3] {
+            let ckpt = dir.join(format!("sup-{shards}-{tile_rows}"));
+            let out = run_grid(
+                &hgd,
+                &ckpt,
+                &[
+                    "--shard-procs",
+                    &shards.to_string(),
+                    "--tile-rows",
+                    &tile_rows.to_string(),
+                ],
+            );
+            assert_ok(&out, &format!("supervised {shards} shards, tile_rows {tile_rows}"));
+            let stdout = String::from_utf8_lossy(&out.stdout);
+            assert!(
+                stdout.contains(&format!("supervised: shard_procs={shards}")),
+                "supervised summary missing:\n{stdout}"
+            );
+            assert_same_cube(&reference, &ckpt, &format!("{shards}x{tile_rows}"));
+        }
+    }
+}
+
+/// A shard checkpoint torn mid-write (truncated manifest — what a SIGKILL
+/// during save leaves behind after the temp file landed partially) must
+/// not poison the next run: the worker discards it, re-grids the shard,
+/// and the merged cube still matches the reference.
+#[test]
+fn torn_shard_manifest_is_discarded_and_regridded() {
+    let dir = tmp_dir("torn");
+    let hgd = save_quick_dataset(&dir);
+    let reference = reference_cube(&dir, &hgd);
+    let ckpt = dir.join("sup");
+    let out = run_grid(&hgd, &ckpt, &["--shard-procs", "2"]);
+    assert_ok(&out, "first supervised run");
+    assert_same_cube(&reference, &ckpt, "first run");
+
+    // Tear shard 0's manifest: keep half the bytes, drop the rest.
+    let manifest = shard_dir(&ckpt, 0).join(MANIFEST_FILE);
+    let bytes = std::fs::read(&manifest).unwrap();
+    assert!(!bytes.is_empty());
+    std::fs::write(&manifest, &bytes[..bytes.len() / 2]).unwrap();
+
+    let out = run_grid(&hgd, &ckpt, &["--shard-procs", "2"]);
+    assert_ok(&out, "re-run over the torn checkpoint");
+    assert_same_cube(&reference, &ckpt, "after torn-manifest re-grid");
+    // The discarded checkpoint was rebuilt, not skipped: the manifest is
+    // valid JSON again.
+    hegrid::data::CheckpointManifest::load(&shard_dir(&ckpt, 0)).unwrap();
+}
+
+/// Re-running a finished supervised checkpoint resumes every shard (all
+/// groups recorded done), re-merges, and leaves the bytes unchanged.
+#[test]
+fn completed_checkpoint_resumes_to_identical_bytes() {
+    let dir = tmp_dir("resume");
+    let hgd = save_quick_dataset(&dir);
+    let ckpt = dir.join("sup");
+    let out = run_grid(&hgd, &ckpt, &["--shard-procs", "2"]);
+    assert_ok(&out, "first supervised run");
+    let first = cube_bytes(&ckpt);
+    let out = run_grid(&hgd, &ckpt, &["--shard-procs", "2"]);
+    assert_ok(&out, "resumed supervised run");
+    assert!(first == cube_bytes(&ckpt), "resume changed the merged cube");
+}
+
+/// A worker SIGKILLed mid-run (seeded `kill@shard`) is restarted, resumes
+/// its own shard checkpoint, and the merged cube is still byte-identical
+/// — the tentpole's crash-tolerance acceptance gate.
+#[cfg(feature = "fault-injection")]
+#[test]
+fn killed_worker_restarts_and_converges_bit_identically() {
+    let dir = tmp_dir("kill");
+    let hgd = save_quick_dataset(&dir);
+    let reference = reference_cube(&dir, &hgd);
+    let ckpt = dir.join("sup");
+    let out = run_grid(
+        &hgd,
+        &ckpt,
+        &[
+            "--shard-procs",
+            "2",
+            "--shard-backoff-ms",
+            "0",
+            "--faults",
+            &format!("{}:kill@0x1", seed()),
+        ],
+    );
+    assert_ok(&out, "supervised run with kill@0");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("worker_restarts=1"), "expected one restart:\n{stdout}");
+    assert_same_cube(&reference, &ckpt, "after kill + restart");
+}
+
+/// A hung worker (SIGSTOP freezes its heartbeat ticker) is reaped by the
+/// liveness timeout, restarted, and the run converges bit-identically.
+#[cfg(feature = "fault-injection")]
+#[test]
+fn hung_worker_is_reaped_by_liveness_timeout_and_restarted() {
+    let dir = tmp_dir("hang");
+    let hgd = save_quick_dataset(&dir);
+    let reference = reference_cube(&dir, &hgd);
+    let ckpt = dir.join("sup");
+    let out = run_grid(
+        &hgd,
+        &ckpt,
+        &[
+            "--shard-procs",
+            "2",
+            "--shard-backoff-ms",
+            "0",
+            "--shard-heartbeat-timeout",
+            "1",
+            "--faults",
+            &format!("{}:hang@0x1", seed()),
+        ],
+    );
+    assert_ok(&out, "supervised run with hang@0");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("worker_restarts=1"), "expected one restart:\n{stdout}");
+    assert_same_cube(&reference, &ckpt, "after hang + reap + restart");
+}
+
+/// A shard killed on every attempt exhausts `shard_max_restarts`: degrade
+/// mode quarantines it (run succeeds, DEGRADED accounting names the
+/// shard, its rows are zeroed); fail-fast aborts the whole run instead.
+#[cfg(feature = "fault-injection")]
+#[test]
+fn exhausted_restarts_quarantine_in_degrade_mode_and_abort_under_fail_fast() {
+    let dir = tmp_dir("exhaust");
+    let hgd = save_quick_dataset(&dir);
+    let reference = reference_cube(&dir, &hgd);
+    // Kill shard 0 on more attempts than the restart budget allows.
+    let faults = format!("{}:kill@0x9", seed());
+    let budget = ["--shard-procs", "2", "--shard-max-restarts", "1", "--shard-backoff-ms", "0"];
+
+    let ckpt = dir.join("degrade");
+    let out = run_grid(&hgd, &ckpt, &[&budget[..], &["--degrade", "--faults", &faults]].concat());
+    assert_ok(&out, "degrade-mode run with exhausted restarts");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("DEGRADED"), "expected DEGRADED summary:\n{stdout}");
+    assert!(stdout.contains("shard 0"), "expected shard 0 named as the cause:\n{stdout}");
+    let merged = cube_bytes(&ckpt);
+    assert_eq!(merged.len(), reference.len(), "quarantined merge keeps full geometry");
+    assert!(merged != reference, "shard 0's zeroed rows must differ from the reference");
+
+    let ckpt = dir.join("failfast");
+    let out = run_grid(&hgd, &ckpt, &[&budget[..], &["--faults", &faults]].concat());
+    assert!(!out.status.success(), "fail-fast must abort the run");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("fail-fast"), "abort names fail-fast:\n{stderr}");
+}
