@@ -36,7 +36,7 @@ use hegrid::grid::prep::SharedComponent;
 use hegrid::grid::simd::{available_backends, dispatch, AlignedF32, Scalar, SimdBackend, SimdIsa};
 use hegrid::healpix::{ang_dist, PixRange};
 use hegrid::json::Json;
-use hegrid::sim::SimConfig;
+use hegrid::sim::{SimConfig, UvSimConfig};
 use hegrid::sky::{GridSpec, SkyMap};
 use hegrid::util::threads::{default_parallelism, parallel_items, DisjointWriter};
 use hegrid::util::SplitMix64;
@@ -351,6 +351,44 @@ fn main() {
         ti_rep.tile_merge_s,
     );
 
+    // ---- uv-plane gridder leg (additive `uv` object) ---------------------
+    // Same discipline as the sky-plane legs: the optimized gather path is
+    // checked bit-for-bit against the direct-sum oracle on a small case
+    // before the timed run is trusted.
+    let uv_sim = if fast { UvSimConfig::quick_preset() } else { UvSimConfig::default() };
+    let uv_ds = uv_sim.generate();
+    let uv_gridder = hegrid::config::UvConfig::default().build_gridder().expect("uv gridder");
+    {
+        let check_ds = UvSimConfig::quick_preset().generate();
+        let got = uv_gridder.grid(&check_ds).expect("uv optimized");
+        let want = uv_gridder.grid_oracle(&check_ds).expect("uv oracle");
+        for (pa, pb) in got.planes.iter().zip(&want.planes) {
+            for (a, b) in pa
+                .re
+                .iter()
+                .chain(&pa.im)
+                .chain(&pa.wsum)
+                .zip(pb.re.iter().chain(&pb.im).chain(&pb.wsum))
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "uv path diverged from oracle bitwise");
+            }
+        }
+    }
+    let uv_t = Instant::now();
+    let uv_res = uv_gridder.grid(&uv_ds).expect("uv timed run");
+    let uv_wall_s = uv_t.elapsed().as_secs_f64();
+    let uv_cells = uv_gridder.spec().n_cells() * uv_ds.n_channels();
+    let uv_vis = uv_ds.n_samples() * uv_ds.n_channels();
+    assert!(uv_res.clipped.iter().all(|&c| c == 0), "uv bench preset must not clip");
+    eprintln!(
+        "uv gridding: {} vis × {} ch on {}×{} in {uv_wall_s:.3}s ({:.3e} cells/s)",
+        uv_ds.n_samples(),
+        uv_ds.n_channels(),
+        uv_gridder.spec().n_u,
+        uv_gridder.spec().n_v,
+        uv_cells as f64 / uv_wall_s,
+    );
+
     let speedup_1t = speedup(reference_1t_s, blocked_1t_s);
     let speedup_nt = speedup(reference_nt_s, blocked_nt_s);
     println!(
@@ -439,6 +477,28 @@ fn main() {
                 ("merge_s", Json::num(ti_rep.tile_merge_s)),
                 ("wall_s", Json::num(ti_wall_s)),
                 ("untiled_wall_s", Json::num(ut_wall_s)),
+            ]),
+        ),
+        // End-to-end survey rate through the tiled output path (the
+        // promoted `examples/fast_survey.rs` headline number) — additive
+        // object, tracked by the regression gate at `survey.cells_per_s`.
+        (
+            "survey",
+            Json::obj(vec![
+                ("cells_per_s", Json::num((n_cells * n_ch) as f64 / ti_wall_s)),
+                ("wall_s", Json::num(ti_wall_s)),
+            ]),
+        ),
+        // uv-plane gridder leg — additive object, tracked by the gate at
+        // `uv.cells_per_s` (oracle bit-identity asserted above).
+        (
+            "uv",
+            Json::obj(vec![
+                ("cells_per_s", Json::num(uv_cells as f64 / uv_wall_s)),
+                ("vis_per_s", Json::num(uv_vis as f64 / uv_wall_s)),
+                ("n_samples", Json::num(uv_ds.n_samples() as f64)),
+                ("n_channels", Json::num(uv_ds.n_channels() as f64)),
+                ("wall_s", Json::num(uv_wall_s)),
             ]),
         ),
         // Fault-injection accounting — all zero in a normal run. Nonzero

@@ -54,6 +54,11 @@ const THROUGHPUT_METRICS: &[&str] =
 /// Stage times reported informationally (lower is better, never fatal).
 const STAGE_METRICS: &[&str] = &["prep_s", "grid_1t_s", "grid_nt_s"];
 
+/// Nested throughput metrics gated like `throughput.*` (higher is better).
+/// Additive: payloads recorded before a leg existed simply skip its rows.
+const NESTED_THROUGHPUT_METRICS: &[&[&str]] =
+    &[&["survey", "cells_per_s"], &["uv", "cells_per_s"], &["uv", "vis_per_s"]];
+
 /// Workload-identity fields; a mismatch makes the runs incomparable.
 const IDENTITY_FIELDS: &[&str] = &["n_samples", "n_channels"];
 
@@ -183,6 +188,24 @@ pub fn compare(baseline: &Json, current: &Json, threshold: f64) -> GateReport {
             let change = (c - b) / b; // negative = slower
             report.findings.push(GateFinding {
                 metric: format!("throughput.{metric}"),
+                baseline: b,
+                current: c,
+                change,
+                regressed: change < -threshold,
+            });
+        }
+    }
+
+    for path in NESTED_THROUGHPUT_METRICS {
+        let b = num_at(baseline, path);
+        let c = num_at(current, path);
+        if let (Some(b), Some(c)) = (b, c) {
+            if b <= 0.0 || !b.is_finite() || !c.is_finite() {
+                continue;
+            }
+            let change = (c - b) / b; // negative = slower
+            report.findings.push(GateFinding {
+                metric: path.join("."),
                 baseline: b,
                 current: c,
                 change,
@@ -363,6 +386,47 @@ mod tests {
         assert!(r.incomparable.is_none(), "{:?}", r.incomparable);
         assert!(!r.failed(), "{:?}", r.findings);
         assert_eq!(r.findings.len(), 3, "same metric set as without the new fields");
+    }
+
+    #[test]
+    fn additive_survey_and_uv_rows_stay_comparable_and_gate_once_present() {
+        // PR 10 benches add the `survey` and `uv` objects. A baseline
+        // recorded before they existed lacks both; the comparison must
+        // neither fail nor go incomparable, and the finding set is
+        // unchanged — the rows are additive per ROADMAP's baseline rule.
+        let add_rows = |mut p: Json, survey_cps: f64, uv_cps: f64, uv_vps: f64| {
+            if let Json::Obj(fields) = &mut p {
+                fields.insert(
+                    "survey".into(),
+                    Json::obj(vec![("cells_per_s", Json::num(survey_cps))]),
+                );
+                fields.insert(
+                    "uv".into(),
+                    Json::obj(vec![
+                        ("cells_per_s", Json::num(uv_cps)),
+                        ("vis_per_s", Json::num(uv_vps)),
+                    ]),
+                );
+            }
+            p
+        };
+        let base = payload(1.0e6, 2.5e5, 0.8);
+        let cur = add_rows(payload(0.95e6, 2.4e5, 0.85), 3.0e6, 8.0e5, 1.0e4);
+        let r = compare(&base, &cur, DEFAULT_THRESHOLD);
+        assert!(r.incomparable.is_none(), "{:?}", r.incomparable);
+        assert!(!r.failed(), "{:?}", r.findings);
+        assert_eq!(r.findings.len(), 3, "same metric set as without the new rows");
+
+        // Once both sides carry the rows they gate like `throughput.*`:
+        // a 50% uv drop fails, and the metric name is the dotted path.
+        let base = add_rows(payload(1.0e6, 2.5e5, 0.8), 3.0e6, 8.0e5, 1.0e4);
+        let cur = add_rows(payload(1.0e6, 2.5e5, 0.8), 3.0e6, 4.0e5, 1.0e4);
+        let r = compare(&base, &cur, DEFAULT_THRESHOLD);
+        assert!(r.failed());
+        let bad: Vec<_> = r.findings.iter().filter(|f| f.regressed).collect();
+        assert_eq!(bad.len(), 1);
+        assert_eq!(bad[0].metric, "uv.cells_per_s");
+        assert!(r.findings.iter().any(|f| f.metric == "survey.cells_per_s" && !f.regressed));
     }
 
     #[test]

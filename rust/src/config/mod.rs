@@ -72,6 +72,133 @@ impl DeviceProfile {
     }
 }
 
+/// Interferometric uv-plane gridding block (`hegrid uv-grid`; the
+/// `uv_grid` object in config JSON). Geometry and kernel of the
+/// [`crate::grid::uv::UvGridder`] — see docs/uv-gridding.md.
+#[derive(Clone, Debug, PartialEq)]
+pub struct UvConfig {
+    /// Grid width in cells (u axis, the fast axis).
+    pub n_u: usize,
+    /// Grid height in cells (v axis).
+    pub n_v: usize,
+    /// Cell size in wavelengths per pixel.
+    pub cell_wavelengths: f64,
+    /// Separable kernel family: gaussian | spheroidal.
+    pub kernel_type: String,
+    /// Kernel support radius in cells (table ends there).
+    pub kernel_support: usize,
+    /// Lookup-table samples per cell distance.
+    pub kernel_oversample: usize,
+    /// Gaussian σ in cells (ignored by the spheroidal family).
+    pub kernel_sigma_cells: f64,
+    /// Row-band height of the tiled uv sweep; 0 = whole grid in one band.
+    /// Bit-identical for every value.
+    pub tile_rows: usize,
+    /// Also deposit each sample's complex conjugate at (−u, −v).
+    pub hermitian: bool,
+}
+
+impl Default for UvConfig {
+    fn default() -> Self {
+        UvConfig {
+            n_u: 256,
+            n_v: 256,
+            cell_wavelengths: 50.0,
+            kernel_type: "spheroidal".into(),
+            kernel_support: 3,
+            kernel_oversample: 128,
+            kernel_sigma_cells: 1.0,
+            tile_rows: 0,
+            hermitian: true,
+        }
+    }
+}
+
+impl UvConfig {
+    pub fn validate(&self) -> Result<()> {
+        // Kernel-family, support, oversample, and σ ranges are enforced by
+        // the kernel constructor; grid shape by the spec. Building both
+        // here keeps one source of truth for the bounds.
+        crate::grid::uv::UvGridSpec::new(self.n_u, self.n_v, self.cell_wavelengths).validate()?;
+        let kind = crate::grid::uv::UvKernelType::from_name(&self.kernel_type)?;
+        crate::grid::uv::UvKernel::new(
+            kind,
+            self.kernel_support,
+            self.kernel_oversample,
+            self.kernel_sigma_cells,
+        )?;
+        Ok(())
+    }
+
+    /// Build the configured gridder (kernel table included). `validate()`
+    /// in constructor form.
+    pub fn build_gridder(&self) -> Result<crate::grid::uv::UvGridder> {
+        let spec = crate::grid::uv::UvGridSpec::new(self.n_u, self.n_v, self.cell_wavelengths);
+        spec.validate()?;
+        let kind = crate::grid::uv::UvKernelType::from_name(&self.kernel_type)?;
+        let kernel = crate::grid::uv::UvKernel::new(
+            kind,
+            self.kernel_support,
+            self.kernel_oversample,
+            self.kernel_sigma_cells,
+        )?;
+        Ok(crate::grid::uv::UvGridder::new(spec, kernel)
+            .with_tile_rows(self.tile_rows)
+            .with_hermitian(self.hermitian))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n_u", Json::num(self.n_u as f64)),
+            ("n_v", Json::num(self.n_v as f64)),
+            ("cell_wavelengths", Json::num(self.cell_wavelengths)),
+            ("kernel_type", Json::str(self.kernel_type.clone())),
+            ("kernel_support", Json::num(self.kernel_support as f64)),
+            ("kernel_oversample", Json::num(self.kernel_oversample as f64)),
+            ("kernel_sigma_cells", Json::num(self.kernel_sigma_cells)),
+            ("tile_rows", Json::num(self.tile_rows as f64)),
+            ("hermitian", Json::Bool(self.hermitian)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let d = UvConfig::default();
+        let get_usize = |k: &str, dv: usize| -> Result<usize> {
+            match v.get(k) {
+                Some(x) => x.as_usize().ok_or_else(|| {
+                    HegridError::Config(format!(
+                        "uv_grid field '{k}' must be a non-negative integer"
+                    ))
+                }),
+                None => Ok(dv),
+            }
+        };
+        let get_f64 = |k: &str, dv: f64| -> Result<f64> {
+            match v.get(k) {
+                Some(x) => x.as_f64().ok_or_else(|| {
+                    HegridError::Config(format!("uv_grid field '{k}' must be a number"))
+                }),
+                None => Ok(dv),
+            }
+        };
+        Ok(UvConfig {
+            n_u: get_usize("n_u", d.n_u)?,
+            n_v: get_usize("n_v", d.n_v)?,
+            cell_wavelengths: get_f64("cell_wavelengths", d.cell_wavelengths)?,
+            kernel_type: v
+                .get("kernel_type")
+                .and_then(|x| x.as_str())
+                .unwrap_or(&d.kernel_type)
+                .to_string(),
+            kernel_support: get_usize("kernel_support", d.kernel_support)?,
+            kernel_oversample: get_usize("kernel_oversample", d.kernel_oversample)?,
+            kernel_sigma_cells: get_f64("kernel_sigma_cells", d.kernel_sigma_cells)?,
+            tile_rows: get_usize("tile_rows", d.tile_rows)?,
+            hermitian: v.get("hermitian").and_then(|x| x.as_bool()).unwrap_or(d.hermitian),
+        })
+    }
+}
+
 /// Engine configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct HegridConfig {
@@ -204,6 +331,8 @@ pub struct HegridConfig {
     pub support_sigma: f64,
     /// Target map oversampling (cells per beam FWHM).
     pub oversample: f64,
+    /// Interferometric uv-plane gridding block (`hegrid uv-grid`).
+    pub uv_grid: UvConfig,
     /// Device profile (Table 4).
     pub profile: DeviceProfile,
 }
@@ -245,6 +374,7 @@ impl Default for HegridConfig {
             kernel_sigma_beam: 0.5,
             support_sigma: 3.0,
             oversample: 2.0,
+            uv_grid: UvConfig::default(),
             profile: DeviceProfile::ServerV,
         }
     }
@@ -428,6 +558,7 @@ impl HegridConfig {
         {
             return Err(HegridError::Config("kernel/oversample parameters must be positive".into()));
         }
+        self.uv_grid.validate()?;
         Ok(())
     }
 
@@ -467,6 +598,7 @@ impl HegridConfig {
             ("kernel_sigma_beam", Json::num(self.kernel_sigma_beam)),
             ("support_sigma", Json::num(self.support_sigma)),
             ("oversample", Json::num(self.oversample)),
+            ("uv_grid", self.uv_grid.to_json()),
             ("profile", Json::str(self.profile.name())),
         ])
     }
@@ -560,6 +692,10 @@ impl HegridConfig {
             kernel_sigma_beam: get_f64("kernel_sigma_beam", d.kernel_sigma_beam)?,
             support_sigma: get_f64("support_sigma", d.support_sigma)?,
             oversample: get_f64("oversample", d.oversample)?,
+            uv_grid: match v.get("uv_grid") {
+                Some(x) => UvConfig::from_json(x)?,
+                None => d.uv_grid,
+            },
             profile: match v.get("profile").and_then(|x| x.as_str()) {
                 Some(s) => DeviceProfile::from_name(s)?,
                 None => d.profile,
@@ -622,6 +758,52 @@ mod tests {
     }
 
     #[test]
+    fn uv_grid_defaults_and_validation() {
+        let c = UvConfig::default();
+        c.validate().unwrap();
+        assert_eq!((c.n_u, c.n_v), (256, 256));
+        assert_eq!(c.kernel_type, "spheroidal");
+        assert_eq!((c.kernel_support, c.kernel_oversample), (3, 128));
+        assert_eq!(c.tile_rows, 0, "untiled uv sweep by default");
+        assert!(c.hermitian);
+        let g = c.build_gridder().unwrap();
+        assert_eq!(g.spec().n_u, 256);
+        assert_eq!(g.kernel().support(), 3);
+        let mut c = UvConfig::default();
+        c.kernel_type = "boxcar".into();
+        assert!(c.validate().is_err());
+        let mut c = UvConfig::default();
+        c.n_u = 0;
+        assert!(c.validate().is_err());
+        let mut c = UvConfig::default();
+        c.kernel_type = "gaussian".into();
+        c.kernel_sigma_cells = 0.0;
+        assert!(c.validate().is_err());
+        // σ only matters for the gaussian family.
+        let mut c = UvConfig::default();
+        c.kernel_sigma_cells = 0.0;
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn uv_grid_json_nests_and_rejects() {
+        // The uv_grid block round-trips nested, partial blocks take the
+        // block defaults, and bad nested values fail the whole config.
+        let v = crate::json::parse(r#"{"uv_grid": {"n_u": 64, "kernel_type": "gaussian"}}"#)
+            .unwrap();
+        let c = HegridConfig::from_json(&v).unwrap();
+        assert_eq!(c.uv_grid.n_u, 64);
+        assert_eq!(c.uv_grid.n_v, 256, "unset nested fields keep defaults");
+        assert_eq!(c.uv_grid.kernel_type, "gaussian");
+        let v = crate::json::parse(r#"{"uv_grid": {"kernel_type": "boxcar"}}"#).unwrap();
+        assert!(HegridConfig::from_json(&v).is_err());
+        let v = crate::json::parse(r#"{"uv_grid": {"cell_wavelengths": 0}}"#).unwrap();
+        assert!(HegridConfig::from_json(&v).is_err());
+        let v = crate::json::parse(r#"{"uv_grid": {"n_u": -3}}"#).unwrap();
+        assert!(HegridConfig::from_json(&v).is_err());
+    }
+
+    #[test]
     fn json_round_trip() {
         let mut c = HegridConfig::default();
         c.streams = 4;
@@ -649,6 +831,11 @@ mod tests {
         c.shard_max_restarts = 4;
         c.shard_heartbeat_timeout_s = 12;
         c.shard_restart_backoff_ms = 50;
+        c.uv_grid.n_u = 128;
+        c.uv_grid.kernel_type = "gaussian".into();
+        c.uv_grid.kernel_sigma_cells = 0.8;
+        c.uv_grid.tile_rows = 16;
+        c.uv_grid.hermitian = false;
         // A non-empty fault spec only validates on instrumented builds.
         #[cfg(feature = "fault-injection")]
         {

@@ -595,6 +595,19 @@ impl HegridEngine {
         self.grid(dataset, &job)
     }
 
+    /// Grid an interferometric visibility set onto the configured uv grid
+    /// (the `uv_grid` config block), inheriting the engine's SIMD request.
+    /// The sweep runs on the same process-global executor as the sky-plane
+    /// pipelines; results are bit-identical across worker counts, forced
+    /// ISAs, and tile heights (see docs/uv-gridding.md).
+    pub fn grid_uv(
+        &self,
+        dataset: &crate::grid::uv::UvDataset,
+    ) -> Result<crate::grid::uv::UvResult> {
+        let gridder = self.config.uv_grid.build_gridder()?.with_simd(self.config.simd());
+        gridder.grid(dataset)
+    }
+
     /// Grid an in-memory `dataset` onto an explicit map/kernel.
     ///
     /// Goes through the same T0 ingest ring as streaming sources: each

@@ -9,9 +9,11 @@ pub mod occupancy;
 pub mod prep;
 pub mod simd;
 pub mod sort;
+pub mod uv;
 
 pub use cpu::CpuGridder;
 pub use kernels::{ConvKernel, ConvKernelType};
 pub use nbr::{NbrStats, NeighborTable};
 pub use prep::{PrepStats, SharedComponent, ValueMatrix};
 pub use simd::{SimdBackend, SimdIsa};
+pub use uv::{UvDataset, UvGridSpec, UvGridder, UvKernel, UvKernelType, UvPlanes, UvResult};

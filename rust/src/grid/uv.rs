@@ -1,0 +1,781 @@
+//! Interferometric uv-plane gridding: convolutional placement of
+//! per-baseline, per-channel complex visibilities onto a regular uv grid.
+//!
+//! The sky-plane pipeline grids *real* single-dish samples by sky
+//! coordinates; this module grids *complex* interferometric visibilities by
+//! baseline coordinates, the accumulate core of imaging stacks from W-
+//! stacking to IDG. Per channel, a baseline (u, v) in metres scales to
+//! wavelengths by ν/c, lands on the grid in units of
+//! [`UvGridSpec::cell_wavelengths`], and deposits its visibility through a
+//! separable 1-D convolution kernel ([`UvKernel`]) evaluated from a
+//! precomputed oversampled lookup table. With [`UvGridder::with_hermitian`]
+//! (the default), every sample additionally deposits its complex conjugate
+//! at (−u, −v) — V(−u,−v) = V*(u,v) for a real sky — so the grid is
+//! hermitian by construction.
+//!
+//! ## Bit-identity contract
+//!
+//! The optimized path is a gather: per output cell, candidate placements
+//! come from per-row lists built in ascending placement order, weights are
+//! looked up from the shared kernel table, zero-weight candidates are
+//! skipped, and the surviving `(weight, placement)` pairs feed one
+//! [`crate::grid::simd::SimdBackend::accumulate_contribs`] call over the
+//! lane-padded value rows `[re, im, 1.0, 0.0]`. The brute-force oracle
+//! ([`UvGridder::grid_oracle`]) sweeps *every* placement per cell with
+//! literally the same weight lookups, the same skip conditions, and the
+//! scalar backend's serial `+= w * v as f64` arithmetic — so the two paths
+//! see an identical contributor sequence per cell and agree **bit for
+//! bit**, for every worker count, forced ISA, and tile height. The
+//! equivalence suite (`rust/tests/uv_equivalence.rs`) and the seeded
+//! property tests (`testkit::uv`) pin this.
+//!
+//! ## Memory
+//!
+//! [`UvGridder::with_tile_rows`] bounds the per-band working set (candidate
+//! lists) by sweeping the grid in row bands of the given height, mirroring
+//! the sky-plane tiled reduce; the output planes themselves are always
+//! materialized in full. Banding never changes results — the per-cell
+//! gather is independent of band boundaries.
+
+use crate::grid::simd::{AlignedF32, SimdIsa};
+use crate::util::error::{HegridError, Result};
+use crate::util::threads::{
+    adaptive_claim_block, default_parallelism, parallel_items_scoped, DisjointWriter,
+};
+
+/// Speed of light in m/s — converts baseline metres to wavelengths.
+pub const SPEED_OF_LIGHT_M_S: f64 = 299_792_458.0;
+
+/// Lane-padded planes per placement in the value matrix: re, im, unit
+/// weight, pad. A multiple of every backend's lane width (1, 2, 4).
+const LANES: usize = 4;
+
+/// The separable kernel families of the uv gridder.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UvKernelType {
+    /// `exp(-x² / 2σ²)`, σ in cells, truncated at the support radius.
+    Gaussian,
+    /// Prolate spheroidal wave function (Schwab's m=6, α=1 rational
+    /// approximation), the anti-aliasing kernel of classic imagers; zero at
+    /// the support edge by construction.
+    Spheroidal,
+}
+
+impl UvKernelType {
+    pub fn from_name(s: &str) -> Result<UvKernelType> {
+        match s {
+            "gaussian" => Ok(UvKernelType::Gaussian),
+            "spheroidal" => Ok(UvKernelType::Spheroidal),
+            other => Err(HegridError::Config(format!(
+                "unknown uv kernel type '{other}' (expected gaussian|spheroidal)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            UvKernelType::Gaussian => "gaussian",
+            UvKernelType::Spheroidal => "spheroidal",
+        }
+    }
+}
+
+/// Schwab's rational approximation of the 0-order prolate spheroidal wave
+/// function (support m=6, α=1), as used by classic gridders. `eta` is the
+/// fractional distance |x|/support in [0, 1]; the returned value includes
+/// the (1−η²) factor that makes the *gridding* function, and is exactly 0
+/// at η ≥ 1.
+fn spheroidal(eta: f64) -> f64 {
+    const P0: [f64; 5] = [8.203343e-2, -3.644705e-1, 6.278660e-1, -5.335581e-1, 2.312756e-1];
+    const P1: [f64; 5] = [4.028559e-3, -3.697768e-2, 1.021332e-1, -1.201436e-1, 6.412774e-2];
+    const Q0: [f64; 3] = [1.0, 8.212018e-1, 2.078043e-1];
+    const Q1: [f64; 3] = [1.0, 9.599102e-1, 2.918724e-1];
+    if eta >= 1.0 {
+        return 0.0;
+    }
+    let eta2 = eta * eta;
+    let (p, q, x0) = if eta < 0.75 {
+        (&P0, &Q0, 0.5625) // 0.75²
+    } else {
+        (&P1, &Q1, 1.0)
+    };
+    let d = eta2 - x0;
+    let top = (((p[4] * d + p[3]) * d + p[2]) * d + p[1]) * d + p[0];
+    let bot = (q[2] * d + q[1]) * d + q[0];
+    (1.0 - eta2) * (top / bot)
+}
+
+/// A separable 1-D convolution kernel backed by a precomputed oversampled
+/// lookup table: `table[i] = k(i / oversample)` for `i` in
+/// `0..=support*oversample`.
+///
+/// [`UvKernel::weight_1d`] rounds the query distance to the nearest table
+/// sample (half-up, exact in float for non-negative arguments) and returns
+/// 0 past the table end — so the *table is the kernel*: the optimized path
+/// and the oracle share it, which is what makes their weights identical to
+/// the bit rather than merely close.
+#[derive(Clone, Debug)]
+pub struct UvKernel {
+    kind: UvKernelType,
+    support: usize,
+    oversample: usize,
+    table: Vec<f64>,
+}
+
+impl UvKernel {
+    /// Build the lookup table. `sigma_cells` is only meaningful for
+    /// [`UvKernelType::Gaussian`] (ignored by the spheroidal family).
+    pub fn new(
+        kind: UvKernelType,
+        support: usize,
+        oversample: usize,
+        sigma_cells: f64,
+    ) -> Result<UvKernel> {
+        if support == 0 || support > 64 {
+            return Err(HegridError::Config(format!(
+                "uv kernel support must be in 1..=64, got {support}"
+            )));
+        }
+        if oversample == 0 || oversample > 65_536 {
+            return Err(HegridError::Config(format!(
+                "uv kernel oversample must be in 1..=65536, got {oversample}"
+            )));
+        }
+        if kind == UvKernelType::Gaussian && !(sigma_cells > 0.0 && sigma_cells.is_finite()) {
+            return Err(HegridError::Config(format!(
+                "uv gaussian kernel sigma must be finite and > 0, got {sigma_cells}"
+            )));
+        }
+        let n = support * oversample + 1;
+        let mut table = Vec::with_capacity(n);
+        for i in 0..n {
+            let x = i as f64 / oversample as f64;
+            table.push(match kind {
+                UvKernelType::Gaussian => (-(x * x) / (2.0 * sigma_cells * sigma_cells)).exp(),
+                UvKernelType::Spheroidal => spheroidal(x / support as f64),
+            });
+        }
+        Ok(UvKernel { kind, support, oversample, table })
+    }
+
+    pub fn kind(&self) -> UvKernelType {
+        self.kind
+    }
+
+    pub fn support(&self) -> usize {
+        self.support
+    }
+
+    pub fn oversample(&self) -> usize {
+        self.oversample
+    }
+
+    pub fn table(&self) -> &[f64] {
+        &self.table
+    }
+
+    /// Kernel weight at signed cell distance `d`: nearest table sample, 0
+    /// past the table (|d| ≥ support + 0.5/oversample).
+    #[inline]
+    pub fn weight_1d(&self, d: f64) -> f64 {
+        let x = d.abs() * self.oversample as f64;
+        let i = (x + 0.5) as usize;
+        if i >= self.table.len() {
+            0.0
+        } else {
+            self.table[i]
+        }
+    }
+
+    /// A footprint radius (in cells) guaranteed to contain every nonzero
+    /// weight: the table ends at support + 0.5/oversample < support + 1.
+    fn radius(&self) -> f64 {
+        self.support as f64 + 1.0
+    }
+}
+
+/// Geometry of the output uv grid. The grid origin (u = v = 0) sits at
+/// pixel `(n_u/2, n_v/2)`; axis `u` is the fast (contiguous) axis.
+#[derive(Clone, Debug, PartialEq)]
+pub struct UvGridSpec {
+    pub n_u: usize,
+    pub n_v: usize,
+    /// Cell size in wavelengths per pixel.
+    pub cell_wavelengths: f64,
+}
+
+impl UvGridSpec {
+    pub fn new(n_u: usize, n_v: usize, cell_wavelengths: f64) -> UvGridSpec {
+        UvGridSpec { n_u, n_v, cell_wavelengths }
+    }
+
+    pub fn n_cells(&self) -> usize {
+        self.n_u * self.n_v
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.n_u == 0 || self.n_v == 0 {
+            return Err(HegridError::Config(format!(
+                "uv grid must be non-empty, got {}x{}",
+                self.n_u, self.n_v
+            )));
+        }
+        if !(self.cell_wavelengths > 0.0 && self.cell_wavelengths.is_finite()) {
+            return Err(HegridError::Config(format!(
+                "uv cell size must be finite and > 0, got {}",
+                self.cell_wavelengths
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// An in-memory visibility set: per-sample baseline coordinates (metres)
+/// and weights, shared across channels, plus per-channel complex
+/// visibilities indexed `[channel][sample]`.
+#[derive(Clone, Debug, Default)]
+pub struct UvDataset {
+    /// Baseline u coordinate per sample, metres.
+    pub u_m: Vec<f64>,
+    /// Baseline v coordinate per sample, metres.
+    pub v_m: Vec<f64>,
+    /// Statistical weight per sample (shared by all channels).
+    pub weights: Vec<f32>,
+    /// Channel centre frequencies, Hz.
+    pub freqs_hz: Vec<f64>,
+    /// Visibility real parts, `[n_channels][n_samples]`.
+    pub re: Vec<Vec<f32>>,
+    /// Visibility imaginary parts, `[n_channels][n_samples]`.
+    pub im: Vec<Vec<f32>>,
+}
+
+impl UvDataset {
+    pub fn n_samples(&self) -> usize {
+        self.u_m.len()
+    }
+
+    pub fn n_channels(&self) -> usize {
+        self.freqs_hz.len()
+    }
+
+    /// Shape and finiteness checks: consistent lengths, positive finite
+    /// frequencies, NaN/inf-free coordinates, weights, and visibilities.
+    pub fn validate(&self) -> Result<()> {
+        let n = self.u_m.len();
+        if self.v_m.len() != n || self.weights.len() != n {
+            return Err(HegridError::Format(format!(
+                "uv dataset sample arrays disagree: u={} v={} w={}",
+                n,
+                self.v_m.len(),
+                self.weights.len()
+            )));
+        }
+        let n_ch = self.freqs_hz.len();
+        if self.re.len() != n_ch || self.im.len() != n_ch {
+            return Err(HegridError::Format(format!(
+                "uv dataset channel arrays disagree: freqs={} re={} im={}",
+                n_ch,
+                self.re.len(),
+                self.im.len()
+            )));
+        }
+        for c in 0..n_ch {
+            if self.re[c].len() != n || self.im[c].len() != n {
+                return Err(HegridError::Format(format!(
+                    "uv dataset channel {c} visibility length mismatch: re={} im={} samples={n}",
+                    self.re[c].len(),
+                    self.im[c].len()
+                )));
+            }
+            if !(self.freqs_hz[c] > 0.0 && self.freqs_hz[c].is_finite()) {
+                return Err(HegridError::Format(format!(
+                    "uv dataset channel {c} frequency must be finite and > 0, got {}",
+                    self.freqs_hz[c]
+                )));
+            }
+            if self.re[c].iter().chain(&self.im[c]).any(|v| !v.is_finite()) {
+                return Err(HegridError::Format(format!(
+                    "uv dataset channel {c} has non-finite visibilities"
+                )));
+            }
+        }
+        if self.u_m.iter().chain(&self.v_m).any(|v| !v.is_finite()) {
+            return Err(HegridError::Format("uv dataset has non-finite baselines".into()));
+        }
+        if self.weights.iter().any(|w| !w.is_finite()) {
+            return Err(HegridError::Format("uv dataset has non-finite weights".into()));
+        }
+        Ok(())
+    }
+}
+
+/// One channel's gridded planes, each `n_v * n_u` row-major (`u` fast).
+/// The planes are **unnormalized** kernel-weighted sums; divide `re`/`im`
+/// by `wsum` (where nonzero) for weighted means.
+#[derive(Clone, Debug, PartialEq)]
+pub struct UvPlanes {
+    pub re: Vec<f64>,
+    pub im: Vec<f64>,
+    /// Kernel-weighted sum of sample weights per cell.
+    pub wsum: Vec<f64>,
+}
+
+/// Gridded planes per channel plus the exact deposit accounting the weight
+/// conservation property pins.
+#[derive(Clone, Debug, PartialEq)]
+pub struct UvResult {
+    pub planes: Vec<UvPlanes>,
+    /// Per channel: the serial, placement-order sum of the weights of every
+    /// non-clipped placement (each hermitian conjugate counts as its own
+    /// placement). Exactly reproducible by folding the input weights in the
+    /// same order — bit-equal, not approximately equal.
+    pub deposited: Vec<f64>,
+    /// Per channel: placements whose rounded centre cell fell outside the
+    /// grid, dropped whole (no partial footprints are deposited for them).
+    pub clipped: Vec<usize>,
+}
+
+/// One kernel placement: grid-frame centre, lane values, and the f64
+/// contributor weight (sample weight; kernel weights multiply in later).
+struct Placement {
+    up: f64,
+    vp: f64,
+    re: f32,
+    im: f32,
+    w: f64,
+}
+
+/// The uv gridder. Construct with a grid and a kernel, adjust with the
+/// builder methods, then call [`UvGridder::grid`] (optimized) or
+/// [`UvGridder::grid_oracle`] (brute-force direct sum, for differential
+/// testing — identical results, O(cells × placements) time).
+#[derive(Clone)]
+pub struct UvGridder {
+    spec: UvGridSpec,
+    kernel: UvKernel,
+    workers: usize,
+    simd: SimdIsa,
+    tile_rows: usize,
+    hermitian: bool,
+}
+
+impl UvGridder {
+    pub fn new(spec: UvGridSpec, kernel: UvKernel) -> UvGridder {
+        UvGridder { spec, kernel, workers: 0, simd: SimdIsa::Auto, tile_rows: 0, hermitian: true }
+    }
+
+    /// Worker threads for the per-band cell sweep; 0 = host parallelism.
+    /// Results are bit-identical for every worker count.
+    pub fn with_workers(mut self, workers: usize) -> UvGridder {
+        self.workers = workers;
+        self
+    }
+
+    /// Force a SIMD backend; unavailable ISAs degrade to scalar with a
+    /// warning (same semantics as the sky-plane gridder).
+    pub fn with_simd(mut self, isa: SimdIsa) -> UvGridder {
+        self.simd = isa;
+        self
+    }
+
+    /// Row-band height of the tiled sweep; 0 = whole grid in one band.
+    /// Bounds the per-band candidate-list working set. Bit-identical to
+    /// untiled for every value.
+    pub fn with_tile_rows(mut self, rows: usize) -> UvGridder {
+        self.tile_rows = rows;
+        self
+    }
+
+    /// Also deposit each sample's complex conjugate at (−u, −v). On by
+    /// default; disable to grid exactly the samples given.
+    pub fn with_hermitian(mut self, hermitian: bool) -> UvGridder {
+        self.hermitian = hermitian;
+        self
+    }
+
+    pub fn spec(&self) -> &UvGridSpec {
+        &self.spec
+    }
+
+    pub fn kernel(&self) -> &UvKernel {
+        &self.kernel
+    }
+
+    /// Grid every channel with the optimized gather path.
+    pub fn grid(&self, ds: &UvDataset) -> Result<UvResult> {
+        self.run(ds, false)
+    }
+
+    /// Grid every channel with the brute-force direct-sum oracle: every
+    /// placement is considered for every cell, serially, with the scalar
+    /// accumulate arithmetic. Bit-identical to [`UvGridder::grid`].
+    pub fn grid_oracle(&self, ds: &UvDataset) -> Result<UvResult> {
+        self.run(ds, true)
+    }
+
+    /// Channel `c`'s placement stream, in the canonical order both paths
+    /// share: samples ascending; per sample the direct placement, then
+    /// (with hermitian on) the conjugate at the mirrored coordinates with
+    /// negated imaginary part (f32 negation is exact). Placements whose
+    /// rounded centre cell is off-grid are clipped — counted, not
+    /// deposited. Returns (placements, deposited, clipped).
+    fn placements(&self, ds: &UvDataset, c: usize) -> (Vec<Placement>, f64, usize) {
+        // Pixel position: up = u[m]·(ν/c)/cell + n_u/2. The oracle shares
+        // this code path, so the expression is definitionally correct —
+        // the differential tests compare placements, not coordinates.
+        let scale = ds.freqs_hz[c] / SPEED_OF_LIGHT_M_S / self.spec.cell_wavelengths;
+        let cu = (self.spec.n_u / 2) as f64;
+        let cv = (self.spec.n_v / 2) as f64;
+        let per_sample = if self.hermitian { 2 } else { 1 };
+        let mut out = Vec::with_capacity(ds.n_samples() * per_sample);
+        let mut deposited = 0.0f64;
+        let mut clipped = 0usize;
+        for s in 0..ds.n_samples() {
+            let du = ds.u_m[s] * scale;
+            let dv = ds.v_m[s] * scale;
+            let w = ds.weights[s] as f64;
+            let re = ds.re[c][s];
+            let im = ds.im[c][s];
+            let cands = [(cu + du, cv + dv, im), (cu - du, cv - dv, -im)];
+            for &(up, vp, pim) in &cands[..per_sample] {
+                let iu0 = up.round();
+                let iv0 = vp.round();
+                let off_u = iu0 < 0.0 || iu0 >= self.spec.n_u as f64;
+                let off_v = iv0 < 0.0 || iv0 >= self.spec.n_v as f64;
+                if off_u || off_v {
+                    clipped += 1;
+                    continue;
+                }
+                deposited += w;
+                out.push(Placement { up, vp, re, im: pim, w });
+            }
+        }
+        (out, deposited, clipped)
+    }
+
+    fn run(&self, ds: &UvDataset, oracle: bool) -> Result<UvResult> {
+        self.spec.validate()?;
+        ds.validate()?;
+        let backend = self.simd.resolve();
+        let n_u = self.spec.n_u;
+        let n_v = self.spec.n_v;
+        let n_cells = n_u * n_v;
+        let workers = if self.workers == 0 { default_parallelism() } else { self.workers };
+        let rows_per_band = if self.tile_rows == 0 { n_v } else { self.tile_rows.min(n_v) };
+        let rad = self.kernel.radius();
+        let mut planes = Vec::with_capacity(ds.n_channels());
+        let mut deposited = Vec::with_capacity(ds.n_channels());
+        let mut clipped = Vec::with_capacity(ds.n_channels());
+        for c in 0..ds.n_channels() {
+            let (pls, dep, clip) = self.placements(ds, c);
+            deposited.push(dep);
+            clipped.push(clip);
+            // Lane-padded value rows [re, im, 1.0, 0.0]. The sample weight
+            // rides in the f64 contributor weight, not here — an f32
+            // product would round before the accumulate.
+            let mut vals = AlignedF32::zeroed(pls.len() * LANES);
+            for (p, pl) in pls.iter().enumerate() {
+                vals[p * LANES] = pl.re;
+                vals[p * LANES + 1] = pl.im;
+                vals[p * LANES + 2] = 1.0;
+            }
+            let mut pre = vec![0.0f64; n_cells];
+            let mut pim = vec![0.0f64; n_cells];
+            let mut pws = vec![0.0f64; n_cells];
+            if oracle {
+                for iv in 0..n_v {
+                    for iu in 0..n_u {
+                        let mut acc = [0.0f64; LANES];
+                        for pl in &pls {
+                            let wv = self.kernel.weight_1d(pl.vp - iv as f64);
+                            if wv == 0.0 {
+                                continue;
+                            }
+                            let wu = self.kernel.weight_1d(pl.up - iu as f64);
+                            if wu == 0.0 {
+                                continue;
+                            }
+                            let kw = (wu * wv) * pl.w;
+                            // Lane-for-lane the scalar backend's
+                            // `+= w * v as f64`, placements ascending.
+                            acc[0] += kw * pl.re as f64;
+                            acc[1] += kw * pl.im as f64;
+                            acc[2] += kw * 1.0f32 as f64;
+                        }
+                        let g = iv * n_u + iu;
+                        pre[g] = acc[0];
+                        pim[g] = acc[1];
+                        pws[g] = acc[2];
+                    }
+                }
+            } else {
+                let wre = DisjointWriter::new(&mut pre);
+                let wim = DisjointWriter::new(&mut pim);
+                let wws = DisjointWriter::new(&mut pws);
+                let mut r0 = 0usize;
+                while r0 < n_v {
+                    let r1 = (r0 + rows_per_band).min(n_v);
+                    let band_rows = r1 - r0;
+                    // Per-row candidate lists (CSR), placement ids ascending
+                    // within each row: iterate placements in order, append
+                    // each to every band row its footprint can reach.
+                    let ranges: Vec<(usize, usize)> = pls
+                        .iter()
+                        .map(|pl| {
+                            let lo = (pl.vp - rad).ceil().max(r0 as f64);
+                            let hi = (pl.vp + rad).floor().min(r1 as f64 - 1.0);
+                            if lo > hi {
+                                (1, 0)
+                            } else {
+                                (lo as usize, hi as usize)
+                            }
+                        })
+                        .collect();
+                    let mut offs = vec![0usize; band_rows + 1];
+                    for &(lo, hi) in &ranges {
+                        if lo > hi {
+                            continue;
+                        }
+                        for r in lo..=hi {
+                            offs[r - r0 + 1] += 1;
+                        }
+                    }
+                    for i in 1..offs.len() {
+                        offs[i] += offs[i - 1];
+                    }
+                    let mut csr = vec![0u32; offs[band_rows]];
+                    let mut cursor: Vec<usize> = offs[..band_rows].to_vec();
+                    for (p, &(lo, hi)) in ranges.iter().enumerate() {
+                        if lo > hi {
+                            continue;
+                        }
+                        for r in lo..=hi {
+                            let slot = &mut cursor[r - r0];
+                            csr[*slot] = p as u32;
+                            *slot += 1;
+                        }
+                    }
+                    let band_cells = band_rows * n_u;
+                    let cb = adaptive_claim_block(band_cells, workers);
+                    parallel_items_scoped(
+                        band_cells,
+                        workers,
+                        cb,
+                        Vec::<(f64, u32)>::new,
+                        |scratch, cell| {
+                            let lr = cell / n_u;
+                            let iu = cell % n_u;
+                            let iv = r0 + lr;
+                            scratch.clear();
+                            for &p in &csr[offs[lr]..offs[lr + 1]] {
+                                let pl = &pls[p as usize];
+                                let wv = self.kernel.weight_1d(pl.vp - iv as f64);
+                                if wv == 0.0 {
+                                    continue;
+                                }
+                                let wu = self.kernel.weight_1d(pl.up - iu as f64);
+                                if wu == 0.0 {
+                                    continue;
+                                }
+                                scratch.push(((wu * wv) * pl.w, p));
+                            }
+                            let mut acc = [0.0f64; LANES];
+                            backend.accumulate_contribs(&mut acc, scratch, &vals, LANES, 0);
+                            let g = iv * n_u + iu;
+                            // SAFETY: cell indices of one sweep are unique
+                            // and g is in bounds (iv < n_v, iu < n_u).
+                            unsafe {
+                                wre.write(g, acc[0]);
+                                wim.write(g, acc[1]);
+                                wws.write(g, acc[2]);
+                            }
+                        },
+                    );
+                    r0 = r1;
+                }
+            }
+            planes.push(UvPlanes { re: pre, im: pim, wsum: pws });
+        }
+        Ok(UvResult { planes, deposited, clipped })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::SplitMix64;
+
+    fn small_dataset(seed: u64, n_samples: usize, n_ch: usize) -> UvDataset {
+        let mut rng = SplitMix64::new(seed);
+        let mut ds = UvDataset::default();
+        // ±150 m at ~1.4 GHz on 50-wavelength cells is ±~14 cells — every
+        // placement (and its conjugate) stays on the 48x40 grid.
+        for _ in 0..n_samples {
+            ds.u_m.push(rng.uniform(-150.0, 150.0));
+            ds.v_m.push(rng.uniform(-150.0, 150.0));
+            ds.weights.push(rng.uniform(0.1, 2.0) as f32);
+        }
+        for c in 0..n_ch {
+            ds.freqs_hz.push(1.4e9 + c as f64 * 1.0e7);
+            let mut re = Vec::new();
+            let mut im = Vec::new();
+            for _ in 0..n_samples {
+                re.push(rng.uniform(-1.0, 1.0) as f32);
+                im.push(rng.uniform(-1.0, 1.0) as f32);
+            }
+            ds.re.push(re);
+            ds.im.push(im);
+        }
+        ds
+    }
+
+    fn gridder() -> UvGridder {
+        let spec = UvGridSpec::new(48, 40, 50.0);
+        let kernel = UvKernel::new(UvKernelType::Gaussian, 3, 64, 1.0).unwrap();
+        UvGridder::new(spec, kernel)
+    }
+
+    fn assert_planes_bits_eq(a: &UvResult, b: &UvResult) {
+        assert_eq!(a.planes.len(), b.planes.len());
+        for (pa, pb) in a.planes.iter().zip(&b.planes) {
+            for (x, y) in pa.re.iter().zip(&pb.re) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            for (x, y) in pa.im.iter().zip(&pb.im) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            for (x, y) in pa.wsum.iter().zip(&pb.wsum) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        assert_eq!(a.deposited.iter().map(|d| d.to_bits()).collect::<Vec<_>>(),
+                   b.deposited.iter().map(|d| d.to_bits()).collect::<Vec<_>>());
+        assert_eq!(a.clipped, b.clipped);
+    }
+
+    #[test]
+    fn kernel_lookup_is_nearest_sample() {
+        let k = UvKernel::new(UvKernelType::Gaussian, 3, 4, 1.0).unwrap();
+        assert_eq!(k.table().len(), 13);
+        assert_eq!(k.weight_1d(0.0), k.table()[0]);
+        assert_eq!(k.table()[0], 1.0);
+        // 0.3 cells * oversample 4 = 1.2 -> nearest index 1; negative
+        // distances hit the same sample.
+        assert_eq!(k.weight_1d(0.3), k.table()[1]);
+        assert_eq!(k.weight_1d(-0.3), k.table()[1]);
+        // Half-way rounds up: 0.375 * 4 = 1.5 -> index 2.
+        assert_eq!(k.weight_1d(0.375), k.table()[2]);
+        // Past the table end the weight is exactly zero.
+        assert_eq!(k.weight_1d(3.2), 0.0);
+        assert_eq!(k.weight_1d(1.0e9), 0.0);
+    }
+
+    #[test]
+    fn spheroidal_vanishes_at_support_edge() {
+        let k = UvKernel::new(UvKernelType::Spheroidal, 3, 8, 1.0).unwrap();
+        assert_eq!(*k.table().last().unwrap(), 0.0);
+        assert!(k.table()[0] > 0.0);
+        // Strictly decreasing near the centre — a sanity check on the
+        // rational approximation's region split.
+        assert!(k.table()[1] < k.table()[0]);
+        assert!(k.weight_1d(2.9) > 0.0);
+    }
+
+    #[test]
+    fn optimized_matches_oracle_bitwise() {
+        let ds = small_dataset(7, 60, 2);
+        let g = gridder().with_workers(3);
+        let fast = g.grid(&ds).unwrap();
+        let oracle = g.grid_oracle(&ds).unwrap();
+        assert_planes_bits_eq(&fast, &oracle);
+        // The planes are non-trivial.
+        assert!(fast.planes[0].wsum.iter().any(|&w| w > 0.0));
+    }
+
+    #[test]
+    fn worker_count_and_tiling_are_bit_invariant() {
+        let ds = small_dataset(11, 45, 2);
+        let base = gridder().with_workers(1).grid(&ds).unwrap();
+        for workers in [2, 5] {
+            for tile in [0, 3, 7] {
+                let r = gridder().with_workers(workers).with_tile_rows(tile).grid(&ds).unwrap();
+                assert_planes_bits_eq(&base, &r);
+            }
+        }
+    }
+
+    #[test]
+    fn hermitian_equals_explicit_conjugate_samples() {
+        // hermitian=true on one sample must equal hermitian=false on the
+        // sample plus its explicit conjugate (u,v -> -u,-v; im -> -im):
+        // identical placement streams, therefore identical bits.
+        let mut ds = small_dataset(13, 1, 1);
+        let g = gridder();
+        let her = g.grid(&ds).unwrap();
+        ds.u_m.push(-ds.u_m[0]);
+        ds.v_m.push(-ds.v_m[0]);
+        ds.weights.push(ds.weights[0]);
+        ds.re[0].push(ds.re[0][0]);
+        ds.im[0].push(-ds.im[0][0]);
+        let explicit = g.clone().with_hermitian(false).grid(&ds).unwrap();
+        assert_planes_bits_eq(&her, &explicit);
+    }
+
+    #[test]
+    fn off_grid_placements_are_clipped_whole() {
+        let mut ds = small_dataset(17, 1, 1);
+        // Push the sample far off the grid: both the direct and the
+        // conjugate placement clip, nothing is deposited.
+        ds.u_m[0] = 1.0e7;
+        ds.v_m[0] = 1.0e7;
+        let r = gridder().grid(&ds).unwrap();
+        assert_eq!(r.clipped[0], 2);
+        assert_eq!(r.deposited[0], 0.0);
+        assert!(r.planes[0].wsum.iter().all(|&w| w == 0.0));
+        let o = gridder().grid_oracle(&ds).unwrap();
+        assert_planes_bits_eq(&r, &o);
+    }
+
+    #[test]
+    fn deposited_is_the_serial_weight_fold() {
+        let ds = small_dataset(19, 30, 2);
+        let r = gridder().grid(&ds).unwrap();
+        // All samples land on-grid for this seed; the exact deposit is the
+        // placement-order fold: per sample, direct then conjugate.
+        for c in 0..ds.n_channels() {
+            assert_eq!(r.clipped[c], 0);
+            let mut expect = 0.0f64;
+            for s in 0..ds.n_samples() {
+                expect += ds.weights[s] as f64;
+                expect += ds.weights[s] as f64;
+            }
+            assert_eq!(expect.to_bits(), r.deposited[c].to_bits());
+        }
+    }
+
+    #[test]
+    fn dataset_validation_rejects_bad_shapes() {
+        let mut ds = small_dataset(23, 4, 1);
+        ds.v_m.pop();
+        assert!(ds.validate().is_err());
+        let mut ds = small_dataset(23, 4, 1);
+        ds.re[0][1] = f32::NAN;
+        assert!(ds.validate().is_err());
+        let mut ds = small_dataset(23, 4, 1);
+        ds.freqs_hz[0] = -1.0;
+        assert!(ds.validate().is_err());
+        assert!(small_dataset(23, 4, 1).validate().is_ok());
+    }
+
+    #[test]
+    fn kernel_and_spec_validation() {
+        assert!(UvKernel::new(UvKernelType::Gaussian, 0, 8, 1.0).is_err());
+        assert!(UvKernel::new(UvKernelType::Gaussian, 3, 0, 1.0).is_err());
+        assert!(UvKernel::new(UvKernelType::Gaussian, 3, 8, 0.0).is_err());
+        assert!(UvKernel::new(UvKernelType::Spheroidal, 3, 8, 0.0).is_ok());
+        assert!(UvGridSpec::new(0, 4, 1.0).validate().is_err());
+        assert!(UvGridSpec::new(4, 4, 0.0).validate().is_err());
+        assert!(UvKernelType::from_name("gaussian").is_ok());
+        assert!(UvKernelType::from_name("boxcar").is_err());
+    }
+}

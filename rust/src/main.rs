@@ -8,6 +8,7 @@
 //! hegrid info       [--artifacts artifacts]                   (list variants)
 //! hegrid bench-gate --current BENCH_x.json [--baseline prev.json] [--threshold 0.15]
 //! hegrid serve      [--listen ADDR] [engine knobs]              (job server)
+//! hegrid uv-grid    [--preset quick|default] [--out-prefix out/uv] [uv knobs]
 //! ```
 //!
 //! Engine knobs (grid/accuracy): `--streams N --pipelines N
@@ -50,6 +51,15 @@
 //! --shard-backoff-ms`), and deterministically merges the shard cubes —
 //! byte-identical to a single-process run.
 //!
+//! `hegrid uv-grid` grids a synthetic interferometric visibility set
+//! (docs/uv-gridding.md): `--antennas N --channels C --sources K --seed S`
+//! shape the simulated observation, the `uv_grid` config block (CLI
+//! `--uv-nu --uv-nv --uv-cell --uv-kernel gaussian|spheroidal --uv-support
+//! --uv-oversample --uv-sigma --uv-tile-rows --no-hermitian`) shapes the
+//! grid and kernel, `--oracle` cross-checks the optimized path against the
+//! direct-sum oracle bit for bit, and `--out-prefix P` writes
+//! `P_re/im/wsum.fits` NAXIS3 cubes.
+//!
 //! `hegrid serve` runs the multi-tenant job server (docs/service.md): the
 //! engine knobs above become the server's *base* config, each `POST /jobs`
 //! may overlay a partial `config` object on it, and `--listen ADDR
@@ -64,12 +74,12 @@ use std::process::ExitCode;
 
 use hegrid::baselines::CygridBaseline;
 use hegrid::cli;
-use hegrid::config::{DeviceProfile, HegridConfig};
+use hegrid::config::{DeviceProfile, HegridConfig, UvConfig};
 use hegrid::coordinator::{GriddingJob, HegridEngine, PipelineReport};
 use hegrid::data::{ChannelSource, Dataset, HgdReader, HgdStreamSource};
 use hegrid::runtime::Manifest;
 use hegrid::service::ServiceConfig;
-use hegrid::sim::SimConfig;
+use hegrid::sim::{SimConfig, UvSimConfig};
 use hegrid::util::error::{HegridError, Result};
 
 const VALUE_OPTS: &[&str] = &[
@@ -80,7 +90,9 @@ const VALUE_OPTS: &[&str] = &[
     "threshold", "tile-rows", "checkpoint", "faults", "retry-io", "retry-backoff-ms",
     "listen", "queue-max", "service-workers", "cache-cap", "keep-results", "drain-timeout",
     "job-timeout", "shard-procs", "shard-max-restarts", "shard-heartbeat-timeout",
-    "shard-backoff-ms", "config", "shard-index", "shard-rows", "shard-attempt",
+    "shard-backoff-ms", "config", "shard-index", "shard-rows", "shard-attempt", "antennas",
+    "sources", "uv-nu", "uv-nv", "uv-cell", "uv-kernel", "uv-support", "uv-oversample",
+    "uv-sigma", "uv-tile-rows",
 ];
 
 fn main() -> ExitCode {
@@ -108,6 +120,7 @@ fn run(argv: &[String]) -> Result<()> {
         Some("info") => cmd_info(&args)?,
         Some("bench-gate") => cmd_bench_gate(&args)?,
         Some("serve") => cmd_serve(&args)?,
+        Some("uv-grid") => cmd_uv_grid(&args)?,
         Some("shard-worker") => cmd_shard_worker(&args)?,
         Some("help") | None => {
             print_help();
@@ -132,7 +145,8 @@ fn print_help() {
          \x20 accuracy  compare HEGrid output against the Cygrid baseline (Fig 17)\n\
          \x20 info      list AOT artifact variants\n\
          \x20 bench-gate  diff a fresh BENCH_*.json against a stored baseline (CI perf gate)\n\
-         \x20 serve     run the multi-tenant HTTP job server (docs/service.md)\n\n\
+         \x20 serve     run the multi-tenant HTTP job server (docs/service.md)\n\
+         \x20 uv-grid   grid synthetic interferometric visibilities onto a uv plane (docs/uv-gridding.md)\n\n\
          run `cargo doc --open` or see README.md for the full option list",
         hegrid::VERSION
     );
@@ -193,6 +207,20 @@ fn engine_config(args: &cli::Args) -> Result<HegridConfig> {
         kernel_sigma_beam: 0.5,
         support_sigma: 3.0,
         oversample: args.get_f64("oversample", 2.0)?,
+        uv_grid: {
+            let ud = UvConfig::default();
+            UvConfig {
+                n_u: args.get_usize("uv-nu", ud.n_u)?,
+                n_v: args.get_usize("uv-nv", ud.n_v)?,
+                cell_wavelengths: args.get_f64("uv-cell", ud.cell_wavelengths)?,
+                kernel_type: args.get_or("uv-kernel", &ud.kernel_type).to_string(),
+                kernel_support: args.get_usize("uv-support", ud.kernel_support)?,
+                kernel_oversample: args.get_usize("uv-oversample", ud.kernel_oversample)?,
+                kernel_sigma_cells: args.get_f64("uv-sigma", ud.kernel_sigma_cells)?,
+                tile_rows: args.get_usize("uv-tile-rows", ud.tile_rows)?,
+                hermitian: !args.flag("no-hermitian"),
+            }
+        },
         profile: DeviceProfile::from_name(args.get_or("profile", "server_v"))?,
     };
     if cfg.artifacts_dir == "artifacts" && !Path::new("artifacts/manifest.json").exists() {
@@ -230,6 +258,105 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
     scfg.service_drain_s = args.get_usize("drain-timeout", scfg.service_drain_s)?;
     scfg.service_job_timeout_s = args.get_usize("job-timeout", scfg.service_job_timeout_s)?;
     hegrid::service::serve(base, scfg)
+}
+
+/// `hegrid uv-grid`: generate a seeded synthetic visibility set, grid it
+/// onto the configured uv plane through the engine, and optionally write
+/// the re/im/wsum planes as FITS NAXIS3 cubes. `--oracle` re-grids with the
+/// brute-force direct sum and verifies bit-identity on the spot.
+fn cmd_uv_grid(args: &cli::Args) -> Result<()> {
+    let cfg = engine_config(args)?;
+    let mut sim = match args.get_or("preset", "quick") {
+        "quick" => UvSimConfig::quick_preset(),
+        "default" => UvSimConfig::default(),
+        other => {
+            return Err(HegridError::Config(format!(
+                "unknown uv preset '{other}' (expected quick|default)"
+            )))
+        }
+    };
+    sim.n_antennas = args.get_usize("antennas", sim.n_antennas)?;
+    sim.n_channels = args.get_usize("channels", sim.n_channels)?;
+    sim.n_sources = args.get_usize("sources", sim.n_sources)?;
+    sim.seed = args.get_usize("seed", sim.seed as usize)? as u64;
+    let ds = sim.generate();
+    let engine = HegridEngine::new(cfg)?;
+    let (res, dt) = hegrid::logging::timed(|| engine.grid_uv(&ds));
+    let res = res?;
+    let uv = &engine.config.uv_grid;
+    let clipped: usize = res.clipped.iter().sum();
+    let deposited: f64 = res.deposited.iter().sum();
+    println!(
+        "uv-gridded {} baselines × {} channels onto {}x{} cells ({} kernel) in {:.3}s",
+        ds.n_samples(),
+        ds.n_channels(),
+        uv.n_u,
+        uv.n_v,
+        uv.kernel_type,
+        dt.as_secs_f64()
+    );
+    println!(
+        "  deposited_weight={deposited:.3} clipped_placements={clipped} hermitian={} tile_rows={}",
+        uv.hermitian, uv.tile_rows
+    );
+    if args.flag("oracle") {
+        let gridder = uv.build_gridder()?.with_simd(engine.config.simd());
+        let oracle = gridder.grid_oracle(&ds)?;
+        let mut identical = res.planes.len() == oracle.planes.len();
+        if identical {
+            'planes: for (a, b) in res.planes.iter().zip(&oracle.planes) {
+                for (x, y) in a
+                    .re
+                    .iter()
+                    .zip(&b.re)
+                    .chain(a.im.iter().zip(&b.im))
+                    .chain(a.wsum.iter().zip(&b.wsum))
+                {
+                    if x.to_bits() != y.to_bits() {
+                        identical = false;
+                        break 'planes;
+                    }
+                }
+            }
+        }
+        if !identical {
+            return Err(HegridError::Internal(
+                "uv gridder disagrees with the direct-sum oracle".into(),
+            ));
+        }
+        println!(
+            "  oracle: bit-identical over {} cells × {} channels",
+            uv.n_u * uv.n_v,
+            res.planes.len()
+        );
+    }
+    if let Some(prefix) = args.get("out-prefix") {
+        if let Some(parent) = Path::new(prefix).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).map_err(HegridError::io(prefix.to_string()))?;
+            }
+        }
+        let collect = |f: fn(&hegrid::grid::uv::UvPlanes) -> &Vec<f64>| -> Vec<Vec<f64>> {
+            res.planes.iter().map(|p| f(p).clone()).collect()
+        };
+        for (suffix, planes, unit) in [
+            ("re", collect(|p| &p.re), "JY"),
+            ("im", collect(|p| &p.im), "JY"),
+            ("wsum", collect(|p| &p.wsum), "WEIGHT"),
+        ] {
+            let path = format!("{prefix}_{suffix}.fits");
+            hegrid::sky::fits::write_fits_cube(
+                Path::new(&path),
+                uv.n_u,
+                uv.n_v,
+                &planes,
+                uv.cell_wavelengths,
+                unit,
+            )?;
+        }
+        println!("wrote {prefix}_re/im/wsum.fits NAXIS3 cubes");
+    }
+    Ok(())
 }
 
 fn cmd_simulate(args: &cli::Args) -> Result<()> {

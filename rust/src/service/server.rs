@@ -529,7 +529,13 @@ fn get_result(state: &ServiceState, id: u64) -> Response {
         Ok(Some(res)) => Response::bytes(200, res.bytes.clone())
             .with_header("X-Hegrid-Channels", res.n_channels.to_string())
             .with_header("X-Hegrid-Nlon", res.nlon.to_string())
-            .with_header("X-Hegrid-Nlat", res.nlat.to_string()),
+            .with_header("X-Hegrid-Nlat", res.nlat.to_string())
+            // FITS-style cube geometry (NAXIS1 fastest): lets clients
+            // reshape the f64 payload without re-deriving it from the job
+            // config, and mirrors the NAXIS3 cube writer's axis order.
+            .with_header("X-Hegrid-Naxis1", res.nlon.to_string())
+            .with_header("X-Hegrid-Naxis2", res.nlat.to_string())
+            .with_header("X-Hegrid-Naxis3", res.n_channels.to_string()),
     }
 }
 

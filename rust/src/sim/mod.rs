@@ -26,6 +26,9 @@ use crate::util::error::Result;
 use crate::util::prng::Xoshiro256pp;
 use crate::util::{deg2rad, SplitMix64};
 
+pub mod uv;
+pub use uv::UvSimConfig;
+
 /// Rotation of the 19-beam array relative to the scan direction, degrees
 /// (FAST's CRAFTS survey value).
 pub const BEAM_ROTATION_DEG: f64 = 23.4;

@@ -46,6 +46,77 @@ fn scard(keyword: &str, value: &str, comment: &str) -> [u8; CARD] {
     card(keyword, &format!("'{value:<8}'"), comment)
 }
 
+/// Write a stack of equally-shaped planes as a FITS NAXIS3 primary image
+/// cube: BITPIX = -32 (IEEE f32 big endian), `n_x` the fastest axis, one
+/// plane per NAXIS3 slice, a linear uv WCS (CTYPE 'UU'/'VV', CDELT = `cell`,
+/// reference pixel at the grid origin `n/2`, CRVAL 0).
+///
+/// This is the output path of `hegrid uv-grid` (one cube per re/im/wsum
+/// plane stack, NAXIS3 = channels). The byte layout is pinned by a CRC32
+/// golden test — header card drift or an endianness regression fails it.
+pub fn write_fits_cube(
+    path: &Path,
+    n_x: usize,
+    n_y: usize,
+    planes: &[Vec<f64>],
+    cell: f64,
+    bunit: &str,
+) -> Result<()> {
+    if planes.is_empty() {
+        return Err(HegridError::Format("FITS cube needs at least one plane".into()));
+    }
+    for (i, p) in planes.iter().enumerate() {
+        if p.len() != n_x * n_y {
+            return Err(HegridError::Format(format!(
+                "FITS cube plane {i} has {} cells, expected {}",
+                p.len(),
+                n_x * n_y
+            )));
+        }
+    }
+
+    let mut header: Vec<u8> = Vec::with_capacity(RECORD);
+    let cards = [
+        card("SIMPLE", "T", "conforms to FITS standard"),
+        icard("BITPIX", -32, "IEEE single-precision float"),
+        icard("NAXIS", 3, "number of axes"),
+        icard("NAXIS1", n_x as i64, "u axis (fastest)"),
+        icard("NAXIS2", n_y as i64, "v axis"),
+        icard("NAXIS3", planes.len() as i64, "plane (channel) axis"),
+        scard("CTYPE1", "UU", "baseline u, wavelengths"),
+        scard("CTYPE2", "VV", "baseline v, wavelengths"),
+        // FITS pixel indices are 1-based; the uv origin lives at 0-based
+        // pixel n/2, i.e. 1-based n/2 + 1.
+        fcard("CRPIX1", (n_x / 2) as f64 + 1.0, "reference pixel (u = 0)"),
+        fcard("CRPIX2", (n_y / 2) as f64 + 1.0, "reference pixel (v = 0)"),
+        fcard("CRVAL1", 0.0, "wavelengths at reference pixel"),
+        fcard("CRVAL2", 0.0, "wavelengths at reference pixel"),
+        fcard("CDELT1", cell, "wavelengths per pixel"),
+        fcard("CDELT2", cell, "wavelengths per pixel"),
+        scard("BUNIT", bunit, "plane units"),
+        scard("ORIGIN", "HEGrid-RS", "github.com/HPCAstroAtTJU/HEGrid repro"),
+        card("END", "", ""),
+    ];
+    for c in &cards {
+        header.extend_from_slice(c);
+    }
+    header.resize(header.len().div_ceil(RECORD) * RECORD, b' ');
+
+    let mut data = Vec::with_capacity(planes.len() * n_x * n_y * 4);
+    for p in planes {
+        for &v in p {
+            data.extend_from_slice(&(v as f32).to_be_bytes());
+        }
+    }
+    data.resize(data.len().div_ceil(RECORD) * RECORD, 0);
+
+    let mut file =
+        std::fs::File::create(path).map_err(HegridError::io(path.display().to_string()))?;
+    file.write_all(&header).map_err(HegridError::io(path.display().to_string()))?;
+    file.write_all(&data).map_err(HegridError::io(path.display().to_string()))?;
+    Ok(())
+}
+
 impl SkyMap {
     /// Write the map as a FITS primary image with a CAR WCS.
     pub fn write_fits(&self, path: &Path) -> Result<()> {
@@ -160,6 +231,89 @@ mod tests {
         assert_eq!(px(23), 23.0);
         // padding after the 24 pixels is zero
         assert_eq!(px(24), 0.0);
+    }
+
+    fn sample_cube() -> (usize, usize, Vec<Vec<f64>>) {
+        // f32-exact values so the golden bytes are identical on every host.
+        let plane0: Vec<f64> = (0..12).map(|i| i as f64).collect();
+        let plane1: Vec<f64> = (0..12).map(|i| i as f64 * 0.5).collect();
+        (4, 3, vec![plane0, plane1])
+    }
+
+    #[test]
+    fn cube_golden_crc_and_header_cards() {
+        // Byte-level pin of the NAXIS3 cube writer: any header card drift,
+        // format change, or endianness regression changes the CRC.
+        let (n_x, n_y, planes) = sample_cube();
+        let path = tmp("c.fits");
+        write_fits_cube(&path, n_x, n_y, &planes, 25.0, "JY").unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(bytes.len(), 2 * RECORD); // 1 header + 1 data record
+        assert_eq!(crate::util::crc32::crc32(&bytes), 0x1107_D971, "cube byte layout drifted");
+        let header = std::str::from_utf8(&bytes[..RECORD]).unwrap();
+        let card_at = |i: usize| &header[i * CARD..(i + 1) * CARD];
+        assert_eq!(
+            card_at(2),
+            format!("{:<80}", "NAXIS   =                    3 / number of axes")
+        );
+        assert_eq!(
+            card_at(5),
+            format!("{:<80}", "NAXIS3  =                    2 / plane (channel) axis")
+        );
+        assert_eq!(
+            card_at(8),
+            format!("{:<80}", "CRPIX1  =       3.0000000000E0 / reference pixel (u = 0)")
+        );
+        assert_eq!(
+            card_at(13),
+            format!("{:<80}", "CDELT2  =       2.5000000000E1 / wavelengths per pixel")
+        );
+        assert!(header.contains("'UU      '") && header.contains("'VV      '"));
+    }
+
+    #[test]
+    fn cube_pixels_round_trip_per_plane() {
+        let (n_x, n_y, planes) = sample_cube();
+        let path = tmp("c2.fits");
+        write_fits_cube(&path, n_x, n_y, &planes, 25.0, "JY").unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let data = &bytes[RECORD..];
+        let px = |i: usize| f32::from_be_bytes(data[i * 4..i * 4 + 4].try_into().unwrap());
+        // Plane 0 then plane 1, each row-major with NAXIS1 fastest.
+        assert_eq!(px(0), 0.0);
+        assert_eq!(px(11), 11.0);
+        assert_eq!(px(12), 0.0);
+        assert_eq!(px(13), 0.5);
+        assert_eq!(px(23), 5.5);
+        assert_eq!(px(24), 0.0, "zero padding after the last plane");
+    }
+
+    #[test]
+    fn cube_rejects_bad_shapes() {
+        let path = tmp("c3.fits");
+        assert!(write_fits_cube(&path, 4, 3, &[], 25.0, "JY").is_err());
+        assert!(write_fits_cube(&path, 4, 3, &[vec![0.0; 11]], 25.0, "JY").is_err());
+    }
+
+    #[test]
+    fn astropy_reads_the_cube_if_available() {
+        let (n_x, n_y, planes) = sample_cube();
+        let path = tmp("c4.fits");
+        write_fits_cube(&path, n_x, n_y, &planes, 25.0, "JY").unwrap();
+        let script = format!(
+            "import sys\n\
+             try:\n    from astropy.io import fits\nexcept Exception:\n    sys.exit(0)\n\
+             h = fits.open('{}')[0]\n\
+             assert h.data.shape == (2, 3, 4), h.data.shape\n\
+             assert abs(h.data[1][0][1] - 0.5) < 1e-6\n\
+             assert h.header['NAXIS3'] == 2\n\
+             print('astropy cube OK')\n",
+            path.display()
+        );
+        let out = std::process::Command::new("python3").arg("-c").arg(&script).output();
+        if let Ok(out) = out {
+            assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        }
     }
 
     #[test]

@@ -7,6 +7,9 @@
 
 use crate::util::SplitMix64;
 
+pub mod uv;
+pub use uv::{gen_uv_case, UvCase, UvSample};
+
 /// Number of cases run by default.
 pub const DEFAULT_CASES: usize = 100;
 

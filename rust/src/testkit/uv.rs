@@ -1,0 +1,255 @@
+//! Property-test case generation for the uv-plane gridder.
+//!
+//! A [`UvCase`] is a fully concrete, shrinkable recipe for a
+//! [`UvDataset`] plus the gridder configuration used to grid it. The
+//! generator keeps every placement (including hermitian conjugates)
+//! strictly on-grid, so the weight-conservation property can demand
+//! bit-exact equality between [`crate::grid::uv::UvResult::deposited`]
+//! and an independent serial fold of the input weights.
+
+use crate::grid::uv::{
+    UvDataset, UvGridSpec, UvGridder, UvKernel, UvKernelType, SPEED_OF_LIGHT_M_S,
+};
+use crate::util::error::Result;
+
+use super::{Gen, Shrink};
+
+/// One visibility sample: baseline metres, weight, and per-channel
+/// complex visibility (re, im).
+#[derive(Clone, Debug)]
+pub struct UvSample {
+    pub u_m: f64,
+    pub v_m: f64,
+    pub weight: f32,
+    pub vis: Vec<(f32, f32)>,
+}
+
+/// A concrete, shrinkable uv gridding test case.
+#[derive(Clone, Debug)]
+pub struct UvCase {
+    pub n_u: usize,
+    pub n_v: usize,
+    pub cell_wavelengths: f64,
+    pub freqs_hz: Vec<f64>,
+    pub samples: Vec<UvSample>,
+    pub gaussian: bool,
+    pub support: usize,
+    pub oversample: usize,
+    pub hermitian: bool,
+}
+
+impl UvCase {
+    pub fn n_channels(&self) -> usize {
+        self.freqs_hz.len()
+    }
+
+    /// Materialize the dataset in the `[channel][sample]` layout.
+    pub fn dataset(&self) -> UvDataset {
+        let n_ch = self.n_channels();
+        let mut ds = UvDataset {
+            u_m: self.samples.iter().map(|s| s.u_m).collect(),
+            v_m: self.samples.iter().map(|s| s.v_m).collect(),
+            weights: self.samples.iter().map(|s| s.weight).collect(),
+            freqs_hz: self.freqs_hz.clone(),
+            re: vec![Vec::with_capacity(self.samples.len()); n_ch],
+            im: vec![Vec::with_capacity(self.samples.len()); n_ch],
+        };
+        for s in &self.samples {
+            for (c, &(re, im)) in s.vis.iter().enumerate() {
+                ds.re[c].push(re);
+                ds.im[c].push(im);
+            }
+        }
+        ds
+    }
+
+    /// Build the gridder this case configures (workers/tiling left at
+    /// defaults for the caller to vary).
+    pub fn gridder(&self) -> Result<UvGridder> {
+        let kind = if self.gaussian { UvKernelType::Gaussian } else { UvKernelType::Spheroidal };
+        let kernel = UvKernel::new(kind, self.support, self.oversample, 1.0)?;
+        Ok(UvGridder::new(
+            UvGridSpec::new(self.n_u, self.n_v, self.cell_wavelengths),
+            kernel,
+        )
+        .with_hermitian(self.hermitian))
+    }
+
+    /// The serial, placement-order fold of deposited weights the gridder
+    /// promises to reproduce bit-for-bit (per channel, all channels equal
+    /// because weights are shared and nothing clips).
+    pub fn expected_deposit(&self) -> f64 {
+        let per_sample = if self.hermitian { 2 } else { 1 };
+        let mut fold = 0.0f64;
+        for s in &self.samples {
+            for _ in 0..per_sample {
+                fold += s.weight as f64;
+            }
+        }
+        fold
+    }
+}
+
+impl Shrink for UvCase {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        // Fewer samples first (most aggressive).
+        if !self.samples.is_empty() {
+            let mut half = self.clone();
+            half.samples.truncate(self.samples.len() / 2);
+            out.push(half);
+            let mut tail = self.clone();
+            tail.samples.remove(0);
+            out.push(tail);
+            let mut init = self.clone();
+            init.samples.pop();
+            out.push(init);
+        }
+        // Fewer channels.
+        if self.freqs_hz.len() > 1 {
+            let mut one_ch = self.clone();
+            one_ch.freqs_hz.truncate(1);
+            for s in &mut one_ch.samples {
+                s.vis.truncate(1);
+            }
+            out.push(one_ch);
+        }
+        // Simpler data: zero the first sample's visibilities.
+        if let Some(s0) = self.samples.first() {
+            if s0.vis.iter().any(|&(re, im)| re != 0.0 || im != 0.0) {
+                let mut zeroed = self.clone();
+                for v in &mut zeroed.samples[0].vis {
+                    *v = (0.0, 0.0);
+                }
+                out.push(zeroed);
+            }
+        }
+        out
+    }
+}
+
+/// Draw a random [`UvCase`] whose placements are all strictly on-grid.
+pub fn gen_uv_case(g: &mut Gen) -> UvCase {
+    let n_u = *g.choose(&[16usize, 24, 32]);
+    let n_v = *g.choose(&[12usize, 20, 40]);
+    let cell_wavelengths = g.f64(20.0, 80.0);
+    let n_ch = g.usize(1, 4);
+    let freq0 = g.f64(1.0e9, 1.6e9);
+    let step = g.f64(1.0e6, 2.0e7);
+    let freqs_hz: Vec<f64> = (0..n_ch).map(|c| freq0 + step * c as f64).collect();
+    // Keep |pixel offset| within half-width minus a margin at the HIGHEST
+    // frequency (largest scale), so both the direct placement and its
+    // hermitian mirror land on-grid in every channel — the clipped count
+    // must stay zero for the exact deposit fold to hold.
+    let scale_max = freqs_hz[n_ch - 1] / SPEED_OF_LIGHT_M_S / cell_wavelengths;
+    let margin = 3.0;
+    let bound_u = ((n_u / 2) as f64 - margin).max(1.0) / scale_max;
+    let bound_v = ((n_v / 2) as f64 - margin).max(1.0) / scale_max;
+    let n_samples = g.usize(1, 24);
+    let samples = (0..n_samples)
+        .map(|_| UvSample {
+            u_m: g.f64(-bound_u, bound_u),
+            v_m: g.f64(-bound_v, bound_v),
+            weight: g.f64(0.05, 3.0) as f32,
+            vis: (0..n_ch).map(|_| (g.f64(-2.0, 2.0) as f32, g.f64(-2.0, 2.0) as f32)).collect(),
+        })
+        .collect();
+    UvCase {
+        n_u,
+        n_v,
+        cell_wavelengths,
+        freqs_hz,
+        samples,
+        gaussian: g.bool(),
+        support: g.usize(1, 3),
+        oversample: *g.choose(&[16usize, 64, 128]),
+        hermitian: g.bool(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{check, PropResult, DEFAULT_CASES};
+
+    fn planes_bits_eq(a: &crate::grid::uv::UvResult, b: &crate::grid::uv::UvResult) -> PropResult {
+        for (c, (pa, pb)) in a.planes.iter().zip(&b.planes).enumerate() {
+            for (name, xa, xb) in
+                [("re", &pa.re, &pb.re), ("im", &pa.im, &pb.im), ("wsum", &pa.wsum, &pb.wsum)]
+            {
+                for (i, (x, y)) in xa.iter().zip(xb).enumerate() {
+                    if x.to_bits() != y.to_bits() {
+                        return Err(format!("channel {c} plane {name} cell {i}: {x:?} != {y:?}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn uv_weight_conservation_is_exact_to_the_bit() {
+        check(0x5EED_0001, DEFAULT_CASES, gen_uv_case, |case| {
+            let gridder = case.gridder().map_err(|e| e.to_string())?.with_workers(1);
+            let res = gridder.grid(&case.dataset()).map_err(|e| e.to_string())?;
+            let want = case.expected_deposit();
+            for c in 0..case.n_channels() {
+                if res.clipped[c] != 0 {
+                    return Err(format!(
+                        "generator invariant broken: channel {c} clipped {}",
+                        res.clipped[c]
+                    ));
+                }
+                if res.deposited[c].to_bits() != want.to_bits() {
+                    return Err(format!(
+                        "channel {c}: deposited {} != serial fold {} (bitwise)",
+                        res.deposited[c], want
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn uv_planes_are_bit_identical_across_worker_counts() {
+        check(0x5EED_0002, DEFAULT_CASES, gen_uv_case, |case| {
+            let gridder = case.gridder().map_err(|e| e.to_string())?;
+            let ds = case.dataset();
+            let base = gridder.clone().with_workers(1).grid(&ds).map_err(|e| e.to_string())?;
+            for (workers, tile_rows) in [(3usize, 0usize), (5, 3)] {
+                let alt = gridder
+                    .clone()
+                    .with_workers(workers)
+                    .with_tile_rows(tile_rows)
+                    .grid(&ds)
+                    .map_err(|e| e.to_string())?;
+                planes_bits_eq(&base, &alt)
+                    .map_err(|e| format!("workers={workers} tile_rows={tile_rows}: {e}"))?;
+                if alt.deposited != base.deposited || alt.clipped != base.clipped {
+                    return Err(format!(
+                        "workers={workers} tile_rows={tile_rows}: accounting differs"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn uv_case_shrinks_stay_valid_and_get_smaller() {
+        let mut rng = crate::util::SplitMix64::new(9);
+        let case = gen_uv_case(&mut crate::testkit::Gen::new(&mut rng));
+        let shrinks = case.shrinks();
+        assert!(!shrinks.is_empty());
+        for s in &shrinks {
+            // Every shrink still materializes a valid dataset.
+            s.dataset().validate().unwrap();
+            assert!(
+                s.samples.len() < case.samples.len()
+                    || s.n_channels() < case.n_channels()
+                    || s.samples[0].vis.iter().all(|&(re, im)| re == 0.0 && im == 0.0)
+            );
+        }
+    }
+}

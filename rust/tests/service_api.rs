@@ -170,6 +170,21 @@ fn concurrent_same_config_jobs_share_one_plan_and_match_the_cli() {
         let (status, head, bytes) = http(addr, "GET", &format!("/jobs/{id}/result"), None);
         assert_eq!(status, 200);
         assert!(head.contains("X-Hegrid-Channels: 10"), "{head}");
+        // NAXIS geometry round-trip: the advertised cube shape must
+        // reconstruct the payload size exactly (f64 cells, NAXIS1 fastest),
+        // the same axis convention as the FITS NAXIS3 cube writer.
+        let naxis = |k: &str| -> usize {
+            head.lines()
+                .find_map(|l| l.strip_prefix(&format!("X-Hegrid-{k}: ")))
+                .unwrap_or_else(|| panic!("missing X-Hegrid-{k} header: {head}"))
+                .trim()
+                .parse()
+                .unwrap()
+        };
+        let (n1, n2, n3) = (naxis("Naxis1"), naxis("Naxis2"), naxis("Naxis3"));
+        assert_eq!(n3, 10, "NAXIS3 is the channel axis");
+        assert!(n1 > 0 && n2 > 0, "{head}");
+        assert_eq!(n1 * n2 * n3 * 8, bytes.len(), "cube shape must match the payload");
         assert_eq!(bytes, reference_bytes, "job {id} cube differs from the direct run");
     }
     handle.join().unwrap();
